@@ -1,0 +1,82 @@
+//! End-to-end driver: the full SASP pipeline on the trained ASR model.
+//!
+//! Loads the trained encoder (Layer 2 artifact + weights), shows the
+//! training loss curve, measures baseline WER through PJRT, then sweeps
+//! pruning rates at the paper's headline configuration (32x32, INT8) and
+//! prints the combined QoS / runtime / energy picture — the repository's
+//! reproduction of the paper's headline claim (44% speedup, 42% energy,
+//! +1.4% WER at 20% pruning).
+//!
+//! Run: `cargo run --release --example asr_pipeline` (after `make artifacts`).
+
+use anyhow::Result;
+
+use sasp::coordinator::Explorer;
+use sasp::model::zoo;
+use sasp::qos::AsrEvaluator;
+use sasp::runtime::Engine;
+use sasp::systolic::Quant;
+use sasp::util::json::Json;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // --- training provenance -------------------------------------------
+    if let Ok(log) = std::fs::read_to_string(format!("{dir}/train_log_asr.json")) {
+        let v = Json::parse(&log)?;
+        let entries = v.as_arr().unwrap_or(&[]).to_vec();
+        println!("training loss curve (from python build step):");
+        for e in entries.iter().filter(|e| e.get("loss").as_f64().is_some()) {
+            let step = e.get("step").as_i64().unwrap_or(-1);
+            if step % 250 == 0 {
+                println!("  step {:>5}  loss {:>8.3}", step,
+                         e.get("loss").as_f64().unwrap());
+            }
+        }
+    }
+
+    // --- QoS through PJRT ------------------------------------------------
+    let mut engine = Engine::new(&dir)?;
+    let eval = AsrEvaluator::new(&mut engine, &dir, "asr_encoder_ref")?;
+    println!("\ntest set: {} utterances", eval.n_utts());
+    let base = eval.evaluate(&mut engine, 32, 0.0, Quant::Fp32)?;
+    println!("baseline WER (FP32, unpruned): {:.4}", base.qos);
+
+    println!("\nSASP sweep @ 32x32 FP32_INT8 (the headline configuration):");
+    println!(
+        "{:>6} {:>10} {:>10} {:>12} {:>12} {:>12}",
+        "rate", "WER", "ΔWER", "speedup*", "vs dense", "energy J*"
+    );
+    // Timing from the Table-1 ESPnet workload on the simulated platform.
+    let ex = Explorer::new(zoo::espnet_asr());
+    let dense_fp32 = ex.timing_point(32, Quant::Fp32, 0.0);
+    for rate in [0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.40] {
+        let q = eval.evaluate(&mut engine, 32, rate, Quant::Int8)?;
+        let t = ex.timing_point(32, Quant::Int8, rate);
+        println!(
+            "{:>6.2} {:>10.4} {:>+10.4} {:>12.2} {:>11.1}% {:>12.4}",
+            rate,
+            q.qos,
+            q.qos - base.qos,
+            t.speedup_vs_cpu,
+            (t.speedup_vs_dense - 1.0) * 100.0,
+            t.energy_j
+        );
+    }
+
+    // --- headline row -----------------------------------------------------
+    let q20 = eval.evaluate(&mut engine, 32, 0.20, Quant::Int8)?;
+    let t20 = ex.timing_point(32, Quant::Int8, 0.20);
+    let runtime_gain = 1.0 - dense_fp32.speedup_vs_cpu / t20.speedup_vs_cpu;
+    let energy_gain = 1.0 - t20.energy_j / dense_fp32.energy_j;
+    println!("\nheadline (SASP 20% + INT8 vs non-pruned non-quantized, 32x32):");
+    println!(
+        "  runtime -{:.1}% (paper: up to 44%), energy -{:.1}% (paper: 42%), \
+         ΔWER {:+.4} (paper: +1.4% absolute)",
+        runtime_gain * 100.0,
+        energy_gain * 100.0,
+        q20.qos - base.qos
+    );
+    println!("asr_pipeline OK");
+    Ok(())
+}

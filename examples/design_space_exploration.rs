@@ -1,0 +1,59 @@
+//! Full SASP design-space exploration (the Fig. 10 dataset).
+//!
+//! Sweeps array size × quantization × pruning rate, evaluating QoS via
+//! PJRT on the trained model and timing/energy/area on the simulated
+//! platform, and emits both a table and a JSON dump for plotting.
+//!
+//! Run: `cargo run --release --example design_space_exploration`.
+
+use anyhow::Result;
+
+use sasp::config::ExperimentConfig;
+use sasp::coordinator::Explorer;
+use sasp::harness::QosCache;
+use sasp::model::zoo;
+use sasp::qos::AsrEvaluator;
+use sasp::runtime::Engine;
+use sasp::util::json::Json;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let cfg = ExperimentConfig { artifacts_dir: dir.clone(), ..Default::default() };
+
+    let mut engine = Engine::new(&dir)?;
+    let asr = AsrEvaluator::new(&mut engine, &dir, "asr_encoder_ref")?;
+    let mut qos = QosCache::new(asr, None);
+    let ex = Explorer::new(zoo::espnet_asr());
+
+    println!(
+        "{:>6} {:>10} {:>6} {:>10} {:>10} {:>12} {:>12}",
+        "size", "quant", "rate", "WER", "speedup", "energy J", "area*energy"
+    );
+    let mut points = Vec::new();
+    for &n in &cfg.sizes {
+        for &q in &cfg.quants {
+            for &rate in &cfg.rates {
+                let wer = qos.wer(&mut engine, n, rate, q)?;
+                let p = ex.timing_point(n, q, rate);
+                println!(
+                    "{:>6} {:>10} {:>6.2} {:>10.4} {:>10.2} {:>12.4} {:>12.4}",
+                    n, q.label(), rate, wer, p.speedup_vs_cpu, p.energy_j,
+                    p.area_energy
+                );
+                points.push(Json::obj(vec![
+                    ("size", Json::num(n as f64)),
+                    ("quant", Json::str(q.label())),
+                    ("rate", Json::num(rate)),
+                    ("wer", Json::num(wer)),
+                    ("speedup", Json::num(p.speedup_vs_cpu)),
+                    ("energy_j", Json::num(p.energy_j)),
+                    ("area_energy", Json::num(p.area_energy)),
+                ]));
+            }
+        }
+    }
+    let out = format!("{dir}/design_space.json");
+    std::fs::write(&out, Json::Arr(points).to_string())?;
+    println!("\nwrote {} ({} QoS evaluations cached)", out, qos.cached_points());
+    Ok(())
+}

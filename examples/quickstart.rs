@@ -1,0 +1,101 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the Pallas SASP GEMM artifact (Layer 1, AOT-compiled from
+//!    python) on the PJRT CPU client.
+//! 2. Run it with a pruned tile mask and check against the golden output
+//!    the python oracle produced.
+//! 3. Simulate the same GEMM on the modeled edge platform to see what
+//!    the tile-skipping buys in cycles and energy.
+//!
+//! Run: `cargo run --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+
+use sasp::data::load_bundle;
+use sasp::hwmodel::EnergyModel;
+use sasp::model::{GemmKind, GemmShape};
+use sasp::runtime::Engine;
+use sasp::sysim::{engine::gemm_on_array, SimParams, TileMask};
+use sasp::systolic::{ArrayConfig, Quant};
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut engine = Engine::new(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // --- 1. Load the Layer-1 kernel artifact and its golden data -------
+    let golden = load_bundle(format!("{dir}/golden_gemm.bin"))?;
+    let x = golden.require("x")?.clone();
+    let w = golden.require("w")?.clone();
+    let mask = golden.require("mask")?.clone();
+    let want = golden.require("y")?.f32s();
+
+    // --- 2. Execute through PJRT ---------------------------------------
+    let got = engine
+        .execute("sasp_gemm_t8", &[x, w, mask.clone()])?
+        .f32s();
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "sasp_gemm_t8: {} outputs, max |err| vs oracle = {max_err:.2e}",
+        got.len()
+    );
+    assert!(max_err < 1e-3, "kernel does not match oracle");
+
+    // --- 3. What does the skip buy on the modeled hardware? ------------
+    let mvals = mask.i32s();
+    let tm = TileMask {
+        kt: 8,
+        nt: 8,
+        live: mvals.iter().map(|v| *v != 0).collect(),
+    };
+    let g = GemmShape { m: 64, k: 64, n: 64, kind: GemmKind::FeedForward };
+    let array = ArrayConfig::square(8, Quant::Int8);
+    let p = SimParams::default();
+    let dense = gemm_on_array(&g, &array, &p, None);
+    let pruned = gemm_on_array(&g, &array, &p, Some(&tm));
+    let em = EnergyModel::default();
+    println!(
+        "8x8 INT8 array, 64x64x64 GEMM, {:.0}% tiles pruned:",
+        tm.sparsity() * 100.0
+    );
+    println!(
+        "  cycles {:>10.0} -> {:>10.0}  ({:.1}% faster)",
+        dense.cycles,
+        pruned.cycles,
+        (1.0 - pruned.cycles / dense.cycles) * 100.0
+    );
+    println!(
+        "  energy {:>9.2e} -> {:>9.2e} J ({:.1}% saved)",
+        em.energy_j(&array, &dense.counts),
+        em.energy_j(&array, &pruned.counts),
+        (1.0 - em.energy_j(&array, &pruned.counts)
+            / em.energy_j(&array, &dense.counts))
+            * 100.0
+    );
+
+    // Bonus: the quantized kernel artifact (hybrid-multiplier datapath).
+    let got_q = engine.execute(
+        "quant_gemm_t8",
+        &[
+            golden.require("x")?.clone(),
+            golden.require("w_q")?.clone(),
+            golden.require("scale")?.clone(),
+            golden.require("mask")?.clone(),
+        ],
+    )?;
+    let want_q = golden.require("y_q")?.f32s();
+    let err_q = got_q
+        .f32s()
+        .iter()
+        .zip(&want_q)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("quant_gemm_t8: max |err| vs oracle = {err_q:.2e}");
+    assert!(err_q < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! ASR → MT cascade (the paper's MuST-C case study, Table 1 row 3).
+//!
+//! Evaluates the MT stand-in model's BLEU under SASP pruning, simulates
+//! the cascade's two encoders (ASR stage + MT stage) on the modeled
+//! platform, and reports the joint runtime/energy picture with the BLEU
+//! floor of Table 1 (27 of 31 BLEU).
+//!
+//! Run: `cargo run --release --example translation_cascade`.
+
+use anyhow::Result;
+
+use sasp::coordinator::{Explorer, RateSearch};
+use sasp::model::zoo;
+use sasp::qos::MtEvaluator;
+use sasp::runtime::Engine;
+use sasp::systolic::Quant;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut engine = Engine::new(&dir)?;
+    let eval = MtEvaluator::new(&mut engine, &dir, "mt_encoder_ref")?;
+
+    let base = eval.evaluate(&mut engine, 8, 0.0, Quant::Fp32)?;
+    let floor = base.qos * 27.0 / 31.0; // Table 1 QoS target ratio
+    println!("baseline BLEU {:.2}, floor {:.2}", base.qos, floor);
+
+    println!(
+        "\n{:>6} {:>6} {:>10} {:>12} {:>12}",
+        "size", "rate", "BLEU", "cascade spd%", "energy sav%"
+    );
+    // Cascade timing: ASR-stage encoder + MT-stage encoder in sequence.
+    let asr_stage = Explorer::new(zoo::mustc_asr_encoder());
+    let mt_stage = Explorer::new(zoo::mustc_mt_encoder());
+    let search = RateSearch::default();
+    for n in [4usize, 8, 16, 32] {
+        let found = search.max_rate(
+            |rate| eval.evaluate(&mut engine, n, rate, Quant::Int8).map(|p| p.qos),
+            |b| b >= floor,
+        )?;
+        let (rate, bleu_at) = found.unwrap_or((0.0, base.qos));
+        let a_dense = asr_stage.timing_point(n, Quant::Int8, 0.0);
+        let a_sasp = asr_stage.timing_point(n, Quant::Int8, rate);
+        let m_dense = mt_stage.timing_point(n, Quant::Int8, 0.0);
+        let m_sasp = mt_stage.timing_point(n, Quant::Int8, rate);
+        // Cascade runtime ∝ sum of stage runtimes (same CPU baseline).
+        let dense_t = 1.0 / a_dense.speedup_vs_cpu + 1.0 / m_dense.speedup_vs_cpu;
+        let sasp_t = 1.0 / a_sasp.speedup_vs_cpu + 1.0 / m_sasp.speedup_vs_cpu;
+        let speedup_pct = (dense_t / sasp_t - 1.0) * 100.0;
+        let energy_pct = (1.0
+            - (a_sasp.energy_j + m_sasp.energy_j)
+                / (a_dense.energy_j + m_dense.energy_j))
+            * 100.0;
+        println!(
+            "{:>6} {:>6.2} {:>10.2} {:>11.1}% {:>11.1}%",
+            n, rate, bleu_at, speedup_pct, energy_pct
+        );
+    }
+    println!(
+        "\npaper reference: up to 51% runtime / 34% energy reduction at \
+         <=4 BLEU degradation (§1, §4.3)"
+    );
+    println!("translation_cascade OK");
+    Ok(())
+}

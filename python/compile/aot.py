@@ -1,0 +1,248 @@
+"""AOT bridge: lower the Layer-2 model (with Layer-1 Pallas kernels) to HLO
+*text* artifacts that the rust runtime loads via PJRT.
+
+HLO text — not ``lowered.compile()`` or serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the ``xla`` crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (each ``<name>.hlo.txt`` + ``<name>_manifest.json``):
+
+    asr_encoder_sasp  — encoder with Pallas SASP FF kernels; tile masks are
+                        runtime inputs. Proves the 3-layer composition.
+    asr_encoder_ref   — same math via the jnp oracle (dense matmuls): the
+                        fast path for the big QoS sweeps (identical
+                        numerics — pruned weights are zeros either way).
+    mt_encoder_ref    — MT model, oracle path.
+    sasp_gemm_t8      — the Layer-1 kernel in isolation (microbench +
+                        rust-vs-python golden tests).
+    quant_gemm_t8     — INT8-weight variant in isolation.
+
+The manifest records the exact positional argument contract (names,
+shapes, dtypes) the rust coordinator must follow, plus model metadata.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from .kernels.ref import quantize_ref
+from .kernels.sasp_gemm import sasp_gemm, sasp_quant_gemm
+from .model import (ASR_TINY, MT_TINY, ModelConfig, asr_forward,
+                    ff_mask_shapes, init_params, mt_forward, param_names)
+from .tensorio import load_tensors
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+ASR_BATCH, ASR_T = 16, D.ASR_MAX_FRAMES
+MT_BATCH, MT_L = 16, D.MT_SEQ_LEN
+GEMM_M, GEMM_K, GEMM_N, GEMM_TILE = 64, 64, 64, 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _manifest_entry(name, shape, dtype):
+    return {"name": name, "shape": [int(d) for d in shape],
+            "dtype": str(np.dtype(dtype))}
+
+
+def _mask_arg_names(cfg: ModelConfig):
+    out = []
+    for i in range(cfg.n_blocks):
+        out += [f"mask.block{i}.ff1", f"mask.block{i}.ff2"]
+    return out
+
+
+def export_encoder(task: str, cfg: ModelConfig, use_pallas: bool,
+                   out_name: str, outdir: str):
+    """Lower an encoder variant; weights/masks are positional args."""
+    names = param_names(cfg)
+    mask_names = _mask_arg_names(cfg)
+    mshapes = [s for pair in ff_mask_shapes(cfg) for s in pair]
+
+    params0 = init_params(cfg)  # shapes only; values come at runtime
+    pshapes = [params0[n].shape for n in names]
+
+    # The position table is an *argument*: XLA's HLO-text printer elides
+    # large constants and the text parser zero-fills them (see model.py).
+    if task == "asr":
+        data_args = [
+            _manifest_entry("feats", (ASR_BATCH, ASR_T, cfg.input_dim),
+                            np.float32),
+            _manifest_entry("pad_mask", (ASR_BATCH, ASR_T), np.float32),
+            _manifest_entry("pos_enc", (ASR_T, cfg.d_model), np.float32),
+        ]
+
+        def fn(feats, pad, pos_enc, *rest):
+            masks = list(rest[: len(mask_names)])
+            plist = rest[len(mask_names):]
+            params = dict(zip(names, plist))
+            return (asr_forward(params, feats, pad, masks, cfg,
+                                pos_enc=pos_enc,
+                                use_pallas=use_pallas, interpret=True),)
+
+        specs = [_spec(e["shape"]) for e in data_args]
+        out_shape = (ASR_BATCH, ASR_T, cfg.vocab)
+    elif task == "mt":
+        data_args = [
+            _manifest_entry("src", (MT_BATCH, MT_L), np.int32),
+            _manifest_entry("pos_enc", (MT_L, cfg.d_model), np.float32),
+        ]
+
+        def fn(src, pos_enc, *rest):
+            masks = list(rest[: len(mask_names)])
+            plist = rest[len(mask_names):]
+            params = dict(zip(names, plist))
+            return (mt_forward(params, src, masks, cfg, pos_enc=pos_enc,
+                               use_pallas=use_pallas, interpret=True),)
+
+        specs = [_spec(data_args[0]["shape"], jnp.int32),
+                 _spec(data_args[1]["shape"])]
+        out_shape = (MT_BATCH, MT_L, cfg.vocab)
+    else:
+        raise ValueError(task)
+
+    specs += [_spec(s, jnp.int32) for s in mshapes]
+    specs += [_spec(s) for s in pshapes]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    # Guard against silent zero-fill of elided constants on the rust side.
+    assert "constant({...}" not in text.replace(" ", ""), (
+        f"{out_name}: HLO text contains an elided large constant — "
+        "pass it as an argument instead")
+
+    manifest = {
+        "name": out_name,
+        "task": task,
+        "args": (data_args
+                 + [_manifest_entry(n, s, np.int32)
+                    for n, s in zip(mask_names, mshapes)]
+                 + [_manifest_entry(n, s, np.float32)
+                    for n, s in zip(names, pshapes)]),
+        "output": {"shape": list(out_shape), "dtype": "float32"},
+        "model": {
+            "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+            "n_blocks": cfg.n_blocks, "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab, "tile": cfg.tile,
+            "input_dim": cfg.input_dim, "token_input": cfg.token_input,
+            "ctc_blank": D.CTC_BLANK if task == "asr" else -1,
+            "batch": ASR_BATCH if task == "asr" else MT_BATCH,
+            "seq_len": ASR_T if task == "asr" else MT_L,
+        },
+        "use_pallas": use_pallas,
+    }
+    _write(outdir, out_name, text, manifest)
+
+
+def export_gemm_kernels(outdir: str):
+    """The Layer-1 kernels in isolation, tile=8."""
+    m, k, n, t = GEMM_M, GEMM_K, GEMM_N, GEMM_TILE
+    x = _spec((m, k))
+    w = _spec((k, n))
+    mask = _spec((k // t, n // t), jnp.int32)
+
+    def fn(x, w, mask):
+        return (sasp_gemm(x, w, mask, tile=t, interpret=True),)
+
+    text = to_hlo_text(jax.jit(fn).lower(x, w, mask))
+    _write(outdir, "sasp_gemm_t8", text, {
+        "name": "sasp_gemm_t8",
+        "args": [_manifest_entry("x", (m, k), np.float32),
+                 _manifest_entry("w", (k, n), np.float32),
+                 _manifest_entry("mask", (k // t, n // t), np.int32)],
+        "output": {"shape": [m, n], "dtype": "float32"},
+        "tile": t,
+    })
+
+    wq = _spec((k, n), jnp.int8)
+    scale = _spec((1,))
+
+    def fnq(x, wq, scale, mask):
+        return (sasp_quant_gemm(x, wq, scale, mask, tile=t, interpret=True),)
+
+    text = to_hlo_text(jax.jit(fnq).lower(x, wq, scale, mask))
+    _write(outdir, "quant_gemm_t8", text, {
+        "name": "quant_gemm_t8",
+        "args": [_manifest_entry("x", (m, k), np.float32),
+                 _manifest_entry("w_q", (k, n), np.int8),
+                 _manifest_entry("scale", (1,), np.float32),
+                 _manifest_entry("mask", (k // t, n // t), np.int32)],
+        "output": {"shape": [m, n], "dtype": "float32"},
+        "tile": t,
+    })
+
+
+def export_goldens(outdir: str):
+    """Golden input/output pairs for the rust integration tests."""
+    from .tensorio import save_tensors
+    from .kernels.ref import sasp_gemm_ref, sasp_quant_gemm_ref
+
+    rng = np.random.default_rng(99)
+    m, k, n, t = GEMM_M, GEMM_K, GEMM_N, GEMM_TILE
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    mask = (rng.random((k // t, n // t)) > 0.3).astype(np.int32)
+    y = np.asarray(sasp_gemm_ref(x, w, mask, tile=t))
+    wq, scale = quantize_ref(jnp.asarray(w))
+    yq = np.asarray(sasp_quant_gemm_ref(x, wq, scale, mask, tile=t))
+    save_tensors(os.path.join(outdir, "golden_gemm.bin"), {
+        "x": x, "w": w, "mask": mask, "y": y,
+        "w_q": np.asarray(wq), "scale": np.asarray(scale).reshape(1),
+        "y_q": yq,
+    })
+
+
+def _write(outdir, name, hlo_text, manifest):
+    hpath = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hpath, "w") as f:
+        f.write(hlo_text)
+    with open(os.path.join(outdir, f"{name}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {hpath} ({len(hlo_text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=ART, help="artifacts directory")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="fail if trained params are missing instead of "
+                         "training")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    if not os.path.exists(os.path.join(outdir, "params_asr.bin")):
+        if args.skip_train:
+            raise SystemExit("trained params missing; run compile.train")
+        from . import train
+        train.main()
+
+    export_gemm_kernels(outdir)
+    export_goldens(outdir)
+    export_encoder("asr", ASR_TINY, True, "asr_encoder_sasp", outdir)
+    export_encoder("asr", ASR_TINY, False, "asr_encoder_ref", outdir)
+    export_encoder("mt", MT_TINY, False, "mt_encoder_ref", outdir)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Synthetic stand-ins for the paper's corpora.
+
+The paper evaluates on LibriSpeech (ASR, WER) and MuST-C (ASR+MT cascade,
+BLEU) — neither of which (nor the 960 h of GPU training they imply) is
+available here. Per the substitution rule, we build synthetic tasks that
+exercise the *same code paths* and, crucially, yield trained transformer
+weights whose tile-L1-norm distribution drives the same QoS-vs-pruning
+trade-off the paper studies:
+
+- **ASR**: each character of a small alphabet has a fixed random "acoustic
+  template" in feature space; an utterance emits 2-4 noisy frames per
+  character. The model is a transformer encoder + CTC head; QoS is WER on
+  a held-out test set, exactly the paper's metric.
+- **MT**: a deterministic synthetic language pair — token remap plus local
+  reordering (adjacent-pair swap for marked tokens) — scored with BLEU.
+
+Everything is seeded, so python (training) and rust (evaluation) see the
+same test set via the tensor bundle in ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --- ASR task ---------------------------------------------------------------
+
+ASR_VOCAB = 28          # 26 letters + space; CTC blank = index 27
+CTC_BLANK = ASR_VOCAB - 1
+ASR_FEAT_DIM = 40       # "fbank"-like feature dimension
+ASR_MAX_FRAMES = 96     # padded frame count
+ASR_MAX_LABEL = 24      # padded label length (0-padded, 0 is a real symbol
+                        # so lengths are carried separately)
+
+
+def _char_templates(rng: np.random.Generator) -> np.ndarray:
+    """Fixed per-character acoustic templates, orthonormalized.
+
+    Orthonormal templates keep the classes separable at the frame level
+    (like distinct phones); difficulty comes from frame noise, variable
+    repetition counts, and the CTC alignment problem.
+    """
+    t = rng.normal(size=(ASR_FEAT_DIM, ASR_VOCAB - 1))
+    q, _ = np.linalg.qr(t)
+    return np.ascontiguousarray(q.T.astype(np.float32))
+
+
+def make_asr_batch(rng: np.random.Generator, templates: np.ndarray,
+                   batch: int, noise: float = 0.30):
+    """Returns (feats [B,T,F], feat_len [B], labels [B,L], label_len [B])."""
+    feats = np.zeros((batch, ASR_MAX_FRAMES, ASR_FEAT_DIM), np.float32)
+    labels = np.zeros((batch, ASR_MAX_LABEL), np.int32)
+    feat_len = np.zeros(batch, np.int32)
+    label_len = np.zeros(batch, np.int32)
+    for b in range(batch):
+        n_chars = int(rng.integers(6, 22))
+        seq = rng.integers(0, ASR_VOCAB - 1, size=n_chars)
+        t = 0
+        for i, c in enumerate(seq):
+            reps = int(rng.integers(2, 5))
+            for _ in range(reps):
+                if t >= ASR_MAX_FRAMES:
+                    break
+                feats[b, t] = templates[c] + noise * rng.normal(
+                    size=ASR_FEAT_DIM
+                ).astype(np.float32)
+                t += 1
+        labels[b, :n_chars] = seq
+        feat_len[b] = t
+        label_len[b] = n_chars
+    return feats, feat_len, labels, label_len
+
+
+def make_asr_dataset(seed: int, n_utts: int):
+    """Deterministic dataset: templates + a batch of utterances."""
+    rng = np.random.default_rng(seed)
+    templates = _char_templates(rng)
+    return templates, make_asr_batch(rng, templates, n_utts)
+
+
+# --- MT task ----------------------------------------------------------------
+
+MT_VOCAB = 32           # source/target share a vocabulary size
+MT_SEQ_LEN = 32
+MT_SWAP_TOKEN = 0       # source token that swaps the following pair
+_REMAP_SEED = 1234
+
+
+def mt_remap_table() -> np.ndarray:
+    """Fixed bijective token remap (the 'lexicon' of the toy language)."""
+    rng = np.random.default_rng(_REMAP_SEED)
+    return rng.permutation(MT_VOCAB).astype(np.int32)
+
+
+def mt_translate(src: np.ndarray) -> np.ndarray:
+    """Ground-truth translation: remap every token, then swap the two
+    tokens following every occurrence of ``MT_SWAP_TOKEN`` (local
+    reordering, the phenomenon that makes the task need attention)."""
+    table = mt_remap_table()
+    tgt = table[src].copy()
+    out = tgt.copy()
+    i = 0
+    n = len(src)
+    while i < n:
+        if src[i] == MT_SWAP_TOKEN and i + 2 < n:
+            out[i + 1], out[i + 2] = tgt[i + 2], tgt[i + 1]
+            i += 3
+        else:
+            i += 1
+    return out
+
+
+def make_mt_dataset(seed: int, n_sents: int):
+    """Returns (src [B,L] int32, tgt [B,L] int32)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, MT_VOCAB, size=(n_sents, MT_SEQ_LEN)).astype(np.int32)
+    tgt = np.stack([mt_translate(s) for s in src]).astype(np.int32)
+    return src, tgt

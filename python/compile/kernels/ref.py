@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites compare against;
+they are also what the L2 model falls back to for tile sizes that do not
+divide the model dimensions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expand_tile_mask(tile_mask, tile: int):
+    """``int[KT, NT] -> f32[KT*tile, NT*tile]`` elementwise 0/1 mask."""
+    return jnp.repeat(
+        jnp.repeat(tile_mask.astype(jnp.float32), tile, axis=0), tile, axis=1
+    )
+
+
+def sasp_gemm_ref(x, w, tile_mask, *, tile: int = 8):
+    """Reference block-sparse GEMM: mask weights elementwise, then matmul."""
+    return x @ (w * expand_tile_mask(tile_mask, tile))
+
+
+def quantize_ref(w, bits: int = 8):
+    """Per-tensor symmetric sign-magnitude quantization of weights.
+
+    Returns ``(w_q int8, scale f32[])`` with
+    ``scale = max|w| / (2**(bits-1) - 1)`` — the paper's PTQ scheme for the
+    hybrid FP32_INT8 PE (sign-and-magnitude, so the representable range is
+    symmetric: [-127, 127] for 8 bits).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(w))
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    w_q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return w_q, scale
+
+
+def dequantize_ref(w_q, scale):
+    return w_q.astype(jnp.float32) * scale
+
+
+def sasp_quant_gemm_ref(x, w_q, scale, tile_mask, *, tile: int = 8):
+    """Reference for the INT8-weight block-sparse GEMM."""
+    w = dequantize_ref(w_q, scale)
+    return x @ (w * expand_tile_mask(tile_mask, tile))

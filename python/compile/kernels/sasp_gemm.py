@@ -1,0 +1,161 @@
+"""Layer-1 Pallas kernels: SASP block-sparse GEMM (+ INT8-weight variant).
+
+The paper's core hardware insight — a weight-stationary systolic array can
+*skip* an entire weight tile whose values are all zero (no weight
+programming, no input streaming, no partial-product accumulation) — is
+expressed here for the TPU stack:
+
+- the systolic tile == the Pallas block: ``BlockSpec`` schedules the
+  HBM->VMEM movement that the paper performs with custom PROG_WEIGHT /
+  STREAM_IO instructions;
+- the SASP elision is ``@pl.when(mask[k, j])`` around the block matmul —
+  a pruned tile contributes neither MXU work nor (on real hardware) the
+  VMEM fill for the weight block;
+- the MXU systolic array plays the role of the paper's PE mesh.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.py`` by the
+pytest suite, and real-TPU efficiency is estimated analytically in
+DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _m_block(m: int, tile: int) -> int:
+    """M-dimension block size (§Perf L1 iteration 1).
+
+    The weight tile is fixed at ``tile x tile`` by the SASP co-design, but
+    the streamed M dimension is free: taller M-blocks mean fewer grid
+    steps (64x fewer for the encoder shapes) and better MXU occupancy on
+    real hardware, at ~`4*tm*tile*3` bytes of VMEM (~48 KiB at tm=512,
+    far under budget). Pick the largest divisor of ``m`` that is a
+    multiple of ``tile`` and at most 512; fall back to ``m`` when the
+    batch dimension is not tile-aligned.
+    """
+    if m % tile != 0:
+        return m
+    tm = 512
+    while tm >= tile:
+        if m % tm == 0:
+            return tm
+        tm -= tile
+    return tile
+
+
+def _sasp_gemm_kernel(x_ref, w_ref, mask_ref, o_ref, *, n_kt: int):
+    """One (i, j, k) grid step of the block-sparse GEMM.
+
+    Grid order is (i, j, k) with k innermost so the f32 accumulation into
+    ``o_ref`` is sequential per output block (classic weight-stationary
+    tiling: the output tile stays resident while K-tiles stream).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # SASP tile skip: a pruned (all-zero) weight tile is elided entirely.
+    @pl.when(mask_ref[0, 0] != 0)
+    def _mac():
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sasp_gemm(x, w, tile_mask, *, tile: int = 8, interpret: bool = True):
+    """Block-sparse GEMM ``x @ (w * expand(tile_mask))``.
+
+    Args:
+      x: ``f32[M, K]`` activations.
+      w: ``f32[K, N]`` weights. Tiles where ``tile_mask`` is 0 are treated
+        as (and asserted by tests to be) zero.
+      tile_mask: ``int32[K // tile, N // tile]`` — 1 = keep, 0 = pruned.
+      tile: SASP tile size == systolic array dimension (square array).
+
+    Returns:
+      ``f32[M, N]``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert k % tile == 0 and n % tile == 0, "K, N must be tile-aligned"
+    assert tile_mask.shape == (k // tile, n // tile), tile_mask.shape
+    tm = _m_block(m, tile)
+    grid = (m // tm, n // tile, k // tile)
+
+    return pl.pallas_call(
+        functools.partial(_sasp_gemm_kernel, n_kt=k // tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tile), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, tile_mask.astype(jnp.int32))
+
+
+def _sasp_quant_gemm_kernel(x_ref, wq_ref, scale_ref, mask_ref, o_ref):
+    """INT8-weight variant: dequantize the live tile in VMEM, then MAC.
+
+    Mirrors the paper's hybrid FP32_INT8 PE (§3.3): activations stay FP32,
+    weights are INT8 magnitudes scaled per tensor; the multiply happens at
+    FP32 precision after expansion, and the accumulator is FP32 — exactly
+    the numerics of the hybrid multiplier up to its truncation step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(mask_ref[0, 0] != 0)
+    def _mac():
+        w_f32 = wq_ref[...].astype(jnp.float32) * scale_ref[0]
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_f32, preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sasp_quant_gemm(x, w_q, scale, tile_mask, *, tile: int = 8,
+                    interpret: bool = True):
+    """Block-sparse GEMM with INT8 weights: ``x @ (dequant(w_q) * mask)``.
+
+    Args:
+      x: ``f32[M, K]`` activations.
+      w_q: ``int8[K, N]`` quantized weights.
+      scale: ``f32[1]`` per-tensor dequantization scale.
+      tile_mask: ``int32[K // tile, N // tile]``.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and k % tile == 0 and n % tile == 0
+    assert tile_mask.shape == (k // tile, n // tile)
+    tm = _m_block(m, tile)
+    grid = (m // tm, n // tile, k // tile)
+
+    return pl.pallas_call(
+        _sasp_quant_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, tile), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tile), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_q, scale.reshape(1), tile_mask.astype(jnp.int32))

@@ -1,0 +1,233 @@
+"""Layer-2 JAX model: transformer encoder with SASP feed-forward GEMMs.
+
+The architecture mirrors the paper's ESPnet encoder blocks (pre-LN MHSA +
+feed-forward), scaled down to the synthetic tasks. The feed-forward GEMMs —
+the layers the paper prunes (§3.1: "feed-forward GEMMs are much more
+amenable to pruning than attention ones") — are routed through the Layer-1
+Pallas kernel ``sasp_gemm`` so that the lowered HLO contains the
+block-sparse compute path and the tile masks are *runtime inputs*: the rust
+coordinator prunes weights, builds masks, and re-runs inference without
+ever re-lowering.
+
+Weights are HLO arguments (not constants) for the same reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.sasp_gemm import sasp_gemm
+from .kernels.ref import sasp_gemm_ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shape hyper-parameters (a scaled-down Table 1 row)."""
+
+    name: str = "asr_tiny"
+    input_dim: int = 40            # acoustic features (ASR) — unused for MT
+    vocab: int = 28                # output vocabulary (incl. CTC blank)
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 256
+    n_blocks: int = 4
+    tile: int = 8                  # SASP tile baked into the AOT artifact
+    token_input: bool = False      # MT: embed int tokens instead of feats
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+ASR_TINY = ModelConfig()
+MT_TINY = ModelConfig(
+    name="mt_tiny", input_dim=32, vocab=32, d_model=64, n_heads=4,
+    d_ff=256, n_blocks=2, token_input=True,
+)
+
+
+# --- parameters ---------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter ordering — the AOT argument contract.
+
+    The rust coordinator reproduces this exact order when assembling the
+    PJRT argument list (see ``artifacts/*_manifest.json``).
+    """
+    names = ["in_proj.w", "in_proj.b"]
+    for i in range(cfg.n_blocks):
+        p = f"block{i}."
+        names += [
+            p + "ln1.g", p + "ln1.b",
+            p + "attn.wq", p + "attn.wk", p + "attn.wv", p + "attn.wo",
+            p + "ln2.g", p + "ln2.b",
+            p + "ff.w1", p + "ff.b1", p + "ff.w2", p + "ff.b2",
+        ]
+    names += ["ln_f.g", "ln_f.b", "head.w", "head.b"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Scaled-normal init; biases zero, LayerNorm gains one."""
+    rng = np.random.default_rng(seed)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def dense(m, n):
+        return jnp.asarray(
+            rng.normal(0, (2.0 / (m + n)) ** 0.5, size=(m, n)), jnp.float32
+        )
+
+    p: Params = {}
+    p["in_proj.w"] = (
+        dense(cfg.vocab, d) if cfg.token_input else dense(cfg.input_dim, d)
+    )
+    p["in_proj.b"] = jnp.zeros(d, jnp.float32)
+    for i in range(cfg.n_blocks):
+        pre = f"block{i}."
+        p[pre + "ln1.g"] = jnp.ones(d, jnp.float32)
+        p[pre + "ln1.b"] = jnp.zeros(d, jnp.float32)
+        p[pre + "attn.wq"] = dense(d, d)
+        p[pre + "attn.wk"] = dense(d, d)
+        p[pre + "attn.wv"] = dense(d, d)
+        p[pre + "attn.wo"] = dense(d, d)
+        p[pre + "ln2.g"] = jnp.ones(d, jnp.float32)
+        p[pre + "ln2.b"] = jnp.zeros(d, jnp.float32)
+        p[pre + "ff.w1"] = dense(d, f)
+        p[pre + "ff.b1"] = jnp.zeros(f, jnp.float32)
+        p[pre + "ff.w2"] = dense(f, d)
+        p[pre + "ff.b2"] = jnp.zeros(d, jnp.float32)
+    p["ln_f.g"] = jnp.ones(d, jnp.float32)
+    p["ln_f.b"] = jnp.zeros(d, jnp.float32)
+    p["head.w"] = dense(d, v)
+    p["head.b"] = jnp.zeros(v, jnp.float32)
+    assert list(p) == param_names(cfg)
+    return p
+
+
+def num_params(p: Params) -> int:
+    return int(sum(np.prod(a.shape) for a in p.values()))
+
+
+def ff_mask_shapes(cfg: ModelConfig) -> List[Tuple[Tuple[int, int], Tuple[int, int]]]:
+    """Per-block (mask_w1, mask_w2) tile-mask shapes for the baked tile."""
+    t = cfg.tile
+    return [
+        ((cfg.d_model // t, cfg.d_ff // t), (cfg.d_ff // t, cfg.d_model // t))
+        for _ in range(cfg.n_blocks)
+    ]
+
+
+def full_masks(cfg: ModelConfig) -> List[jnp.ndarray]:
+    """All-ones masks (dense execution), flattened [m1_0, m2_0, m1_1, ...]."""
+    out = []
+    for s1, s2 in ff_mask_shapes(cfg):
+        out += [jnp.ones(s1, jnp.int32), jnp.ones(s2, jnp.int32)]
+    return out
+
+
+# --- forward ------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo, pad_mask, cfg: ModelConfig):
+    """Standard MHSA. ``pad_mask``: f32[B, T], 1 = valid frame."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    scores = scores + (1.0 - pad_mask[:, None, None, :]) * jnp.float32(-1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d) @ wo
+
+
+def _ff_sasp(x2d, w, b, mask, tile: int, interpret: bool, use_pallas: bool):
+    """Feed-forward GEMM through the SASP kernel (or the jnp oracle)."""
+    if use_pallas:
+        y = sasp_gemm(x2d, w, mask, tile=tile, interpret=interpret)
+    else:
+        y = sasp_gemm_ref(x2d, w, mask, tile=tile)
+    return y + b
+
+
+def sinusoidal_pe(t: int, d: int) -> np.ndarray:
+    """Fixed sinusoidal position encoding table ``f32[t, d]``."""
+    pos = np.arange(t)[:, None]
+    dim = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (dim // 2)) / d)
+    return np.where(dim % 2 == 0, np.sin(angle), np.cos(angle)).astype(
+        np.float32)
+
+
+def encoder_forward(params: Params, x, pad_mask, masks: List[jnp.ndarray],
+                    cfg: ModelConfig, *, pos_enc=None,
+                    use_pallas: bool = True, interpret: bool = True):
+    """Run the encoder stack.
+
+    Args:
+      x: ``f32[B, T, input_dim]`` features, or ``int32[B, T]`` tokens when
+        ``cfg.token_input``.
+      pad_mask: ``f32[B, T]`` validity mask.
+      masks: flattened per-block FF tile masks ``[m1_0, m2_0, m1_1, ...]``.
+      pos_enc: optional ``f32[T, d_model]`` position table. The AOT path
+        passes it as an *argument*: XLA's HLO-text printer elides large
+        constants (``constant({...})``), which the 0.5.1 text parser
+        zero-fills — constants this size must not be baked in.
+
+    Returns ``f32[B, T, vocab]`` logits.
+    """
+    if cfg.token_input:
+        h = params["in_proj.w"][x] + params["in_proj.b"]
+    else:
+        h = x @ params["in_proj.w"] + params["in_proj.b"]
+    bsz, t, d = h.shape
+    if pos_enc is None:
+        pos_enc = jnp.asarray(sinusoidal_pe(t, d))
+    h = h + pos_enc[None]
+
+    for i in range(cfg.n_blocks):
+        p = f"block{i}."
+        hn = _layer_norm(h, params[p + "ln1.g"], params[p + "ln1.b"])
+        h = h + _attention(
+            hn, params[p + "attn.wq"], params[p + "attn.wk"],
+            params[p + "attn.wv"], params[p + "attn.wo"], pad_mask, cfg,
+        )
+        hn = _layer_norm(h, params[p + "ln2.g"], params[p + "ln2.b"])
+        x2d = hn.reshape(bsz * t, d)
+        y = _ff_sasp(x2d, params[p + "ff.w1"], params[p + "ff.b1"],
+                     masks[2 * i], cfg.tile, interpret, use_pallas)
+        y = jax.nn.relu(y)
+        y = _ff_sasp(y, params[p + "ff.w2"], params[p + "ff.b2"],
+                     masks[2 * i + 1], cfg.tile, interpret, use_pallas)
+        h = h + y.reshape(bsz, t, d)
+
+    h = _layer_norm(h, params["ln_f.g"], params["ln_f.b"])
+    return h @ params["head.w"] + params["head.b"]
+
+
+def asr_forward(params: Params, feats, pad_mask, masks, cfg: ModelConfig,
+                **kw):
+    """ASR: encoder + CTC log-probs, ``f32[B, T, vocab]``."""
+    logits = encoder_forward(params, feats, pad_mask, masks, cfg, **kw)
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def mt_forward(params: Params, src, masks, cfg: ModelConfig, **kw):
+    """MT: encoder over tokens, per-position target logits."""
+    pad_mask = jnp.ones(src.shape, jnp.float32)
+    return encoder_forward(params, src, pad_mask, masks, cfg, **kw)

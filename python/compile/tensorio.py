@@ -1,0 +1,65 @@
+"""Tiny binary tensor-bundle format shared between python (writer) and the
+rust coordinator (reader: ``rust/src/data/tensorfile.rs``).
+
+Layout (all little-endian):
+
+    magic   : 8 bytes  b"SASPTNS1"
+    count   : u32
+    per tensor:
+        name_len : u32, name bytes (utf-8)
+        dtype    : u8   (0 = f32, 1 = i32, 2 = i8)
+        ndim     : u32, dims u32 * ndim
+        data     : raw bytes, C order
+
+Kept deliberately dumb — no compression, no alignment tricks — so both
+sides are ~60 lines and fully testable.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"SASPTNS1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.int8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.int8): 2}
+
+
+def save_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write an ordered name->array bundle. Order is preserved on load."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _CODES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_tensors(path: str) -> dict[str, np.ndarray]:
+    """Read a bundle written by :func:`save_tensors` (round-trip tested)."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(_DTYPES[code])
+            n = int(np.prod(shape)) if shape else 1
+            data = f.read(n * dtype.itemsize)
+            out[name] = np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+    return out

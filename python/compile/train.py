@@ -1,0 +1,203 @@
+"""Build-time training of the synthetic ASR and MT models (pure JAX).
+
+This is the stand-in for the paper's ESPnet training runs (Table 1). Adam
+is implemented inline (no optax in this environment). Training uses the
+jnp oracle path of the SASP GEMM (differentiable and fast); the Pallas
+path is exercised by the AOT artifacts and the pytest equivalence suite.
+
+Outputs (all consumed by the rust coordinator):
+    artifacts/params_asr.bin / params_mt.bin   — trained weights
+    artifacts/testset_asr.bin / testset_mt.bin — held-out eval data
+    artifacts/train_log_asr.json / _mt.json    — loss curves (EXPERIMENTS.md)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from .ctc import ctc_loss, greedy_decode
+from .model import (ASR_TINY, MT_TINY, ModelConfig, asr_forward, full_masks,
+                    init_params, mt_forward, num_params)
+from .tensorio import save_tensors
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+ASR_TRAIN_STEPS = 2500
+MT_TRAIN_STEPS = 800
+BATCH = 32
+LR_PEAK, LR_FLOOR, WARMUP = 3e-3, 1e-4, 100
+
+
+def lr_at(step: int, total: int) -> float:
+    """Linear warmup then cosine decay (ESPnet-style schedule stand-in)."""
+    if step < WARMUP:
+        return LR_PEAK * (step + 1) / WARMUP
+    frac = (step - WARMUP) / max(total - WARMUP, 1)
+    return LR_FLOOR + 0.5 * (LR_PEAK - LR_FLOOR) * (1 + np.cos(np.pi * frac))
+TEST_UTTS = 64
+SEED_TRAIN, SEED_TEST = 7, 1337
+
+
+# --- Adam (inline, pytree-generic) -------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vh_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mh_scale)
+        / (jnp.sqrt(v_ * vh_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --- ASR ----------------------------------------------------------------------
+
+
+def train_asr(steps: int = ASR_TRAIN_STEPS, log_every: int = 25,
+              seed: int = SEED_TRAIN):
+    cfg = ASR_TINY
+    params = init_params(cfg, seed=0)
+    print(f"[asr] {num_params(params):,} params, {steps} steps")
+    masks = full_masks(cfg)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    templates = D._char_templates(np.random.default_rng(SEED_TEST))
+
+    @jax.jit
+    def loss_fn(p, feats, pad, flen, labels, llen):
+        lp = asr_forward(p, feats, pad, masks, cfg, use_pallas=False)
+        return jnp.mean(ctc_loss(lp, flen, labels, llen, blank=D.CTC_BLANK))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        feats, flen, labels, llen = D.make_asr_batch(rng, templates, BATCH)
+        pad = (np.arange(D.ASR_MAX_FRAMES)[None] < flen[:, None]).astype(
+            np.float32)
+        loss, grads = grad_fn(params, feats, pad, flen, labels, llen)
+        params, opt = adam_update(params, grads, opt, lr=lr_at(step, steps))
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss),
+                        "wall_s": round(time.time() - t0, 2)})
+            print(f"[asr] step {step:4d} loss {float(loss):8.4f}")
+    return cfg, params, log
+
+
+def eval_asr_wer(cfg: ModelConfig, params, feats, flen, labels, llen) -> float:
+    """Character-task WER over space-delimited 'words' (paper's metric)."""
+    masks = full_masks(cfg)
+    pad = (np.arange(feats.shape[1])[None] < flen[:, None]).astype(np.float32)
+    lp = asr_forward(params, feats, pad, masks, cfg, use_pallas=False)
+    hyps = greedy_decode(np.asarray(lp), flen, blank=D.CTC_BLANK)
+    errs = tot = 0
+    for b, hyp in enumerate(hyps):
+        ref = list(labels[b, : int(llen[b])])
+        errs += _edit_distance(hyp, [int(x) for x in ref])
+        tot += len(ref)
+    return errs / max(tot, 1)
+
+
+def _edit_distance(a, b) -> int:
+    la, lb = len(a), len(b)
+    prev = list(range(lb + 1))
+    for i in range(1, la + 1):
+        cur = [i] + [0] * lb
+        for j in range(1, lb + 1):
+            cur[j] = min(prev[j] + 1, cur[j - 1] + 1,
+                         prev[j - 1] + (a[i - 1] != b[j - 1]))
+        prev = cur
+    return prev[lb]
+
+
+# --- MT -----------------------------------------------------------------------
+
+
+def train_mt(steps: int = MT_TRAIN_STEPS, log_every: int = 25,
+             seed: int = SEED_TRAIN + 1):
+    cfg = MT_TINY
+    params = init_params(cfg, seed=1)
+    print(f"[mt] {num_params(params):,} params, {steps} steps")
+    masks = full_masks(cfg)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def loss_fn(p, src, tgt):
+        logits = mt_forward(p, src, masks, cfg, use_pallas=False)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    log = []
+    for step in range(steps):
+        src = rng.integers(0, D.MT_VOCAB,
+                           size=(BATCH, D.MT_SEQ_LEN)).astype(np.int32)
+        tgt = np.stack([D.mt_translate(s) for s in src]).astype(np.int32)
+        loss, grads = grad_fn(params, src, tgt)
+        params, opt = adam_update(params, grads, opt, lr=lr_at(step, steps))
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss)})
+            print(f"[mt] step {step:4d} loss {float(loss):8.4f}")
+    return cfg, params, log
+
+
+# --- entry --------------------------------------------------------------------
+
+
+def main():
+    os.makedirs(ART, exist_ok=True)
+
+    cfg, params, log = train_asr()
+    templates, (feats, flen, labels, llen) = D.make_asr_dataset(
+        SEED_TEST, TEST_UTTS)
+    wer = eval_asr_wer(cfg, params, feats, flen, labels, llen)
+    print(f"[asr] clean test WER = {wer:.4f}")
+    log.append({"step": -1, "test_wer": wer})
+    out = {k: np.asarray(v) for k, v in params.items()}
+    # Fixed PE table rides along as an artifact argument (see model.py).
+    from .model import sinusoidal_pe
+    out["pos_enc"] = sinusoidal_pe(D.ASR_MAX_FRAMES, cfg.d_model)
+    save_tensors(os.path.join(ART, "params_asr.bin"), out)
+    save_tensors(os.path.join(ART, "testset_asr.bin"), {
+        "feats": feats, "feat_len": flen, "labels": labels,
+        "label_len": llen,
+    })
+    with open(os.path.join(ART, "train_log_asr.json"), "w") as f:
+        json.dump(log, f, indent=1)
+
+    cfg_mt, params_mt, log_mt = train_mt()
+    src, tgt = D.make_mt_dataset(SEED_TEST + 1, TEST_UTTS)
+    out_mt = {k: np.asarray(v) for k, v in params_mt.items()}
+    from .model import sinusoidal_pe as _pe
+    out_mt["pos_enc"] = _pe(D.MT_SEQ_LEN, cfg_mt.d_model)
+    save_tensors(os.path.join(ART, "params_mt.bin"), out_mt)
+    save_tensors(os.path.join(ART, "testset_mt.bin"), {"src": src, "tgt": tgt})
+    with open(os.path.join(ART, "train_log_mt.json"), "w") as f:
+        json.dump(log_mt, f, indent=1)
+    print("[train] artifacts written")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""CTC loss vs brute-force path enumeration + decode behaviour."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.ctc import ctc_loss, greedy_decode
+
+
+def brute_force_ctc(lp, lab, blank):
+    """Enumerate all alignment paths (tiny cases only)."""
+    t_total, v = lp.shape
+    tot = -np.inf
+    for path in itertools.product(range(v), repeat=t_total):
+        seq, prev = [], -1
+        for s in path:
+            if s != prev and s != blank:
+                seq.append(s)
+            prev = s
+        if seq == list(lab):
+            tot = np.logaddexp(tot, sum(lp[t, path[t]] for t in range(t_total)))
+    return -tot
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t_len=st.integers(3, 5),
+    lab_len=st.integers(1, 3),
+    vocab=st.integers(3, 4),
+)
+def test_ctc_matches_brute_force(seed, t_len, lab_len, vocab):
+    if lab_len > t_len:
+        lab_len = t_len
+    rng = np.random.default_rng(seed)
+    blank = vocab - 1
+    lp = np.log(rng.dirichlet(np.ones(vocab), size=t_len)).astype(np.float32)
+    # labels must not contain blank; repeated labels cost extra frames
+    lab = rng.integers(0, blank, size=lab_len).astype(np.int32)
+    needed = lab_len + sum(lab[i] == lab[i - 1] for i in range(1, lab_len))
+    if needed > t_len:
+        return  # no valid path exists; skip degenerate case
+    got = float(ctc_loss(lp[None], np.array([t_len], np.int32), lab[None],
+                         np.array([lab_len], np.int32), blank=blank)[0])
+    want = brute_force_ctc(lp, lab, blank)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ctc_feat_len_masks_tail():
+    """Frames beyond feat_len must not affect the loss."""
+    rng = np.random.default_rng(0)
+    lp1 = np.log(rng.dirichlet(np.ones(5), size=8)).astype(np.float32)
+    lp2 = lp1.copy()
+    lp2[6:] = np.log(rng.dirichlet(np.ones(5), size=2)).astype(np.float32)
+    lab = np.array([[1, 2]], np.int32)
+    args = (np.array([6], np.int32), lab, np.array([2], np.int32))
+    a = float(ctc_loss(lp1[None], *args, blank=4)[0])
+    b = float(ctc_loss(lp2[None], *args, blank=4)[0])
+    assert a == pytest.approx(b, rel=1e-6)
+
+
+def test_greedy_decode_collapses_and_drops_blank():
+    # vocab=3, blank=2; frames: [0,0,2,1,1,2,1]
+    path = np.array([0, 0, 2, 1, 1, 2, 1])
+    lp = np.full((1, 7, 3), -10.0, np.float32)
+    for t, s in enumerate(path):
+        lp[0, t, s] = 0.0
+    out = greedy_decode(lp, np.array([7]), blank=2)
+    assert out == [[0, 1, 1]]
+
+
+def test_greedy_decode_respects_feat_len():
+    lp = np.full((1, 5, 3), -10.0, np.float32)
+    lp[0, :, 0] = 0.0
+    out = greedy_decode(lp, np.array([2]), blank=2)
+    assert out == [[0]]

@@ -1,0 +1,136 @@
+"""Layer-1 correctness: Pallas SASP kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tile sizes, and mask densities — the CORE
+correctness signal for the compute hot-spot.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.sasp_gemm import sasp_gemm, sasp_quant_gemm
+from compile.kernels.ref import (dequantize_ref, expand_tile_mask,
+                                 quantize_ref, sasp_gemm_ref,
+                                 sasp_quant_gemm_ref)
+
+
+def _rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def _mask(rng, kt, nt, density):
+    m = (rng.random((kt, nt)) < density).astype(np.int32)
+    return m
+
+
+# --- fixed-shape smoke tests ---------------------------------------------------
+
+
+@pytest.mark.parametrize("tile", [4, 8, 16])
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_sasp_gemm_matches_ref(tile, density):
+    rng = np.random.default_rng(tile * 100 + int(density * 10))
+    m, k, n = 32, 4 * tile, 6 * tile
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    mask = _mask(rng, k // tile, n // tile, density)
+    got = np.asarray(sasp_gemm(x, w, mask, tile=tile))
+    want = np.asarray(sasp_gemm_ref(x, w, mask, tile=tile))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile", [4, 8])
+def test_sasp_quant_gemm_matches_ref(tile):
+    rng = np.random.default_rng(7)
+    m, k, n = 16, 4 * tile, 4 * tile
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    mask = _mask(rng, k // tile, n // tile, 0.6)
+    w_q, scale = quantize_ref(jnp.asarray(w))
+    got = np.asarray(sasp_quant_gemm(x, w_q, scale, mask, tile=tile))
+    want = np.asarray(sasp_quant_gemm_ref(x, w_q, scale, mask, tile=tile))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_zero_mask_gives_zero_output():
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 16, 32), _rand(rng, 32, 32)
+    mask = np.zeros((4, 4), np.int32)
+    got = np.asarray(sasp_gemm(x, w, mask, tile=8))
+    assert np.all(got == 0.0)
+
+
+def test_mask_row_zero_matches_dense_partial():
+    """Pruning one K-row of tiles must equal zeroing those weight rows."""
+    rng = np.random.default_rng(2)
+    tile = 8
+    x, w = _rand(rng, 16, 32), _rand(rng, 32, 24)
+    mask = np.ones((4, 3), np.int32)
+    mask[1, :] = 0
+    w_masked = w.copy()
+    w_masked[tile:2 * tile, :] = 0.0
+    got = np.asarray(sasp_gemm(x, w, mask, tile=tile))
+    np.testing.assert_allclose(got, x @ w_masked, rtol=1e-5, atol=1e-4)
+
+
+# --- hypothesis sweeps ---------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 4), kt=st.integers(1, 5), nt=st.integers(1, 5),
+    tile=st.sampled_from([4, 8]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sasp_gemm_hypothesis(mt, kt, nt, tile, density, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = mt * tile, kt * tile, nt * tile
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    mask = _mask(rng, kt, nt, density)
+    got = np.asarray(sasp_gemm(x, w, mask, tile=tile))
+    want = np.asarray(sasp_gemm_ref(x, w, mask, tile=tile))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kt=st.integers(1, 4), nt=st.integers(1, 4),
+    tile=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_gemm_hypothesis(kt, nt, tile, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = 2 * tile, kt * tile, nt * tile
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    mask = _mask(rng, kt, nt, 0.7)
+    w_q, scale = quantize_ref(jnp.asarray(w))
+    got = np.asarray(sasp_quant_gemm(x, w_q, scale, mask, tile=tile))
+    want = np.asarray(sasp_quant_gemm_ref(x, w_q, scale, mask, tile=tile))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# --- quantizer properties ------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale_pow=st.integers(-3, 3))
+def test_quantize_roundtrip_error_bound(seed, scale_pow):
+    """|dequant(quant(w)) - w| <= scale/2 elementwise (symmetric PTQ)."""
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(16, 16)) * 10.0 ** scale_pow).astype(np.float32)
+    w_q, scale = quantize_ref(jnp.asarray(w))
+    err = np.abs(np.asarray(dequantize_ref(w_q, scale)) - w)
+    assert np.all(err <= float(scale) / 2 + 1e-7)
+
+
+def test_quantize_all_zero_weights():
+    w_q, scale = quantize_ref(jnp.zeros((8, 8)))
+    assert float(scale) == 1.0
+    assert np.all(np.asarray(w_q) == 0)
+
+
+def test_expand_tile_mask_shapes():
+    m = jnp.asarray(np.arange(6).reshape(2, 3) % 2, jnp.int32)
+    e = np.asarray(expand_tile_mask(m, 4))
+    assert e.shape == (8, 12)
+    assert np.all(e[:4, :4] == 0) and np.all(e[:4, 4:8] == 1)

@@ -1,0 +1,154 @@
+"""Layer-2 model checks: shapes, finiteness, pallas==oracle equivalence,
+mask==zeroed-weights equivalence (the identity the rust QoS sweep relies
+on), and data generators."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile.model import (ASR_TINY, MT_TINY, asr_forward, ff_mask_shapes,
+                           full_masks, init_params, mt_forward, num_params,
+                           param_names)
+
+
+@pytest.fixture(scope="module")
+def asr_setup():
+    cfg = ASR_TINY
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(2, D.ASR_MAX_FRAMES, cfg.input_dim)).astype(
+        np.float32)
+    pad = np.ones((2, D.ASR_MAX_FRAMES), np.float32)
+    return cfg, params, feats, pad
+
+
+def test_param_order_is_stable(asr_setup):
+    cfg, params, *_ = asr_setup
+    assert list(params) == param_names(cfg)
+    assert num_params(params) > 100_000
+
+
+def test_asr_forward_shape_and_finite(asr_setup):
+    cfg, params, feats, pad = asr_setup
+    lp = asr_forward(params, feats, pad, full_masks(cfg), cfg,
+                     use_pallas=False)
+    assert lp.shape == (2, D.ASR_MAX_FRAMES, cfg.vocab)
+    lp = np.asarray(lp)
+    assert np.isfinite(lp).all()
+    # log-softmax rows sum to 1 in prob space
+    np.testing.assert_allclose(np.exp(lp).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_pallas_and_oracle_paths_agree(asr_setup):
+    cfg, params, feats, pad = asr_setup
+    masks = full_masks(cfg)
+    a = np.asarray(asr_forward(params, feats, pad, masks, cfg,
+                               use_pallas=True))
+    b = np.asarray(asr_forward(params, feats, pad, masks, cfg,
+                               use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_mask_equals_zeroed_weights(asr_setup):
+    """Running with a pruned mask == running dense with zeroed weight tiles.
+
+    This identity is what lets the rust coordinator sweep tile sizes with
+    the single dense artifact.
+    """
+    cfg, params, feats, pad = asr_setup
+    t = cfg.tile
+    masks = full_masks(cfg)
+    m0 = np.asarray(masks[0]).copy()
+    m0[1, 3] = 0
+    m0[0, 0] = 0
+    masks = [np.asarray(m) for m in masks]
+    masks[0] = m0
+
+    params_zeroed = dict(params)
+    w1 = np.asarray(params["block0.ff.w1"]).copy()
+    w1[1 * t:2 * t, 3 * t:4 * t] = 0.0
+    w1[0:t, 0:t] = 0.0
+    params_zeroed["block0.ff.w1"] = w1
+
+    a = np.asarray(asr_forward(params, feats, pad, masks, cfg,
+                               use_pallas=False))
+    b = np.asarray(asr_forward(params_zeroed, feats, pad, full_masks(cfg),
+                               cfg, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_pad_mask_blocks_attention(asr_setup):
+    """Changing padded frames must not change valid-frame outputs."""
+    cfg, params, feats, _ = asr_setup
+    pad = np.ones((2, D.ASR_MAX_FRAMES), np.float32)
+    pad[:, 50:] = 0.0
+    feats2 = feats.copy()
+    feats2[:, 50:] = 123.0
+    a = np.asarray(asr_forward(params, feats, pad, full_masks(cfg), cfg,
+                               use_pallas=False))
+    b = np.asarray(asr_forward(params, feats2, pad, full_masks(cfg), cfg,
+                               use_pallas=False))
+    np.testing.assert_allclose(a[:, :50], b[:, :50], rtol=1e-4, atol=1e-4)
+
+
+def test_mt_forward_shape():
+    cfg = MT_TINY
+    params = init_params(cfg, seed=1)
+    src = np.zeros((2, D.MT_SEQ_LEN), np.int32)
+    out = mt_forward(params, src, full_masks(cfg), cfg, use_pallas=False)
+    assert out.shape == (2, D.MT_SEQ_LEN, cfg.vocab)
+
+
+def test_ff_mask_shapes_cover_all_blocks():
+    cfg = ASR_TINY
+    shapes = ff_mask_shapes(cfg)
+    assert len(shapes) == cfg.n_blocks
+    t = cfg.tile
+    assert shapes[0][0] == (cfg.d_model // t, cfg.d_ff // t)
+    assert shapes[0][1] == (cfg.d_ff // t, cfg.d_model // t)
+
+
+# --- data generators -----------------------------------------------------------
+
+
+def test_asr_dataset_deterministic():
+    _, (f1, fl1, l1, ll1) = D.make_asr_dataset(5, 4)
+    _, (f2, fl2, l2, ll2) = D.make_asr_dataset(5, 4)
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_asr_dataset_lengths_valid():
+    _, (feats, flen, labels, llen) = D.make_asr_dataset(6, 8)
+    assert (flen >= llen).all()  # >=1 frame per char
+    assert (flen <= D.ASR_MAX_FRAMES).all()
+    assert (labels[np.arange(8), np.maximum(llen - 1, 0)] < D.CTC_BLANK).all()
+
+
+def test_mt_translate_is_remap_plus_swaps():
+    table = D.mt_remap_table()
+    src = np.array([1, 2, 3, D.MT_SWAP_TOKEN, 4, 5, 6], np.int32)
+    tgt = D.mt_translate(src)
+    np.testing.assert_array_equal(tgt[:3], table[src[:3]])
+    assert tgt[4] == table[5] and tgt[5] == table[4]  # swapped pair
+    assert tgt[6] == table[6]
+
+
+def test_mt_remap_is_bijection():
+    table = D.mt_remap_table()
+    assert sorted(table.tolist()) == list(range(D.MT_VOCAB))
+
+
+def test_pos_enc_arg_matches_default_path(asr_setup):
+    """Regression: the AOT path passes the PE table as an argument (XLA's
+    HLO-text printer elides large constants; the 0.5.1 parser zero-fills
+    them). Both paths must be numerically identical."""
+    from compile.model import sinusoidal_pe
+    cfg, params, feats, pad = asr_setup
+    masks = full_masks(cfg)
+    a = np.asarray(asr_forward(params, feats, pad, masks, cfg,
+                               use_pallas=False))
+    pe = sinusoidal_pe(feats.shape[1], cfg.d_model)
+    b = np.asarray(asr_forward(params, feats, pad, masks, cfg,
+                               pos_enc=pe, use_pallas=False))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,62 @@
+"""Round-trip tests for the python<->rust tensor bundle format."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.tensorio import MAGIC, load_tensors, save_tensors
+
+
+def test_roundtrip_basic(tmp_path):
+    p = str(tmp_path / "t.bin")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([-1, 0, 7], np.int32),
+        "c": np.array([[1, -2], [3, -4]], np.int8),
+        "scalar": np.array(3.5, np.float32),
+    }
+    save_tensors(p, tensors)
+    out = load_tensors(p)
+    assert list(out) == list(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = str(tmp_path / "bad.bin")
+    with open(p, "wb") as f:
+        f.write(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        load_tensors(p)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    p = str(tmp_path / "t.bin")
+    with pytest.raises(TypeError):
+        save_tensors(p, {"x": np.zeros(3, np.float64)})
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ndim=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+    code=st.sampled_from(["f32", "i32", "i8"]),
+)
+def test_roundtrip_hypothesis(ndim, seed, code):
+    import tempfile
+    tmp_path = tempfile.mkdtemp(prefix="tensorio_hyp_")
+    from pathlib import Path
+    tmp_path = Path(tmp_path)
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(1, 5)) for _ in range(ndim))
+    if code == "f32":
+        arr = rng.normal(size=shape).astype(np.float32)
+    elif code == "i32":
+        arr = rng.integers(-1000, 1000, size=shape).astype(np.int32)
+    else:
+        arr = rng.integers(-128, 128, size=shape).astype(np.int8)
+    p = str(tmp_path / f"h{seed}.bin")
+    save_tensors(p, {"x": arr})
+    out = load_tensors(p)["x"]
+    np.testing.assert_array_equal(out, arr.reshape(shape))

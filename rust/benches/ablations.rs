@@ -1,0 +1,71 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Quantized-path software overhead** — the per-tile cost knob that
+//!    produces the paper's §4.5 FP32/INT8 crossover at 4x4. Sweeps the
+//!    knob and prints where the crossover lands.
+//! 2. **Loop order / data arrangement** (paper ref [1]) — j-outer vs
+//!    k-outer tile order through the traced cache hierarchy.
+//! 3. **Weight-stationary reuse** — tile re-programming cost vs reuse
+//!    across input batches.
+
+use sasp::model::zoo;
+use sasp::model::{GemmKind, GemmShape};
+use sasp::sysim::{engine::gemm_on_array, LoopOrder, SimParams, System, TraceSim};
+use sasp::systolic::{ArrayConfig, Quant, TileTiming};
+use sasp::util::bench::Bench;
+
+fn main() {
+    let b = Bench::default();
+
+    // --- 1. quant overhead knob -> 4x4 crossover -----------------------
+    println!("ablation 1: quant per-tile overhead vs 4x4 crossover");
+    let spec = zoo::espnet_asr();
+    for extra in [0.0, 50.0, 100.0, 200.0] {
+        let mut sys = System::default();
+        sys.params.quant_tile_extra_cycles = extra;
+        let cpu = sys.run_encoder_cpu(&spec).cycles;
+        let f4 = cpu / sys.run_encoder(&spec, &ArrayConfig::square(4, Quant::Fp32), None).cycles;
+        let i4 = cpu / sys.run_encoder(&spec, &ArrayConfig::square(4, Quant::Int8), None).cycles;
+        let f8 = cpu / sys.run_encoder(&spec, &ArrayConfig::square(8, Quant::Fp32), None).cycles;
+        let i8_ = cpu / sys.run_encoder(&spec, &ArrayConfig::square(8, Quant::Int8), None).cycles;
+        println!(
+            "  extra={extra:>5} cycles/tile: 4x4 fp32 {f4:.2} vs int8 {i4:.2} ({}), 8x8 fp32 {f8:.2} vs int8 {i8_:.2} ({})",
+            if i4 < f4 { "fp32 wins — paper shape" } else { "int8 wins" },
+            if i8_ > f8 { "int8 wins — paper shape" } else { "fp32 wins" },
+        );
+    }
+
+    // --- 2. loop order through the traced caches -----------------------
+    println!("\nablation 2: data arrangement (trace-driven)");
+    // Asymmetric shape: input panel fits L1, output panel does not.
+    let g = GemmShape { m: 64, k: 64, n: 2048, kind: GemmKind::FeedForward };
+    let cfg = ArrayConfig::square(8, Quant::Fp32);
+    for (label, order) in [("j-outer", LoopOrder::JOuter), ("k-outer", LoopOrder::KOuter)] {
+        let mut sim = TraceSim::default();
+        let c = sim.trace_gemm_order(&g, &cfg, None, order);
+        println!(
+            "  {label}: l1 misses {:>8}  l2 misses {:>8}",
+            c.l1d_misses, c.l2_misses
+        );
+    }
+    b.run("trace 64x64x2048 j-outer", || {
+        TraceSim::default().trace_gemm_order(&g, &cfg, None, LoopOrder::JOuter)
+    });
+
+    // --- 3. weight-stationary reuse -------------------------------------
+    println!("\nablation 3: weight reuse across batches (8x8 fp32, M=256)");
+    let acfg = ArrayConfig::square(8, Quant::Fp32);
+    let live = TileTiming::live(&acfg, 256);
+    let reuse = TileTiming::reuse(&acfg, 256);
+    println!(
+        "  program-every-batch: {} words/tile; reuse: {} (saves {:.1}% of tile words)",
+        live.total_words(),
+        reuse.total_words(),
+        100.0 * (live.total_words() - reuse.total_words()) as f64
+            / live.total_words() as f64
+    );
+    b.run("sysim espnet 4x4 int8 dense (ablation driver)", || {
+        let p = SimParams::default();
+        gemm_on_array(&g, &ArrayConfig::square(4, Quant::Int8), &p, None).cycles
+    });
+}

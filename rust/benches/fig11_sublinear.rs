@@ -1,0 +1,33 @@
+//! Bench + regeneration of Fig. 11 (timing axis): speedup vs array size,
+//! demonstrating the sublinear scaling the paper attributes to reduced
+//! pruning opportunities + non-scaling overheads.
+
+use sasp::coordinator::Explorer;
+use sasp::model::zoo;
+use sasp::systolic::Quant;
+use sasp::util::bench::Bench;
+
+fn main() {
+    let ex = Explorer::new(zoo::espnet_asr());
+    let b = Bench::default();
+    b.run("fig11 speedup-vs-size grid", || {
+        let mut acc = 0.0;
+        for n in [4usize, 8, 16, 32] {
+            for q in [Quant::Fp32, Quant::Int8] {
+                acc += ex.timing_point(n, q, 0.20).speedup_vs_cpu;
+            }
+        }
+        acc
+    });
+    println!();
+    println!("{:>6} {:>12} {:>12} (20% SASP rate)", "size", "FP32", "INT8");
+    for n in [4usize, 8, 16, 32] {
+        let f = ex.timing_point(n, Quant::Fp32, 0.20).speedup_vs_cpu;
+        let i = ex.timing_point(n, Quant::Int8, 0.20).speedup_vs_cpu;
+        println!("{:>6} {:>12.2} {:>12.2}", n, f, i);
+    }
+    // Sublinearity check: 8->32 is 4x the PEs but < 4x the speedup.
+    let s8 = ex.timing_point(8, Quant::Int8, 0.20).speedup_vs_cpu;
+    let s32 = ex.timing_point(32, Quant::Int8, 0.20).speedup_vs_cpu;
+    println!("\n8->32 speedup ratio: {:.2}x (PE ratio 16x; paper reports 3.04x)", s32 / s8);
+}

@@ -1,0 +1,25 @@
+//! Bench + regeneration of Fig. 6: synthesis area/power across array
+//! sizes and quantization choices. Times the hardware model evaluation
+//! and prints the figure's series.
+
+use sasp::harness;
+use sasp::hwmodel;
+use sasp::systolic::{ArrayConfig, Quant};
+use sasp::util::bench::Bench;
+
+fn main() {
+    let b = Bench::default();
+    b.run("hwmodel::area+power full grid", || {
+        let mut acc = 0.0;
+        for n in [4usize, 8, 16, 32] {
+            for q in [Quant::Fp32, Quant::Int8] {
+                let cfg = ArrayConfig::square(n, q);
+                acc += hwmodel::area_mm2(&cfg) + hwmodel::power_mw(&cfg);
+                let br = hwmodel::components::area_breakdown(&cfg);
+                acc += br.multipliers;
+            }
+        }
+        acc
+    });
+    print!("{}", harness::fig6().render());
+}

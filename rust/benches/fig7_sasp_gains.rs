@@ -1,0 +1,40 @@
+//! Bench + regeneration of Fig. 7 (timing axes): SASP speedup and energy
+//! improvement across workloads and array sizes at a representative
+//! QoS-constrained rate per size (QoS-selected rates come from the
+//! `sasp report fig7` CLI path; benches stay artifact-free).
+
+use sasp::coordinator::Explorer;
+use sasp::model::zoo;
+use sasp::systolic::Quant;
+use sasp::util::bench::Bench;
+
+fn main() {
+    let b = Bench::default();
+    // Paper-selected rates per size (Table 3 row: 25/20/20/20 %).
+    let rates = [(4usize, 0.25), (8, 0.20), (16, 0.20), (32, 0.20)];
+    for spec in zoo::fig7_workloads() {
+        let ex = Explorer::new(spec.clone());
+        b.run(&format!("fig7 sweep {}", spec.name), || {
+            let mut acc = 0.0;
+            for (n, rate) in rates {
+                let p = ex.timing_point(n, Quant::Int8, rate);
+                acc += p.speedup_vs_dense + p.energy_j;
+            }
+            acc
+        });
+    }
+    println!();
+    println!("{:<26} {:>5} {:>6} {:>10} {:>10}", "workload", "size", "rate", "speedup%", "energy%");
+    for spec in zoo::fig7_workloads() {
+        let ex = Explorer::new(spec.clone());
+        for (n, rate) in rates {
+            let p = ex.timing_point(n, Quant::Int8, rate);
+            println!(
+                "{:<26} {:>5} {:>6.2} {:>9.1}% {:>9.1}%",
+                spec.name, n, rate,
+                (p.speedup_vs_dense - 1.0) * 100.0,
+                (1.0 - p.energy_j / p.dense_energy_j) * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench + regeneration of Fig. 8: per-layer normalized encoder runtime
+//! under SASP at two global sparsity targets (8x8 FP32_INT8 array).
+
+use sasp::coordinator::Explorer;
+use sasp::harness;
+use sasp::model::zoo;
+use sasp::systolic::Quant;
+use sasp::util::bench::Bench;
+
+fn main() {
+    let ex = Explorer::new(zoo::espnet_asr());
+    let b = Bench::default();
+    b.run("fig8 per-layer sim (18 blocks, 2 rates)", || {
+        let a = ex.per_layer_normalized(8, Quant::Int8, 0.25);
+        let c = ex.per_layer_normalized(8, Quant::Int8, 0.375);
+        a[0] + c[17]
+    });
+    print!("{}", harness::fig8().render());
+}

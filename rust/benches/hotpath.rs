@@ -1,0 +1,81 @@
+//! Hot-path microbenches across all three layers' rust-side costs:
+//! system-sim GEMM accounting, pruning ranking, cache simulation,
+//! per-cycle systolic simulation, tensor<->literal conversion, and (when
+//! artifacts exist) PJRT dispatch. The §Perf iteration log in
+//! EXPERIMENTS.md is driven by these numbers.
+
+use sasp::coordinator::Explorer;
+use sasp::data::Tensor;
+use sasp::model::zoo;
+use sasp::pruning::{global_prune, synthetic_ff_norms};
+use sasp::runtime::Engine;
+use sasp::sysim::{Cache, CacheConfig};
+use sasp::systolic::{ArrayConfig, Quant, SystolicArray};
+use sasp::util::bench::Bench;
+use sasp::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+
+    // L3: whole-encoder system simulation (the explorer inner loop).
+    let ex = Explorer::new(zoo::espnet_asr());
+    b.run("sysim: espnet_asr encoder, 8x8 int8, dense", || {
+        ex.pruned_run(8, Quant::Int8, 0.0).cycles
+    });
+    b.run("sysim: espnet_asr encoder, 8x8 int8, 25% pruned", || {
+        ex.pruned_run(8, Quant::Int8, 0.25).cycles
+    });
+
+    // L3: pruning global ranking over the full-size model (36 FF GEMMs).
+    let spec = zoo::espnet_asr();
+    let norms = synthetic_ff_norms(&spec, 8, 7);
+    let n_tiles: usize = norms.iter().map(|n| n.norms.len()).sum();
+    b.run(&format!("pruning: global rank {n_tiles} tiles"), || {
+        global_prune(&norms, 0.25).achieved_rate
+    });
+
+    // Substrate: functional cache, 1M accesses.
+    b.run("cache: 1M line-strided accesses (L1 geometry)", || {
+        let mut c = Cache::new(CacheConfig::l1());
+        let mut h = 0u64;
+        for i in 0..1_000_000u64 {
+            if c.access((i * 64) % (1 << 20)) {
+                h += 1;
+            }
+        }
+        h
+    });
+
+    // Substrate: per-cycle systolic simulation, 8x8 tile, M=32.
+    let mut arr = SystolicArray::new(ArrayConfig::square(8, Quant::Int8));
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..32 * 8).map(|_| rng.normal() as f32).collect();
+    arr.program_weights(&w, 0.01);
+    b.run("systolic: per-cycle 8x8 tile, M=32", || {
+        arr.compute(&x, 32)[0]
+    });
+
+    // Runtime: tensor -> literal conversion (the PJRT argument path).
+    let big = Tensor::from_f32(&[16, 96, 40], &vec![0.5f32; 16 * 96 * 40]);
+    b.run("runtime: tensor->literal 240KB f32", || {
+        sasp::runtime::tensor_to_literal(&big).unwrap()
+    });
+
+    // PJRT dispatch (artifact-gated).
+    if std::path::Path::new("artifacts/sasp_gemm_t8.hlo.txt").exists() {
+        let mut engine = Engine::new("artifacts").expect("engine");
+        let golden = sasp::data::load_bundle("artifacts/golden_gemm.bin").unwrap();
+        let args = vec![
+            golden.require("x").unwrap().clone(),
+            golden.require("w").unwrap().clone(),
+            golden.require("mask").unwrap().clone(),
+        ];
+        engine.load("sasp_gemm_t8").unwrap();
+        b.run("pjrt: sasp_gemm_t8 execute (64x64x64)", || {
+            engine.execute("sasp_gemm_t8", &args).unwrap()
+        });
+    } else {
+        println!("pjrt bench skipped (no artifacts)");
+    }
+}

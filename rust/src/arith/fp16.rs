@@ -1,0 +1,174 @@
+//! FP16 generalization of the hybrid multiplier — the paper's §3.3
+//! closing remark: *"the hybrid multiplier design readily generalizes to
+//! different floating-point and integer bitwidths beyond the FP32_INT8
+//! considered in this paper, e.g., to support FP16 activations."*
+//!
+//! Implemented over raw IEEE binary16 bit patterns (1 sign / 5 exponent /
+//! 10 mantissa) since rust has no stable `f16`: conversions to/from f32,
+//! and the same Fig. 5 datapath — zero bypass, sign XOR, 11-bit expanded
+//! mantissa × 7-bit magnitude, shift-align, truncate, exponent adjust.
+//! Subnormals flush, overflow saturates, exactly like the FP32 unit.
+
+use super::signmag::SignMag8;
+
+/// Convert an f32 to IEEE binary16 bits (round-to-nearest-even,
+/// subnormals flushed to zero — the PE's FTZ convention).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xFF) as i32;
+    let mant32 = bits & 0x7F_FFFF;
+    if exp32 == 0 {
+        return sign; // zero / f32-subnormal -> signed zero
+    }
+    let exp16 = exp32 - 127 + 15;
+    if exp16 >= 0x1F {
+        return sign | 0x7BFF; // saturate to max finite (no infinities)
+    }
+    if exp16 <= 0 {
+        return sign; // would be f16-subnormal -> flushed
+    }
+    // Round mantissa 23 -> 10 bits, ties to even.
+    let shift = 13;
+    let mut mant16 = (mant32 >> shift) as u16;
+    let rem = mant32 & ((1 << shift) - 1);
+    let half = 1 << (shift - 1);
+    if rem > half || (rem == half && mant16 & 1 == 1) {
+        mant16 += 1;
+        if mant16 == 1 << 10 {
+            // Mantissa overflow bumps the exponent.
+            if exp16 + 1 >= 0x1F {
+                return sign | 0x7BFF;
+            }
+            return sign | (((exp16 + 1) as u16) << 10);
+        }
+    }
+    sign | ((exp16 as u16) << 10) | mant16
+}
+
+/// Convert IEEE binary16 bits to f32 (subnormals flush to zero).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    if exp == 0 {
+        return f32::from_bits(sign); // zero or flushed subnormal
+    }
+    let exp32 = exp + 127 - 15;
+    f32::from_bits(sign | (exp32 << 23) | (mant << 13))
+}
+
+/// The Fig. 5 datapath at FP16: multiply an FP16 activation (bit
+/// pattern) by a sign-magnitude INT8 weight, returning the FP16 product
+/// bits. Truncates (no rounding) like the FP32 unit.
+pub fn hybrid_mul_f16(a_bits: u16, w: SignMag8) -> u16 {
+    let sign_a = (a_bits >> 15) & 1;
+    let exp_a = ((a_bits >> 10) & 0x1F) as i32;
+    let mant_a = (a_bits & 0x3FF) as u32;
+
+    // Step 1: zero bypass (exp 0 covers zero + flushed subnormals).
+    if exp_a == 0 || w.is_zero() {
+        return 0;
+    }
+    // Step 2: output sign.
+    let sign = (sign_a ^ (w.sign as u16)) << 15;
+    // Step 3: expanded 11-bit mantissa x 7-bit magnitude (<= 18 bits).
+    let mant11 = (1 << 10) | mant_a;
+    let prod = mant11 * w.mag as u32;
+    // Step 4: normalize — leading one in [10, 17].
+    let p = 31 - prod.leading_zeros();
+    let shift = p - 10;
+    let mant_out = ((prod >> shift) & 0x3FF) as u16; // truncate
+    // Step 5: exponent adjust.
+    let exp = exp_a + shift as i32;
+    if exp >= 0x1F {
+        return sign | 0x7BFF; // saturate
+    }
+    if exp <= 0 {
+        return sign; // flushed
+    }
+    sign | ((exp as u16) << 10) | mant_out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn f16_roundtrip_exactly_representable() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 1.5, 0.099975586, 65504.0] {
+            let h = f32_to_f16_bits(v);
+            let back = f16_bits_to_f32(h);
+            let rel = ((back - v) / v.abs().max(1e-6)).abs();
+            assert!(rel < 1e-3, "v={v} back={back}");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_error_within_half_ulp() {
+        check("f32->f16 rel err < 2^-11", 2048, |rng| {
+            let v = (rng.normal() as f32) * 10.0_f32.powi(rng.index(6) as i32 - 3);
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            if v == 0.0 || v.abs() < 6.2e-5 {
+                return (back.abs() < 6.2e-5, format!("v={v} (flush)"));
+            }
+            let rel = ((back - v) / v).abs();
+            (rel <= 1.0 / 2048.0, format!("v={v} back={back} rel={rel}"))
+        });
+    }
+
+    #[test]
+    fn f16_saturates_no_infinity() {
+        assert_eq!(f32_to_f16_bits(1e9), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xFBFF);
+        assert!(f16_bits_to_f32(0x7BFF).is_finite());
+    }
+
+    #[test]
+    fn hybrid_f16_zero_bypass() {
+        assert_eq!(hybrid_mul_f16(f32_to_f16_bits(0.0), SignMag8::from_i8(5)), 0);
+        assert_eq!(hybrid_mul_f16(f32_to_f16_bits(3.5), SignMag8::from_i8(0)), 0);
+    }
+
+    #[test]
+    fn hybrid_f16_exact_for_power_of_two_magnitudes() {
+        for k in 0..7 {
+            let w = SignMag8::from_i8(1 << k);
+            for a in [1.0f32, -1.5, 0.25, 12.0] {
+                let got = f16_bits_to_f32(hybrid_mul_f16(f32_to_f16_bits(a), w));
+                assert_eq!(got, a * (1 << k) as f32, "k={k} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_f16_tracks_exact_product_within_truncation() {
+        check("hybrid f16 < 2 ulp of exact", 2048, |rng| {
+            let a = (rng.normal() as f32) * 4.0;
+            let wv = (rng.index(255) as i16 - 127) as i8;
+            let w = SignMag8::from_i8(wv);
+            let a16 = f32_to_f16_bits(a);
+            let a_eff = f16_bits_to_f32(a16); // value after f16 rounding
+            let got = f16_bits_to_f32(hybrid_mul_f16(a16, w));
+            let exact = a_eff as f64 * wv as f64;
+            if a_eff == 0.0 || wv == 0 {
+                return (got == 0.0, format!("a={a} w={wv}"));
+            }
+            if exact.abs() >= 65504.0 || exact.abs() < 6.2e-5 {
+                return (true, String::new()); // saturation / flush domain
+            }
+            // Truncation drops < 1 f16 ulp ≈ 2^-10 relative.
+            let rel = ((got as f64 - exact) / exact).abs();
+            (rel < 1.0 / 512.0, format!("a={a} w={wv} got={got} exact={exact}"))
+        });
+    }
+
+    #[test]
+    fn hybrid_f16_sign_is_xor() {
+        let a = f32_to_f16_bits(2.0);
+        assert!(f16_bits_to_f32(hybrid_mul_f16(a, SignMag8::from_i8(-3))) < 0.0);
+        let na = f32_to_f16_bits(-2.0);
+        assert!(f16_bits_to_f32(hybrid_mul_f16(na, SignMag8::from_i8(-3))) > 0.0);
+    }
+}

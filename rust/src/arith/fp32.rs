@@ -1,0 +1,100 @@
+//! FP32 helpers with the paper's PE semantics: subnormals are flushed to
+//! zero on both inputs and outputs, and infinities/NaNs are out of scope
+//! (the PE is only ever fed finite activations/weights; tests enforce the
+//! domain).
+
+/// Flush subnormal values (biased exponent 0, nonzero mantissa) to signed
+/// zero — what the Fig. 5 datapath does implicitly by not implementing
+/// subnormal handling.
+#[inline]
+pub fn flush_subnormal(x: f32) -> f32 {
+    if x != 0.0 && x.abs() < f32::MIN_POSITIVE {
+        if x.is_sign_negative() {
+            -0.0
+        } else {
+            0.0
+        }
+    } else {
+        x
+    }
+}
+
+/// PE adder: IEEE f32 addition with flush-to-zero on inputs and output.
+#[inline]
+pub fn ftz_add(a: f32, b: f32) -> f32 {
+    flush_subnormal(flush_subnormal(a) + flush_subnormal(b))
+}
+
+/// PE FP32 multiplier: IEEE f32 multiply with flush-to-zero in/out.
+#[inline]
+pub fn ftz_mul(a: f32, b: f32) -> f32 {
+    flush_subnormal(flush_subnormal(a) * flush_subnormal(b))
+}
+
+/// Decompose a finite f32 into (sign, biased exponent, 23-bit mantissa).
+#[inline]
+pub fn decompose(x: f32) -> (u32, u32, u32) {
+    let bits = x.to_bits();
+    ((bits >> 31) & 1, (bits >> 23) & 0xFF, bits & 0x7F_FFFF)
+}
+
+/// Compose an f32 from (sign, biased exponent, 23-bit mantissa).
+#[inline]
+pub fn compose(sign: u32, exp: u32, mant: u32) -> f32 {
+    f32::from_bits((sign << 31) | ((exp & 0xFF) << 23) | (mant & 0x7F_FFFF))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn subnormals_flushed() {
+        let sub = f32::from_bits(0x0000_0001); // smallest positive subnormal
+        assert_eq!(flush_subnormal(sub), 0.0);
+        assert_eq!(flush_subnormal(-sub), 0.0);
+        assert!(flush_subnormal(-sub).is_sign_negative());
+    }
+
+    #[test]
+    fn normals_pass_through() {
+        for v in [1.0f32, -2.5, f32::MIN_POSITIVE, 3.4e38, -1e-30] {
+            assert_eq!(flush_subnormal(v), v);
+        }
+    }
+
+    #[test]
+    fn decompose_compose_roundtrip() {
+        check("fp32 decompose∘compose = id", 256, |rng| {
+            let x = f32::from_bits(rng.next_u64() as u32);
+            if !x.is_finite() {
+                return (true, String::new());
+            }
+            let (s, e, m) = decompose(x);
+            let ok = compose(s, e, m).to_bits() == x.to_bits();
+            (ok, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn ftz_mul_matches_ieee_on_normal_products() {
+        check("ftz_mul == ieee for normal results", 512, |rng| {
+            let a = (rng.normal() as f32) * 8.0;
+            let b = (rng.normal() as f32) * 8.0;
+            let ieee = a * b;
+            if ieee != 0.0 && ieee.abs() < f32::MIN_POSITIVE {
+                return (true, String::new()); // subnormal product: FTZ differs
+            }
+            (ftz_mul(a, b) == ieee, format!("a={a} b={b}"))
+        });
+    }
+
+    #[test]
+    fn ftz_add_flushes_subnormal_result() {
+        let a = f32::MIN_POSITIVE;
+        let b = -f32::MIN_POSITIVE * 0.5; // forces subnormal intermediate
+        let r = ftz_add(a, b);
+        assert!(r == 0.0 || r.abs() >= f32::MIN_POSITIVE);
+    }
+}

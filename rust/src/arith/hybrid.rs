@@ -1,0 +1,171 @@
+//! The hybrid FP32×INT8 multiplier of Fig. 5, implemented bit-by-bit.
+//!
+//! Datapath (paper §3.3, verbatim steps):
+//!
+//! 1. **Zero bypass**: if either operand is zero the output is zero (a
+//!    dedicated multiplexer in the RTL — the general path cannot produce
+//!    a correct zero because of the implicit leading '1').
+//! 2. **Sign**: XOR of the activation sign and the weight sign
+//!    (sign-and-magnitude INT8).
+//! 3. **Mantissa**: the FP32 mantissa is expanded by appending the
+//!    implicit leading '1' (24 bits), then multiplied by the 7-bit weight
+//!    magnitude → up to 31 bits.
+//! 4. **Normalize**: right-shift to realign the leading '1' to bit 23 and
+//!    **truncate** to 23 fraction bits (no rounding — cheaper hardware).
+//! 5. **Exponent**: adjusted by the number of shifts performed.
+//!
+//! Infinities, NaNs and subnormals are not handled (inputs are flushed /
+//! assumed finite); exponent overflow saturates to the largest finite
+//! value, underflow flushes to zero — both outside the paper's measured
+//! operating range but defined here so the simulator is total.
+
+use super::fp32::{compose, decompose, flush_subnormal};
+use super::signmag::SignMag8;
+
+/// Multiply an FP32 activation by a sign-magnitude INT8 weight, returning
+/// the FP32 product as computed by the Fig. 5 datapath.
+///
+/// The result differs from IEEE `a * (w as f32)` only in the final
+/// truncation (IEEE rounds to nearest-even; the hybrid unit truncates),
+/// i.e. by strictly less than 1 ulp, and never in sign or exponent.
+pub fn hybrid_mul(a: f32, w: SignMag8) -> f32 {
+    let a = flush_subnormal(a);
+    debug_assert!(a.is_finite(), "hybrid_mul domain: finite activations");
+
+    // Step 1: zero bypass mux.
+    if a == 0.0 || w.is_zero() {
+        return 0.0;
+    }
+
+    let (sa, ea, ma) = decompose(a);
+
+    // Step 2: output sign.
+    let sign = sa ^ (w.sign as u32);
+
+    // Step 3: expanded mantissa (1.m23 → 24 bits) times magnitude.
+    let mant24: u32 = (1 << 23) | ma;
+    let prod: u64 = mant24 as u64 * w.mag as u64; // ≤ (2^24-1)*127 < 2^31
+
+    // Step 4: locate leading one. mag ∈ [1,127] ⇒ p ∈ [23, 30].
+    let p = 63 - prod.leading_zeros(); // bit index of leading 1
+    let shift = p - 23;
+    let mant_out = ((prod >> shift) & 0x7F_FFFF) as u32; // truncate
+
+    // Step 5: exponent adjust (weight is an *integer*: each doubling of
+    // magnitude adds one to the exponent).
+    let exp = ea as i32 + shift as i32;
+    if exp >= 0xFF {
+        // Saturate (no infinities in this design).
+        return compose(sign, 0xFE, 0x7F_FFFF);
+    }
+    if exp <= 0 {
+        // Would be subnormal — flushed.
+        return if sign == 1 { -0.0 } else { 0.0 };
+    }
+
+    compose(sign, exp as u32, mant_out)
+}
+
+/// Reference product at f64 precision (for error-bound tests): the exact
+/// mathematical value of `a * w`.
+pub fn exact_mul(a: f32, w: SignMag8) -> f64 {
+    a as f64 * w.to_i8() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn zero_bypass() {
+        assert_eq!(hybrid_mul(0.0, SignMag8::from_i8(77)), 0.0);
+        assert_eq!(hybrid_mul(3.5, SignMag8::from_i8(0)), 0.0);
+        assert_eq!(hybrid_mul(0.0, SignMag8::from_i8(0)), 0.0);
+    }
+
+    #[test]
+    fn exact_for_power_of_two_magnitudes() {
+        // mag = 2^k ⇒ no mantissa bits are lost ⇒ result is exact.
+        for k in 0..7 {
+            let w = SignMag8::from_i8(1 << k);
+            for a in [1.0f32, -1.5, 0.3, 1234.5678, -9.25e-3] {
+                assert_eq!(hybrid_mul(a, w), a * (1 << k) as f32, "k={k} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_is_xor() {
+        assert!(hybrid_mul(2.0, SignMag8::from_i8(-3)) < 0.0);
+        assert!(hybrid_mul(-2.0, SignMag8::from_i8(-3)) > 0.0);
+        assert!(hybrid_mul(-2.0, SignMag8::from_i8(3)) < 0.0);
+    }
+
+    #[test]
+    fn truncation_error_below_one_ulp() {
+        // |hybrid - exact| < ulp(hybrid): truncation drops < 1 ulp.
+        check("hybrid_mul < 1 ulp from exact", 4096, |rng| {
+            let a = (rng.normal() as f32) * 10.0_f32.powi(rng.index(8) as i32 - 4);
+            let wv = (rng.index(255) as i16 - 127) as i8;
+            let w = SignMag8::from_i8(wv);
+            let got = hybrid_mul(a, w);
+            if a == 0.0 || w.is_zero() {
+                return (got == 0.0, format!("a={a} w={wv}"));
+            }
+            let exact = exact_mul(a, w);
+            let ulp = {
+                let bits = got.abs().to_bits();
+                (f32::from_bits(bits + 1) - got.abs()) as f64
+            };
+            let err = (got as f64 - exact).abs();
+            (err < ulp.max(f64::MIN_POSITIVE),
+             format!("a={a} w={wv} got={got} exact={exact} err={err} ulp={ulp}"))
+        });
+    }
+
+    #[test]
+    fn truncation_biases_toward_zero() {
+        // Truncation never increases magnitude.
+        check("hybrid |result| <= |exact|", 2048, |rng| {
+            let a = (rng.normal() as f32) * 3.0;
+            let wv = (rng.index(255) as i16 - 127) as i8;
+            let w = SignMag8::from_i8(wv);
+            let got = hybrid_mul(a, w) as f64;
+            let exact = exact_mul(a, w);
+            (got.abs() <= exact.abs() + 1e-30,
+             format!("a={a} w={wv} got={got} exact={exact}"))
+        });
+    }
+
+    #[test]
+    fn matches_ieee_within_truncation_across_magnitudes() {
+        // Exhaustive over weight values for a few activations.
+        for wv in -127i8..=127 {
+            let w = SignMag8::from_i8(wv);
+            for a in [1.0f32, -0.7071, 3.1415926, 1e10, -1e-10] {
+                let got = hybrid_mul(a, w);
+                let ieee = a * wv as f32;
+                if wv == 0 {
+                    assert_eq!(got, 0.0);
+                    continue;
+                }
+                let rel = ((got - ieee) / ieee.abs().max(f32::MIN_POSITIVE)).abs();
+                assert!(rel < 2.5e-7, "a={a} w={wv} got={got} ieee={ieee}");
+            }
+        }
+    }
+
+    #[test]
+    fn exponent_saturation_no_infinity() {
+        let big = f32::MAX / 2.0;
+        let r = hybrid_mul(big, SignMag8::from_i8(127));
+        assert!(r.is_finite(), "saturates instead of inf, got {r}");
+    }
+
+    #[test]
+    fn subnormal_activation_flushed() {
+        let sub = f32::from_bits(1);
+        assert_eq!(hybrid_mul(sub, SignMag8::from_i8(100)), 0.0);
+    }
+}

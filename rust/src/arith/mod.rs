@@ -1,0 +1,17 @@
+//! Bit-level arithmetic substrates of the systolic-array PE (§3.3).
+//!
+//! The paper's PE contains an FP32 adder and either an FP32 multiplier or
+//! the hybrid FP32×INT8 multiplier of Fig. 5. Neither handles infinities,
+//! NaNs, or subnormals (an area/energy optimization); we reproduce that
+//! behaviour exactly so the functional systolic simulator is bit-faithful
+//! to the described RTL.
+
+pub mod fp32;
+pub mod fp16;
+pub mod hybrid;
+pub mod signmag;
+
+pub use fp32::{flush_subnormal, ftz_add, ftz_mul};
+pub use fp16::{f16_bits_to_f32, f32_to_f16_bits, hybrid_mul_f16};
+pub use hybrid::hybrid_mul;
+pub use signmag::SignMag8;

@@ -1,0 +1,91 @@
+//! Sign-and-magnitude INT8 — the weight representation of the hybrid PE.
+//!
+//! The paper (§3.3): *"our design assumes that the INT8 weight is
+//! represented using a sign-and-magnitude format"*. Magnitude is 7 bits
+//! (0..=127); note sign-magnitude has a negative zero which compares equal
+//! in value terms.
+
+/// An INT8 weight in sign-and-magnitude form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SignMag8 {
+    /// true = negative.
+    pub sign: bool,
+    /// 7-bit magnitude, 0..=127.
+    pub mag: u8,
+}
+
+impl SignMag8 {
+    /// Encode from a two's-complement i8 value in -127..=127
+    /// (-128 saturates to -127 — outside the symmetric quantizer range).
+    pub fn from_i8(v: i8) -> Self {
+        let sign = v < 0;
+        let mag = (v as i16).unsigned_abs().min(127) as u8;
+        SignMag8 { sign, mag }
+    }
+
+    /// Decode to an i8 value.
+    pub fn to_i8(self) -> i8 {
+        let m = self.mag as i8;
+        if self.sign {
+            -m
+        } else {
+            m
+        }
+    }
+
+    /// Raw 8-bit encoding: sign in bit 7, magnitude in bits 0..7.
+    pub fn to_bits(self) -> u8 {
+        ((self.sign as u8) << 7) | (self.mag & 0x7F)
+    }
+
+    pub fn from_bits(b: u8) -> Self {
+        SignMag8 { sign: b & 0x80 != 0, mag: b & 0x7F }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.mag == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn roundtrip_all_values() {
+        for v in -127i8..=127 {
+            assert_eq!(SignMag8::from_i8(v).to_i8(), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        for b in 0u8..=255 {
+            let sm = SignMag8::from_bits(b);
+            assert_eq!(sm.to_bits(), b);
+        }
+    }
+
+    #[test]
+    fn i8_min_saturates() {
+        assert_eq!(SignMag8::from_i8(-128).to_i8(), -127);
+    }
+
+    #[test]
+    fn negative_zero_is_zero() {
+        let nz = SignMag8 { sign: true, mag: 0 };
+        assert!(nz.is_zero());
+        assert_eq!(nz.to_i8(), 0);
+    }
+
+    #[test]
+    fn prop_sign_matches_value() {
+        check("signmag sign matches i8 sign", 256, |rng| {
+            let v = (rng.next_u64() as i8).max(-127);
+            let sm = SignMag8::from_i8(v);
+            let ok = (v < 0) == (sm.sign && sm.mag > 0 || v < 0);
+            (ok && sm.to_i8() == v, format!("v={v}"))
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! The SASP design-space explorer: sweeps (array size × quantization ×
+//! pruning rate) across workloads, combining
+//!
+//! - timing/energy from the system simulator ([`crate::sysim`]) over the
+//!   Table 1 workloads (synthetic tile-norm model),
+//! - area/power from the calibrated hardware model ([`crate::hwmodel`]),
+//! - QoS from the trained stand-in models via PJRT ([`crate::qos`]),
+//!
+//! into the design points plotted in Figs. 7–11 and Table 3.
+
+use crate::hwmodel::{area_energy_product, area_mm2};
+use crate::model::EncoderSpec;
+use crate::pruning::{global_prune, synthetic_ff_norms};
+use crate::sysim::{RunStats, System};
+use crate::systolic::{ArrayConfig, Quant};
+
+/// One fully-evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub workload: &'static str,
+    pub tile: usize,
+    pub quant: Quant,
+    pub rate: f64,
+    /// Speedup of this configuration vs the software-only CPU baseline.
+    pub speedup_vs_cpu: f64,
+    /// Speedup vs the same array without pruning.
+    pub speedup_vs_dense: f64,
+    pub energy_j: f64,
+    /// Energy of the same array without pruning.
+    pub dense_energy_j: f64,
+    pub area_mm2: f64,
+    pub area_energy: f64,
+    /// QoS of the configuration (WER for ASR, BLEU for MT); NaN when the
+    /// point was evaluated timing-only.
+    pub qos: f64,
+}
+
+/// Explorer over one workload spec.
+pub struct Explorer {
+    pub system: System,
+    pub spec: EncoderSpec,
+    /// Seed for the synthetic tile-norm model.
+    pub seed: u64,
+    /// Synthetic norms + baseline runs are deterministic in (spec, seed,
+    /// tile) — memoized, they dominate the sweep's inner loop (§Perf).
+    norm_cache: std::cell::RefCell<
+        std::collections::HashMap<usize, std::rc::Rc<Vec<crate::pruning::TileNorms>>>,
+    >,
+    cpu_cache: std::cell::RefCell<Option<f64>>,
+}
+
+impl Explorer {
+    pub fn new(spec: EncoderSpec) -> Self {
+        Explorer {
+            system: System::default(),
+            spec,
+            seed: 7,
+            norm_cache: Default::default(),
+            cpu_cache: Default::default(),
+        }
+    }
+
+    fn norms_for(&self, tile: usize) -> std::rc::Rc<Vec<crate::pruning::TileNorms>> {
+        self.norm_cache
+            .borrow_mut()
+            .entry(tile)
+            .or_insert_with(|| {
+                std::rc::Rc::new(synthetic_ff_norms(&self.spec, tile, self.seed))
+            })
+            .clone()
+    }
+
+    fn cpu_cycles(&self) -> f64 {
+        if let Some(c) = *self.cpu_cache.borrow() {
+            return c;
+        }
+        let c = self.system.run_encoder_cpu(&self.spec).cycles;
+        *self.cpu_cache.borrow_mut() = Some(c);
+        c
+    }
+
+    /// Simulate one (tile, quant, rate) configuration.
+    pub fn timing_point(&self, tile: usize, quant: Quant, rate: f64) -> DesignPoint {
+        let array = ArrayConfig::square(tile, quant);
+        let cpu_cycles = self.cpu_cycles();
+        let dense = self.system.run_encoder(&self.spec, &array, None);
+        let pruned = self.pruned_run(tile, quant, rate);
+        DesignPoint {
+            workload: self.spec.name,
+            tile,
+            quant,
+            rate,
+            speedup_vs_cpu: cpu_cycles / pruned.cycles,
+            speedup_vs_dense: dense.cycles / pruned.cycles,
+            energy_j: pruned.energy_j,
+            dense_energy_j: dense.energy_j,
+            area_mm2: area_mm2(&array),
+            area_energy: area_energy_product(&array, pruned.energy_j),
+            qos: f64::NAN,
+        }
+    }
+
+    /// Run the workload with a global prune at `rate`.
+    pub fn pruned_run(&self, tile: usize, quant: Quant, rate: f64) -> RunStats {
+        let array = ArrayConfig::square(tile, quant);
+        if rate <= 0.0 {
+            return self.system.run_encoder(&self.spec, &array, None);
+        }
+        let norms = self.norms_for(tile);
+        let plan = global_prune(&norms, rate);
+        self.system.run_encoder(&self.spec, &array, Some(&plan.masks))
+    }
+
+    /// Per-layer normalized runtime at a given global sparsity (Fig. 8):
+    /// each layer's cycles divided by its unpruned cycles.
+    pub fn per_layer_normalized(&self, tile: usize, quant: Quant, rate: f64) -> Vec<f64> {
+        let array = ArrayConfig::square(tile, quant);
+        let dense = self.system.run_encoder(&self.spec, &array, None);
+        let pruned = self.pruned_run(tile, quant, rate);
+        dense
+            .per_layer
+            .iter()
+            .zip(&pruned.per_layer)
+            .map(|(d, p)| p.cycles / d.cycles)
+            .collect()
+    }
+}
+
+/// Search for the highest pruning rate meeting a QoS constraint on a
+/// rate grid — the paper's "under the target QoS degradations defined in
+/// Table 1" selection (Fig. 7, Table 3).
+pub struct RateSearch {
+    /// Candidate rates, ascending (e.g. 0.05 steps to 0.6).
+    pub grid: Vec<f64>,
+}
+
+impl Default for RateSearch {
+    fn default() -> Self {
+        RateSearch { grid: (0..=12).map(|i| i as f64 * 0.05).collect() }
+    }
+}
+
+impl RateSearch {
+    /// Highest rate whose QoS passes `accept`. Assumes QoS degrades
+    /// monotonically with rate (exponentially, per Fig. 9), so scans from
+    /// the top of the grid down and returns on first acceptance.
+    pub fn max_rate<E>(
+        &self,
+        mut qos_at: impl FnMut(f64) -> Result<f64, E>,
+        mut accept: impl FnMut(f64) -> bool,
+    ) -> Result<Option<(f64, f64)>, E> {
+        for rate in self.grid.iter().rev() {
+            let q = qos_at(*rate)?;
+            if accept(q) {
+                return Ok(Some((*rate, q)));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn pruning_increases_speedup_and_cuts_energy() {
+        let e = Explorer::new(zoo::espnet_asr());
+        let p0 = e.timing_point(8, Quant::Int8, 0.0);
+        let p25 = e.timing_point(8, Quant::Int8, 0.25);
+        assert!(p25.speedup_vs_dense > 1.05, "{}", p25.speedup_vs_dense);
+        assert!(p25.energy_j < p0.energy_j);
+        assert!((p0.speedup_vs_dense - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sasp_gains_shrink_with_array_size() {
+        // Fig. 7 trend: achievable improvements decrease for larger
+        // arrays (fixed rate here; the QoS-constrained version amplifies
+        // this).
+        let e = Explorer::new(zoo::espnet_asr());
+        let g8 = e.timing_point(8, Quant::Int8, 0.25).speedup_vs_dense;
+        let g32 = e.timing_point(32, Quant::Int8, 0.25).speedup_vs_dense;
+        assert!(g8 >= g32 * 0.98, "8x8 {g8} vs 32x32 {g32}");
+    }
+
+    #[test]
+    fn per_layer_normalized_tracks_sparsity() {
+        let e = Explorer::new(zoo::espnet_asr());
+        let norm = e.per_layer_normalized(8, Quant::Int8, 0.25);
+        assert_eq!(norm.len(), 18);
+        // All layers at most 1.0 (pruning never slows a layer down).
+        assert!(norm.iter().all(|v| *v <= 1.0 + 1e-9));
+        // Early layers prune more than late ones (synthetic norm model).
+        assert!(norm[0] < *norm.last().unwrap());
+    }
+
+    #[test]
+    fn rate_search_returns_highest_accepted() {
+        let rs = RateSearch { grid: vec![0.0, 0.1, 0.2, 0.3, 0.4] };
+        // QoS = rate (degrades linearly); accept <= 0.25.
+        let got = rs
+            .max_rate::<()>(|r| Ok(r), |q| q <= 0.25)
+            .unwrap()
+            .unwrap();
+        assert_eq!(got.0, 0.2);
+    }
+
+    #[test]
+    fn rate_search_none_when_nothing_passes() {
+        let rs = RateSearch { grid: vec![0.1, 0.2] };
+        let got = rs.max_rate::<()>(|r| Ok(r), |_| false).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn area_energy_monotone_in_size() {
+        let e = Explorer::new(zoo::espnet2_asr());
+        let a8 = e.timing_point(8, Quant::Fp32, 0.0);
+        let a16 = e.timing_point(16, Quant::Fp32, 0.0);
+        assert!(a16.area_mm2 > a8.area_mm2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Layer-3 coordination: the SASP design-space explorer (the paper's
+//! cross-stack co-design loop) and a batched inference serving loop that
+//! exercises the compiled artifact as an edge deployment would.
+
+pub mod explorer;
+pub mod serve;
+
+pub use explorer::{DesignPoint, Explorer, RateSearch};
+pub use serve::{ServeConfig, ServeReport, Server};

@@ -1,0 +1,8 @@
+//! Data plumbing: dense tensors, the python<->rust tensor-bundle format,
+//! and synthetic workload helpers shared with the python side.
+
+pub mod tensor;
+pub mod tensorfile;
+
+pub use tensor::{DType, Tensor};
+pub use tensorfile::{load_bundle, save_bundle, Bundle};

@@ -1,0 +1,196 @@
+//! A small dense tensor: shape + dtype + contiguous little-endian buffer.
+//!
+//! This is deliberately not an ndarray library — the coordinator only
+//! needs typed views, shape bookkeeping, and conversion to/from PJRT
+//! literals (done in [`crate::runtime`]).
+
+use anyhow::{bail, Result};
+
+/// Element type — mirrors the codes in `python/compile/tensorio.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::I8 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    /// Parse numpy dtype names used in the AOT manifests.
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "int8" => DType::I8,
+            _ => bail!("unknown dtype name {name}"),
+        })
+    }
+}
+
+/// Dense tensor in C (row-major) order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// Raw little-endian bytes, `len == numel * dtype.size()`.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(
+            // scalar (rank 0) has one element
+            if self.shape.is_empty() { 1 } else { 0 },
+        )
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
+        let numel: usize = shape.iter().product::<usize>().max(
+            if shape.is_empty() { 1 } else { 0 },
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            dtype,
+            data: vec![0u8; numel * dtype.size()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>().max(if shape.is_empty() { 1 } else { 0 }),
+            values.len(),
+            "shape/value mismatch"
+        );
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { shape: shape.to_vec(), dtype: DType::I32, data }
+    }
+
+    pub fn from_i8(shape: &[usize], values: &[i8]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Tensor {
+            shape: shape.to_vec(),
+            dtype: DType::I8,
+            data: values.iter().map(|v| *v as u8).collect(),
+        }
+    }
+
+    // -- typed views ------------------------------------------------------
+
+    pub fn f32s(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn i32s(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn i8s(&self) -> Vec<i8> {
+        assert_eq!(self.dtype, DType::I8);
+        self.data.iter().map(|b| *b as i8).collect()
+    }
+
+    /// In-place f32 mutation via a closure over (flat index, value).
+    pub fn map_f32_inplace(&mut self, mut f: impl FnMut(usize, f32) -> f32) {
+        assert_eq!(self.dtype, DType::F32);
+        for (i, chunk) in self.data.chunks_exact_mut(4).enumerate() {
+            let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            chunk.copy_from_slice(&f(i, v).to_le_bytes());
+        }
+    }
+
+    /// Row-major 2D accessor helper (debug / tests).
+    pub fn at2_f32(&self, r: usize, c: usize) -> f32 {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        let idx = (r * cols + c) * 4;
+        f32::from_le_bytes([
+            self.data[idx],
+            self.data[idx + 1],
+            self.data[idx + 2],
+            self.data[idx + 3],
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.0]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.f32s(), vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]);
+        assert_eq!(t.at2_f32(1, 1), 5.5);
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let t = Tensor::from_i8(&[4], &[-128, -1, 0, 127]);
+        assert_eq!(t.i8s(), vec![-128, -1, 0, 127]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::from_f32(&[], &[2.25]);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.f32s(), vec![2.25]);
+    }
+
+    #[test]
+    fn map_inplace() {
+        let mut t = Tensor::from_f32(&[3], &[1.0, 2.0, 3.0]);
+        t.map_f32_inplace(|i, v| v * i as f32);
+        assert_eq!(t.f32s(), vec![0.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn dtype_name_parse() {
+        assert_eq!(DType::from_name("float32").unwrap(), DType::F32);
+        assert_eq!(DType::from_name("int8").unwrap(), DType::I8);
+        assert!(DType::from_name("float64").is_err());
+    }
+}

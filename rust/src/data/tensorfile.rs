@@ -1,0 +1,205 @@
+//! Reader/writer for the `SASPTNS1` tensor-bundle format
+//! (see `python/compile/tensorio.py` for the authoritative layout).
+//!
+//! Order-preserving: the python writer iterates dict insertion order and
+//! the rust side keeps a `Vec` of (name, tensor) so AOT argument order is
+//! reproducible.
+
+use std::fs;
+use std::io::{Cursor, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, Tensor};
+
+const MAGIC: &[u8; 8] = b"SASPTNS1";
+
+/// An ordered collection of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Bundle {
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.entries
+            .iter_mut()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .with_context(|| format!("bundle missing tensor '{name}'"))
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if let Some(slot) = self.get_mut(name) {
+            *slot = t;
+        } else {
+            self.entries.push((name.to_string(), t));
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Parse a bundle from bytes.
+pub fn parse_bundle(bytes: &[u8]) -> Result<Bundle> {
+    let mut r = Cursor::new(bytes);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic: {:?}", magic);
+    }
+    let count = read_u32(&mut r)?;
+    let mut entries = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        let mut nbuf = vec![0u8; nlen];
+        r.read_exact(&mut nbuf)?;
+        let name = String::from_utf8(nbuf).context("tensor name not utf-8")?;
+        let dtype = DType::from_code(read_u8(&mut r)?)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product::<usize>().max(
+            if shape.is_empty() { 1 } else { 0 },
+        );
+        let mut data = vec![0u8; numel * dtype.size()];
+        r.read_exact(&mut data)
+            .with_context(|| format!("truncated data for '{name}'"))?;
+        entries.push((name, Tensor { shape, dtype, data }));
+    }
+    Ok(Bundle { entries })
+}
+
+/// Load a bundle from disk.
+pub fn load_bundle(path: impl AsRef<Path>) -> Result<Bundle> {
+    let path = path.as_ref();
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading bundle {}", path.display()))?;
+    parse_bundle(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Serialize a bundle to bytes.
+pub fn emit_bundle(bundle: &Bundle) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(bundle.entries.len() as u32).to_le_bytes());
+    for (name, t) in &bundle.entries {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(t.dtype.code());
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for d in &t.shape {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&t.data);
+    }
+    out
+}
+
+/// Write a bundle to disk.
+pub fn save_bundle(path: impl AsRef<Path>, bundle: &Bundle) -> Result<()> {
+    let mut f = fs::File::create(path.as_ref())?;
+    f.write_all(&emit_bundle(bundle))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn sample_bundle() -> Bundle {
+        let mut b = Bundle::default();
+        b.insert("a", Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]));
+        b.insert("b", Tensor::from_i32(&[3], &[-1, 0, 7]));
+        b.insert("c", Tensor::from_i8(&[2], &[-128, 127]));
+        b
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let b = sample_bundle();
+        let parsed = parse_bundle(&emit_bundle(&b)).unwrap();
+        assert_eq!(parsed.names(), b.names());
+        assert_eq!(parsed.get("a"), b.get("a"));
+        assert_eq!(parsed.get("c"), b.get("c"));
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("sasp_tensorfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let b = sample_bundle();
+        save_bundle(&path, &b).unwrap();
+        let loaded = load_bundle(&path).unwrap();
+        assert_eq!(loaded.get("b").unwrap().i32s(), vec![-1, 0, 7]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(parse_bundle(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let bytes = emit_bundle(&sample_bundle());
+        assert!(parse_bundle(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn insert_replaces() {
+        let mut b = sample_bundle();
+        b.insert("a", Tensor::from_f32(&[1], &[9.0]));
+        assert_eq!(b.get("a").unwrap().f32s(), vec![9.0]);
+        assert_eq!(b.entries.len(), 3);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_bundles() {
+        check("tensorfile roundtrip", 32, |rng: &mut Rng| {
+            let n = rng.index(5);
+            let mut b = Bundle::default();
+            for i in 0..n {
+                let ndim = rng.index(3);
+                let shape: Vec<usize> =
+                    (0..ndim).map(|_| rng.index(4) + 1).collect();
+                let numel: usize = shape.iter().product::<usize>().max(
+                    if shape.is_empty() { 1 } else { 0 },
+                );
+                let vals: Vec<f32> =
+                    (0..numel).map(|_| rng.normal() as f32).collect();
+                b.insert(&format!("t{i}"), Tensor::from_f32(&shape, &vals));
+            }
+            let rt = parse_bundle(&emit_bundle(&b)).unwrap();
+            let ok = rt.entries == b.entries;
+            (ok, format!("n={n}"))
+        });
+    }
+}

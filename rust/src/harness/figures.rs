@@ -1,0 +1,320 @@
+//! Generators for every table and figure of the evaluation section.
+//!
+//! Timing-only reports (Table 1/2, Fig. 6, and the timing axes of the
+//! rest) run without artifacts; QoS-bearing reports take a PJRT
+//! [`Engine`] + [`QosCache`] over the trained stand-in models.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Explorer, RateSearch};
+use crate::hwmodel::{self, area_energy_product};
+use crate::model::zoo;
+use crate::runtime::Engine;
+use crate::systolic::{ArrayConfig, Quant};
+
+use super::{QosCache, Report};
+
+/// Table 1: deployed model parameters (+ the trained stand-ins).
+pub fn table1() -> Report {
+    let mut r = Report::new("Table 1 — deployed models");
+    r.line(format!(
+        "{:<28} {:>7} {:>8} {:>7} {:>8} {:>8}",
+        "model", "blocks", "d_model", "heads", "d_ff", "seq"
+    ));
+    for s in [
+        zoo::espnet_asr(),
+        zoo::espnet2_asr(),
+        zoo::mustc_asr_encoder(),
+        zoo::mustc_mt_encoder(),
+        zoo::tiny_asr(),
+        zoo::tiny_mt(),
+    ] {
+        r.line(format!(
+            "{:<28} {:>7} {:>8} {:>7} {:>8} {:>8}",
+            s.name, s.n_blocks, s.d_model, s.n_heads, s.d_ff, s.seq_len
+        ));
+    }
+    r
+}
+
+/// Table 2: simulated system configuration.
+pub fn table2() -> Report {
+    let mut r = Report::new("Table 2 — simulated system");
+    for (k, v) in [
+        ("Processors", "1x in-order ARMv8-like core @ 1.0 GHz"),
+        ("L1-I Cache", "32 kB, 2-way, 2-cycle"),
+        ("L1-D Cache", "32 kB, 2-way, 2-cycle"),
+        ("L2 Cache", "1 MB, 2-way, 20-cycle"),
+        ("Memory", "DDR4-class, 60-cycle line fill"),
+        ("Systolic array", "tightly coupled, custom instructions"),
+    ] {
+        r.line(format!("{k:<16} {v}"));
+    }
+    r
+}
+
+/// Fig. 6: synthesis area & power across sizes and quantization.
+pub fn fig6() -> Report {
+    let mut r = Report::new("Fig. 6 — synthesis results (area mm² / power mW)");
+    r.line(format!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12}",
+        "size", "FP32 area", "INT8 area", "FP32 power", "INT8 power"
+    ));
+    for n in [4usize, 8, 16, 32] {
+        let f = ArrayConfig::square(n, Quant::Fp32);
+        let i = ArrayConfig::square(n, Quant::Int8);
+        r.line(format!(
+            "{:>6} {:>12.3} {:>12.3} {:>12.1} {:>12.1}",
+            n,
+            hwmodel::area_mm2(&f),
+            hwmodel::area_mm2(&i),
+            hwmodel::power_mw(&f),
+            hwmodel::power_mw(&i)
+        ));
+    }
+    let b = hwmodel::components::area_breakdown(&ArrayConfig::square(8, Quant::Fp32));
+    r.line(format!(
+        "8x8 FP32 multiplier share: {:.1}% area (paper: 55.6%)",
+        100.0 * b.multipliers / b.total()
+    ));
+    r
+}
+
+/// Fig. 7: SASP speedup & energy improvement under the QoS target,
+/// vs non-pruned quantized execution, per workload and array size.
+pub fn fig7(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+    let mut r = Report::new(
+        "Fig. 7 — SASP gains under QoS target (vs non-pruned INT8)",
+    );
+    let base_wer = qos.wer(engine, 8, 0.0, Quant::Int8)?;
+    let wer_target = base_wer * cfg.wer_target_ratio;
+    let base_bleu = match qos.mt {
+        Some(_) => qos.bleu(engine, 8, 0.0, Quant::Int8)?,
+        None => 0.0,
+    };
+    let bleu_floor = base_bleu * cfg.bleu_floor_ratio;
+    r.line(format!(
+        "QoS targets: WER <= {:.4} (baseline {:.4}), BLEU >= {:.2} (baseline {:.2})",
+        wer_target, base_wer, bleu_floor, base_bleu
+    ));
+    r.line(format!(
+        "{:<26} {:>5} {:>8} {:>10} {:>10}",
+        "workload", "size", "rate*", "speedup%", "energy%"
+    ));
+    let search = RateSearch { grid: cfg.rates.clone() };
+    for spec in zoo::fig7_workloads() {
+        let ex = Explorer::new(spec.clone());
+        for &n in &cfg.sizes {
+            // Rate* from the stand-in QoS curve at this tile size.
+            let is_mt = spec.name.contains("mustc") && qos.mt.is_some();
+            let found = if is_mt {
+                search.max_rate(
+                    |rate| qos.bleu(engine, n, rate, Quant::Int8),
+                    |b| b >= bleu_floor,
+                )?
+            } else {
+                search.max_rate(
+                    |rate| qos.wer(engine, n, rate, Quant::Int8),
+                    |w| w <= wer_target,
+                )?
+            };
+            let (rate, _q) = found.unwrap_or((0.0, 0.0));
+            let p = ex.timing_point(n, Quant::Int8, rate);
+            let speedup_pct = (p.speedup_vs_dense - 1.0) * 100.0;
+            let energy_pct = (1.0 - p.energy_j / p.dense_energy_j) * 100.0;
+            r.line(format!(
+                "{:<26} {:>5} {:>8.2} {:>9.1}% {:>9.1}%",
+                spec.name, n, rate, speedup_pct, energy_pct
+            ));
+        }
+    }
+    Ok(r)
+}
+
+/// Fig. 8: per-layer normalized encoder runtime, 8x8 INT8 array, at two
+/// global sparsity targets.
+pub fn fig8() -> Report {
+    let mut r = Report::new(
+        "Fig. 8 — per-layer normalized runtime (8x8 FP32_INT8)",
+    );
+    let ex = Explorer::new(zoo::espnet_asr());
+    let low = ex.per_layer_normalized(8, Quant::Int8, 0.25);
+    let high = ex.per_layer_normalized(8, Quant::Int8, 0.375);
+    r.line(format!("{:>6} {:>12} {:>12}", "layer", "25% sparse", "37.5% sparse"));
+    for (i, (a, b)) in low.iter().zip(&high).enumerate() {
+        r.line(format!("{:>6} {:>12.3} {:>12.3}", i, a, b));
+    }
+    r
+}
+
+/// Fig. 9: WER vs SASP rate, per array size and quantization.
+pub fn fig9(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+    let mut r = Report::new("Fig. 9 — WER vs structured pruning rate");
+    let mut header = format!("{:>6} {:>10}", "size", "rate");
+    for q in &cfg.quants {
+        header.push_str(&format!(" {:>12}", q.label()));
+    }
+    r.line(header);
+    for &n in &cfg.sizes {
+        for &rate in &cfg.rates {
+            let mut line = format!("{:>6} {:>10.2}", n, rate);
+            for &q in &cfg.quants {
+                let wer = qos.wer(engine, n, rate, q)?;
+                line.push_str(&format!(" {:>12.4}", wer));
+            }
+            r.line(line);
+        }
+    }
+    Ok(r)
+}
+
+/// Fig. 10: WER / speedup / area-energy trade-off scatter.
+pub fn fig10(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+    let mut r = Report::new("Fig. 10 — WER vs speedup vs area-energy");
+    r.line(format!(
+        "{:>6} {:>10} {:>8} {:>10} {:>10} {:>12}",
+        "size", "quant", "rate", "wer", "speedup", "area*energy"
+    ));
+    let ex = Explorer::new(zoo::espnet_asr());
+    for &n in &cfg.sizes {
+        for &q in &cfg.quants {
+            for &rate in &cfg.rates {
+                let wer = qos.wer(engine, n, rate, q)?;
+                let p = ex.timing_point(n, q, rate);
+                let aep = area_energy_product(
+                    &ArrayConfig::square(n, q),
+                    p.energy_j,
+                );
+                r.line(format!(
+                    "{:>6} {:>10} {:>8.2} {:>10.4} {:>10.2} {:>12.4}",
+                    n,
+                    q.label(),
+                    rate,
+                    wer,
+                    p.speedup_vs_cpu,
+                    aep
+                ));
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Fig. 11: speedup vs array size at fixed WER levels.
+pub fn fig11(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+    let mut r = Report::new("Fig. 11 — speedup vs size at fixed WER");
+    let base = qos.wer(engine, 8, 0.0, Quant::Fp32)?;
+    // Three WER levels: near-baseline, the 5%-equivalent target, relaxed.
+    let levels = [base * 1.1, base * cfg.wer_target_ratio, base * 2.0];
+    r.line(format!(
+        "{:>6} {:>10} {:>14} {:>14} {:>14}",
+        "size", "quant", "wer<=1.1x", "wer<=target", "wer<=2.0x"
+    ));
+    let ex = Explorer::new(zoo::espnet_asr());
+    let search = RateSearch { grid: cfg.rates.clone() };
+    for &q in &cfg.quants {
+        for &n in &cfg.sizes {
+            let mut cells = Vec::new();
+            for target in levels {
+                let found = search.max_rate(
+                    |rate| qos.wer(engine, n, rate, q),
+                    |w| w <= target,
+                )?;
+                let rate = found.map_or(0.0, |f| f.0);
+                let p = ex.timing_point(n, q, rate);
+                cells.push(format!("{:>14.2}", p.speedup_vs_cpu));
+            }
+            r.line(format!(
+                "{:>6} {:>10} {} {} {}",
+                n,
+                q.label(),
+                cells[0],
+                cells[1],
+                cells[2]
+            ));
+        }
+    }
+    Ok(r)
+}
+
+/// Table 3: area / speedup / energy, no-SASP vs SASP at the 5% WER
+/// inflection point.
+pub fn table3(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+    let mut r = Report::new("Table 3 — SASP at the WER inflection point");
+    let base = qos.wer(engine, 8, 0.0, Quant::Fp32)?;
+    let target = base * cfg.wer_target_ratio;
+    r.line(format!("WER inflection target: {target:.4} (baseline {base:.4})"));
+    r.line(format!(
+        "{:>10} {:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "quant", "size", "area mm²", "speedup", "energy J", "prune%", "speedup+", "energy J+"
+    ));
+    let ex = Explorer::new(zoo::espnet_asr());
+    let search = RateSearch { grid: cfg.rates.clone() };
+    for &q in &cfg.quants {
+        for &n in &cfg.sizes {
+            let dense = ex.timing_point(n, q, 0.0);
+            let found = search.max_rate(
+                |rate| qos.wer(engine, n, rate, q),
+                |w| w <= target,
+            )?;
+            let rate = found.map_or(0.0, |f| f.0);
+            let sasp = ex.timing_point(n, q, rate);
+            r.line(format!(
+                "{:>10} {:>6} {:>10.3} {:>10.2} {:>10.4} {:>9.0}% {:>10.2} {:>10.4}",
+                q.label(),
+                n,
+                dense.area_mm2,
+                dense.speedup_vs_cpu,
+                dense.energy_j,
+                rate * 100.0,
+                sasp.speedup_vs_cpu,
+                sasp.energy_j
+            ));
+        }
+    }
+    Ok(r)
+}
+
+/// The headline claim: 32x32 INT8 + 20% SASP vs non-pruned non-quantized.
+pub fn headline(engine: &mut Engine, qos: &mut QosCache) -> Result<Report> {
+    let mut r = Report::new("Headline — SASP+quant at 32x32, 20% rate");
+    let ex = Explorer::new(zoo::espnet_asr());
+    let dense_fp32 = ex.timing_point(32, Quant::Fp32, 0.0);
+    let sasp_int8 = ex.timing_point(32, Quant::Int8, 0.20);
+    let speedup =
+        (dense_fp32.energy_j / dense_fp32.energy_j).max(0.0); // placeholder guard
+    let _ = speedup;
+    let runtime_gain = 1.0
+        - (1.0 / sasp_int8.speedup_vs_cpu) / (1.0 / dense_fp32.speedup_vs_cpu);
+    let energy_gain = 1.0 - sasp_int8.energy_j / dense_fp32.energy_j;
+    let wer0 = qos.wer(engine, 32, 0.0, Quant::Fp32)?;
+    let wer1 = qos.wer(engine, 32, 0.20, Quant::Int8)?;
+    r.line(format!(
+        "system speedup {:.1}% (paper: up to 44%), energy saving {:.1}% (paper: 42%)",
+        runtime_gain * 100.0,
+        energy_gain * 100.0
+    ));
+    r.line(format!(
+        "WER {:.4} -> {:.4} (degradation {:+.4}; paper: +1.4% absolute)",
+        wer0,
+        wer1,
+        wer1 - wer0
+    ));
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_only_reports_render() {
+        assert!(table1().render().contains("espnet_asr"));
+        assert!(table2().render().contains("L2 Cache"));
+        let f6 = fig6().render();
+        assert!(f6.contains("55.6%"));
+        let f8 = fig8().render();
+        assert!(f8.lines().count() > 18);
+    }
+}

@@ -1,0 +1,49 @@
+//! Experiment harness: one generator per table/figure of the paper's
+//! evaluation section. Each produces a printable text report (the same
+//! rows/series the paper plots) and is wired to both the CLI
+//! (`sasp report <id>`) and the bench targets.
+
+pub mod figures;
+pub mod qos_cache;
+
+pub use figures::*;
+pub use qos_cache::QosCache;
+
+/// A rendered report: title + lines (also JSON-emittable).
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), lines: Vec::new() }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders() {
+        let mut r = Report::new("T");
+        r.line("a");
+        r.line("b");
+        assert_eq!(r.render(), "== T ==\na\nb\n");
+    }
+}

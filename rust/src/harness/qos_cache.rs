@@ -1,0 +1,72 @@
+//! Memoized QoS evaluation over the (tile, rate, quant) grid — several
+//! figures share the same points, and each point costs test-set
+//! inference through PJRT.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::qos::{AsrEvaluator, MtEvaluator};
+use crate::runtime::Engine;
+use crate::systolic::Quant;
+
+/// Key with rate discretized to 1e-4 so f64 rates hash safely.
+fn key(tile: usize, rate: f64, quant: Quant) -> (usize, u64, Quant) {
+    (tile, (rate * 10_000.0).round() as u64, quant)
+}
+
+/// Cache over an ASR (WER) and optional MT (BLEU) evaluator.
+pub struct QosCache {
+    pub asr: AsrEvaluator,
+    pub mt: Option<MtEvaluator>,
+    wer: HashMap<(usize, u64, Quant), f64>,
+    bleu: HashMap<(usize, u64, Quant), f64>,
+}
+
+impl QosCache {
+    pub fn new(asr: AsrEvaluator, mt: Option<MtEvaluator>) -> Self {
+        QosCache { asr, mt, wer: HashMap::new(), bleu: HashMap::new() }
+    }
+
+    /// WER of the tiny ASR model at a configuration (memoized).
+    pub fn wer(
+        &mut self,
+        engine: &mut Engine,
+        tile: usize,
+        rate: f64,
+        quant: Quant,
+    ) -> Result<f64> {
+        let k = key(tile, rate, quant);
+        if let Some(v) = self.wer.get(&k) {
+            return Ok(*v);
+        }
+        let v = self.asr.evaluate(engine, tile, rate, quant)?.qos;
+        self.wer.insert(k, v);
+        Ok(v)
+    }
+
+    /// BLEU of the tiny MT model at a configuration (memoized).
+    pub fn bleu(
+        &mut self,
+        engine: &mut Engine,
+        tile: usize,
+        rate: f64,
+        quant: Quant,
+    ) -> Result<f64> {
+        let k = key(tile, rate, quant);
+        if let Some(v) = self.bleu.get(&k) {
+            return Ok(*v);
+        }
+        let mt = self
+            .mt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no MT evaluator loaded"))?;
+        let v = mt.evaluate(engine, tile, rate, quant)?.qos;
+        self.bleu.insert(k, v);
+        Ok(v)
+    }
+
+    pub fn cached_points(&self) -> usize {
+        self.wer.len() + self.bleu.len()
+    }
+}

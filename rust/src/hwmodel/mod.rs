@@ -1,0 +1,126 @@
+//! Synthesis-calibrated hardware cost model (the paper's tier 3).
+//!
+//! The paper synthesizes the systolic-array template in TSMC 28 nm at
+//! 1 GHz and reports area/power per instance (Fig. 6, Table 3) plus the
+//! component breakdown of §4.2. With no synthesis flow available here,
+//! this module is an *analytical* model **calibrated to the paper's own
+//! published numbers**:
+//!
+//! - total FP32 area `= α_f · R²` with `α_f = 0.21 mm² / 64 PEs`
+//!   (Table 3: 4→0.05, 8→0.21, 16→0.83, 32→3.34 mm²; quadratic per §4.2);
+//! - multiplier share of the FP32 PE: 55.6 % area / 33.6 % power (§4.2);
+//! - hybrid FP32_INT8 instances save 35.3 % area / 19.5 % power on
+//!   average (§4.2; Table 3 INT8 areas 0.03/0.14/0.53/2.13 mm²).
+//!
+//! Everything downstream (Fig. 6, Fig. 10 area-energy product, Table 3)
+//! consumes these functions, so the model is the single calibration
+//! point.
+
+pub mod components;
+pub mod energy;
+
+pub use components::{AreaBreakdown, PowerBreakdown};
+pub use energy::{EnergyModel, SysCounts};
+
+use crate::systolic::{ArrayConfig, Quant};
+
+/// FP32 area per PE slot (mm², includes its share of skew registers and
+/// control): Table 3 gives 0.21 mm² for the 8×8 FP32 instance.
+pub const AREA_PER_PE_FP32_MM2: f64 = 0.21 / 64.0;
+
+/// §4.2: the multiplier is 55.6 % of FP32 instance area.
+pub const MULT_AREA_FRAC_FP32: f64 = 0.556;
+
+/// §4.2: average area saving of the hybrid FP32_INT8 instance.
+pub const INT8_AREA_SAVING: f64 = 0.353;
+
+/// Dynamic power per FP32 PE at 1 GHz full utilization (mW). Fig. 6 has
+/// no numeric labels in the text; 30 mW for the 8×8 FP32 instance is a
+/// representative 28 nm figure and only *relative* power enters any
+/// reproduced plot (the paper's own claims are all relative).
+pub const POWER_PER_PE_FP32_MW: f64 = 30.0 / 64.0;
+
+/// §4.2: the multiplier is 33.6 % of FP32 instance power.
+pub const MULT_POWER_FRAC_FP32: f64 = 0.336;
+
+/// §4.2: average power saving of the hybrid FP32_INT8 instance.
+pub const INT8_POWER_SAVING: f64 = 0.195;
+
+/// Synthesized area of an array instance (mm², TSMC 28 nm @ 1 GHz).
+pub fn area_mm2(cfg: &ArrayConfig) -> f64 {
+    let per_pe = match cfg.quant {
+        Quant::Fp32 => AREA_PER_PE_FP32_MM2,
+        Quant::Int8 => AREA_PER_PE_FP32_MM2 * (1.0 - INT8_AREA_SAVING),
+    };
+    per_pe * cfg.n_pes() as f64
+}
+
+/// Power at full utilization (mW).
+pub fn power_mw(cfg: &ArrayConfig) -> f64 {
+    let per_pe = match cfg.quant {
+        Quant::Fp32 => POWER_PER_PE_FP32_MW,
+        Quant::Int8 => POWER_PER_PE_FP32_MW * (1.0 - INT8_POWER_SAVING),
+    };
+    per_pe * cfg.n_pes() as f64
+}
+
+/// Area–energy product figure of merit used by Fig. 10 (mm² · J).
+pub fn area_energy_product(cfg: &ArrayConfig, energy_j: f64) -> f64 {
+    area_mm2(cfg) * energy_j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sq(n: usize, q: Quant) -> ArrayConfig {
+        ArrayConfig::square(n, q)
+    }
+
+    #[test]
+    fn fp32_areas_match_table3() {
+        // Paper Table 3: 0.05 / 0.21 / 0.83 / 3.34 mm².
+        let paper = [(4, 0.05), (8, 0.21), (16, 0.83), (32, 3.34)];
+        for (n, want) in paper {
+            let got = area_mm2(&sq(n, Quant::Fp32));
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.06, "size {n}: got {got:.3} want {want}");
+        }
+    }
+
+    #[test]
+    fn int8_areas_match_table3() {
+        // Paper Table 3: 0.03 / 0.14 / 0.53 / 2.13 mm².
+        let paper = [(4, 0.03), (8, 0.14), (16, 0.53), (32, 2.13)];
+        for (n, want) in paper {
+            let got = area_mm2(&sq(n, Quant::Int8));
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.15, "size {n}: got {got:.3} want {want}");
+        }
+    }
+
+    #[test]
+    fn quadratic_scaling_between_sizes() {
+        // §4.2: ~4x between 4x4 and 8x8.
+        let r = area_mm2(&sq(8, Quant::Fp32)) / area_mm2(&sq(4, Quant::Fp32));
+        assert!((r - 4.0).abs() < 1e-9);
+        let p = power_mw(&sq(16, Quant::Int8)) / power_mw(&sq(8, Quant::Int8));
+        assert!((p - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_savings_match_section_4_2() {
+        let a = 1.0 - area_mm2(&sq(8, Quant::Int8)) / area_mm2(&sq(8, Quant::Fp32));
+        assert!((a - INT8_AREA_SAVING).abs() < 1e-9);
+        let p = 1.0 - power_mw(&sq(8, Quant::Int8)) / power_mw(&sq(8, Quant::Fp32));
+        assert!((p - INT8_POWER_SAVING).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_energy_product_monotone_in_both() {
+        let small = area_energy_product(&sq(8, Quant::Int8), 2.0);
+        let bigger_array = area_energy_product(&sq(16, Quant::Int8), 2.0);
+        let more_energy = area_energy_product(&sq(8, Quant::Int8), 3.0);
+        assert!(bigger_array > small && more_energy > small);
+    }
+}

@@ -1,0 +1,44 @@
+//! # SASP — Systolic Arrays and Structured Pruning co-design framework
+//!
+//! A rust + JAX + Pallas reproduction of *"Systolic Arrays and Structured
+//! Pruning Co-design for Efficient Transformers in Edge Systems"*
+//! (Palacios et al., 2024).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! - **Layer 1** (`python/compile/kernels/`): Pallas block-sparse GEMM
+//!   kernels — the systolic tile-skip expressed for the TPU stack.
+//! - **Layer 2** (`python/compile/model.py`): JAX transformer encoder whose
+//!   feed-forward GEMMs run through the Layer-1 kernels; AOT-lowered to
+//!   HLO text artifacts.
+//! - **Layer 3** (this crate): everything the paper's cross-stack
+//!   framework does — structured pruning ([`pruning`]), post-training
+//!   quantization ([`quant`]), QoS evaluation over the compiled artifacts
+//!   ([`qos`], [`runtime`]), cycle-level systolic-array simulation
+//!   ([`systolic`]), gem5-style full-system simulation ([`sysim`]),
+//!   synthesis-calibrated hardware cost modeling ([`hwmodel`]), and the
+//!   design-space explorer that ties them together ([`coordinator`]).
+//!
+//! Python runs only at build time (`make artifacts`); the binary is
+//! self-contained afterwards.
+
+pub mod arith;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod hwmodel;
+pub mod model;
+pub mod pruning;
+pub mod qos;
+pub mod quant;
+pub mod runtime;
+pub mod sysim;
+pub mod systolic;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const ARTIFACTS_DIR: &str = "artifacts";

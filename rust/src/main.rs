@@ -1,0 +1,197 @@
+//! `sasp` — the SASP co-design framework CLI (Layer-3 leader binary).
+//!
+//! ```text
+//! sasp report <id>        regenerate a paper table/figure
+//!        ids: table1 table2 table3 fig6 fig7 fig8 fig9 fig10 fig11
+//!             headline all
+//! sasp sweep              full design-space sweep (timing only)
+//! sasp qos <tile> <rate> <fp32|int8>
+//!                         evaluate one QoS point via PJRT
+//! sasp info               platform + artifact inventory
+//! ```
+//!
+//! Flags: `--artifacts <dir>` (default `artifacts`), `--config <json>`.
+
+use anyhow::{bail, Context, Result};
+
+use sasp::config::ExperimentConfig;
+use sasp::coordinator::Explorer;
+use sasp::harness::{self, QosCache};
+use sasp::model::zoo;
+use sasp::qos::{AsrEvaluator, MtEvaluator};
+use sasp::runtime::Engine;
+use sasp::systolic::Quant;
+
+struct Cli {
+    cmd: String,
+    args: Vec<String>,
+    artifacts: String,
+    config: Option<String>,
+}
+
+fn parse_cli() -> Result<Cli> {
+    let mut argv = std::env::args().skip(1).collect::<Vec<_>>();
+    let mut artifacts = "artifacts".to_string();
+    let mut config = None;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--artifacts" => {
+                i += 1;
+                artifacts = argv.get(i).context("--artifacts needs a value")?.clone();
+            }
+            "--config" => {
+                i += 1;
+                config = Some(argv.get(i).context("--config needs a value")?.clone());
+            }
+            _ => rest.push(argv[i].clone()),
+        }
+        i += 1;
+    }
+    argv = rest;
+    if argv.is_empty() {
+        bail!("usage: sasp <report|sweep|qos|info> ... (see README)");
+    }
+    Ok(Cli {
+        cmd: argv[0].clone(),
+        args: argv[1..].to_vec(),
+        artifacts,
+        config,
+    })
+}
+
+fn load_config(cli: &Cli) -> Result<ExperimentConfig> {
+    let mut cfg = match &cli.config {
+        Some(p) => ExperimentConfig::load(p)?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.artifacts_dir = cli.artifacts.clone();
+    Ok(cfg)
+}
+
+fn qos_stack(cfg: &ExperimentConfig) -> Result<(Engine, QosCache)> {
+    let mut engine = Engine::new(&cfg.artifacts_dir)?;
+    let asr = AsrEvaluator::new(&mut engine, &cfg.artifacts_dir, "asr_encoder_ref")?;
+    let mt = MtEvaluator::new(&mut engine, &cfg.artifacts_dir, "mt_encoder_ref").ok();
+    Ok((engine, QosCache::new(asr, mt)))
+}
+
+fn cmd_report(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    let id = cli.args.first().map(String::as_str).unwrap_or("all");
+    // Timing-only reports need no PJRT.
+    match id {
+        "table1" => return Ok(print!("{}", harness::table1().render())),
+        "table2" => return Ok(print!("{}", harness::table2().render())),
+        "fig6" => return Ok(print!("{}", harness::fig6().render())),
+        "fig8" => return Ok(print!("{}", harness::fig8().render())),
+        _ => {}
+    }
+    let (mut engine, mut qos) = qos_stack(&cfg)?;
+    let out = match id {
+        "fig7" => harness::fig7(&mut engine, &mut qos, &cfg)?.render(),
+        "fig9" => harness::fig9(&mut engine, &mut qos, &cfg)?.render(),
+        "fig10" => harness::fig10(&mut engine, &mut qos, &cfg)?.render(),
+        "fig11" => harness::fig11(&mut engine, &mut qos, &cfg)?.render(),
+        "table3" => harness::table3(&mut engine, &mut qos, &cfg)?.render(),
+        "headline" => harness::headline(&mut engine, &mut qos)?.render(),
+        "all" => {
+            let mut s = String::new();
+            s += &harness::table1().render();
+            s += &harness::table2().render();
+            s += &harness::fig6().render();
+            s += &harness::fig7(&mut engine, &mut qos, &cfg)?.render();
+            s += &harness::fig8().render();
+            s += &harness::fig9(&mut engine, &mut qos, &cfg)?.render();
+            s += &harness::fig10(&mut engine, &mut qos, &cfg)?.render();
+            s += &harness::fig11(&mut engine, &mut qos, &cfg)?.render();
+            s += &harness::table3(&mut engine, &mut qos, &cfg)?.render();
+            s += &harness::headline(&mut engine, &mut qos)?.render();
+            s
+        }
+        other => bail!("unknown report id '{other}'"),
+    };
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    println!(
+        "{:<26} {:>5} {:>10} {:>6} {:>10} {:>10} {:>10}",
+        "workload", "size", "quant", "rate", "speedup", "energy J", "area mm²"
+    );
+    for spec in [zoo::espnet_asr(), zoo::espnet2_asr(), zoo::mustc_asr_encoder()] {
+        let ex = Explorer::new(spec.clone());
+        for &n in &cfg.sizes {
+            for &q in &cfg.quants {
+                for &rate in &cfg.rates {
+                    let p = ex.timing_point(n, q, rate);
+                    println!(
+                        "{:<26} {:>5} {:>10} {:>6.2} {:>10.2} {:>10.4} {:>10.3}",
+                        spec.name,
+                        n,
+                        q.label(),
+                        rate,
+                        p.speedup_vs_cpu,
+                        p.energy_j,
+                        p.area_mm2
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_qos(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    if cli.args.len() < 3 {
+        bail!("usage: sasp qos <tile> <rate> <fp32|int8>");
+    }
+    let tile: usize = cli.args[0].parse().context("tile")?;
+    let rate: f64 = cli.args[1].parse().context("rate")?;
+    let quant = match cli.args[2].as_str() {
+        "fp32" => Quant::Fp32,
+        "int8" => Quant::Int8,
+        q => bail!("unknown quant '{q}'"),
+    };
+    let (mut engine, mut qos) = qos_stack(&cfg)?;
+    let wer = qos.wer(&mut engine, tile, rate, quant)?;
+    println!("tile={tile} rate={rate} quant={} WER={wer:.4}", quant.label());
+    Ok(())
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let cfg = load_config(cli)?;
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts dir: {}", cfg.artifacts_dir);
+    let mut entries: Vec<_> = std::fs::read_dir(&cfg.artifacts_dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.extension().map_or(false, |e| e == "txt" || e == "bin" || e == "json") {
+            println!(
+                "  {} ({} bytes)",
+                p.file_name().unwrap().to_string_lossy(),
+                p.metadata()?.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let cli = parse_cli()?;
+    match cli.cmd.as_str() {
+        "report" => cmd_report(&cli),
+        "sweep" => cmd_sweep(&cli),
+        "qos" => cmd_qos(&cli),
+        "info" => cmd_info(&cli),
+        other => bail!("unknown command '{other}'"),
+    }
+}

@@ -1,0 +1,182 @@
+//! Transformer workload inventory: the GEMM-level description of the
+//! paper's models (Table 1) that drives the full-system simulation.
+//!
+//! Timing/energy results (Figs. 7, 8, 10, 11; Table 3) depend only on the
+//! *shapes* of the GEMMs an encoder executes — these are taken verbatim
+//! from Table 1. QoS results use the trained tiny model whose artifacts
+//! live in `artifacts/` (see DESIGN.md §2 for the substitution argument).
+
+pub mod zoo;
+
+pub use zoo::{espnet2_asr, espnet_asr, mustc_mt_encoder, tiny_asr, tiny_mt};
+
+/// What a GEMM computes — determines whether SASP may prune it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    /// Attention Q/K/V/O projection (weight GEMM, accelerated, unpruned —
+    /// §3.1: attention is much more pruning-sensitive than feed-forward).
+    AttnProj,
+    /// Attention score / context GEMM (activation×activation — no
+    /// stationary weights to prune; still runs on the array).
+    AttnDyn,
+    /// Feed-forward GEMM — the SASP pruning target.
+    FeedForward,
+}
+
+impl GemmKind {
+    /// Whether SASP structured pruning applies (feed-forward only).
+    pub fn prunable(self) -> bool {
+        matches!(self, GemmKind::FeedForward)
+    }
+
+    /// Whether the weights are stationary (reusable across the M
+    /// dimension). Dynamic attention GEMMs re-program per tile pass.
+    pub fn weight_stationary(self) -> bool {
+        !matches!(self, GemmKind::AttnDyn)
+    }
+}
+
+/// One GEMM: `[m, k] x [k, n]`.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub kind: GemmKind,
+}
+
+impl GemmShape {
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+
+    /// Number of `tile x tile` weight tiles (K and N padded up).
+    pub fn n_tiles(&self, tile: usize) -> usize {
+        self.k.div_ceil(tile) * self.n.div_ceil(tile)
+    }
+}
+
+/// One encoder block's GEMMs, in execution order.
+#[derive(Clone, Debug)]
+pub struct LayerGemms {
+    /// Block index within the encoder.
+    pub index: usize,
+    pub gemms: Vec<GemmShape>,
+}
+
+/// A whole encoder workload.
+#[derive(Clone, Debug)]
+pub struct EncoderSpec {
+    pub name: &'static str,
+    pub n_blocks: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    /// Representative sequence length for the simulated inference.
+    pub seq_len: usize,
+}
+
+impl EncoderSpec {
+    /// Expand to the per-block GEMM list.
+    pub fn layers(&self) -> Vec<LayerGemms> {
+        let (t, d, f, h) = (self.seq_len, self.d_model, self.d_ff, self.n_heads);
+        let dh = d / h;
+        (0..self.n_blocks)
+            .map(|index| {
+                let mut gemms = Vec::new();
+                // Q, K, V, O projections.
+                for _ in 0..4 {
+                    gemms.push(GemmShape { m: t, k: d, n: d, kind: GemmKind::AttnProj });
+                }
+                // Per-head scores (T x dh x T) and context (T x T x dh).
+                for _ in 0..h {
+                    gemms.push(GemmShape { m: t, k: dh, n: t, kind: GemmKind::AttnDyn });
+                    gemms.push(GemmShape { m: t, k: t, n: dh, kind: GemmKind::AttnDyn });
+                }
+                // Feed-forward pair.
+                gemms.push(GemmShape { m: t, k: d, n: f, kind: GemmKind::FeedForward });
+                gemms.push(GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward });
+                LayerGemms { index, gemms }
+            })
+            .collect()
+    }
+
+    /// Total MACs of one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers()
+            .iter()
+            .flat_map(|l| l.gemms.iter())
+            .map(|g| g.macs())
+            .sum()
+    }
+
+    /// MACs in prunable (feed-forward) GEMMs.
+    pub fn ff_macs(&self) -> u64 {
+        self.layers()
+            .iter()
+            .flat_map(|l| l.gemms.iter())
+            .filter(|g| g.kind.prunable())
+            .map(|g| g.macs())
+            .sum()
+    }
+
+    /// Elements touched by non-GEMM ops (LayerNorm, softmax, residual,
+    /// activation) per inference — the software-executed remainder.
+    pub fn non_gemm_elems(&self) -> u64 {
+        let (t, d, f, h) = (
+            self.seq_len as u64,
+            self.d_model as u64,
+            self.d_ff as u64,
+            self.n_heads as u64,
+        );
+        // Per block: 2 LayerNorms (t*d), softmax (h*t*t), residuals
+        // (2*t*d), ReLU (t*f).
+        self.n_blocks as u64 * (2 * t * d + h * t * t + 2 * t * d + t * f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_expansion_counts() {
+        let spec = zoo::espnet_asr();
+        let layers = spec.layers();
+        assert_eq!(layers.len(), 18);
+        // 4 proj + 2*heads dyn + 2 ff
+        assert_eq!(layers[0].gemms.len(), 4 + 2 * spec.n_heads + 2);
+    }
+
+    #[test]
+    fn ff_dominates_espnet_asr() {
+        // §4.3: feed-forward accounts for the largest part of the
+        // workload in the Table 1 models.
+        let spec = zoo::espnet_asr();
+        assert!(spec.ff_macs() as f64 / spec.total_macs() as f64 > 0.5);
+    }
+
+    #[test]
+    fn macs_closed_form() {
+        let g = GemmShape { m: 2, k: 3, n: 4, kind: GemmKind::FeedForward };
+        assert_eq!(g.macs(), 24);
+        assert_eq!(g.n_tiles(2), 2 * 2);
+        assert_eq!(g.n_tiles(4), 1 * 1);
+    }
+
+    #[test]
+    fn prunability() {
+        assert!(GemmKind::FeedForward.prunable());
+        assert!(!GemmKind::AttnProj.prunable());
+        assert!(!GemmKind::AttnDyn.prunable());
+        assert!(!GemmKind::AttnDyn.weight_stationary());
+    }
+
+    #[test]
+    fn non_gemm_is_small_fraction() {
+        // The paper: GEMMs exceed 97% of runtime; element counts must be
+        // orders of magnitude below MACs.
+        let spec = zoo::espnet_asr();
+        assert!(spec.non_gemm_elems() * 50 < spec.total_macs());
+    }
+}

@@ -1,0 +1,127 @@
+//! The model zoo of Table 1, plus the tiny trained stand-ins whose
+//! weights actually exist in `artifacts/`.
+//!
+//! Sequence lengths: the paper simulates real utterances; we use
+//! representative fixed lengths (LibriSpeech utterances after ESPnet's
+//! 4x subsampling land near 256 frames; MuST-C sentences near 64
+//! tokens). Lengths scale every configuration identically, so relative
+//! results are unaffected.
+
+use super::EncoderSpec;
+
+/// ESPnet ASR on LibriSpeech (Table 1 row 1): 18 encoder blocks,
+/// d_model 512, FF 2048, 4 heads. QoS 3.5 % WER, SASP target 5 %.
+pub fn espnet_asr() -> EncoderSpec {
+    EncoderSpec {
+        name: "espnet_asr_librispeech",
+        n_blocks: 18,
+        d_model: 512,
+        d_ff: 2048,
+        n_heads: 4,
+        seq_len: 256,
+    }
+}
+
+/// ESPnet2 ASR on LibriSpeech (Table 1 row 2): 12 blocks, 8 heads.
+pub fn espnet2_asr() -> EncoderSpec {
+    EncoderSpec {
+        name: "espnet2_asr_librispeech",
+        n_blocks: 12,
+        d_model: 512,
+        d_ff: 2048,
+        n_heads: 8,
+        seq_len: 256,
+    }
+}
+
+/// MuST-C cascade, ASR stage encoder (Table 1 row 3, first figures):
+/// 18 blocks, d_model 128, FF 2048, 4 heads.
+pub fn mustc_asr_encoder() -> EncoderSpec {
+    EncoderSpec {
+        name: "mustc_asr_encoder",
+        n_blocks: 18,
+        d_model: 128,
+        d_ff: 2048,
+        n_heads: 4,
+        seq_len: 256,
+    }
+}
+
+/// MuST-C cascade, MT stage encoder (Table 1 row 3, second figures):
+/// 6 blocks, d_model 128, FF 1024, 4 heads.
+pub fn mustc_mt_encoder() -> EncoderSpec {
+    EncoderSpec {
+        name: "mustc_mt_encoder",
+        n_blocks: 6,
+        d_model: 128,
+        d_ff: 1024,
+        n_heads: 4,
+        seq_len: 64,
+    }
+}
+
+/// The trained tiny ASR model (artifacts/params_asr.bin): 4 blocks,
+/// d_model 64, FF 256 — shapes must match `python/compile/model.py`.
+pub fn tiny_asr() -> EncoderSpec {
+    EncoderSpec {
+        name: "tiny_asr",
+        n_blocks: 4,
+        d_model: 64,
+        d_ff: 256,
+        n_heads: 4,
+        seq_len: 96,
+    }
+}
+
+/// The trained tiny MT model (artifacts/params_mt.bin).
+pub fn tiny_mt() -> EncoderSpec {
+    EncoderSpec {
+        name: "tiny_mt",
+        n_blocks: 2,
+        d_model: 64,
+        d_ff: 256,
+        n_heads: 4,
+        seq_len: 32,
+    }
+}
+
+/// All Table 1 workloads in Fig. 7 order.
+pub fn fig7_workloads() -> Vec<EncoderSpec> {
+    vec![espnet_asr(), espnet2_asr(), mustc_asr_encoder()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shapes() {
+        let a = espnet_asr();
+        assert_eq!((a.n_blocks, a.d_model, a.d_ff, a.n_heads), (18, 512, 2048, 4));
+        let b = espnet2_asr();
+        assert_eq!((b.n_blocks, b.n_heads), (12, 8));
+        let c = mustc_mt_encoder();
+        assert_eq!((c.n_blocks, c.d_model, c.d_ff), (6, 128, 1024));
+    }
+
+    #[test]
+    fn tiny_matches_python_model_config() {
+        // Must agree with ASR_TINY / MT_TINY in python/compile/model.py.
+        let t = tiny_asr();
+        assert_eq!((t.n_blocks, t.d_model, t.d_ff, t.n_heads, t.seq_len),
+                   (4, 64, 256, 4, 96));
+        let m = tiny_mt();
+        assert_eq!((m.n_blocks, m.d_model, m.d_ff, m.seq_len), (2, 64, 256, 32));
+    }
+
+    #[test]
+    fn dimensions_tile_aligned_for_paper_sizes() {
+        // Table 1 dims divide all studied tile sizes 4..32.
+        for spec in [espnet_asr(), espnet2_asr()] {
+            for t in [4usize, 8, 16, 32] {
+                assert_eq!(spec.d_model % t, 0);
+                assert_eq!(spec.d_ff % t, 0);
+            }
+        }
+    }
+}

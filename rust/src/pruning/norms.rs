@@ -1,0 +1,130 @@
+//! Tile L1-norm computation over real weight matrices.
+
+use crate::data::Tensor;
+
+/// Per-tile L1 norms of one `K x N` weight matrix at a given tile size.
+#[derive(Clone, Debug)]
+pub struct TileNorms {
+    pub kt: usize,
+    pub nt: usize,
+    /// Row-major `kt x nt` norms.
+    pub norms: Vec<f32>,
+}
+
+/// Compute `tile x tile` L1 norms of a row-major `K x N` f32 tensor.
+///
+/// K and N must be tile-aligned (all paper and artifact shapes are).
+pub fn tile_l1_norms(w: &Tensor, tile: usize) -> TileNorms {
+    assert_eq!(w.shape.len(), 2, "weights must be 2-D");
+    let (k, n) = (w.shape[0], w.shape[1]);
+    assert!(k % tile == 0 && n % tile == 0,
+            "{k}x{n} not aligned to tile {tile}");
+    let vals = w.f32s();
+    let (kt, nt) = (k / tile, n / tile);
+    let mut norms = vec![0.0f32; kt * nt];
+    for kk in 0..k {
+        let tk = kk / tile;
+        let row = &vals[kk * n..(kk + 1) * n];
+        for (tn, chunk) in row.chunks_exact(tile).enumerate() {
+            let s: f32 = chunk.iter().map(|v| v.abs()).sum();
+            norms[tk * nt + tn] += s;
+        }
+    }
+    TileNorms { kt, nt, norms }
+}
+
+/// Zero the weight values of pruned tiles in place (so the PJRT inference
+/// sees exactly the weights the masks describe).
+pub fn apply_mask_to_weights(w: &mut Tensor, mask: &crate::sysim::TileMask, tile: usize) {
+    assert_eq!(w.shape.len(), 2);
+    let (k, n) = (w.shape[0], w.shape[1]);
+    assert_eq!((mask.kt, mask.nt), (k / tile, n / tile));
+    w.map_f32_inplace(|idx, v| {
+        let (kk, nn) = (idx / n, idx % n);
+        if mask.is_live(kk / tile, nn / tile) {
+            v
+        } else {
+            0.0
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysim::TileMask;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn norms_of_known_matrix() {
+        // 4x4 matrix, tile 2: four tiles with distinct sums.
+        #[rustfmt::skip]
+        let w = Tensor::from_f32(&[4, 4], &[
+            1.0, 1.0,   2.0, 2.0,
+            1.0, 1.0,   2.0, 2.0,
+            -3.0, 3.0,  0.0, 0.0,
+            3.0, -3.0,  0.0, 0.0,
+        ]);
+        let n = tile_l1_norms(&w, 2);
+        assert_eq!((n.kt, n.nt), (2, 2));
+        assert_eq!(n.norms, vec![4.0, 8.0, 12.0, 0.0]);
+    }
+
+    #[test]
+    fn mask_zeroes_only_pruned_tiles() {
+        let mut w = Tensor::from_f32(&[4, 4], &[1.0; 16]);
+        let mask = TileMask { kt: 2, nt: 2, live: vec![true, false, false, true] };
+        apply_mask_to_weights(&mut w, &mask, 2);
+        let v = w.f32s();
+        // Tile (0,0) and (1,1) live; (0,1) and (1,0) zeroed.
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[2], 0.0); // row 0, col 2 -> tile (0,1)
+        assert_eq!(v[8], 0.0); // row 2, col 0 -> tile (1,0)
+        assert_eq!(v[10], 1.0); // row 2, col 2 -> tile (1,1)
+    }
+
+    #[test]
+    fn prop_norms_invariance() {
+        // Sum of all tile norms == L1 norm of the whole matrix.
+        check("tile norms sum to total L1", 24, |rng: &mut Rng| {
+            let tile = [2usize, 4][rng.index(2)];
+            let kt = rng.index(3) + 1;
+            let nt = rng.index(3) + 1;
+            let (k, n) = (kt * tile, nt * tile);
+            let vals: Vec<f32> =
+                (0..k * n).map(|_| rng.normal() as f32).collect();
+            let w = Tensor::from_f32(&[k, n], &vals);
+            let norms = tile_l1_norms(&w, tile);
+            let total: f32 = norms.norms.iter().sum();
+            let want: f32 = vals.iter().map(|v| v.abs()).sum();
+            ((total - want).abs() < 1e-3 * want.max(1.0),
+             format!("total={total} want={want}"))
+        });
+    }
+
+    #[test]
+    fn prop_mask_then_norms_zeroes_pruned() {
+        check("masked tiles have zero norm", 16, |rng: &mut Rng| {
+            let tile = 4;
+            let (kt, nt) = (2, 3);
+            let vals: Vec<f32> = (0..kt * nt * tile * tile)
+                .map(|_| rng.normal() as f32 + 1.0)
+                .collect();
+            let mut w = Tensor::from_f32(&[kt * tile, nt * tile], &vals);
+            let live: Vec<bool> = (0..kt * nt).map(|_| rng.chance(0.5)).collect();
+            let mask = TileMask { kt, nt, live: live.clone() };
+            apply_mask_to_weights(&mut w, &mask, tile);
+            let norms = tile_l1_norms(&w, tile);
+            for (i, l) in live.iter().enumerate() {
+                if !l && norms.norms[i] != 0.0 {
+                    return (false, format!("tile {i} not zeroed"));
+                }
+                if *l && norms.norms[i] == 0.0 {
+                    return (false, format!("live tile {i} zeroed"));
+                }
+            }
+            (true, String::new())
+        });
+    }
+}

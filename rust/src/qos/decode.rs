@@ -1,0 +1,82 @@
+//! CTC greedy (best-path) decoding — mirrors `python/compile/ctc.py`'s
+//! `greedy_decode` (cross-validated by the integration tests through the
+//! compiled artifacts).
+
+/// Decode one utterance from row-major `[t_total, vocab]` log-probs:
+/// argmax per frame over the first `t_len` frames, collapse repeats,
+/// drop blanks.
+pub fn ctc_greedy(log_probs: &[f32], t_len: usize, vocab: usize, blank: i32) -> Vec<i32> {
+    assert!(log_probs.len() >= t_len * vocab);
+    let mut out = Vec::new();
+    let mut prev = -1i32;
+    for t in 0..t_len {
+        let row = &log_probs[t * vocab..(t + 1) * vocab];
+        let mut best = 0usize;
+        for (i, v) in row.iter().enumerate() {
+            if *v > row[best] {
+                best = i;
+            }
+        }
+        let sym = best as i32;
+        if sym != prev && sym != blank {
+            out.push(sym);
+        }
+        prev = sym;
+    }
+    out
+}
+
+/// Per-position argmax decode (the MT head): `[seq, vocab]` → tokens.
+pub fn argmax_decode(logits: &[f32], seq: usize, vocab: usize) -> Vec<i32> {
+    assert!(logits.len() >= seq * vocab);
+    (0..seq)
+        .map(|t| {
+            let row = &logits[t * vocab..(t + 1) * vocab];
+            let mut best = 0usize;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_hot_frames(path: &[i32], vocab: usize) -> Vec<f32> {
+        let mut lp = vec![-10.0f32; path.len() * vocab];
+        for (t, s) in path.iter().enumerate() {
+            lp[t * vocab + *s as usize] = 0.0;
+        }
+        lp
+    }
+
+    #[test]
+    fn collapses_repeats_and_drops_blanks() {
+        // vocab 3, blank 2: path [0,0,2,1,1,2,1] -> [0,1,1]
+        let lp = one_hot_frames(&[0, 0, 2, 1, 1, 2, 1], 3);
+        assert_eq!(ctc_greedy(&lp, 7, 3, 2), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn respects_t_len() {
+        let lp = one_hot_frames(&[0, 0, 1, 1, 1], 3);
+        assert_eq!(ctc_greedy(&lp, 2, 3, 2), vec![0]);
+    }
+
+    #[test]
+    fn all_blank_decodes_empty() {
+        let lp = one_hot_frames(&[2, 2, 2], 3);
+        assert!(ctc_greedy(&lp, 3, 3, 2).is_empty());
+    }
+
+    #[test]
+    fn argmax_decode_picks_max_per_row() {
+        let logits = vec![0.1, 0.9, 0.0, /* row 2 */ 5.0, 1.0, 2.0];
+        assert_eq!(argmax_decode(&logits, 2, 3), vec![1, 0]);
+    }
+}

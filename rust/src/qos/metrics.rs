@@ -1,0 +1,159 @@
+//! Error-rate metrics: Levenshtein edit distance, WER-style token error
+//! rate (the ASR metric), and corpus BLEU (the MT metric).
+
+/// Levenshtein distance between two token sequences.
+pub fn edit_distance(a: &[i32], b: &[i32]) -> usize {
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 {
+        return lb;
+    }
+    let mut prev: Vec<usize> = (0..=lb).collect();
+    let mut cur = vec![0usize; lb + 1];
+    for i in 1..=la {
+        cur[0] = i;
+        for j in 1..=lb {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[lb]
+}
+
+/// Corpus-level token error rate: `sum(edit) / sum(ref_len)` — the WER
+/// of the synthetic character task (each character is a token; the paper
+/// reports WER on LibriSpeech words, same definition over its tokens).
+pub fn token_error_rate(refs: &[Vec<i32>], hyps: &[Vec<i32>]) -> f64 {
+    assert_eq!(refs.len(), hyps.len());
+    let mut errs = 0usize;
+    let mut total = 0usize;
+    for (r, h) in refs.iter().zip(hyps) {
+        errs += edit_distance(h, r);
+        total += r.len();
+    }
+    errs as f64 / total.max(1) as f64
+}
+
+/// Corpus BLEU-N with brevity penalty (uniform weights, the standard MT
+/// metric of Table 1's MuST-C row).
+pub fn bleu(refs: &[Vec<i32>], hyps: &[Vec<i32>], max_n: usize) -> f64 {
+    assert_eq!(refs.len(), hyps.len());
+    let mut log_sum = 0.0f64;
+    for n in 1..=max_n {
+        let (mut matched, mut total) = (0usize, 0usize);
+        for (r, h) in refs.iter().zip(hyps) {
+            if h.len() < n {
+                continue;
+            }
+            let mut ref_counts = std::collections::HashMap::new();
+            for w in r.windows(n) {
+                *ref_counts.entry(w).or_insert(0usize) += 1;
+            }
+            for w in h.windows(n) {
+                total += 1;
+                if let Some(c) = ref_counts.get_mut(w) {
+                    if *c > 0 {
+                        *c -= 1;
+                        matched += 1;
+                    }
+                }
+            }
+        }
+        if total == 0 || matched == 0 {
+            return 0.0;
+        }
+        log_sum += (matched as f64 / total as f64).ln() / max_n as f64;
+    }
+    let hyp_len: usize = hyps.iter().map(Vec::len).sum();
+    let ref_len: usize = refs.iter().map(Vec::len).sum();
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
+    };
+    100.0 * bp * log_sum.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance(&[], &[]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 2], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+    }
+
+    #[test]
+    fn ter_identity_is_zero() {
+        let refs = vec![vec![1, 2, 3], vec![4, 5]];
+        assert_eq!(token_error_rate(&refs, &refs), 0.0);
+    }
+
+    #[test]
+    fn ter_all_wrong_is_one() {
+        let refs = vec![vec![1, 2], vec![3]];
+        let hyps = vec![vec![9, 9], vec![9]];
+        assert_eq!(token_error_rate(&refs, &hyps), 1.0);
+    }
+
+    #[test]
+    fn bleu_perfect_is_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6]];
+        assert!((bleu(&refs, &refs, 4) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_zero_overlap_is_0() {
+        let refs = vec![vec![1, 2, 3, 4, 5]];
+        let hyps = vec![vec![6, 7, 8, 9, 10]];
+        assert_eq!(bleu(&refs, &hyps, 4), 0.0);
+    }
+
+    #[test]
+    fn bleu_brevity_penalizes_short_hyps() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let full = bleu(&refs, &refs, 2);
+        let short = bleu(&refs, &[vec![1, 2, 3, 4]], 2);
+        assert!(short < full);
+        assert!(short > 0.0);
+    }
+
+    #[test]
+    fn prop_edit_distance_metric_properties() {
+        check("edit distance symmetry + triangle", 48, |rng: &mut Rng| {
+            let mk = |rng: &mut Rng| -> Vec<i32> {
+                (0..rng.index(8)).map(|_| rng.index(4) as i32).collect()
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+            let dab = edit_distance(&a, &b);
+            let dba = edit_distance(&b, &a);
+            let dac = edit_distance(&a, &c);
+            let dcb = edit_distance(&c, &b);
+            let sym = dab == dba;
+            let tri = dab <= dac + dcb;
+            (sym && tri, format!("a={a:?} b={b:?} c={c:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_ter_monotone_in_errors() {
+        check("ter grows with corruption", 24, |rng: &mut Rng| {
+            let r: Vec<i32> = (0..12).map(|_| rng.index(10) as i32).collect();
+            let mut h1 = r.clone();
+            h1[rng.index(12)] = 99;
+            let mut h2 = h1.clone();
+            h2[(rng.index(11) + 1) % 12] = 98;
+            let refs = vec![r];
+            let t1 = token_error_rate(&refs, &[h1]);
+            let t2 = token_error_rate(&refs, &[h2]);
+            (t2 >= t1, format!("t1={t1} t2={t2}"))
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Quality-of-service tier: WER / BLEU metrics, CTC decoding, and the
+//! evaluators that run the pruned+quantized model through PJRT on the
+//! held-out test set — the paper's "inference is performed on a target
+//! dataset, in order to gather QoS metrics" (§3.1).
+
+pub mod decode;
+pub mod eval;
+pub mod metrics;
+
+pub use decode::ctc_greedy;
+pub use eval::{AsrEvaluator, MtEvaluator, QosPoint};
+pub use metrics::{bleu, edit_distance, token_error_rate};

@@ -1,0 +1,124 @@
+//! Post-training weight quantization (§3.1): FP32 → INT8 with a
+//! per-tensor symmetric scale, sign-and-magnitude representation
+//! (matching the hybrid multiplier of §3.3 and the python oracle
+//! `quantize_ref`).
+
+use crate::arith::SignMag8;
+use crate::data::Tensor;
+
+/// Result of quantizing one weight tensor.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    /// Quantized values in value-equivalent i8 (range -127..=127).
+    pub values: Vec<i8>,
+    pub shape: Vec<usize>,
+    /// Dequantization scale: `w ≈ q * scale`.
+    pub scale: f32,
+}
+
+/// Per-tensor symmetric quantization: `scale = max|w| / 127`,
+/// `q = clamp(round_ties_even(w / scale), -127, 127)`.
+pub fn quantize(w: &Tensor) -> QuantizedTensor {
+    let vals = w.f32s();
+    let amax = vals.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let values = vals
+        .iter()
+        .map(|v| (v / scale).round_ties_even().clamp(-127.0, 127.0) as i8)
+        .collect();
+    QuantizedTensor { values, shape: w.shape.clone(), scale }
+}
+
+/// Dequantize back to f32 (the numerics the FP32 artifact sees when the
+/// coordinator runs a weight-quantized QoS evaluation — "fake quant",
+/// value-identical to dequantizing inside the kernel).
+pub fn dequantize(q: &QuantizedTensor) -> Tensor {
+    let vals: Vec<f32> = q.values.iter().map(|v| *v as f32 * q.scale).collect();
+    Tensor::from_f32(&q.shape, &vals)
+}
+
+/// Fake-quantize in place: `w <- dequant(quant(w))`.
+pub fn fake_quantize(w: &mut Tensor) -> f32 {
+    let q = quantize(w);
+    *w = dequantize(&q);
+    q.scale
+}
+
+impl QuantizedTensor {
+    /// View values as sign-magnitude (what `SA_PROG` actually ships).
+    pub fn sign_mag(&self) -> Vec<SignMag8> {
+        self.values.iter().map(|v| SignMag8::from_i8(*v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_known_values() {
+        let w = Tensor::from_f32(&[4], &[0.0, 1.27, -1.27, 0.635]);
+        let q = quantize(&w);
+        assert!((q.scale - 0.01).abs() < 1e-6);
+        assert_eq!(q.values, vec![0, 127, -127, 64]); // 63.5 rounds to even
+    }
+
+    #[test]
+    fn all_zero_tensor() {
+        let w = Tensor::from_f32(&[3], &[0.0; 3]);
+        let q = quantize(&w);
+        assert_eq!(q.scale, 1.0);
+        assert!(q.values.iter().all(|v| *v == 0));
+    }
+
+    #[test]
+    fn prop_roundtrip_error_half_scale() {
+        check("PTQ roundtrip |err| <= scale/2", 64, |rng: &mut Rng| {
+            let n = rng.index(64) + 1;
+            let scale_pow = rng.index(7) as i32 - 3;
+            let vals: Vec<f32> = (0..n)
+                .map(|_| (rng.normal() as f32) * 10f32.powi(scale_pow))
+                .collect();
+            let w = Tensor::from_f32(&[n], &vals);
+            let q = quantize(&w);
+            let dq = dequantize(&q).f32s();
+            for (a, b) in vals.iter().zip(&dq) {
+                if (a - b).abs() > q.scale / 2.0 + 1e-7 {
+                    return (false, format!("a={a} b={b} scale={}", q.scale));
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn prop_zero_preserved() {
+        // Pruned (zero) tiles stay exactly zero through PTQ — required
+        // for SASP+quant composition.
+        check("quant preserves zeros", 32, |rng: &mut Rng| {
+            let vals: Vec<f32> = (0..32)
+                .map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() as f32 })
+                .collect();
+            let mut w = Tensor::from_f32(&[32], &vals);
+            fake_quantize(&mut w);
+            let out = w.f32s();
+            for (i, v) in vals.iter().enumerate() {
+                if *v == 0.0 && out[i] != 0.0 {
+                    return (false, format!("idx {i}"));
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn sign_mag_view_consistent() {
+        let w = Tensor::from_f32(&[2], &[1.0, -1.0]);
+        let q = quantize(&w);
+        let sm = q.sign_mag();
+        assert_eq!(sm[0].to_i8(), 127);
+        assert_eq!(sm[1].to_i8(), -127);
+    }
+}

@@ -1,0 +1,183 @@
+//! Artifact manifests: the positional argument contract emitted by
+//! `python/compile/aot.py` next to each HLO artifact.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{DType, Tensor};
+use crate::util::json::Json;
+
+/// One positional argument.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Metadata of the model baked into the artifact (subset used by the
+/// coordinator; missing fields default to 0/false for kernel artifacts).
+#[derive(Clone, Debug, Default)]
+pub struct ModelMeta {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_blocks: usize,
+    pub vocab: usize,
+    pub tile: usize,
+    pub ctc_blank: i64,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub token_input: bool,
+}
+
+/// Parsed `<name>_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    pub output_shape: Vec<usize>,
+    pub output_dtype: DType,
+    pub model: ModelMeta,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let name = v
+            .get("name")
+            .as_str()
+            .context("manifest missing 'name'")?
+            .to_string();
+        let mut args = Vec::new();
+        for a in v.get("args").as_arr().context("manifest missing 'args'")? {
+            args.push(ArgSpec {
+                name: a.get("name").as_str().context("arg name")?.to_string(),
+                shape: shape_of(a.get("shape"))?,
+                dtype: DType::from_name(
+                    a.get("dtype").as_str().context("arg dtype")?,
+                )?,
+            });
+        }
+        let out = v.get("output");
+        let output_shape = shape_of(out.get("shape"))?;
+        let output_dtype = DType::from_name(
+            out.get("dtype").as_str().unwrap_or("float32"),
+        )?;
+        let m = v.get("model");
+        let model = ModelMeta {
+            d_model: m.get("d_model").as_usize().unwrap_or(0),
+            d_ff: m.get("d_ff").as_usize().unwrap_or(0),
+            n_blocks: m.get("n_blocks").as_usize().unwrap_or(0),
+            vocab: m.get("vocab").as_usize().unwrap_or(0),
+            tile: m
+                .get("tile")
+                .as_usize()
+                .or_else(|| v.get("tile").as_usize())
+                .unwrap_or(0),
+            ctc_blank: m.get("ctc_blank").as_i64().unwrap_or(-1),
+            batch: m.get("batch").as_usize().unwrap_or(0),
+            seq_len: m.get("seq_len").as_usize().unwrap_or(0),
+            token_input: m.get("token_input").as_bool().unwrap_or(false),
+        };
+        Ok(Manifest { name, args, output_shape, output_dtype, model })
+    }
+
+    /// Check a positional argument list against the contract.
+    pub fn validate_args(&self, args: &[Tensor]) -> Result<()> {
+        if args.len() != self.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.args.len(),
+                args.len()
+            );
+        }
+        for (i, (spec, t)) in self.args.iter().zip(args).enumerate() {
+            if spec.shape != t.shape {
+                bail!(
+                    "{}: arg {i} ('{}') shape {:?} != expected {:?}",
+                    self.name, spec.name, t.shape, spec.shape
+                );
+            }
+            if spec.dtype != t.dtype {
+                bail!(
+                    "{}: arg {i} ('{}') dtype {:?} != expected {:?}",
+                    self.name, spec.name, t.dtype, spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Index of the first argument whose name matches.
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.args.iter().position(|a| a.name == name)
+    }
+}
+
+fn shape_of(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .context("shape must be an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "demo",
+      "args": [
+        {"name": "x", "shape": [2, 3], "dtype": "float32"},
+        {"name": "mask", "shape": [1], "dtype": "int32"}
+      ],
+      "output": {"shape": [2, 4], "dtype": "float32"},
+      "model": {"d_model": 64, "tile": 8, "ctc_blank": 27, "batch": 16,
+                "seq_len": 96, "n_blocks": 4, "vocab": 28, "d_ff": 256,
+                "token_input": false}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "demo");
+        assert_eq!(m.args.len(), 2);
+        assert_eq!(m.args[1].dtype, DType::I32);
+        assert_eq!(m.output_shape, vec![2, 4]);
+        assert_eq!(m.model.ctc_blank, 27);
+        assert_eq!(m.model.tile, 8);
+        assert_eq!(m.arg_index("mask"), Some(1));
+        assert_eq!(m.arg_index("nope"), None);
+    }
+
+    #[test]
+    fn validates_shapes_and_dtypes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let good = vec![
+            Tensor::from_f32(&[2, 3], &[0.0; 6]),
+            Tensor::from_i32(&[1], &[1]),
+        ];
+        assert!(m.validate_args(&good).is_ok());
+        let bad_shape = vec![
+            Tensor::from_f32(&[3, 2], &[0.0; 6]),
+            Tensor::from_i32(&[1], &[1]),
+        ];
+        assert!(m.validate_args(&bad_shape).is_err());
+        let bad_dtype = vec![
+            Tensor::from_f32(&[2, 3], &[0.0; 6]),
+            Tensor::from_f32(&[1], &[1.0]),
+        ];
+        assert!(m.validate_args(&bad_dtype).is_err());
+        assert!(m.validate_args(&good[..1]).is_err());
+    }
+}

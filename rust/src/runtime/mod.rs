@@ -1,0 +1,155 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the coordinator hot path. Python never runs
+//! here.
+//!
+//! Interchange is HLO *text* (see `/opt/xla-example/README.md`): jax ≥0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+pub mod manifest;
+
+pub use manifest::{ArgSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{DType, Tensor};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: one CPU client + a cache of compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, LoadedModel>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.cache.contains_key(name) {
+            let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+            let man_path = self.dir.join(format!("{name}_manifest.json"));
+            let manifest = Manifest::load(&man_path)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path
+                    .to_str()
+                    .context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), LoadedModel { manifest, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a loaded artifact on positional tensors. Arguments are
+    /// validated against the manifest contract (names give diagnostics).
+    pub fn execute(&mut self, name: &str, args: &[Tensor]) -> Result<Tensor> {
+        self.load(name)?;
+        self.cache[name].manifest.validate_args(args)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        self.execute_literals(name, &literals)
+    }
+
+    /// Execute on pre-converted literals — the hot path for repeated
+    /// invocations with mostly-unchanged arguments (§Perf L3: the QoS
+    /// evaluator converts the 55 weight tensors once per configuration
+    /// and reuses the literals across test-set chunks).
+    pub fn execute_literals(
+        &mut self,
+        name: &str,
+        literals: &[xla::Literal],
+    ) -> Result<Tensor> {
+        // Compile outside the borrow of the execution path.
+        self.load(name)?;
+        let model = &self.cache[name];
+        let result = model
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {name}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?
+            .to_tuple1()
+            .context("unwrapping 1-tuple result")?;
+        literal_to_tensor(&out, &model.manifest.output_shape, model.manifest.output_dtype)
+    }
+}
+
+/// Convert a [`Tensor`] into an `xla::Literal` of matching shape/dtype.
+/// All dtypes go through the untyped-bytes constructor (zero-copy on the
+/// XLA side and uniform across element types).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::I8 => xla::ElementType::S8,
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ty, &t.shape, &t.data,
+    )?)
+}
+
+/// Convert an output literal back into a [`Tensor`].
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize], dtype: DType) -> Result<Tensor> {
+    let t = match dtype {
+        DType::F32 => Tensor::from_f32(shape, &lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::from_i32(shape, &lit.to_vec::<i32>()?),
+        DType::I8 => bail!("i8 outputs not produced by any artifact"),
+    };
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/integration.rs (they need
+    // built artifacts); here we only cover the pure conversion helpers.
+
+    #[test]
+    fn tensor_literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[2, 3], DType::F32).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[4], &[-7, 0, 1, 2]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[4], DType::I32).unwrap();
+        assert_eq!(back.i32s(), vec![-7, 0, 1, 2]);
+    }
+}

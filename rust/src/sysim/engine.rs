@@ -1,0 +1,319 @@
+//! Per-GEMM tiled-execution accounting — the heart of the system model.
+//!
+//! A GEMM `[M,K]x[K,N]` is tiled into `ceil(K/t) x ceil(N/t)` weight
+//! tiles (t = array dimension). Per §3.1/Fig. 3, execution follows the
+//! accelerator-driven data arrangement of the paper's companion works
+//! ([1], [2]): the j (output-column) loop is outermost so the output
+//! block stays L1-resident across the K accumulation sweep, input blocks
+//! are staged per tile, and weight tiles are stored contiguously in
+//! tiled layout.
+//!
+//! Cost structure per **live** tile:
+//! - `SA_CTRL` setup + `ceil(t²/wpw)` `SA_PROG` + `M·t` `SA_STREAM`
+//!   issue cycles (single-issue, in-order);
+//! - weight lines are cold (first and only touch) → L2 + DRAM latency;
+//! - unique input/output lines stall once at L2 latency; repeats hit L1.
+//!
+//! A **pruned** tile is skipped entirely: no instructions, no weight
+//! fetch, no streaming — the SASP saving (the input/output blocks it
+//! shared with live tiles in the same row/column are still touched by
+//! those tiles).
+
+use crate::hwmodel::SysCounts;
+use crate::model::{GemmKind, GemmShape};
+use crate::systolic::{ArrayConfig, Quant, TileTiming};
+
+use super::params::SimParams;
+
+/// Live/pruned map over a GEMM's weight tiles (row-major `kt x nt`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileMask {
+    pub kt: usize,
+    pub nt: usize,
+    pub live: Vec<bool>,
+}
+
+impl TileMask {
+    pub fn full(kt: usize, nt: usize) -> Self {
+        TileMask { kt, nt, live: vec![true; kt * nt] }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.kt * self.nt
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|l| **l).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.live_count() as f64 / self.n_tiles().max(1) as f64
+    }
+
+    pub fn is_live(&self, k: usize, n: usize) -> bool {
+        self.live[k * self.nt + n]
+    }
+}
+
+/// Cost of one GEMM execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmCost {
+    /// Core cycles (issue + memory stalls); the array overlaps with
+    /// streaming, so this is the wall-clock contribution.
+    pub cycles: f64,
+    pub counts: SysCounts,
+}
+
+impl GemmCost {
+    pub fn add(&mut self, o: &GemmCost) {
+        self.cycles += o.cycles;
+        self.counts.add(&o.counts);
+    }
+}
+
+/// Execute a GEMM on the systolic array.
+///
+/// `mask` applies only to prunable (feed-forward) GEMMs; `None` means all
+/// tiles are live. Dynamic attention GEMMs stream their "weights" (K/V
+/// activations) at FP32 regardless of the quantization mode — PTQ applies
+/// to stored weights only.
+pub fn gemm_on_array(
+    g: &GemmShape,
+    cfg: &ArrayConfig,
+    p: &SimParams,
+    mask: Option<&TileMask>,
+) -> GemmCost {
+    let t = cfg.tile();
+    let kt = g.k.div_ceil(t);
+    let nt = g.n.div_ceil(t);
+    let n_tiles = kt * nt;
+    if let Some(m) = mask {
+        assert_eq!((m.kt, m.nt), (kt, nt), "mask/gemm tile grid mismatch");
+        assert!(g.kind.prunable() || m.live_count() == m.n_tiles(),
+                "only feed-forward GEMMs may be pruned");
+    }
+    let live = mask.map_or(n_tiles, TileMask::live_count);
+
+    // Weight format for this GEMM: dynamic GEMMs are always FP32.
+    let (wpw, wbytes) = match (g.kind, cfg.quant) {
+        (GemmKind::AttnDyn, _) | (_, Quant::Fp32) => (1usize, 4usize),
+        (_, Quant::Int8) => (4, 1),
+    };
+    let quant_extra = if wpw == 4 { p.quant_tile_extra_cycles } else { 0.0 };
+
+    let tile_cfg = ArrayConfig { rows: t, cols: t, quant: if wpw == 4 { Quant::Int8 } else { Quant::Fp32 } };
+    let per_tile = TileTiming::live(&tile_cfg, g.m);
+
+    // --- issue cycles ----------------------------------------------------
+    let issue = live as f64
+        * (per_tile.prog_words as f64 * p.cpi_prog
+            + per_tile.stream_insts as f64 * p.cpi_stream
+            + p.tile_setup_cycles
+            + quant_extra);
+
+    // --- memory stalls ---------------------------------------------------
+    let line = p.line_bytes as f64;
+    // Weights: cold, tiled-contiguous; only live tiles are fetched.
+    let weight_lines = (live * t * t) as f64 * wbytes as f64 / line;
+    // Inputs/outputs: unique lines touched once at L2 latency (see module
+    // docs); sized by the full M x K / M x N panels.
+    let in_lines = (g.m * g.k * 4) as f64 / line;
+    let out_lines = (g.m * g.n * 4) as f64 / line;
+    let stalls = weight_lines * (p.dram_latency + p.l2_latency) as f64
+        + (in_lines + out_lines) * p.l2_latency as f64;
+
+    // --- event counts ------------------------------------------------------
+    let total_insts = live as f64
+        * (per_tile.prog_words + per_tile.stream_insts + 2) as f64;
+    let bus_words = live * per_tile.total_words();
+    let stream_words = live * (per_tile.in_words + per_tile.out_words);
+    let cycles = issue + stalls;
+
+    let counts = SysCounts {
+        core_cycles: cycles as u64,
+        array_busy_cycles: (live * per_tile.array_cycles) as u64,
+        macs: (live * per_tile.macs) as u64,
+        bus_words: bus_words as u64,
+        l1i_hits: total_insts as u64,
+        // Every streamed word touches L1D; misses counted below as L2/DRAM.
+        l1d_hits: stream_words as u64,
+        l2_hits: (in_lines + out_lines) as u64 + weight_lines as u64,
+        dram_accesses: weight_lines as u64,
+    };
+    GemmCost { cycles, counts }
+}
+
+/// Software-only GEMM on the in-order core (the paper's non-accelerated
+/// baseline for Table 3 / Fig. 11 speedups).
+pub fn gemm_on_cpu(g: &GemmShape, p: &SimParams) -> GemmCost {
+    let macs = g.macs() as f64;
+    let cycles = macs * p.cpu_cycles_per_mac;
+    let line = p.line_bytes as f64;
+    let weight_lines = (g.k * g.n * 4) as f64 / line;
+    let counts = SysCounts {
+        core_cycles: cycles as u64,
+        array_busy_cycles: 0,
+        macs: 0, // no array MACs; core energy is per-cycle
+        bus_words: 0,
+        l1i_hits: macs as u64,
+        l1d_hits: (2.0 * macs) as u64,
+        l2_hits: weight_lines as u64,
+        dram_accesses: weight_lines as u64,
+    };
+    GemmCost { cycles, counts }
+}
+
+/// Non-GEMM software ops over `elems` elements (LayerNorm, softmax,
+/// residual, activation) — NEON-vectorized on the core.
+pub fn non_gemm_cost(elems: u64, p: &SimParams) -> GemmCost {
+    let cycles = elems as f64 * p.non_gemm_cycles_per_elem;
+    GemmCost {
+        cycles,
+        counts: SysCounts {
+            core_cycles: cycles as u64,
+            l1i_hits: elems / 4,
+            l1d_hits: elems,
+            ..Default::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GemmKind;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn ff(m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { m, k, n, kind: GemmKind::FeedForward }
+    }
+
+    fn cfg(t: usize, q: Quant) -> ArrayConfig {
+        ArrayConfig::square(t, q)
+    }
+
+    #[test]
+    fn full_mask_equals_no_mask() {
+        let g = ff(64, 64, 128);
+        let p = SimParams::default();
+        let c = cfg(8, Quant::Fp32);
+        let a = gemm_on_array(&g, &c, &p, None);
+        let mask = TileMask::full(8, 16);
+        let b = gemm_on_array(&g, &c, &p, Some(&mask));
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn pruning_reduces_cycles_proportionally() {
+        let g = ff(256, 512, 2048);
+        let p = SimParams::default();
+        let c = cfg(8, Quant::Fp32);
+        let full = gemm_on_array(&g, &c, &p, None);
+        let mut mask = TileMask::full(64, 256);
+        // Prune half the tiles.
+        for i in 0..mask.live.len() {
+            mask.live[i] = i % 2 == 0;
+        }
+        let half = gemm_on_array(&g, &c, &p, Some(&mask));
+        // Issue + weight traffic halves; panel stalls are shared, so the
+        // ratio lands between 0.5 and 0.6 for this shape.
+        let ratio = half.cycles / full.cycles;
+        assert!(ratio > 0.45 && ratio < 0.65, "ratio {ratio}");
+        assert_eq!(half.counts.macs * 2, full.counts.macs);
+    }
+
+    #[test]
+    fn empty_mask_costs_only_panel_stalls() {
+        let g = ff(64, 64, 64);
+        let p = SimParams::default();
+        let c = cfg(8, Quant::Fp32);
+        let mask = TileMask { kt: 8, nt: 8, live: vec![false; 64] };
+        let cost = gemm_on_array(&g, &c, &p, Some(&mask));
+        assert_eq!(cost.counts.macs, 0);
+        assert_eq!(cost.counts.bus_words, 0);
+        assert!(cost.cycles > 0.0, "panel classification still charged");
+    }
+
+    #[test]
+    fn int8_reduces_weight_traffic_not_streaming() {
+        let g = ff(256, 512, 2048);
+        let p = SimParams::default();
+        let f = gemm_on_array(&g, &cfg(8, Quant::Fp32), &p, None);
+        let i = gemm_on_array(&g, &cfg(8, Quant::Int8), &p, None);
+        assert!(i.counts.dram_accesses < f.counts.dram_accesses);
+        assert!(i.counts.bus_words < f.counts.bus_words);
+        assert_eq!(i.counts.l1d_hits, f.counts.l1d_hits); // stream words equal
+    }
+
+    #[test]
+    fn dynamic_gemm_ignores_quantization() {
+        let g = GemmShape { m: 256, k: 64, n: 256, kind: GemmKind::AttnDyn };
+        let p = SimParams::default();
+        let f = gemm_on_array(&g, &cfg(8, Quant::Fp32), &p, None);
+        let i = gemm_on_array(&g, &cfg(8, Quant::Int8), &p, None);
+        assert_eq!(f.cycles, i.cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "only feed-forward")]
+    fn pruning_attention_rejected() {
+        let g = GemmShape { m: 8, k: 8, n: 8, kind: GemmKind::AttnProj };
+        let mut mask = TileMask::full(1, 1);
+        mask.live[0] = false;
+        let _ = gemm_on_array(
+            &g,
+            &cfg(8, Quant::Fp32),
+            &SimParams::default(),
+            Some(&mask),
+        );
+    }
+
+    #[test]
+    fn larger_array_fewer_cycles_sublinear() {
+        let g = ff(256, 512, 2048);
+        let p = SimParams::default();
+        let c8 = gemm_on_array(&g, &cfg(8, Quant::Fp32), &p, None).cycles;
+        let c32 = gemm_on_array(&g, &cfg(32, Quant::Fp32), &p, None).cycles;
+        let gain = c8 / c32;
+        assert!(gain > 1.5 && gain < 4.0, "8->32 gain {gain} must be sublinear (<4x)");
+    }
+
+    #[test]
+    fn cpu_baseline_slower_than_any_array() {
+        let g = ff(128, 256, 256);
+        let p = SimParams::default();
+        let cpu = gemm_on_cpu(&g, &p).cycles;
+        for t in [4, 8, 16, 32] {
+            let acc = gemm_on_array(&g, &cfg(t, Quant::Fp32), &p, None).cycles;
+            assert!(cpu > acc, "t={t}");
+        }
+    }
+
+    #[test]
+    fn prop_cycles_monotone_in_live_tiles() {
+        check("cycles monotone in live tiles", 24, |rng: &mut Rng| {
+            let g = ff(64, 128, 128);
+            let p = SimParams::default();
+            let c = cfg(8, Quant::Int8);
+            let (kt, nt) = (16, 16);
+            let mut live = vec![false; kt * nt];
+            for l in live.iter_mut() {
+                *l = rng.chance(0.5);
+            }
+            let m1 = TileMask { kt, nt, live: live.clone() };
+            // Add one more live tile (if any dead).
+            let dead: Vec<usize> =
+                (0..live.len()).filter(|i| !live[*i]).collect();
+            if dead.is_empty() {
+                return (true, String::new());
+            }
+            live[dead[rng.index(dead.len())]] = true;
+            let m2 = TileMask { kt, nt, live };
+            let c1 = gemm_on_array(&g, &c, &p, Some(&m1)).cycles;
+            let c2 = gemm_on_array(&g, &c, &p, Some(&m2)).cycles;
+            (c2 > c1, format!("c1={c1} c2={c2}"))
+        });
+    }
+}

@@ -1,0 +1,85 @@
+//! The custom ARM ISA extension of §3.2: three instruction families that
+//! drive the tightly coupled systolic array, wrapped by the "parametric
+//! library functions" the paper injects via inline assembly.
+//!
+//! | instruction | effect | operands |
+//! |---|---|---|
+//! | `SA_PROG`    | program one 32-bit weight word (1×FP32 or 4×INT8) | weight word |
+//! | `SA_STREAM`  | push one input activation, pop one output | 2×32-bit |
+//! | `SA_CTRL`    | tile setup / drain / scale configuration | — |
+//!
+//! Issue costs are single-cycle on the in-order pipeline; memory operands
+//! stall per the cache hierarchy (accounted by [`super::engine`]).
+
+/// One custom instruction (kept as data so traces can be inspected and
+/// the engine's counts property-tested against an explicit expansion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SaInst {
+    /// Program one 32-bit weight word into the array.
+    Prog,
+    /// Stream one input word in and one output word out.
+    Stream,
+    /// Control: tile setup, drain, or quant-scale configuration.
+    Ctrl,
+}
+
+impl SaInst {
+    /// Issue cycles on the in-order core (excluding memory stalls).
+    pub fn issue_cycles(self) -> u64 {
+        match self {
+            // All three are single-issue custom instructions.
+            SaInst::Prog | SaInst::Stream | SaInst::Ctrl => 1,
+        }
+    }
+}
+
+/// Expand the instruction stream for one live tile pass — the explicit
+/// (slow) counterpart of the closed-form counts in
+/// [`crate::systolic::TileTiming`]; used in tests.
+pub fn expand_tile(
+    rows: usize,
+    cols: usize,
+    m: usize,
+    weights_per_word: usize,
+) -> Vec<SaInst> {
+    let mut v = Vec::new();
+    v.push(SaInst::Ctrl); // tile setup
+    for _ in 0..(rows * cols).div_ceil(weights_per_word) {
+        v.push(SaInst::Prog);
+    }
+    for _ in 0..m * rows.max(cols) {
+        v.push(SaInst::Stream);
+    }
+    v.push(SaInst::Ctrl); // drain
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::{ArrayConfig, Quant, TileTiming};
+    use crate::util::prop::check;
+
+    #[test]
+    fn expansion_matches_closed_form_counts() {
+        check("isa expansion == TileTiming", 32, |rng| {
+            let n = [4usize, 8, 16, 32][rng.index(4)];
+            let m = rng.index(64) + 1;
+            let quant = if rng.chance(0.5) { Quant::Fp32 } else { Quant::Int8 };
+            let cfg = ArrayConfig::square(n, quant);
+            let t = TileTiming::live(&cfg, m);
+            let insts = expand_tile(n, n, m, quant.weights_per_word());
+            let progs = insts.iter().filter(|i| **i == SaInst::Prog).count();
+            let streams = insts.iter().filter(|i| **i == SaInst::Stream).count();
+            ((progs, streams) == (t.prog_words, t.stream_insts),
+             format!("n={n} m={m} {quant:?} progs={progs} streams={streams}"))
+        });
+    }
+
+    #[test]
+    fn all_issue_single_cycle() {
+        for i in [SaInst::Prog, SaInst::Stream, SaInst::Ctrl] {
+            assert_eq!(i.issue_cycles(), 1);
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Full-system simulation — the gem5-X tier of the paper's framework.
+//!
+//! The paper runs complete inferences inside gem5 (Table 2 system: one
+//! in-order ARMv8 core @ 1 GHz, 32 kB L1s, 1 MB L2, DDR4-2400, plus a
+//! tightly coupled systolic array driven by custom instructions). Address-
+//! level simulation of billions of accesses is intractable for the design
+//! sweeps here, so this module implements the same mechanisms at *tile
+//! pass* granularity:
+//!
+//! - [`cache::Cache`] — a functional set-associative LRU cache, used
+//!   directly by unit tests and to validate the analytic stream
+//!   classification on small GEMMs;
+//! - [`isa`] — the custom accelerator instructions of §3.2 and their
+//!   issue costs;
+//! - [`engine`] — per-GEMM tiled execution accounting (live vs skipped
+//!   tiles, programming vs streaming, memory-stall classification);
+//! - [`system::System`] — whole-encoder simulation producing
+//!   [`crate::hwmodel::SysCounts`], per-layer cycle breakdowns, and the
+//!   software-only CPU baseline.
+
+pub mod cache;
+pub mod engine;
+pub mod isa;
+pub mod params;
+pub mod system;
+pub mod trace;
+
+pub use cache::{Cache, CacheConfig};
+pub use engine::{GemmCost, TileMask};
+pub use params::SimParams;
+pub use system::{RunStats, System};
+pub use trace::{LoopOrder, TraceCounts, TraceSim};

@@ -1,0 +1,255 @@
+//! Whole-encoder simulation: expand an [`EncoderSpec`] to its GEMMs, run
+//! each through the engine with the configured array + per-GEMM masks,
+//! add the software-executed remainder, and aggregate cycles / events /
+//! per-layer breakdowns.
+
+use crate::hwmodel::{EnergyModel, SysCounts};
+use crate::model::{EncoderSpec, GemmKind};
+use crate::systolic::ArrayConfig;
+
+use super::engine::{gemm_on_array, gemm_on_cpu, non_gemm_cost, GemmCost, TileMask};
+use super::params::SimParams;
+
+/// Per-layer timing entry (Fig. 8).
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub layer: usize,
+    pub cycles: f64,
+    /// Mean tile sparsity of the layer's feed-forward GEMMs.
+    pub ff_sparsity: f64,
+}
+
+/// Result of one simulated inference.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub counts: SysCounts,
+    pub cycles: f64,
+    pub per_layer: Vec<LayerStats>,
+    pub seconds: f64,
+    pub energy_j: f64,
+}
+
+/// The simulated Table 2 platform.
+pub struct System {
+    pub params: SimParams,
+    pub energy: EnergyModel,
+}
+
+impl Default for System {
+    fn default() -> Self {
+        System { params: SimParams::default(), energy: EnergyModel::default() }
+    }
+}
+
+impl System {
+    /// Simulate one accelerated encoder inference.
+    ///
+    /// `ff_masks`: one [`TileMask`] per feed-forward GEMM in execution
+    /// order (2 per block: w1, w2), or `None` for the unpruned run. The
+    /// mask grid must match the array tile size.
+    pub fn run_encoder(
+        &self,
+        spec: &EncoderSpec,
+        array: &ArrayConfig,
+        ff_masks: Option<&[TileMask]>,
+    ) -> RunStats {
+        let layers = spec.layers();
+        if let Some(masks) = ff_masks {
+            let n_ff: usize = layers
+                .iter()
+                .flat_map(|l| l.gemms.iter())
+                .filter(|g| g.kind.prunable())
+                .count();
+            assert_eq!(masks.len(), n_ff, "need one mask per FF GEMM");
+        }
+
+        let mut total = GemmCost::default();
+        let mut per_layer = Vec::with_capacity(layers.len());
+        let mut ff_idx = 0usize;
+        let non_gemm_per_layer =
+            non_gemm_cost(spec.non_gemm_elems() / spec.n_blocks as u64, &self.params);
+
+        for layer in &layers {
+            let mut lcost = GemmCost::default();
+            let mut sp_sum = 0.0;
+            let mut sp_n = 0usize;
+            for g in &layer.gemms {
+                let mask = if g.kind == GemmKind::FeedForward {
+                    let m = ff_masks.map(|ms| &ms[ff_idx]);
+                    ff_idx += 1;
+                    if let Some(m) = m {
+                        sp_sum += m.sparsity();
+                        sp_n += 1;
+                    }
+                    m
+                } else {
+                    None
+                };
+                lcost.add(&gemm_on_array(g, array, &self.params, mask));
+            }
+            lcost.add(&non_gemm_per_layer);
+            per_layer.push(LayerStats {
+                layer: layer.index,
+                cycles: lcost.cycles,
+                ff_sparsity: if sp_n > 0 { sp_sum / sp_n as f64 } else { 0.0 },
+            });
+            total.add(&lcost);
+        }
+
+        self.finish(array, total, per_layer)
+    }
+
+    /// Software-only baseline (no accelerator) — the reference for the
+    /// Table 3 / Fig. 11 speedup columns.
+    pub fn run_encoder_cpu(&self, spec: &EncoderSpec) -> RunStats {
+        let mut total = GemmCost::default();
+        let mut per_layer = Vec::new();
+        let non_gemm_per_layer =
+            non_gemm_cost(spec.non_gemm_elems() / spec.n_blocks as u64, &self.params);
+        for layer in &spec.layers() {
+            let mut lcost = GemmCost::default();
+            for g in &layer.gemms {
+                lcost.add(&gemm_on_cpu(g, &self.params));
+            }
+            lcost.add(&non_gemm_per_layer);
+            per_layer.push(LayerStats {
+                layer: layer.index,
+                cycles: lcost.cycles,
+                ff_sparsity: 0.0,
+            });
+            total.add(&lcost);
+        }
+        let seconds = total.cycles / self.params.clock_hz;
+        let energy_j = self.energy.energy_cpu_j(&total.counts);
+        RunStats {
+            counts: total.counts,
+            cycles: total.cycles,
+            per_layer,
+            seconds,
+            energy_j,
+        }
+    }
+
+    fn finish(
+        &self,
+        array: &ArrayConfig,
+        total: GemmCost,
+        per_layer: Vec<LayerStats>,
+    ) -> RunStats {
+        let seconds = total.cycles / self.params.clock_hz;
+        let energy_j = self.energy.energy_j(array, &total.counts);
+        RunStats {
+            counts: total.counts,
+            cycles: total.cycles,
+            per_layer,
+            seconds,
+            energy_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::systolic::Quant;
+
+    fn full_masks(spec: &EncoderSpec, tile: usize) -> Vec<TileMask> {
+        let mut v = Vec::new();
+        for _ in 0..spec.n_blocks {
+            v.push(TileMask::full(spec.d_model / tile, spec.d_ff / tile));
+            v.push(TileMask::full(spec.d_ff / tile, spec.d_model / tile));
+        }
+        v
+    }
+
+    #[test]
+    fn accelerated_beats_cpu_for_all_sizes() {
+        let sys = System::default();
+        let spec = zoo::espnet_asr();
+        let cpu = sys.run_encoder_cpu(&spec);
+        for t in [4usize, 8, 16, 32] {
+            let acc = sys.run_encoder(
+                &spec,
+                &ArrayConfig::square(t, Quant::Fp32),
+                None,
+            );
+            let speedup = cpu.cycles / acc.cycles;
+            assert!(speedup > 4.0, "t={t} speedup {speedup}");
+        }
+    }
+
+    #[test]
+    fn speedup_grows_sublinearly_with_size() {
+        let sys = System::default();
+        let spec = zoo::espnet_asr();
+        let cpu = sys.run_encoder_cpu(&spec).cycles;
+        let s: Vec<f64> = [4usize, 8, 16, 32]
+            .iter()
+            .map(|t| {
+                cpu / sys
+                    .run_encoder(&spec, &ArrayConfig::square(*t, Quant::Fp32), None)
+                    .cycles
+            })
+            .collect();
+        assert!(s[1] > s[0] && s[2] > s[1] && s[3] > s[2], "monotone {s:?}");
+        // Sublinear: doubling size gives < 2x speedup gain at the top end.
+        assert!(s[3] / s[2] < 2.0, "sublinear {s:?}");
+    }
+
+    #[test]
+    fn full_masks_match_unmasked_run() {
+        let sys = System::default();
+        let spec = zoo::mustc_mt_encoder();
+        let array = ArrayConfig::square(8, Quant::Int8);
+        let a = sys.run_encoder(&spec, &array, None);
+        let masks = full_masks(&spec, 8);
+        let b = sys.run_encoder(&spec, &array, Some(&masks));
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn pruning_speeds_up_and_saves_energy() {
+        let sys = System::default();
+        let spec = zoo::espnet_asr();
+        let array = ArrayConfig::square(8, Quant::Int8);
+        let dense = sys.run_encoder(&spec, &array, None);
+        let mut masks = full_masks(&spec, 8);
+        for m in &mut masks {
+            for (i, l) in m.live.iter_mut().enumerate() {
+                if i % 4 == 0 {
+                    *l = false; // 25 % structured sparsity
+                }
+            }
+        }
+        let pruned = sys.run_encoder(&spec, &array, Some(&masks));
+        assert!(pruned.cycles < dense.cycles);
+        assert!(pruned.energy_j < dense.energy_j);
+    }
+
+    #[test]
+    fn per_layer_breakdown_covers_all_blocks() {
+        let sys = System::default();
+        let spec = zoo::espnet2_asr();
+        let stats =
+            sys.run_encoder(&spec, &ArrayConfig::square(8, Quant::Fp32), None);
+        assert_eq!(stats.per_layer.len(), 12);
+        let sum: f64 = stats.per_layer.iter().map(|l| l.cycles).sum();
+        assert!((sum - stats.cycles).abs() / stats.cycles < 1e-9);
+    }
+
+    #[test]
+    fn gemm_dominates_runtime() {
+        // §4.3: GEMM computations exceed 97 % of inference runtime.
+        let sys = System::default();
+        let spec = zoo::espnet_asr();
+        let acc =
+            sys.run_encoder(&spec, &ArrayConfig::square(8, Quant::Fp32), None);
+        let non_gemm = crate::sysim::engine::non_gemm_cost(
+            spec.non_gemm_elems(),
+            &sys.params,
+        );
+        assert!(non_gemm.cycles / acc.cycles < 0.03,
+                "non-GEMM fraction {}", non_gemm.cycles / acc.cycles);
+    }
+}

@@ -1,0 +1,284 @@
+//! Address-level trace simulation of one tiled GEMM — the validation
+//! harness for the analytic stream classification in [`super::engine`].
+//!
+//! The engine claims (module docs there): weight lines are cold misses,
+//! touched once per live tile; input/output panel lines miss once at L2
+//! and hit L1 on re-touch under the j-outer/k-inner loop order with
+//! per-tile staging. This module actually *walks the addresses* of that
+//! loop order through the functional L1-D + L2 caches and reports what
+//! happened, so the claim is tested rather than assumed
+//! (`trace_matches_analytics` below and in `rust/tests/`).
+
+use crate::model::GemmShape;
+use crate::systolic::ArrayConfig;
+
+use super::cache::{Cache, CacheConfig};
+use super::engine::TileMask;
+
+/// Hit/miss tallies from a traced execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    pub l1d_hits: u64,
+    pub l1d_misses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+}
+
+/// Two-level data-side hierarchy fed by the trace.
+pub struct TraceSim {
+    pub l1d: Cache,
+    pub l2: Cache,
+}
+
+impl Default for TraceSim {
+    fn default() -> Self {
+        TraceSim {
+            l1d: Cache::new(CacheConfig::l1()),
+            l2: Cache::new(CacheConfig::l2()),
+        }
+    }
+}
+
+/// Distinct address regions, set-staggered (offset by disjoint L2 set
+/// ranges) the way a page-coloring allocator would place them — so the
+/// traced misses reflect capacity/compulsory behaviour, not the accident
+/// of three buffers sharing set 0.
+const W_BASE: u64 = 0x1000_0000;
+const X_BASE: u64 = 0x4000_0000 + 2048 * 64;
+const O_BASE: u64 = 0x7000_0000 + 4096 * 64;
+
+impl TraceSim {
+    /// Non-temporal touch: weight programming streams through L2 without
+    /// allocating in L1 (SA_PROG uses non-temporal loads — a 512 KiB
+    /// weight stream through a 32 KiB L1 would evict every activation
+    /// panel; the engine's classification assumes exactly this).
+    fn touch_nt(&mut self, addr: u64, c: &mut TraceCounts) {
+        if self.l2.access(addr) {
+            c.l2_hits += 1;
+        } else {
+            c.l2_misses += 1;
+        }
+    }
+
+    fn touch(&mut self, addr: u64, c: &mut TraceCounts) {
+        if self.l1d.access(addr) {
+            c.l1d_hits += 1;
+        } else {
+            c.l1d_misses += 1;
+            if self.l2.access(addr) {
+                c.l2_hits += 1;
+            } else {
+                c.l2_misses += 1;
+            }
+        }
+    }
+
+    /// Trace one weight-stationary tiled GEMM in the engine's loop order
+    /// (j outer, k inner; weights tiled-contiguous; inputs staged per
+    /// tile; outputs accumulated in place). Word-granular accesses.
+    pub fn trace_gemm(
+        &mut self,
+        g: &GemmShape,
+        cfg: &ArrayConfig,
+        mask: Option<&TileMask>,
+    ) -> TraceCounts {
+        self.trace_gemm_order(g, cfg, mask, LoopOrder::JOuter)
+    }
+
+    /// Loop-order ablation entry point (see [`LoopOrder`]).
+    pub fn trace_gemm_order(
+        &mut self,
+        g: &GemmShape,
+        cfg: &ArrayConfig,
+        mask: Option<&TileMask>,
+        order: LoopOrder,
+    ) -> TraceCounts {
+        let t = cfg.tile();
+        let (kt, nt) = (g.k / t, g.n / t);
+        let wbytes: u64 = match cfg.quant {
+            crate::systolic::Quant::Fp32 => 4,
+            crate::systolic::Quant::Int8 => 1,
+        };
+        let mut c = TraceCounts::default();
+        let tiles: Vec<(usize, usize)> = match order {
+            LoopOrder::JOuter => (0..nt)
+                .flat_map(|j| (0..kt).map(move |k| (k, j)))
+                .collect(),
+            LoopOrder::KOuter => (0..kt)
+                .flat_map(|k| (0..nt).map(move |j| (k, j)))
+                .collect(),
+        };
+        for (k, j) in tiles {
+            {
+                if let Some(m) = mask {
+                    if !m.is_live(k, j) {
+                        continue; // SASP: pruned tile touches nothing
+                    }
+                }
+            }
+            {
+                // Program: weight tile, stored contiguously in tiled
+                // layout at its (k, j) slot.
+                let tile_base =
+                    W_BASE + ((k * nt + j) * t * t) as u64 * wbytes;
+                let mut a = tile_base;
+                while a < tile_base + (t * t) as u64 * wbytes {
+                    self.touch_nt(a, &mut c); // non-temporal: L2 only
+                    a += 4; // one 32-bit bus word per access
+                }
+                // Stream: M rows; read the staged input block for this
+                // k-tile, read+write the output block for this j-tile.
+                // Panels are *staged* in tiled layout (the
+                // accelerator-driven data arrangement of paper ref [1]):
+                // each m x t block is contiguous, so blocks spread across
+                // cache sets instead of aliasing on the power-of-two row
+                // stride of the row-major panel.
+                for row in 0..g.m {
+                    for w in 0..t {
+                        let x_addr =
+                            X_BASE + ((k * g.m * t) + row * t + w) as u64 * 4;
+                        self.touch(x_addr, &mut c);
+                        let o_addr =
+                            O_BASE + ((j * g.m * t) + row * t + w) as u64 * 4;
+                        self.touch(o_addr, &mut c);
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Tile visit order — the "accelerator-driven data arrangement" ablation
+/// (paper ref [1]): `JOuter` keeps the output block L1-resident across
+/// the K accumulation sweep (the layout the engine models); `KOuter`
+/// sweeps all output columns per K tile, blowing the output reuse
+/// distance past L1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    JOuter,
+    KOuter,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GemmKind;
+    use crate::systolic::Quant;
+
+    fn ff(m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { m, k, n, kind: GemmKind::FeedForward }
+    }
+
+    fn cfg8() -> ArrayConfig {
+        ArrayConfig::square(8, Quant::Fp32)
+    }
+
+    #[test]
+    fn weight_lines_are_cold_in_l2() {
+        // Analytic claim: every weight line misses L2 exactly once.
+        let g = ff(32, 64, 64);
+        let mut sim = TraceSim::default();
+        let c = sim.trace_gemm(&g, &cfg8(), None);
+        let weight_lines = (g.k * g.n * 4 / 64) as u64;
+        // L2 misses = weight lines + unique input lines + unique output
+        // lines (all cold; everything else re-hits).
+        let in_lines = (g.m * g.k * 4 / 64) as u64;
+        let out_lines = (g.m * g.n * 4 / 64) as u64;
+        assert_eq!(c.l2_misses, weight_lines + in_lines + out_lines);
+    }
+
+    #[test]
+    fn pruned_tiles_touch_nothing() {
+        let g = ff(16, 32, 32);
+        let mut dense_sim = TraceSim::default();
+        let dense = dense_sim.trace_gemm(&g, &cfg8(), None);
+        let mut mask = TileMask::full(4, 4);
+        for i in 0..8 {
+            mask.live[i] = false; // prune half
+        }
+        let mut pruned_sim = TraceSim::default();
+        let pruned = pruned_sim.trace_gemm(&g, &cfg8(), Some(&mask));
+        let total =
+            |c: &TraceCounts| c.l1d_hits + c.l1d_misses;
+        assert!(total(&pruned) < total(&dense));
+        // Fully pruned GEMM: zero accesses.
+        let mut sim = TraceSim::default();
+        let none = sim.trace_gemm(
+            &g,
+            &cfg8(),
+            Some(&TileMask { kt: 4, nt: 4, live: vec![false; 16] }),
+        );
+        assert_eq!(none, TraceCounts::default());
+    }
+
+    #[test]
+    fn output_block_stays_l1_resident_across_k() {
+        // j-outer loop order: the output block is re-touched kt times and
+        // must hit L1 after the first touch (the engine charges it once).
+        let g = ff(32, 64, 16); // small N so output panel is tiny
+        let mut sim = TraceSim::default();
+        let c = sim.trace_gemm(&g, &cfg8(), None);
+        let out_lines = (g.m * g.n * 4 / 64) as u64;
+        let kt = (g.k / 8) as u64;
+        // Output touches: m*t per tile * kt*nt tiles = m*n*kt words; all
+        // but the first line-touch must be L1 hits. Verify via upper
+        // bound on l1d misses: unique lines only.
+        let unique = out_lines
+            + (g.m * g.k * 4 / 64) as u64
+            + (g.k * g.n * 4 / 64) as u64;
+        assert!(
+            c.l1d_misses <= unique + unique / 8, // small conflict slack
+            "l1 misses {} vs unique lines {unique} (kt={kt})",
+            c.l1d_misses
+        );
+    }
+
+    #[test]
+    fn int8_weights_quarter_the_weight_lines() {
+        let g = ff(8, 64, 64);
+        let mut f = TraceSim::default();
+        let cf = f.trace_gemm(&g, &ArrayConfig::square(8, Quant::Fp32), None);
+        let mut i = TraceSim::default();
+        let ci = i.trace_gemm(&g, &ArrayConfig::square(8, Quant::Int8), None);
+        // Same streaming; weight region shrinks 4x -> fewer L2 misses.
+        assert!(ci.l2_misses < cf.l2_misses);
+        let diff = cf.l2_misses - ci.l2_misses;
+        let fp32_weight_lines = (g.k * g.n * 4 / 64) as u64;
+        assert_eq!(diff, fp32_weight_lines - fp32_weight_lines / 4);
+    }
+
+    #[test]
+    fn k_outer_order_thrashes_l1() {
+        // The data-arrangement ablation: k-outer ordering must produce
+        // strictly more L1 misses than j-outer on a shape whose output
+        // panel exceeds L1 but fits L2.
+        // Input panel (16 KiB) fits L1; output panel (128 KiB) does not:
+        // j-outer keeps both hot per iteration, k-outer re-sweeps the
+        // output panel per K tile.
+        let g = ff(64, 64, 512);
+        let mut a = TraceSim::default();
+        let j = a.trace_gemm_order(&g, &cfg8(), None, LoopOrder::JOuter);
+        let mut b = TraceSim::default();
+        let k = b.trace_gemm_order(&g, &cfg8(), None, LoopOrder::KOuter);
+        assert!(k.l1d_misses > j.l1d_misses * 2,
+                "k-outer {} vs j-outer {}", k.l1d_misses, j.l1d_misses);
+    }
+
+    #[test]
+    fn trace_matches_engine_analytics() {
+        // The analytic engine's DRAM count (weight lines) must equal the
+        // traced L2 weight-miss count for a live-tile run.
+        use crate::sysim::engine::gemm_on_array;
+        use crate::sysim::SimParams;
+        let g = ff(32, 64, 64);
+        let cfg = cfg8();
+        let p = SimParams::default();
+        let analytic = gemm_on_array(&g, &cfg, &p, None);
+        let mut sim = TraceSim::default();
+        let traced = sim.trace_gemm(&g, &cfg, None);
+        let in_out_lines = ((g.m * g.k + g.m * g.n) * 4 / 64) as u64;
+        let traced_weight_misses = traced.l2_misses - in_out_lines;
+        assert_eq!(analytic.counts.dram_accesses, traced_weight_misses);
+    }
+}

@@ -1,0 +1,246 @@
+//! Functional per-cycle simulation of the weight-stationary mesh.
+//!
+//! The peripheral skew registers of Fig. 4 (which delay row r's input
+//! stream by r cycles and de-skew the outputs) are modeled by the
+//! injection/collection schedule; the mesh itself is simulated register
+//! by register, PE by PE, so numerics — including FTZ float behaviour and
+//! the hybrid multiplier's truncation — are exactly those of the RTL.
+
+use crate::arith::SignMag8;
+
+use super::pe::{Pe, PeWeight};
+use super::{ArrayConfig, Quant};
+
+/// A configured array instance holding a programmed weight tile.
+pub struct SystolicArray {
+    pub cfg: ArrayConfig,
+    pes: Vec<Pe>,
+    /// Dequantization scale applied at output readout (INT8 mode).
+    scale: f32,
+    /// Cycles consumed by the last `compute` call.
+    pub last_compute_cycles: usize,
+    /// 32-bit bus words consumed by the last `program_weights` call.
+    pub last_program_words: usize,
+}
+
+impl SystolicArray {
+    pub fn new(cfg: ArrayConfig) -> Self {
+        let pes = (0..cfg.n_pes())
+            .map(|_| Pe::new(PeWeight::Fp32(0.0)))
+            .collect();
+        SystolicArray {
+            cfg,
+            pes,
+            scale: 1.0,
+            last_compute_cycles: 0,
+            last_program_words: 0,
+        }
+    }
+
+    fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.cfg.cols + c
+    }
+
+    /// Program a weight tile (row-major `rows x cols`). In INT8 mode the
+    /// f32 weights are quantized with the given per-tensor scale
+    /// (`w_q = round(w / scale)`), mirroring the PTQ path.
+    ///
+    /// Returns the number of 32-bit bus words transferred — `R*C` for
+    /// FP32, `ceil(R*C/4)` for INT8 (four weights packed per word, §3.2).
+    pub fn program_weights(&mut self, tile: &[f32], scale: f32) -> usize {
+        assert_eq!(tile.len(), self.cfg.n_pes());
+        self.scale = scale;
+        for r in 0..self.cfg.rows {
+            for c in 0..self.cfg.cols {
+                let w = tile[r * self.cfg.cols + c];
+                let pw = match self.cfg.quant {
+                    Quant::Fp32 => PeWeight::Fp32(w),
+                    Quant::Int8 => {
+                        let q = (w / scale).round_ties_even().clamp(-127.0, 127.0);
+                        PeWeight::Int8(SignMag8::from_i8(q as i8))
+                    }
+                };
+                let i = self.idx(r, c);
+                self.pes[i] = Pe::new(pw);
+            }
+        }
+        let words = self.cfg.n_pes().div_ceil(self.cfg.quant.weights_per_word());
+        self.last_program_words = words;
+        words
+    }
+
+    /// Stream an `m x rows` input block through the array cycle by cycle;
+    /// returns the `m x cols` output block (de-skewed) and records the
+    /// cycle count (`m + rows + cols - 2`).
+    pub fn compute(&mut self, x: &[f32], m: usize) -> Vec<f32> {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        assert_eq!(x.len(), m * rows);
+        let total_cycles = m + rows + cols - 2;
+        let mut out = vec![0.0f32; m * cols];
+
+        // Double-buffered register state.
+        let mut x_regs = vec![0.0f32; rows * cols];
+        let mut psum_regs = vec![0.0f32; rows * cols];
+
+        for t in 0..total_cycles {
+            let x_prev = x_regs.clone();
+            let psum_prev = psum_regs.clone();
+            for r in 0..rows {
+                for c in 0..cols {
+                    // Left edge: the skew registers deliver x[t-r][r].
+                    let x_in = if c == 0 {
+                        if t >= r && t - r < m {
+                            x[(t - r) * rows + r]
+                        } else {
+                            0.0
+                        }
+                    } else {
+                        x_prev[self.idx(r, c - 1)]
+                    };
+                    let psum_in = if r == 0 {
+                        0.0
+                    } else {
+                        psum_prev[self.idx(r - 1, c)]
+                    };
+                    let i = self.idx(r, c);
+                    let (_, psum_out) = {
+                        // step() updates the PE's internal registers; we
+                        // mirror them into the double buffers.
+                        let pe = &mut self.pes[i];
+                        pe.x_reg = 0.0; // value comes from x_prev buffer
+                        pe.step(x_in, psum_in)
+                    };
+                    x_regs[i] = x_in;
+                    psum_regs[i] = psum_out;
+                }
+            }
+            // Collect de-skewed outputs from the bottom row.
+            for c in 0..cols {
+                if t >= rows - 1 + c {
+                    let mrow = t - (rows - 1) - c;
+                    if mrow < m {
+                        let v = psum_regs[self.idx(rows - 1, c)];
+                        out[mrow * cols + c] = match self.cfg.quant {
+                            Quant::Fp32 => v,
+                            Quant::Int8 => v * self.scale,
+                        };
+                    }
+                }
+            }
+        }
+        self.last_compute_cycles = total_cycles;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += x[i * k + kk] * w[kk * n + j];
+                }
+                y[i * n + j] = acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn identity_weights_pass_inputs() {
+        let cfg = ArrayConfig::square(4, Quant::Fp32);
+        let mut arr = SystolicArray::new(cfg);
+        let mut eye = vec![0.0f32; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1.0;
+        }
+        arr.program_weights(&eye, 1.0);
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // 2x4
+        let y = arr.compute(&x, 2);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn cycle_count_closed_form() {
+        let cfg = ArrayConfig { rows: 3, cols: 5, quant: Quant::Fp32 };
+        let mut arr = SystolicArray::new(cfg);
+        arr.program_weights(&vec![1.0; 15], 1.0);
+        let _ = arr.compute(&vec![1.0; 7 * 3], 7);
+        assert_eq!(arr.last_compute_cycles, 7 + 3 + 5 - 2);
+    }
+
+    #[test]
+    fn program_words_fp32_vs_int8() {
+        let mut a = SystolicArray::new(ArrayConfig::square(8, Quant::Fp32));
+        assert_eq!(a.program_weights(&vec![0.5; 64], 1.0), 64);
+        let mut b = SystolicArray::new(ArrayConfig::square(8, Quant::Int8));
+        assert_eq!(b.program_weights(&vec![0.5; 64], 0.01), 16);
+    }
+
+    #[test]
+    fn fp32_matches_reference_matmul() {
+        check("systolic fp32 == matmul", 24, |rng: &mut Rng| {
+            let (m, r, c) = (rng.index(6) + 1, rng.index(5) + 1, rng.index(5) + 1);
+            let x: Vec<f32> = (0..m * r).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+            let mut arr = SystolicArray::new(ArrayConfig {
+                rows: r,
+                cols: c,
+                quant: Quant::Fp32,
+            });
+            arr.program_weights(&w, 1.0);
+            let got = arr.compute(&x, m);
+            let want = matmul(&x, &w, m, r, c);
+            let ok = got
+                .iter()
+                .zip(&want)
+                .all(|(g, w)| (g - w).abs() <= 1e-4 * w.abs().max(1.0));
+            (ok, format!("m={m} r={r} c={c} got={got:?} want={want:?}"))
+        });
+    }
+
+    #[test]
+    fn int8_matches_quantized_reference() {
+        check("systolic int8 == dequant matmul", 16, |rng: &mut Rng| {
+            let (m, n) = (rng.index(4) + 1, rng.index(3) + 2);
+            let x: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+            let amax = w.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            let mut arr = SystolicArray::new(ArrayConfig {
+                rows: n,
+                cols: n,
+                quant: Quant::Int8,
+            });
+            arr.program_weights(&w, scale);
+            let got = arr.compute(&x, m);
+            // Reference: quantize, dequantize, matmul.
+            let wq: Vec<f32> = w
+                .iter()
+                .map(|v| {
+                    (v / scale).round_ties_even().clamp(-127.0, 127.0) * scale
+                })
+                .collect();
+            let want = matmul(&x, &wq, m, n, n);
+            let ok = got.iter().zip(&want).all(|(g, w)| {
+                (g - w).abs() <= 2e-3 * w.abs().max(1.0)
+            });
+            (ok, format!("m={m} n={n}"))
+        });
+    }
+
+    #[test]
+    fn zero_tile_outputs_zero() {
+        let mut arr = SystolicArray::new(ArrayConfig::square(4, Quant::Fp32));
+        arr.program_weights(&vec![0.0; 16], 1.0);
+        let y = arr.compute(&vec![3.0; 4 * 4], 4);
+        assert!(y.iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,94 @@
+//! Cycle-level model of the paper's weight-stationary systolic array
+//! (Fig. 4): a mesh of MAC processing elements with nearest-neighbor
+//! links, stationary weights, left-to-right input streaming, top-to-bottom
+//! partial-sum flow, and diagonal skew registers at the periphery.
+//!
+//! Two views of the same hardware:
+//!
+//! - [`array::SystolicArray`] — a functional *per-cycle* simulation used
+//!   to validate numerics (including the hybrid FP32×INT8 PE) and to
+//!   cross-check the closed-form cycle counts on small tiles.
+//! - [`timing`] — closed-form per-tile cycle/transfer counts used by the
+//!   full-system simulator ([`crate::sysim`]), where per-cycle simulation
+//!   of full transformer inference would be intractable.
+
+pub mod array;
+pub mod pe;
+pub mod timing;
+
+pub use array::SystolicArray;
+pub use pe::{Pe, PeWeight};
+pub use timing::TileTiming;
+
+/// Weight data format of the array instance (paper: FP32_FP32 vs
+/// FP32_INT8; activations are always FP32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Quant {
+    /// FP32 weights, one weight per 32-bit bus word.
+    Fp32,
+    /// Sign-magnitude INT8 weights, four per 32-bit bus word, hybrid
+    /// multiplier PEs.
+    Int8,
+}
+
+impl Quant {
+    /// Weights transferred per 32-bit bus access (§3.2).
+    pub fn weights_per_word(self) -> usize {
+        match self {
+            Quant::Fp32 => 1,
+            Quant::Int8 => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Quant::Fp32 => "FP32_FP32",
+            Quant::Int8 => "FP32_INT8",
+        }
+    }
+}
+
+/// Geometry + format of one array instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ArrayConfig {
+    /// Rows (= SASP tile K-dimension).
+    pub rows: usize,
+    /// Columns (= SASP tile N-dimension).
+    pub cols: usize,
+    pub quant: Quant,
+}
+
+impl ArrayConfig {
+    pub fn square(n: usize, quant: Quant) -> Self {
+        ArrayConfig { rows: n, cols: n, quant }
+    }
+
+    pub fn n_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// SASP tile dimension (paper uses square arrays; asserted here).
+    pub fn tile(&self) -> usize {
+        assert_eq!(self.rows, self.cols, "SASP uses square arrays");
+        self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_per_word() {
+        assert_eq!(Quant::Fp32.weights_per_word(), 1);
+        assert_eq!(Quant::Int8.weights_per_word(), 4);
+    }
+
+    #[test]
+    fn config_basics() {
+        let c = ArrayConfig::square(8, Quant::Int8);
+        assert_eq!(c.n_pes(), 64);
+        assert_eq!(c.tile(), 8);
+        assert_eq!(c.quant.label(), "FP32_INT8");
+    }
+}

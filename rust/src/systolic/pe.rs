@@ -1,0 +1,93 @@
+//! One processing element: a stationary weight register, a multiplier
+//! (FP32 or hybrid FP32×INT8), an FP32 adder, and the dataflow registers
+//! that pass the activation right and the partial sum down.
+
+use crate::arith::{ftz_add, ftz_mul, hybrid_mul, SignMag8};
+
+/// The stationary weight held by a PE.
+#[derive(Clone, Copy, Debug)]
+pub enum PeWeight {
+    Fp32(f32),
+    /// Sign-magnitude INT8 plus the per-tensor dequantization scale, which
+    /// in the real datapath is folded outside the array; the functional
+    /// model applies it at output readout (see `scale_out`).
+    Int8(SignMag8),
+}
+
+impl PeWeight {
+    pub fn is_zero(&self) -> bool {
+        match self {
+            PeWeight::Fp32(w) => *w == 0.0,
+            PeWeight::Int8(w) => w.is_zero(),
+        }
+    }
+}
+
+/// Functional PE state for the per-cycle simulation.
+#[derive(Clone, Debug)]
+pub struct Pe {
+    pub weight: PeWeight,
+    /// Activation register (flows left→right).
+    pub x_reg: f32,
+    /// Partial-sum register (flows top→bottom).
+    pub psum_reg: f32,
+}
+
+impl Pe {
+    pub fn new(weight: PeWeight) -> Self {
+        Pe { weight, x_reg: 0.0, psum_reg: 0.0 }
+    }
+
+    /// One cycle: consume `x_in` (from the left) and `psum_in` (from
+    /// above), produce the registered outputs for the next cycle.
+    ///
+    /// The RTL pipelines the multiplier+adder; latency is hidden by the
+    /// streaming I/O (§3.3), so the functional model computes the MAC
+    /// combinationally and the *timing* model accounts for fill/drain.
+    pub fn step(&mut self, x_in: f32, psum_in: f32) -> (f32, f32) {
+        let prod = match self.weight {
+            PeWeight::Fp32(w) => ftz_mul(x_in, w),
+            PeWeight::Int8(w) => hybrid_mul(x_in, w),
+        };
+        let psum_out = ftz_add(psum_in, prod);
+        let x_out = self.x_reg;
+        self.x_reg = x_in;
+        self.psum_reg = psum_out;
+        (x_out, psum_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_mac() {
+        let mut pe = Pe::new(PeWeight::Fp32(2.0));
+        let (_, psum) = pe.step(3.0, 1.0);
+        assert_eq!(psum, 7.0);
+    }
+
+    #[test]
+    fn int8_mac_uses_hybrid_multiplier() {
+        let mut pe = Pe::new(PeWeight::Int8(SignMag8::from_i8(-3)));
+        let (_, psum) = pe.step(2.0, 0.5);
+        assert_eq!(psum, 0.5 - 6.0);
+    }
+
+    #[test]
+    fn x_propagates_with_one_cycle_delay() {
+        let mut pe = Pe::new(PeWeight::Fp32(0.0));
+        let (x0, _) = pe.step(5.0, 0.0);
+        assert_eq!(x0, 0.0); // register starts empty
+        let (x1, _) = pe.step(7.0, 0.0);
+        assert_eq!(x1, 5.0);
+    }
+
+    #[test]
+    fn zero_weight_passes_psum() {
+        let mut pe = Pe::new(PeWeight::Int8(SignMag8::from_i8(0)));
+        let (_, psum) = pe.step(123.0, 4.5);
+        assert_eq!(psum, 4.5);
+    }
+}

@@ -1,0 +1,151 @@
+//! Closed-form per-tile cost model — the contract between the functional
+//! array simulation (which validates these formulas on small tiles) and
+//! the full-system simulator (which applies them millions of times).
+//!
+//! Costs per weight-stationary tile pass (array `R x C`, input block of
+//! `M` rows):
+//!
+//! - **program**: `ceil(R*C / weights_per_word)` 32-bit bus writes
+//!   (FP32: one weight per word; INT8: four, §3.2).
+//! - **stream**: `M*R` input words in, `M*C` output words out; one input
+//!   and one output activation move per custom instruction, so the
+//!   instruction count is `M * max(R, C)` with perfect overlap.
+//! - **array cycles**: `M + R + C - 2` (fill + stream + drain through the
+//!   skew registers), validated against the per-cycle simulation.
+//! - **MACs**: `M*R*C` (for energy accounting).
+//!
+//! A *skipped* (pruned) tile costs nothing — that is the SASP saving.
+
+use super::ArrayConfig;
+
+/// Cost of one tile pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileTiming {
+    /// 32-bit words written to program the weight tile.
+    pub prog_words: usize,
+    /// Input activation words streamed in.
+    pub in_words: usize,
+    /// Output activation words streamed out.
+    pub out_words: usize,
+    /// Custom stream-compute instructions issued.
+    pub stream_insts: usize,
+    /// Cycles the array itself is busy.
+    pub array_cycles: usize,
+    /// MAC operations performed.
+    pub macs: usize,
+}
+
+impl TileTiming {
+    /// Cost of programming + computing one live tile.
+    pub fn live(cfg: &ArrayConfig, m: usize) -> TileTiming {
+        let (r, c) = (cfg.rows, cfg.cols);
+        TileTiming {
+            prog_words: (r * c).div_ceil(cfg.quant.weights_per_word()),
+            in_words: m * r,
+            out_words: m * c,
+            stream_insts: m * r.max(c),
+            array_cycles: m + r + c - 2,
+            macs: m * r * c,
+        }
+    }
+
+    /// Cost of a pruned tile: fully skipped (§3.1 / Fig. 3) — no weight
+    /// programming, no streaming, no compute.
+    pub fn skipped() -> TileTiming {
+        TileTiming::default()
+    }
+
+    /// Reuse of an already-programmed tile for another input block (the
+    /// weight-stationary win when M is split across batches).
+    pub fn reuse(cfg: &ArrayConfig, m: usize) -> TileTiming {
+        let mut t = TileTiming::live(cfg, m);
+        t.prog_words = 0;
+        t
+    }
+
+    /// Accumulate another tile's cost.
+    pub fn add(&mut self, other: &TileTiming) {
+        self.prog_words += other.prog_words;
+        self.in_words += other.in_words;
+        self.out_words += other.out_words;
+        self.stream_insts += other.stream_insts;
+        self.array_cycles += other.array_cycles;
+        self.macs += other.macs;
+    }
+
+    /// Total 32-bit bus words moved (weights + activations).
+    pub fn total_words(&self) -> usize {
+        self.prog_words + self.in_words + self.out_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::{ArrayConfig, Quant, SystolicArray};
+    use crate::util::prop::check;
+
+    #[test]
+    fn live_tile_counts_8x8() {
+        let cfg = ArrayConfig::square(8, Quant::Fp32);
+        let t = TileTiming::live(&cfg, 32);
+        assert_eq!(t.prog_words, 64);
+        assert_eq!(t.in_words, 32 * 8);
+        assert_eq!(t.out_words, 32 * 8);
+        assert_eq!(t.stream_insts, 32 * 8);
+        assert_eq!(t.array_cycles, 32 + 8 + 8 - 2);
+        assert_eq!(t.macs, 32 * 64);
+    }
+
+    #[test]
+    fn int8_packs_four_weights_per_word() {
+        let cfg = ArrayConfig::square(8, Quant::Int8);
+        assert_eq!(TileTiming::live(&cfg, 1).prog_words, 16);
+        let odd = ArrayConfig { rows: 3, cols: 3, quant: Quant::Int8 };
+        assert_eq!(TileTiming::live(&odd, 1).prog_words, 3); // ceil(9/4)
+    }
+
+    #[test]
+    fn skipped_tile_is_free() {
+        assert_eq!(TileTiming::skipped().total_words(), 0);
+        assert_eq!(TileTiming::skipped().array_cycles, 0);
+    }
+
+    #[test]
+    fn reuse_drops_programming_only() {
+        let cfg = ArrayConfig::square(4, Quant::Fp32);
+        let live = TileTiming::live(&cfg, 16);
+        let reuse = TileTiming::reuse(&cfg, 16);
+        assert_eq!(reuse.prog_words, 0);
+        assert_eq!(reuse.in_words, live.in_words);
+        assert_eq!(reuse.array_cycles, live.array_cycles);
+    }
+
+    #[test]
+    fn closed_form_matches_cycle_simulation() {
+        check("timing == per-cycle sim", 20, |rng| {
+            let r = rng.index(6) + 1;
+            let c = rng.index(6) + 1;
+            let m = rng.index(8) + 1;
+            let cfg = ArrayConfig { rows: r, cols: c, quant: Quant::Fp32 };
+            let mut arr = SystolicArray::new(cfg);
+            arr.program_weights(&vec![1.0; r * c], 1.0);
+            let _ = arr.compute(&vec![1.0; m * r], m);
+            let t = TileTiming::live(&cfg, m);
+            (arr.last_compute_cycles == t.array_cycles
+                && arr.last_program_words == t.prog_words,
+             format!("m={m} r={r} c={c} sim={} form={}",
+                     arr.last_compute_cycles, t.array_cycles))
+        });
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let cfg = ArrayConfig::square(4, Quant::Fp32);
+        let mut acc = TileTiming::skipped();
+        acc.add(&TileTiming::live(&cfg, 8));
+        acc.add(&TileTiming::live(&cfg, 8));
+        assert_eq!(acc.macs, 2 * 8 * 16);
+        assert_eq!(acc.prog_words, 32);
+    }
+}

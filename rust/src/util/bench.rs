@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (criterion is not in the vendor set).
+//!
+//! Each `cargo bench` target is a plain binary that uses [`Bench`] to run
+//! warmup + timed iterations and print a stable, parseable report:
+//!
+//! ```text
+//! bench <name>  iters=256  median=1.234ms  p95=1.301ms  mean=1.245ms
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// One benchmark runner with fixed warmup/measure budgets.
+pub struct Bench {
+    /// Target wall-clock budget for the measurement phase.
+    pub measure_budget: Duration,
+    /// Warmup budget before measuring.
+    pub warmup_budget: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_budget: Duration::from_millis(800),
+            warmup_budget: Duration::from_millis(200),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Summary statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:40} iters={:<6} median={:>12?} p95={:>12?} mean={:>12?} min={:>12?}",
+            self.name, self.iters, self.median, self.p95, self.mean, self.min
+        )
+    }
+
+    /// Median in nanoseconds (for speedup math in harness code).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+impl Bench {
+    /// Quick-profile configuration for CI-ish runs.
+    pub fn quick() -> Self {
+        Bench {
+            measure_budget: Duration::from_millis(250),
+            warmup_budget: Duration::from_millis(50),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Run `f` repeatedly, print and return stats. `f`'s return value is
+    /// passed through `std::hint::black_box` to keep the work alive.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup_budget {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure_budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            median: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            mean: total / n as u32,
+            min: samples[0],
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench {
+            measure_budget: Duration::from_millis(20),
+            warmup_budget: Duration::from_millis(2),
+            max_iters: 100,
+        };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.iters >= 1);
+        assert!(s.median <= s.p95);
+        assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn median_ns_positive_for_real_work() {
+        let b = Bench {
+            measure_budget: Duration::from_millis(10),
+            warmup_budget: Duration::from_millis(1),
+            max_iters: 50,
+        };
+        let s = b.run("sum", || (0..1000u64).sum::<u64>());
+        assert!(s.median_ns() > 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Infrastructure the vendored crate set does not provide: a JSON
+//! parser/emitter, a deterministic RNG, a micro-benchmark harness, and a
+//! small property-testing runner.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

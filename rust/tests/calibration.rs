@@ -1,0 +1,141 @@
+//! Calibration tests: the system model's *no-SASP* speedups must land in
+//! the neighbourhood of the paper's Table 3 (the model's only fitted
+//! quantities — SASP results are then predictions). Tolerances are wide
+//! (±35 %) because the paper's testbed is a full gem5 OS simulation; what
+//! must hold tightly is the *shape*: monotone in size, sublinear, and
+//! the FP32/INT8 crossover at 4x4 (§4.5).
+
+use sasp::coordinator::Explorer;
+use sasp::model::zoo;
+use sasp::systolic::Quant;
+
+/// Paper Table 3, "No SASP" speedup rows (vs CPU baseline).
+const PAPER_FP32: [(usize, f64); 4] =
+    [(4, 8.42), (8, 19.79), (16, 35.22), (32, 50.95)];
+const PAPER_INT8: [(usize, f64); 4] =
+    [(4, 8.03), (8, 20.18), (16, 36.53), (32, 61.33)];
+
+fn speedup(ex: &Explorer, n: usize, q: Quant) -> f64 {
+    ex.timing_point(n, q, 0.0).speedup_vs_cpu
+}
+
+#[test]
+fn no_sasp_speedups_near_table3_fp32() {
+    let ex = Explorer::new(zoo::espnet_asr());
+    for (n, want) in PAPER_FP32 {
+        let got = speedup(&ex, n, Quant::Fp32);
+        let rel = (got - want).abs() / want;
+        assert!(rel < 0.35, "FP32 {n}x{n}: got {got:.2}, paper {want} (rel {rel:.2})");
+    }
+}
+
+#[test]
+fn no_sasp_speedups_near_table3_int8() {
+    let ex = Explorer::new(zoo::espnet_asr());
+    for (n, want) in PAPER_INT8 {
+        let got = speedup(&ex, n, Quant::Int8);
+        let rel = (got - want).abs() / want;
+        assert!(rel < 0.35, "INT8 {n}x{n}: got {got:.2}, paper {want} (rel {rel:.2})");
+    }
+}
+
+#[test]
+fn speedup_monotone_and_sublinear_in_size() {
+    let ex = Explorer::new(zoo::espnet_asr());
+    for q in [Quant::Fp32, Quant::Int8] {
+        let s: Vec<f64> = [4, 8, 16, 32]
+            .iter()
+            .map(|n| speedup(&ex, *n, q))
+            .collect();
+        assert!(s.windows(2).all(|w| w[1] > w[0]), "{q:?} monotone: {s:?}");
+        // Each doubling of the dimension quadruples PEs but must give
+        // < 4x speedup (paper: 8->32 gives 3.04x for 16x the PEs).
+        for w in s.windows(2) {
+            assert!(w[1] / w[0] < 4.0, "{q:?} sublinear: {s:?}");
+        }
+        // Paper's 8->32 reference point: 3.04x (INT8) — allow 2..4.
+        let r = s[3] / s[1];
+        assert!(r > 1.8 && r < 4.2, "{q:?} 8->32 ratio {r:.2}");
+    }
+}
+
+#[test]
+fn int8_crossover_at_small_arrays() {
+    // §4.5: FP32_INT8 outperforms FP32_FP32 for sizes > 4x4; at 4x4 the
+    // software/system overhead makes INT8 not better.
+    let ex = Explorer::new(zoo::espnet_asr());
+    let f4 = speedup(&ex, 4, Quant::Fp32);
+    let i4 = speedup(&ex, 4, Quant::Int8);
+    assert!(i4 <= f4 * 1.02, "4x4: INT8 {i4:.2} must not beat FP32 {f4:.2}");
+    for n in [8, 16, 32] {
+        let f = speedup(&ex, n, Quant::Fp32);
+        let i = speedup(&ex, n, Quant::Int8);
+        assert!(i > f, "{n}x{n}: INT8 {i:.2} must beat FP32 {f:.2}");
+    }
+}
+
+#[test]
+fn fig7_workload_dependence_ordering() {
+    // §4.3: max gains vary by workload — MuST-C (d_model 128) benefits
+    // more from SASP than the LibriSpeech models (larger FF share).
+    let rate = 0.25;
+    let gain = |spec: sasp::model::EncoderSpec| {
+        let ex = Explorer::new(spec);
+        ex.timing_point(8, Quant::Int8, rate).speedup_vs_dense
+    };
+    let asr = gain(zoo::espnet_asr());
+    let mustc = gain(zoo::mustc_asr_encoder());
+    assert!(
+        mustc > asr,
+        "mustc gain {mustc:.3} should exceed librispeech gain {asr:.3}"
+    );
+}
+
+#[test]
+fn sasp_gains_in_paper_range() {
+    // Fig. 7: max speedup improvements 22-51% across workloads at the
+    // paper's QoS-selected rates; at a fixed 25% rate our model should
+    // produce gains in the same band (10-60%).
+    for spec in zoo::fig7_workloads() {
+        let ex = Explorer::new(spec.clone());
+        let g = ex.timing_point(8, Quant::Int8, 0.25).speedup_vs_dense;
+        let pct = (g - 1.0) * 100.0;
+        assert!(
+            (5.0..65.0).contains(&pct),
+            "{}: gain {pct:.1}% out of plausible band",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn table3_sasp_rows_improve_on_dense() {
+    let ex = Explorer::new(zoo::espnet_asr());
+    for (n, rate) in [(4usize, 0.25), (8, 0.20), (16, 0.20), (32, 0.20)] {
+        for q in [Quant::Fp32, Quant::Int8] {
+            let dense = ex.timing_point(n, q, 0.0);
+            let sasp = ex.timing_point(n, q, rate);
+            assert!(sasp.speedup_vs_cpu > dense.speedup_vs_cpu,
+                    "{n} {q:?} speedup");
+            assert!(sasp.energy_j < dense.energy_j, "{n} {q:?} energy");
+        }
+    }
+}
+
+#[test]
+fn energy_magnitudes_plausible() {
+    // Per-inference energies should be positive and ordered: bigger
+    // arrays burn more energy per inference at fixed work (leakage +
+    // quadratic power), matching Table 3's energy column ordering.
+    let ex = Explorer::new(zoo::espnet_asr());
+    let e8 = ex.timing_point(8, Quant::Int8, 0.0).energy_j;
+    let e32 = ex.timing_point(32, Quant::Int8, 0.0).energy_j;
+    assert!(e8 > 0.0);
+    // Table 3: 32x32 INT8 (10.64 J) > 8x8 INT8 (2.67 J)? No — runtime
+    // shrinks at 32x32. The paper still measures *higher* energy for the
+    // larger array (3.98x from 8->32). Require the same direction:
+    assert!(
+        e32 > e8,
+        "larger array should cost more energy: e8={e8:.3e} e32={e32:.3e}"
+    );
+}

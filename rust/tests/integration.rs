@@ -1,0 +1,226 @@
+//! Integration tests over the compiled artifacts: python-AOT → rust-PJRT
+//! round trips, cross-language numerical equivalence, and the full
+//! prune→quantize→infer→score pipeline.
+//!
+//! All tests skip cleanly when `make artifacts` has not run (so `cargo
+//! test` stays green on a fresh checkout); CI runs them after the make.
+
+use sasp::data::{load_bundle, Tensor};
+use sasp::pruning::{global_prune, tile_l1_norms};
+use sasp::qos::{AsrEvaluator, MtEvaluator};
+use sasp::runtime::Engine;
+use sasp::systolic::Quant;
+
+const DIR: &str = "artifacts";
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/asr_encoder_ref.hlo.txt").exists()
+        && std::path::Path::new("artifacts/golden_gemm.bin").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn sasp_gemm_artifact_matches_python_golden() {
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let g = load_bundle(format!("{DIR}/golden_gemm.bin")).unwrap();
+    let got = engine
+        .execute(
+            "sasp_gemm_t8",
+            &[
+                g.require("x").unwrap().clone(),
+                g.require("w").unwrap().clone(),
+                g.require("mask").unwrap().clone(),
+            ],
+        )
+        .unwrap();
+    let err = max_abs_diff(&got.f32s(), &g.require("y").unwrap().f32s());
+    assert!(err < 1e-3, "max err {err}");
+}
+
+#[test]
+fn quant_gemm_artifact_matches_python_golden() {
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let g = load_bundle(format!("{DIR}/golden_gemm.bin")).unwrap();
+    let got = engine
+        .execute(
+            "quant_gemm_t8",
+            &[
+                g.require("x").unwrap().clone(),
+                g.require("w_q").unwrap().clone(),
+                g.require("scale").unwrap().clone(),
+                g.require("mask").unwrap().clone(),
+            ],
+        )
+        .unwrap();
+    let err = max_abs_diff(&got.f32s(), &g.require("y_q").unwrap().f32s());
+    assert!(err < 1e-3, "max err {err}");
+}
+
+#[test]
+fn kernel_mask_skip_equals_zeroed_weights() {
+    // The SASP identity at the kernel level: skipping tiles via the mask
+    // == multiplying by zeroed weights.
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let g = load_bundle(format!("{DIR}/golden_gemm.bin")).unwrap();
+    let x = g.require("x").unwrap().clone();
+    let w = g.require("w").unwrap();
+    let mask = g.require("mask").unwrap();
+
+    // Masked execution.
+    let masked = engine
+        .execute("sasp_gemm_t8", &[x.clone(), w.clone(), mask.clone()])
+        .unwrap();
+
+    // Zeroed-weights execution with a full mask.
+    let tile = 8;
+    let mvals = mask.i32s();
+    let mut wz = w.clone();
+    let n = wz.shape[1];
+    wz.map_f32_inplace(|idx, v| {
+        let (kk, nn) = (idx / n, idx % n);
+        if mvals[(kk / tile) * (n / tile) + nn / tile] != 0 {
+            v
+        } else {
+            0.0
+        }
+    });
+    let ones = Tensor::from_i32(&mask.shape, &vec![1; mvals.len()]);
+    let zeroed = engine.execute("sasp_gemm_t8", &[x, wz, ones]).unwrap();
+
+    let err = max_abs_diff(&masked.f32s(), &zeroed.f32s());
+    assert!(err < 1e-4, "identity violated: {err}");
+}
+
+#[test]
+fn pallas_and_ref_encoders_agree() {
+    // The Layer-1-in-Layer-2 composition: the encoder artifact built on
+    // the Pallas kernel must match the oracle-path artifact.
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let eval = AsrEvaluator::new(&mut engine, DIR, "asr_encoder_ref").unwrap();
+    let params = load_bundle(format!("{DIR}/params_asr.bin")).unwrap();
+    let hyps_ref = eval.decode_all(&mut engine, &params).unwrap();
+
+    let eval_sasp = AsrEvaluator::new(&mut engine, DIR, "asr_encoder_sasp").unwrap();
+    let hyps_sasp = eval_sasp.decode_all(&mut engine, &params).unwrap();
+    assert_eq!(hyps_ref, hyps_sasp, "pallas and oracle decodes differ");
+}
+
+#[test]
+fn baseline_wer_is_sane() {
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let eval = AsrEvaluator::new(&mut engine, DIR, "asr_encoder_ref").unwrap();
+    let wer = eval.baseline(&mut engine).unwrap();
+    assert!(wer < 0.15, "baseline WER {wer} too high — training regressed?");
+}
+
+#[test]
+fn wer_degrades_monotonically_with_rate() {
+    // Fig. 9's core shape (allowing small non-monotonic noise at low
+    // rates on the 64-utterance test set).
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let eval = AsrEvaluator::new(&mut engine, DIR, "asr_encoder_ref").unwrap();
+    let w0 = eval.evaluate(&mut engine, 8, 0.0, Quant::Fp32).unwrap().qos;
+    let w3 = eval.evaluate(&mut engine, 8, 0.3, Quant::Fp32).unwrap().qos;
+    let w6 = eval.evaluate(&mut engine, 8, 0.6, Quant::Fp32).unwrap().qos;
+    assert!(w3 >= w0 - 0.02, "w0={w0} w3={w3}");
+    assert!(w6 > w3, "w3={w3} w6={w6}");
+    assert!(w6 > w0 + 0.03, "60% pruning must visibly hurt: {w0} -> {w6}");
+}
+
+#[test]
+fn larger_tiles_hurt_more_at_same_rate() {
+    // Fig. 9 / §4.4: large-tile structured pruning is more brittle.
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let eval = AsrEvaluator::new(&mut engine, DIR, "asr_encoder_ref").unwrap();
+    let rate = 0.4;
+    let w4 = eval.evaluate(&mut engine, 4, rate, Quant::Fp32).unwrap().qos;
+    let w32 = eval.evaluate(&mut engine, 32, rate, Quant::Fp32).unwrap().qos;
+    assert!(
+        w32 >= w4 - 0.02,
+        "32-tile WER {w32} should be >= 4-tile WER {w4} at rate {rate}"
+    );
+}
+
+#[test]
+fn quantization_wer_close_to_fp32() {
+    // §4.4: INT8 and FP32 QoS curves are similar at low rates.
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let eval = AsrEvaluator::new(&mut engine, DIR, "asr_encoder_ref").unwrap();
+    let f = eval.evaluate(&mut engine, 8, 0.1, Quant::Fp32).unwrap().qos;
+    let i = eval.evaluate(&mut engine, 8, 0.1, Quant::Int8).unwrap().qos;
+    assert!((f - i).abs() < 0.05, "fp32 {f} vs int8 {i}");
+}
+
+#[test]
+fn mt_bleu_baseline_and_degradation() {
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    let eval = MtEvaluator::new(&mut engine, DIR, "mt_encoder_ref").unwrap();
+    let b0 = eval.evaluate(&mut engine, 8, 0.0, Quant::Fp32).unwrap().qos;
+    assert!(b0 > 50.0, "baseline BLEU {b0} too low — training regressed?");
+    let b6 = eval.evaluate(&mut engine, 8, 0.6, Quant::Fp32).unwrap().qos;
+    assert!(b6 < b0, "pruning must reduce BLEU: {b0} -> {b6}");
+}
+
+#[test]
+fn pruned_weights_actually_sparse() {
+    // End-to-end pruning accounting: requested rate == achieved rate and
+    // the zeroed tiles really are zero in the executed weights.
+    require_artifacts!();
+    let params = load_bundle(format!("{DIR}/params_asr.bin")).unwrap();
+    let w1 = params.require("block0.ff.w1").unwrap();
+    let norms = vec![tile_l1_norms(w1, 8)];
+    let plan = global_prune(&norms, 0.25);
+    assert!((plan.achieved_rate - 0.25).abs() < 0.01);
+    let mut w = w1.clone();
+    sasp::pruning::norms::apply_mask_to_weights(&mut w, &plan.masks[0], 8);
+    let nrm = tile_l1_norms(&w, 8);
+    let zeros = nrm.norms.iter().filter(|v| **v == 0.0).count();
+    assert_eq!(zeros, plan.masks[0].n_tiles() - plan.masks[0].live_count());
+}
+
+#[test]
+fn manifest_contract_complete() {
+    require_artifacts!();
+    let mut engine = Engine::new(DIR).unwrap();
+    for name in ["asr_encoder_ref", "asr_encoder_sasp", "mt_encoder_ref"] {
+        let m = &engine.load(name).unwrap().manifest;
+        assert!(!m.args.is_empty(), "{name} has no args");
+        assert!(m.model.n_blocks > 0);
+        // Params bundle covers every non-data, non-mask argument.
+        let params = load_bundle(format!(
+            "{DIR}/params_{}.bin",
+            if name.starts_with("asr") { "asr" } else { "mt" }
+        ))
+        .unwrap();
+        for a in &m.args {
+            if ["feats", "pad_mask", "src"].contains(&a.name.as_str())
+                || a.name.starts_with("mask.")
+            {
+                continue;
+            }
+            let t = params.require(&a.name).unwrap();
+            assert_eq!(t.shape, a.shape, "{name}/{}", a.name);
+        }
+    }
+}
