@@ -1,15 +1,16 @@
 //! Full SASP design-space exploration (the Fig. 10 dataset).
 //!
-//! Sweeps array size × quantization × pruning rate, evaluating QoS via
-//! PJRT on the trained model and timing/energy/area on the simulated
-//! platform, and emits both a table and a JSON dump for plotting.
+//! Sweeps array size × quantization × pruning rate: the timing/energy
+//! axis runs through `Explorer::sweep` (parallel over a scoped worker
+//! pool), the QoS axis through PJRT on the trained model, and the result
+//! is emitted both as a table and as a JSON dump for plotting.
 //!
 //! Run: `cargo run --release --example design_space_exploration`.
 
 use anyhow::Result;
 
 use sasp::config::ExperimentConfig;
-use sasp::coordinator::Explorer;
+use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::harness::QosCache;
 use sasp::model::zoo;
 use sasp::qos::AsrEvaluator;
@@ -25,32 +26,43 @@ fn main() -> Result<()> {
     let mut qos = QosCache::new(asr, None);
     let ex = Explorer::new(zoo::espnet_asr());
 
+    // Timing/energy for the whole grid in one parallel sweep.
+    let grid = SweepPoint::grid(&cfg.sizes, &cfg.quants, &cfg.rates);
+    let t0 = std::time::Instant::now();
+    let timing = ex.sweep(&grid);
+    eprintln!(
+        "timing sweep: {} points in {:?} ({} workers)",
+        grid.len(),
+        t0.elapsed(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
     println!(
         "{:>6} {:>10} {:>6} {:>10} {:>10} {:>12} {:>12}",
         "size", "quant", "rate", "WER", "speedup", "energy J", "area*energy"
     );
     let mut points = Vec::new();
-    for &n in &cfg.sizes {
-        for &q in &cfg.quants {
-            for &rate in &cfg.rates {
-                let wer = qos.wer(&mut engine, n, rate, q)?;
-                let p = ex.timing_point(n, q, rate);
-                println!(
-                    "{:>6} {:>10} {:>6.2} {:>10.4} {:>10.2} {:>12.4} {:>12.4}",
-                    n, q.label(), rate, wer, p.speedup_vs_cpu, p.energy_j,
-                    p.area_energy
-                );
-                points.push(Json::obj(vec![
-                    ("size", Json::num(n as f64)),
-                    ("quant", Json::str(q.label())),
-                    ("rate", Json::num(rate)),
-                    ("wer", Json::num(wer)),
-                    ("speedup", Json::num(p.speedup_vs_cpu)),
-                    ("energy_j", Json::num(p.energy_j)),
-                    ("area_energy", Json::num(p.area_energy)),
-                ]));
-            }
-        }
+    for (sp, p) in grid.iter().zip(&timing) {
+        let wer = qos.wer(&mut engine, sp.tile, sp.rate, sp.quant)?;
+        println!(
+            "{:>6} {:>10} {:>6.2} {:>10.4} {:>10.2} {:>12.4} {:>12.4}",
+            sp.tile,
+            sp.quant.label(),
+            sp.rate,
+            wer,
+            p.speedup_vs_cpu,
+            p.energy_j,
+            p.area_energy
+        );
+        points.push(Json::obj(vec![
+            ("size", Json::num(sp.tile as f64)),
+            ("quant", Json::str(sp.quant.label())),
+            ("rate", Json::num(sp.rate)),
+            ("wer", Json::num(wer)),
+            ("speedup", Json::num(p.speedup_vs_cpu)),
+            ("energy_j", Json::num(p.energy_j)),
+            ("area_energy", Json::num(p.area_energy)),
+        ]));
     }
     let out = format!("{dir}/design_space.json");
     std::fs::write(&out, Json::Arr(points).to_string())?;

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     let manifest = engine.load("asr_encoder_ref")?.manifest.clone();
     let (t, f) = (manifest.model.seq_len, 40usize);
 
-    let server = Server::new(
+    let mut server = Server::new(
         &mut engine,
         "asr_encoder_ref",
         params,

@@ -1,16 +1,18 @@
 //! Hot-path microbenches across all three layers' rust-side costs:
 //! system-sim GEMM accounting, pruning ranking, cache simulation,
-//! per-cycle systolic simulation, tensor<->literal conversion, and (when
+//! per-cycle systolic simulation, the functional tile scheduler, the
+//! parallel design-space sweep, tensor<->literal conversion, and (when
 //! artifacts exist) PJRT dispatch. The §Perf iteration log in
-//! EXPERIMENTS.md is driven by these numbers.
+//! EXPERIMENTS.md is driven by these numbers; set
+//! `BENCH_HOTPATH_JSON=BENCH_hotpath.json` to record them.
 
-use sasp::coordinator::Explorer;
+use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::data::Tensor;
 use sasp::model::zoo;
 use sasp::pruning::{global_prune, synthetic_ff_norms};
 use sasp::runtime::Engine;
-use sasp::sysim::{Cache, CacheConfig};
-use sasp::systolic::{ArrayConfig, Quant, SystolicArray};
+use sasp::sysim::{Cache, CacheConfig, TileMask};
+use sasp::systolic::{ArrayConfig, Quant, SystolicArray, TileScheduler};
 use sasp::util::bench::Bench;
 use sasp::util::rng::Rng;
 
@@ -24,6 +26,26 @@ fn main() {
     });
     b.run("sysim: espnet_asr encoder, 8x8 int8, 25% pruned", || {
         ex.pruned_run(8, Quant::Int8, 0.25).cycles
+    });
+
+    // L3: the design-space sweep, serial vs the scoped worker pool
+    // (identical points; speedup ~= core count on the pruned runs).
+    let grid = SweepPoint::grid(
+        &[4, 8, 16, 32],
+        &[Quant::Int8],
+        &[0.05, 0.10, 0.15, 0.20, 0.25, 0.30],
+    );
+    assert_eq!(grid.len(), 24);
+    b.run("explorer: 24-point espnet_asr sweep, serial", || {
+        grid.iter()
+            .map(|p| ex.timing_point(p.tile, p.quant, p.rate).speedup_vs_cpu)
+            .sum::<f64>()
+    });
+    b.run("explorer: 24-point espnet_asr sweep, parallel", || {
+        ex.sweep(&grid)
+            .iter()
+            .map(|p| p.speedup_vs_cpu)
+            .sum::<f64>()
     });
 
     // L3: pruning global ranking over the full-size model (36 FF GEMMs).
@@ -54,6 +76,29 @@ fn main() {
     arr.program_weights(&w, 0.01);
     b.run("systolic: per-cycle 8x8 tile, M=32", || {
         arr.compute(&x, 32)[0]
+    });
+    let mut out = vec![0.0f32; 32 * 8];
+    b.run("systolic: per-cycle 8x8 tile, M=32, compute_into", || {
+        arr.compute_into(&x, 32, &mut out);
+        out[0]
+    });
+
+    // Functional tile scheduler: a whole masked GEMM on one array (the
+    // macro-bench of the per-cycle layer; 64 tiles, 1/4 pruned).
+    let (m, k, n) = (32usize, 64usize, 64usize);
+    let gx: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let gw: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mask = TileMask {
+        kt: 8,
+        nt: 8,
+        live: (0..64).map(|i| i % 4 != 0).collect(),
+    };
+    let mut sched = TileScheduler::new(ArrayConfig::square(8, Quant::Int8));
+    let mut y = Vec::new();
+    b.run("scheduler: masked GEMM 32x64x64, t=8, 25% pruned", || {
+        sched
+            .gemm_into(&gx, &gw, m, k, n, Some(&mask), 0.01, &mut y)
+            .tiles_live
     });
 
     // Runtime: tensor -> literal conversion (the PJRT argument path).

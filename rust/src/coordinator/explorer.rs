@@ -7,10 +7,27 @@
 //! - QoS from the trained stand-in models via PJRT ([`crate::qos`]),
 //!
 //! into the design points plotted in Figs. 7–11 and Table 3.
+//!
+//! §Perf: the explorer is the sweep's inner loop, so everything that is
+//! deterministic in the configuration is computed once and shared:
+//!
+//! - the synthetic tile norms per tile size and the CPU baseline (as in
+//!   the seed),
+//! - the **dense** `run_encoder` baseline per (tile, quant) — previously
+//!   re-simulated by every `timing_point` call, i.e. once per *rate*,
+//! - the encoder's GEMM-list expansion (reused across every run).
+//!
+//! All caches are `Mutex`-guarded so `Explorer` is `Sync`, which is what
+//! lets [`Explorer::sweep`] fan design points out over a scoped worker
+//! pool with plain `std::thread` — no external dependencies.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::hwmodel::{area_energy_product, area_mm2};
-use crate::model::EncoderSpec;
-use crate::pruning::{global_prune, synthetic_ff_norms};
+use crate::model::{EncoderSpec, LayerGemms};
+use crate::pruning::{global_prune, synthetic_ff_norms, TileNorms};
 use crate::sysim::{RunStats, System};
 use crate::systolic::{ArrayConfig, Quant};
 
@@ -35,55 +52,147 @@ pub struct DesignPoint {
     pub qos: f64,
 }
 
+impl PartialEq for DesignPoint {
+    /// Float fields compare bitwise (`total_cmp`), so timing-only points
+    /// (`qos` = NaN) produced by different evaluation paths — serial vs
+    /// parallel sweep, cold vs warm caches — compare equal exactly when
+    /// every computed quantity is identical.
+    fn eq(&self, other: &Self) -> bool {
+        let f = |a: f64, b: f64| a.total_cmp(&b) == std::cmp::Ordering::Equal;
+        self.workload == other.workload
+            && self.tile == other.tile
+            && self.quant == other.quant
+            && f(self.rate, other.rate)
+            && f(self.speedup_vs_cpu, other.speedup_vs_cpu)
+            && f(self.speedup_vs_dense, other.speedup_vs_dense)
+            && f(self.energy_j, other.energy_j)
+            && f(self.dense_energy_j, other.dense_energy_j)
+            && f(self.area_mm2, other.area_mm2)
+            && f(self.area_energy, other.area_energy)
+            && f(self.qos, other.qos)
+    }
+}
+
+/// One configuration to evaluate in a sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepPoint {
+    pub tile: usize,
+    pub quant: Quant,
+    pub rate: f64,
+}
+
+impl SweepPoint {
+    /// The full (sizes × quants × rates) cross product, in the iteration
+    /// order the serial sweep loops used (size-major, rate-minor).
+    pub fn grid(sizes: &[usize], quants: &[Quant], rates: &[f64]) -> Vec<SweepPoint> {
+        let mut out = Vec::with_capacity(sizes.len() * quants.len() * rates.len());
+        for &tile in sizes {
+            for &quant in quants {
+                for &rate in rates {
+                    out.push(SweepPoint { tile, quant, rate });
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Explorer over one workload spec.
+///
+/// `spec`/`system`/`seed` are immutable after construction: the
+/// pre-expanded GEMM list and the norm/dense/CPU caches are all derived
+/// from them, so exposing the fields mutably would let them silently
+/// desync from the cached state.
 pub struct Explorer {
-    pub system: System,
-    pub spec: EncoderSpec,
+    system: System,
+    spec: EncoderSpec,
     /// Seed for the synthetic tile-norm model.
-    pub seed: u64,
-    /// Synthetic norms + baseline runs are deterministic in (spec, seed,
-    /// tile) — memoized, they dominate the sweep's inner loop (§Perf).
-    norm_cache: std::cell::RefCell<
-        std::collections::HashMap<usize, std::rc::Rc<Vec<crate::pruning::TileNorms>>>,
-    >,
-    cpu_cache: std::cell::RefCell<Option<f64>>,
+    seed: u64,
+    /// Pre-expanded GEMM list (reused by every simulated run).
+    layers: Vec<LayerGemms>,
+    /// Synthetic norms are deterministic in (spec, seed, tile) — memoized,
+    /// they dominate the sweep's inner loop (§Perf).
+    norm_cache: Mutex<HashMap<usize, Arc<Vec<TileNorms>>>>,
+    /// Dense (unpruned) accelerated baseline per (tile, quant) — shared
+    /// by every rate evaluated at that configuration.
+    dense_cache: Mutex<HashMap<(usize, Quant), Arc<RunStats>>>,
+    /// Software-only baseline cycles (one per workload).
+    cpu_cache: OnceLock<f64>,
 }
 
 impl Explorer {
     pub fn new(spec: EncoderSpec) -> Self {
+        let layers = spec.layers();
         Explorer {
             system: System::default(),
             spec,
             seed: 7,
-            norm_cache: Default::default(),
-            cpu_cache: Default::default(),
+            layers,
+            norm_cache: Mutex::new(HashMap::new()),
+            dense_cache: Mutex::new(HashMap::new()),
+            cpu_cache: OnceLock::new(),
         }
     }
 
-    fn norms_for(&self, tile: usize) -> std::rc::Rc<Vec<crate::pruning::TileNorms>> {
+    pub fn spec(&self) -> &EncoderSpec {
+        &self.spec
+    }
+
+    pub fn system(&self) -> &System {
+        &self.system
+    }
+
+    // Cache discipline (both caches): check under the lock, compute
+    // OUTSIDE it, then insert with first-insert-wins. Two workers racing
+    // on the same cold key may duplicate the (deterministic) computation,
+    // but no worker ever blocks on another key's simulation — holding the
+    // map-wide Mutex across run_encoder would serialize the cold-cache
+    // sweep.
+
+    fn norms_for(&self, tile: usize) -> Arc<Vec<TileNorms>> {
+        if let Some(hit) = self.norm_cache.lock().unwrap().get(&tile) {
+            return hit.clone();
+        }
+        let computed = Arc::new(synthetic_ff_norms(&self.spec, tile, self.seed));
         self.norm_cache
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(tile)
-            .or_insert_with(|| {
-                std::rc::Rc::new(synthetic_ff_norms(&self.spec, tile, self.seed))
-            })
+            .or_insert(computed)
             .clone()
     }
 
     fn cpu_cycles(&self) -> f64 {
-        if let Some(c) = *self.cpu_cache.borrow() {
-            return c;
+        *self
+            .cpu_cache
+            .get_or_init(|| self.system.run_encoder_cpu(&self.spec).cycles)
+    }
+
+    /// Dense accelerated baseline at (tile, quant), memoized.
+    pub fn dense_run(&self, tile: usize, quant: Quant) -> Arc<RunStats> {
+        if let Some(hit) = self.dense_cache.lock().unwrap().get(&(tile, quant)) {
+            return hit.clone();
         }
-        let c = self.system.run_encoder_cpu(&self.spec).cycles;
-        *self.cpu_cache.borrow_mut() = Some(c);
-        c
+        let array = ArrayConfig::square(tile, quant);
+        let computed = Arc::new(self.system.run_encoder_layers(
+            &self.spec,
+            &self.layers,
+            &array,
+            None,
+        ));
+        self.dense_cache
+            .lock()
+            .unwrap()
+            .entry((tile, quant))
+            .or_insert(computed)
+            .clone()
     }
 
     /// Simulate one (tile, quant, rate) configuration.
     pub fn timing_point(&self, tile: usize, quant: Quant, rate: f64) -> DesignPoint {
         let array = ArrayConfig::square(tile, quant);
         let cpu_cycles = self.cpu_cycles();
-        let dense = self.system.run_encoder(&self.spec, &array, None);
+        let dense = self.dense_run(tile, quant);
         let pruned = self.pruned_run(tile, quant, rate);
         DesignPoint {
             workload: self.spec.name,
@@ -104,18 +213,67 @@ impl Explorer {
     pub fn pruned_run(&self, tile: usize, quant: Quant, rate: f64) -> RunStats {
         let array = ArrayConfig::square(tile, quant);
         if rate <= 0.0 {
-            return self.system.run_encoder(&self.spec, &array, None);
+            return (*self.dense_run(tile, quant)).clone();
         }
         let norms = self.norms_for(tile);
         let plan = global_prune(&norms, rate);
-        self.system.run_encoder(&self.spec, &array, Some(&plan.masks))
+        self.system.run_encoder_layers(
+            &self.spec,
+            &self.layers,
+            &array,
+            Some(&plan.masks),
+        )
+    }
+
+    /// Evaluate a batch of design points on a scoped worker pool
+    /// (`std::thread::scope`, one worker per available core).
+    ///
+    /// The result is index-aligned with `points` and identical — field
+    /// for field — to calling [`timing_point`](Self::timing_point)
+    /// serially: each point's evaluation is deterministic, and the shared
+    /// caches only change *when* a baseline is computed, never its value.
+    pub fn sweep(&self, points: &[SweepPoint]) -> Vec<DesignPoint> {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(points.len().max(1));
+        if workers <= 1 {
+            return points
+                .iter()
+                .map(|p| self.timing_point(p.tile, p.quant, p.rate))
+                .collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<DesignPoint>>> =
+            points.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let p = &points[i];
+                    let dp = self.timing_point(p.tile, p.quant, p.rate);
+                    *slots[i].lock().unwrap() = Some(dp);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap()
+                    .expect("every sweep slot is filled before scope exit")
+            })
+            .collect()
     }
 
     /// Per-layer normalized runtime at a given global sparsity (Fig. 8):
     /// each layer's cycles divided by its unpruned cycles.
     pub fn per_layer_normalized(&self, tile: usize, quant: Quant, rate: f64) -> Vec<f64> {
-        let array = ArrayConfig::square(tile, quant);
-        let dense = self.system.run_encoder(&self.spec, &array, None);
+        let dense = self.dense_run(tile, quant);
         let pruned = self.pruned_run(tile, quant, rate);
         dense
             .per_layer
@@ -194,6 +352,63 @@ mod tests {
         assert!(norm.iter().all(|v| *v <= 1.0 + 1e-9));
         // Early layers prune more than late ones (synthetic norm model).
         assert!(norm[0] < *norm.last().unwrap());
+    }
+
+    #[test]
+    fn sweep_matches_serial_timing_points_exactly() {
+        // The acceptance contract of the parallel sweep: identical
+        // DesignPoints (bitwise-equal floats) in input order.
+        let e = Explorer::new(zoo::espnet_asr());
+        let points = SweepPoint::grid(
+            &[4, 8, 16],
+            &[Quant::Fp32, Quant::Int8],
+            &[0.0, 0.15, 0.25, 0.4],
+        );
+        assert_eq!(points.len(), 24);
+        let parallel = e.sweep(&points);
+        let serial: Vec<DesignPoint> = points
+            .iter()
+            .map(|p| e.timing_point(p.tile, p.quant, p.rate))
+            .collect();
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn sweep_on_fresh_explorer_matches_warm_caches() {
+        // Cold caches in the parallel path must not change results.
+        let points =
+            SweepPoint::grid(&[8, 32], &[Quant::Int8], &[0.0, 0.2, 0.3]);
+        let cold = Explorer::new(zoo::mustc_mt_encoder()).sweep(&points);
+        let warm_ex = Explorer::new(zoo::mustc_mt_encoder());
+        let warm: Vec<DesignPoint> = points
+            .iter()
+            .map(|p| warm_ex.timing_point(p.tile, p.quant, p.rate))
+            .collect();
+        assert_eq!(cold, warm);
+    }
+
+    #[test]
+    fn sweep_handles_tiny_and_empty_batches() {
+        let e = Explorer::new(zoo::espnet2_asr());
+        assert!(e.sweep(&[]).is_empty());
+        let one = e.sweep(&[SweepPoint { tile: 8, quant: Quant::Int8, rate: 0.1 }]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].tile, 8);
+    }
+
+    #[test]
+    fn dense_run_is_cached_and_consistent() {
+        let e = Explorer::new(zoo::espnet_asr());
+        let a = e.dense_run(8, Quant::Int8);
+        let b = e.dense_run(8, Quant::Int8);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        // And matches an uncached simulation.
+        let fresh = e.system().run_encoder(
+            e.spec(),
+            &ArrayConfig::square(8, Quant::Int8),
+            None,
+        );
+        assert_eq!(a.cycles, fresh.cycles);
     }
 
     #[test]

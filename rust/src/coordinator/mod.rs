@@ -5,5 +5,5 @@
 pub mod explorer;
 pub mod serve;
 
-pub use explorer::{DesignPoint, Explorer, RateSearch};
-pub use serve::{ServeConfig, ServeReport, Server};
+pub use explorer::{DesignPoint, Explorer, RateSearch, SweepPoint};
+pub use serve::{ServeBackend, ServeConfig, ServeReport, Server};

@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Explorer, RateSearch};
+use crate::coordinator::{Explorer, RateSearch, SweepPoint};
 use crate::hwmodel::{self, area_energy_product};
 use crate::model::zoo;
 use crate::runtime::Engine;
@@ -105,8 +105,9 @@ pub fn fig7(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> 
     let search = RateSearch { grid: cfg.rates.clone() };
     for spec in zoo::fig7_workloads() {
         let ex = Explorer::new(spec.clone());
+        // Pass 1 (serial — PJRT): rate* per size from the QoS curve.
+        let mut points = Vec::with_capacity(cfg.sizes.len());
         for &n in &cfg.sizes {
-            // Rate* from the stand-in QoS curve at this tile size.
             let is_mt = spec.name.contains("mustc") && qos.mt.is_some();
             let found = if is_mt {
                 search.max_rate(
@@ -120,12 +121,15 @@ pub fn fig7(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> 
                 )?
             };
             let (rate, _q) = found.unwrap_or((0.0, 0.0));
-            let p = ex.timing_point(n, Quant::Int8, rate);
+            points.push(SweepPoint { tile: n, quant: Quant::Int8, rate });
+        }
+        // Pass 2 (parallel): timing/energy for the selected rates.
+        for p in ex.sweep(&points) {
             let speedup_pct = (p.speedup_vs_dense - 1.0) * 100.0;
             let energy_pct = (1.0 - p.energy_j / p.dense_energy_j) * 100.0;
             r.line(format!(
                 "{:<26} {:>5} {:>8.2} {:>9.1}% {:>9.1}%",
-                spec.name, n, rate, speedup_pct, energy_pct
+                spec.name, p.tile, p.rate, speedup_pct, energy_pct
             ));
         }
     }
@@ -177,26 +181,25 @@ pub fn fig10(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) ->
         "size", "quant", "rate", "wer", "speedup", "area*energy"
     ));
     let ex = Explorer::new(zoo::espnet_asr());
-    for &n in &cfg.sizes {
-        for &q in &cfg.quants {
-            for &rate in &cfg.rates {
-                let wer = qos.wer(engine, n, rate, q)?;
-                let p = ex.timing_point(n, q, rate);
-                let aep = area_energy_product(
-                    &ArrayConfig::square(n, q),
-                    p.energy_j,
-                );
-                r.line(format!(
-                    "{:>6} {:>10} {:>8.2} {:>10.4} {:>10.2} {:>12.4}",
-                    n,
-                    q.label(),
-                    rate,
-                    wer,
-                    p.speedup_vs_cpu,
-                    aep
-                ));
-            }
-        }
+    // Timing for the whole grid in one parallel sweep; QoS stays serial
+    // (one PJRT engine).
+    let grid = SweepPoint::grid(&cfg.sizes, &cfg.quants, &cfg.rates);
+    let timing = ex.sweep(&grid);
+    for (sp, p) in grid.iter().zip(&timing) {
+        let wer = qos.wer(engine, sp.tile, sp.rate, sp.quant)?;
+        let aep = area_energy_product(
+            &ArrayConfig::square(sp.tile, sp.quant),
+            p.energy_j,
+        );
+        r.line(format!(
+            "{:>6} {:>10} {:>8.2} {:>10.4} {:>10.2} {:>12.4}",
+            sp.tile,
+            sp.quant.label(),
+            sp.rate,
+            wer,
+            p.speedup_vs_cpu,
+            aep
+        ));
     }
     Ok(r)
 }
@@ -213,27 +216,37 @@ pub fn fig11(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) ->
     ));
     let ex = Explorer::new(zoo::espnet_asr());
     let search = RateSearch { grid: cfg.rates.clone() };
+    // Pass 1 (serial — PJRT): the QoS-selected rate per (quant, size,
+    // WER level); pass 2 (parallel): one sweep over all of them.
+    let mut points = Vec::new();
     for &q in &cfg.quants {
         for &n in &cfg.sizes {
-            let mut cells = Vec::new();
             for target in levels {
                 let found = search.max_rate(
                     |rate| qos.wer(engine, n, rate, q),
                     |w| w <= target,
                 )?;
                 let rate = found.map_or(0.0, |f| f.0);
-                let p = ex.timing_point(n, q, rate);
-                cells.push(format!("{:>14.2}", p.speedup_vs_cpu));
+                points.push(SweepPoint { tile: n, quant: q, rate });
             }
-            r.line(format!(
-                "{:>6} {:>10} {} {} {}",
-                n,
-                q.label(),
-                cells[0],
-                cells[1],
-                cells[2]
-            ));
         }
+    }
+    let speedups = ex.sweep(&points);
+    for (row, chunk) in speedups.chunks(levels.len()).enumerate() {
+        let cells: Vec<String> = chunk
+            .iter()
+            .map(|p| format!("{:>14.2}", p.speedup_vs_cpu))
+            .collect();
+        let q = cfg.quants[row / cfg.sizes.len()];
+        let n = cfg.sizes[row % cfg.sizes.len()];
+        r.line(format!(
+            "{:>6} {:>10} {} {} {}",
+            n,
+            q.label(),
+            cells[0],
+            cells[1],
+            cells[2]
+        ));
     }
     Ok(r)
 }
@@ -251,27 +264,33 @@ pub fn table3(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -
     ));
     let ex = Explorer::new(zoo::espnet_asr());
     let search = RateSearch { grid: cfg.rates.clone() };
+    // Pass 1 (serial — PJRT): QoS-selected rate per (quant, size); pass 2
+    // (parallel): dense + SASP timing points in one sweep.
+    let mut points = Vec::new();
     for &q in &cfg.quants {
         for &n in &cfg.sizes {
-            let dense = ex.timing_point(n, q, 0.0);
             let found = search.max_rate(
                 |rate| qos.wer(engine, n, rate, q),
                 |w| w <= target,
             )?;
             let rate = found.map_or(0.0, |f| f.0);
-            let sasp = ex.timing_point(n, q, rate);
-            r.line(format!(
-                "{:>10} {:>6} {:>10.3} {:>10.2} {:>10.4} {:>9.0}% {:>10.2} {:>10.4}",
-                q.label(),
-                n,
-                dense.area_mm2,
-                dense.speedup_vs_cpu,
-                dense.energy_j,
-                rate * 100.0,
-                sasp.speedup_vs_cpu,
-                sasp.energy_j
-            ));
+            points.push(SweepPoint { tile: n, quant: q, rate: 0.0 });
+            points.push(SweepPoint { tile: n, quant: q, rate });
         }
+    }
+    for pair in ex.sweep(&points).chunks(2) {
+        let (dense, sasp) = (&pair[0], &pair[1]);
+        r.line(format!(
+            "{:>10} {:>6} {:>10.3} {:>10.2} {:>10.4} {:>9.0}% {:>10.2} {:>10.4}",
+            dense.quant.label(),
+            dense.tile,
+            dense.area_mm2,
+            dense.speedup_vs_cpu,
+            dense.energy_j,
+            sasp.rate * 100.0,
+            sasp.speedup_vs_cpu,
+            sasp.energy_j
+        ));
     }
     Ok(r)
 }

@@ -15,7 +15,7 @@
 use anyhow::{bail, Context, Result};
 
 use sasp::config::ExperimentConfig;
-use sasp::coordinator::Explorer;
+use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::harness::{self, QosCache};
 use sasp::model::zoo;
 use sasp::qos::{AsrEvaluator, MtEvaluator};
@@ -122,24 +122,20 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
         "{:<26} {:>5} {:>10} {:>6} {:>10} {:>10} {:>10}",
         "workload", "size", "quant", "rate", "speedup", "energy J", "area mm²"
     );
+    let grid = SweepPoint::grid(&cfg.sizes, &cfg.quants, &cfg.rates);
     for spec in [zoo::espnet_asr(), zoo::espnet2_asr(), zoo::mustc_asr_encoder()] {
         let ex = Explorer::new(spec.clone());
-        for &n in &cfg.sizes {
-            for &q in &cfg.quants {
-                for &rate in &cfg.rates {
-                    let p = ex.timing_point(n, q, rate);
-                    println!(
-                        "{:<26} {:>5} {:>10} {:>6.2} {:>10.2} {:>10.4} {:>10.3}",
-                        spec.name,
-                        n,
-                        q.label(),
-                        rate,
-                        p.speedup_vs_cpu,
-                        p.energy_j,
-                        p.area_mm2
-                    );
-                }
-            }
+        for (sp, p) in grid.iter().zip(ex.sweep(&grid)) {
+            println!(
+                "{:<26} {:>5} {:>10} {:>6.2} {:>10.2} {:>10.4} {:>10.3}",
+                spec.name,
+                sp.tile,
+                sp.quant.label(),
+                sp.rate,
+                p.speedup_vs_cpu,
+                p.energy_j,
+                p.area_mm2
+            );
         }
     }
     Ok(())

@@ -4,7 +4,7 @@
 //! per-layer breakdowns.
 
 use crate::hwmodel::{EnergyModel, SysCounts};
-use crate::model::{EncoderSpec, GemmKind};
+use crate::model::{EncoderSpec, GemmKind, LayerGemms};
 use crate::systolic::ArrayConfig;
 
 use super::engine::{gemm_on_array, gemm_on_cpu, non_gemm_cost, GemmCost, TileMask};
@@ -53,7 +53,21 @@ impl System {
         array: &ArrayConfig,
         ff_masks: Option<&[TileMask]>,
     ) -> RunStats {
-        let layers = spec.layers();
+        self.run_encoder_layers(spec, &spec.layers(), array, ff_masks)
+    }
+
+    /// [`run_encoder`](Self::run_encoder) over a pre-expanded GEMM list.
+    ///
+    /// §Perf: the layer expansion allocates ~20 `GemmShape` vectors per
+    /// call; sweep drivers ([`crate::coordinator::Explorer`]) expand once
+    /// and reuse the slice across every design point.
+    pub fn run_encoder_layers(
+        &self,
+        spec: &EncoderSpec,
+        layers: &[LayerGemms],
+        array: &ArrayConfig,
+        ff_masks: Option<&[TileMask]>,
+    ) -> RunStats {
         if let Some(masks) = ff_masks {
             let n_ff: usize = layers
                 .iter()
@@ -69,7 +83,7 @@ impl System {
         let non_gemm_per_layer =
             non_gemm_cost(spec.non_gemm_elems() / spec.n_blocks as u64, &self.params);
 
-        for layer in &layers {
+        for layer in layers {
             let mut lcost = GemmCost::default();
             let mut sp_sum = 0.0;
             let mut sp_n = 0usize;
@@ -206,6 +220,18 @@ mod tests {
         let masks = full_masks(&spec, 8);
         let b = sys.run_encoder(&spec, &array, Some(&masks));
         assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn prelayered_run_matches_run_encoder() {
+        let sys = System::default();
+        let spec = zoo::espnet_asr();
+        let layers = spec.layers();
+        let array = ArrayConfig::square(8, Quant::Int8);
+        let a = sys.run_encoder(&spec, &array, None);
+        let b = sys.run_encoder_layers(&spec, &layers, &array, None);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.counts, b.counts);
     }
 
     #[test]

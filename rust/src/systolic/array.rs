@@ -5,18 +5,53 @@
 //! injection/collection schedule; the mesh itself is simulated register
 //! by register, PE by PE, so numerics — including FTZ float behaviour and
 //! the hybrid multiplier's truncation — are exactly those of the RTL.
+//!
+//! §Perf: this is the innermost loop of the functional layer (the tile
+//! scheduler calls it once per live tile). Three structural properties
+//! keep it allocation-free and work-proportional without changing a
+//! single output bit:
+//!
+//! 1. **Preallocated double buffers.** The x/psum register planes are
+//!    two pairs of `Vec`s owned by the array, swapped with
+//!    [`std::mem::swap`] each cycle. The seed implementation cloned both
+//!    planes *per simulated cycle* — two heap allocations plus two
+//!    memcpys per cycle.
+//! 2. **Wavefront iteration.** At cycle `t`, only PEs on the active
+//!    anti-diagonals `t-m+1 <= r+c <= t` carry data: the value `x[i][r]`
+//!    enters PE `(r,0)` at cycle `i+r` and reaches `(r,c)` at `i+r+c`,
+//!    so a PE outside that band only moves zeros. Skipping it is
+//!    bit-identical because (a) an active PE's left/top neighbours were
+//!    active one cycle earlier (the band shifts by one per cycle), so
+//!    every register an active PE reads was written on the previous
+//!    cycle, and (b) outputs are only collected inside the band.
+//! 3. **In-place weight reprogramming.** `program_weights` rewrites the
+//!    stationary-weight storage (kept in quant-specialized arrays so the
+//!    MAC loop has no per-element enum dispatch) instead of
+//!    reconstructing the PE vector.
+//!
+//! The per-PE datapath is the same `ftz_mul`/`hybrid_mul` + `ftz_add`
+//! sequence as [`super::pe::Pe::step`] — `Pe` remains the documented
+//! single-PE reference model and is cross-checked in the tests below.
 
-use crate::arith::SignMag8;
+use crate::arith::{ftz_add, ftz_mul, hybrid_mul, SignMag8};
 
-use super::pe::{Pe, PeWeight};
 use super::{ArrayConfig, Quant};
 
 /// A configured array instance holding a programmed weight tile.
 pub struct SystolicArray {
     pub cfg: ArrayConfig,
-    pes: Vec<Pe>,
+    /// Stationary weights, row-major (FP32 mode).
+    w_fp32: Vec<f32>,
+    /// Stationary weights, row-major (INT8 mode).
+    w_int8: Vec<SignMag8>,
     /// Dequantization scale applied at output readout (INT8 mode).
     scale: f32,
+    // Double-buffered register planes, allocated once per array and
+    // reused across `compute` calls (zeroed at the start of each call).
+    x_cur: Vec<f32>,
+    x_nxt: Vec<f32>,
+    psum_cur: Vec<f32>,
+    psum_nxt: Vec<f32>,
     /// Cycles consumed by the last `compute` call.
     pub last_compute_cycles: usize,
     /// 32-bit bus words consumed by the last `program_weights` call.
@@ -25,43 +60,45 @@ pub struct SystolicArray {
 
 impl SystolicArray {
     pub fn new(cfg: ArrayConfig) -> Self {
-        let pes = (0..cfg.n_pes())
-            .map(|_| Pe::new(PeWeight::Fp32(0.0)))
-            .collect();
+        let n = cfg.n_pes();
         SystolicArray {
             cfg,
-            pes,
+            w_fp32: vec![0.0; if cfg.quant == Quant::Fp32 { n } else { 0 }],
+            w_int8: vec![
+                SignMag8::from_i8(0);
+                if cfg.quant == Quant::Int8 { n } else { 0 }
+            ],
             scale: 1.0,
+            x_cur: vec![0.0; n],
+            x_nxt: vec![0.0; n],
+            psum_cur: vec![0.0; n],
+            psum_nxt: vec![0.0; n],
             last_compute_cycles: 0,
             last_program_words: 0,
         }
     }
 
-    fn idx(&self, r: usize, c: usize) -> usize {
-        r * self.cfg.cols + c
-    }
-
     /// Program a weight tile (row-major `rows x cols`). In INT8 mode the
     /// f32 weights are quantized with the given per-tensor scale
-    /// (`w_q = round(w / scale)`), mirroring the PTQ path.
+    /// (`w_q = round(w / scale)`), mirroring the PTQ path. Reprograms the
+    /// stationary storage in place — no allocation after the first call.
     ///
     /// Returns the number of 32-bit bus words transferred — `R*C` for
     /// FP32, `ceil(R*C/4)` for INT8 (four weights packed per word, §3.2).
     pub fn program_weights(&mut self, tile: &[f32], scale: f32) -> usize {
         assert_eq!(tile.len(), self.cfg.n_pes());
         self.scale = scale;
-        for r in 0..self.cfg.rows {
-            for c in 0..self.cfg.cols {
-                let w = tile[r * self.cfg.cols + c];
-                let pw = match self.cfg.quant {
-                    Quant::Fp32 => PeWeight::Fp32(w),
-                    Quant::Int8 => {
-                        let q = (w / scale).round_ties_even().clamp(-127.0, 127.0);
-                        PeWeight::Int8(SignMag8::from_i8(q as i8))
-                    }
-                };
-                let i = self.idx(r, c);
-                self.pes[i] = Pe::new(pw);
+        match self.cfg.quant {
+            Quant::Fp32 => {
+                self.w_fp32.clear();
+                self.w_fp32.extend_from_slice(tile);
+            }
+            Quant::Int8 => {
+                self.w_int8.clear();
+                self.w_int8.extend(tile.iter().map(|w| {
+                    let q = (w / scale).round_ties_even().clamp(-127.0, 127.0);
+                    SignMag8::from_i8(q as i8)
+                }));
             }
         }
         let words = self.cfg.n_pes().div_ceil(self.cfg.quant.weights_per_word());
@@ -73,69 +110,140 @@ impl SystolicArray {
     /// returns the `m x cols` output block (de-skewed) and records the
     /// cycle count (`m + rows + cols - 2`).
     pub fn compute(&mut self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * self.cfg.cols];
+        self.compute_into(x, m, &mut out);
+        out
+    }
+
+    /// Zero-allocation variant of [`compute`](Self::compute): writes the
+    /// de-skewed `m x cols` output block into `out` (which must have
+    /// exactly that length).
+    pub fn compute_into(&mut self, x: &[f32], m: usize, out: &mut [f32]) {
         let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        assert!(m > 0, "empty input block");
         assert_eq!(x.len(), m * rows);
+        assert_eq!(out.len(), m * cols);
         let total_cycles = m + rows + cols - 2;
-        let mut out = vec![0.0f32; m * cols];
 
-        // Double-buffered register state.
-        let mut x_regs = vec![0.0f32; rows * cols];
-        let mut psum_regs = vec![0.0f32; rows * cols];
+        // Take the register planes out of `self` so the cycle loop can
+        // borrow weights immutably alongside them; restored below.
+        let mut x_cur = std::mem::take(&mut self.x_cur);
+        let mut x_nxt = std::mem::take(&mut self.x_nxt);
+        let mut psum_cur = std::mem::take(&mut self.psum_cur);
+        let mut psum_nxt = std::mem::take(&mut self.psum_nxt);
+        for plane in [&mut x_cur, &mut x_nxt, &mut psum_cur, &mut psum_nxt] {
+            plane.clear();
+            plane.resize(rows * cols, 0.0);
+        }
 
-        for t in 0..total_cycles {
-            let x_prev = x_regs.clone();
-            let psum_prev = psum_regs.clone();
-            for r in 0..rows {
-                for c in 0..cols {
-                    // Left edge: the skew registers deliver x[t-r][r].
-                    let x_in = if c == 0 {
-                        if t >= r && t - r < m {
-                            x[(t - r) * rows + r]
-                        } else {
-                            0.0
-                        }
-                    } else {
-                        x_prev[self.idx(r, c - 1)]
-                    };
-                    let psum_in = if r == 0 {
-                        0.0
-                    } else {
-                        psum_prev[self.idx(r - 1, c)]
-                    };
-                    let i = self.idx(r, c);
-                    let (_, psum_out) = {
-                        // step() updates the PE's internal registers; we
-                        // mirror them into the double buffers.
-                        let pe = &mut self.pes[i];
-                        pe.x_reg = 0.0; // value comes from x_prev buffer
-                        pe.step(x_in, psum_in)
-                    };
-                    x_regs[i] = x_in;
-                    psum_regs[i] = psum_out;
-                }
+        let scale = self.scale;
+        match self.cfg.quant {
+            Quant::Fp32 => {
+                let w = &self.w_fp32;
+                wavefront(
+                    x,
+                    m,
+                    rows,
+                    cols,
+                    total_cycles,
+                    &mut x_cur,
+                    &mut x_nxt,
+                    &mut psum_cur,
+                    &mut psum_nxt,
+                    out,
+                    |x_in, i| ftz_mul(x_in, w[i]),
+                    |v| v,
+                );
             }
-            // Collect de-skewed outputs from the bottom row.
-            for c in 0..cols {
-                if t >= rows - 1 + c {
-                    let mrow = t - (rows - 1) - c;
-                    if mrow < m {
-                        let v = psum_regs[self.idx(rows - 1, c)];
-                        out[mrow * cols + c] = match self.cfg.quant {
-                            Quant::Fp32 => v,
-                            Quant::Int8 => v * self.scale,
-                        };
-                    }
-                }
+            Quant::Int8 => {
+                let w = &self.w_int8;
+                wavefront(
+                    x,
+                    m,
+                    rows,
+                    cols,
+                    total_cycles,
+                    &mut x_cur,
+                    &mut x_nxt,
+                    &mut psum_cur,
+                    &mut psum_nxt,
+                    out,
+                    |x_in, i| hybrid_mul(x_in, w[i]),
+                    |v| v * scale,
+                );
             }
         }
+
+        self.x_cur = x_cur;
+        self.x_nxt = x_nxt;
+        self.psum_cur = psum_cur;
+        self.psum_nxt = psum_nxt;
         self.last_compute_cycles = total_cycles;
-        out
+    }
+}
+
+/// The shared cycle loop, monomorphized per weight format. `mul` is the
+/// PE multiplier `(x_in, pe_index) -> product`; `dequant` is the output
+/// readout transform (identity for FP32, `* scale` for INT8).
+#[allow(clippy::too_many_arguments)]
+fn wavefront(
+    x: &[f32],
+    m: usize,
+    rows: usize,
+    cols: usize,
+    total_cycles: usize,
+    x_cur: &mut Vec<f32>,
+    x_nxt: &mut Vec<f32>,
+    psum_cur: &mut Vec<f32>,
+    psum_nxt: &mut Vec<f32>,
+    out: &mut [f32],
+    mul: impl Fn(f32, usize) -> f32,
+    dequant: impl Fn(f32) -> f32,
+) {
+    for t in 0..total_cycles {
+        // Active anti-diagonal band: lo <= r+c <= hi.
+        let lo = (t + 1).saturating_sub(m);
+        let hi = t.min(rows + cols - 2);
+
+        let r_first = lo.saturating_sub(cols - 1);
+        let r_last = rows.min(hi + 1); // exclusive
+        for r in r_first..r_last {
+            let c_first = lo.saturating_sub(r);
+            let c_last = cols.min(hi + 1 - r); // exclusive; r <= hi here
+            let base = r * cols;
+            for c in c_first..c_last {
+                let i = base + c;
+                // Left edge: the skew registers deliver x[t-r][r]; the
+                // band guarantees 0 <= t-r < m when c == 0.
+                let x_in = if c == 0 { x[(t - r) * rows + r] } else { x_cur[i - 1] };
+                let psum_in = if r == 0 { 0.0 } else { psum_cur[i - cols] };
+                let psum_out = ftz_add(psum_in, mul(x_in, i));
+                x_nxt[i] = x_in;
+                psum_nxt[i] = psum_out;
+            }
+        }
+
+        // Collect de-skewed outputs from the bottom row (they were
+        // computed this cycle, i.e. live in the `nxt` plane).
+        if t + 1 >= rows {
+            let c_first = lo.saturating_sub(rows - 1);
+            let c_last = cols.min(hi + 2 - rows); // exclusive
+            let bottom = (rows - 1) * cols;
+            for c in c_first..c_last {
+                let mrow = t + 1 - rows - c;
+                out[mrow * cols + c] = dequant(psum_nxt[bottom + c]);
+            }
+        }
+
+        std::mem::swap(x_cur, x_nxt);
+        std::mem::swap(psum_cur, psum_nxt);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::systolic::Pe;
     use crate::util::prop::check;
     use crate::util::rng::Rng;
 
@@ -151,6 +259,67 @@ mod tests {
             }
         }
         y
+    }
+
+    /// The seed's exhaustive simulation — every PE stepped every cycle
+    /// through the reference [`Pe`] model — kept as the oracle the
+    /// wavefront implementation must match bit for bit.
+    fn dense_reference(
+        cfg: &ArrayConfig,
+        tile: &[f32],
+        scale: f32,
+        x: &[f32],
+        m: usize,
+    ) -> Vec<f32> {
+        use super::super::pe::PeWeight;
+        let (rows, cols) = (cfg.rows, cfg.cols);
+        let mut pes: Vec<Pe> = tile
+            .iter()
+            .map(|w| {
+                Pe::new(match cfg.quant {
+                    Quant::Fp32 => PeWeight::Fp32(*w),
+                    Quant::Int8 => {
+                        let q = (w / scale).round_ties_even().clamp(-127.0, 127.0);
+                        PeWeight::Int8(SignMag8::from_i8(q as i8))
+                    }
+                })
+            })
+            .collect();
+        let total_cycles = m + rows + cols - 2;
+        let mut out = vec![0.0f32; m * cols];
+        let mut x_regs = vec![0.0f32; rows * cols];
+        let mut psum_regs = vec![0.0f32; rows * cols];
+        for t in 0..total_cycles {
+            let x_prev = x_regs.clone();
+            let psum_prev = psum_regs.clone();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let i = r * cols + c;
+                    let x_in = if c == 0 {
+                        if t >= r && t - r < m { x[(t - r) * rows + r] } else { 0.0 }
+                    } else {
+                        x_prev[i - 1]
+                    };
+                    let psum_in = if r == 0 { 0.0 } else { psum_prev[i - cols] };
+                    let (_, psum_out) = pes[i].step(x_in, psum_in);
+                    x_regs[i] = x_in;
+                    psum_regs[i] = psum_out;
+                }
+            }
+            for c in 0..cols {
+                if t >= rows - 1 + c {
+                    let mrow = t - (rows - 1) - c;
+                    if mrow < m {
+                        let v = psum_regs[(rows - 1) * cols + c];
+                        out[mrow * cols + c] = match cfg.quant {
+                            Quant::Fp32 => v,
+                            Quant::Int8 => v * scale,
+                        };
+                    }
+                }
+            }
+        }
+        out
     }
 
     #[test]
@@ -242,5 +411,81 @@ mod tests {
         arr.program_weights(&vec![0.0; 16], 1.0);
         let y = arr.compute(&vec![3.0; 4 * 4], 4);
         assert!(y.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn wavefront_bit_identical_to_dense_reference() {
+        // The perf rewrite must not change a single output bit vs the
+        // exhaustive every-PE-every-cycle simulation (both quant modes,
+        // rectangular arrays, M above and below the array dimension).
+        check("wavefront == dense per-cycle sim (bitwise)", 32, |rng: &mut Rng| {
+            let (m, r, c) =
+                (rng.index(10) + 1, rng.index(6) + 1, rng.index(6) + 1);
+            let quant = if rng.chance(0.5) { Quant::Fp32 } else { Quant::Int8 };
+            let cfg = ArrayConfig { rows: r, cols: c, quant };
+            let x: Vec<f32> = (0..m * r).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+            let amax = w.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            let mut arr = SystolicArray::new(cfg);
+            arr.program_weights(&w, scale);
+            let got = arr.compute(&x, m);
+            let want = dense_reference(&cfg, &w, scale, &x, m);
+            let same = got
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            (same, format!("m={m} r={r} c={c} {quant:?} got={got:?} want={want:?}"))
+        });
+    }
+
+    #[test]
+    fn compute_into_matches_compute_and_reuses_buffers() {
+        let mut rng = Rng::new(11);
+        let cfg = ArrayConfig::square(8, Quant::Int8);
+        let mut arr = SystolicArray::new(cfg);
+        let w: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        arr.program_weights(&w, 0.01);
+        let mut out = vec![0.0f32; 32 * 8];
+        for trial in 0..3 {
+            let x: Vec<f32> = (0..32 * 8).map(|_| rng.normal() as f32).collect();
+            arr.compute_into(&x, 32, &mut out);
+            let want = arr.compute(&x, 32);
+            assert_eq!(out, want, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn reprogramming_reuses_state_cleanly() {
+        // Back-to-back program/compute cycles on one array must behave
+        // like fresh arrays (no stale register or weight state).
+        let mut rng = Rng::new(5);
+        let cfg = ArrayConfig::square(4, Quant::Fp32);
+        let mut arr = SystolicArray::new(cfg);
+        for _ in 0..4 {
+            let w: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> = (0..3 * 4).map(|_| rng.normal() as f32).collect();
+            arr.program_weights(&w, 1.0);
+            let got = arr.compute(&x, 3);
+            let mut fresh = SystolicArray::new(cfg);
+            fresh.program_weights(&w, 1.0);
+            assert_eq!(got, fresh.compute(&x, 3));
+        }
+    }
+
+    #[test]
+    fn single_row_and_single_column_arrays() {
+        // Degenerate geometries exercise the band-boundary arithmetic.
+        for (r, c) in [(1usize, 5usize), (5, 1), (1, 1)] {
+            let cfg = ArrayConfig { rows: r, cols: c, quant: Quant::Fp32 };
+            let mut arr = SystolicArray::new(cfg);
+            let w: Vec<f32> = (0..r * c).map(|i| i as f32 + 1.0).collect();
+            arr.program_weights(&w, 1.0);
+            let m = 4;
+            let x: Vec<f32> = (0..m * r).map(|i| i as f32 - 2.0).collect();
+            let got = arr.compute(&x, m);
+            let want = matmul(&x, &w, m, r, c);
+            assert_eq!(got, want, "r={r} c={c}");
+        }
     }
 }

@@ -8,16 +8,21 @@
 //! - [`array::SystolicArray`] — a functional *per-cycle* simulation used
 //!   to validate numerics (including the hybrid FP32×INT8 PE) and to
 //!   cross-check the closed-form cycle counts on small tiles.
+//! - [`scheduler::TileScheduler`] — whole masked GEMMs executed
+//!   functionally on one array (tile grid + pruning skips), the
+//!   cross-validation bridge to the analytic layer.
 //! - [`timing`] — closed-form per-tile cycle/transfer counts used by the
 //!   full-system simulator ([`crate::sysim`]), where per-cycle simulation
 //!   of full transformer inference would be intractable.
 
 pub mod array;
 pub mod pe;
+pub mod scheduler;
 pub mod timing;
 
 pub use array::SystolicArray;
 pub use pe::{Pe, PeWeight};
+pub use scheduler::{ScheduleStats, TileScheduler};
 pub use timing::TileTiming;
 
 /// Weight data format of the array instance (paper: FP32_FP32 vs

@@ -6,8 +6,19 @@
 //! ```text
 //! bench <name>  iters=256  median=1.234ms  p95=1.301ms  mean=1.245ms
 //! ```
+//!
+//! When `BENCH_HOTPATH_JSON=<path>` is set (or [`Bench::json_path`] is
+//! assigned directly), every case is additionally appended to a JSON
+//! array at that path (rewritten after each case, so partial results
+//! survive an abort) — the machine-readable perf trajectory
+//! `scripts/verify.sh` records as `BENCH_hotpath.json` and
+//! EXPERIMENTS.md tracks across PRs.
 
+use std::path::PathBuf;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// One benchmark runner with fixed warmup/measure budgets.
 pub struct Bench {
@@ -17,14 +28,34 @@ pub struct Bench {
     pub warmup_budget: Duration,
     /// Hard cap on measured iterations.
     pub max_iters: usize,
+    /// Cumulative JSON report destination (`None` = disabled).
+    /// Initialized from `BENCH_HOTPATH_JSON`; tests assign it directly
+    /// rather than mutating process-global environment state.
+    pub json_path: Option<PathBuf>,
+    /// Cases this runner has recorded (the report file is rewritten from
+    /// this after every case).
+    cases: Mutex<Vec<Json>>,
 }
 
 impl Default for Bench {
+    /// 800 ms measure / 200 ms warmup, overridable via
+    /// `BENCH_MEASURE_MS` / `BENCH_WARMUP_MS` (the short-budget smoke in
+    /// `scripts/verify.sh` uses these).
     fn default() -> Self {
+        fn env_ms(key: &str, default: u64) -> Duration {
+            Duration::from_millis(
+                std::env::var(key)
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(default),
+            )
+        }
         Bench {
-            measure_budget: Duration::from_millis(800),
-            warmup_budget: Duration::from_millis(200),
+            measure_budget: env_ms("BENCH_MEASURE_MS", 800),
+            warmup_budget: env_ms("BENCH_WARMUP_MS", 200),
             max_iters: 10_000,
+            json_path: std::env::var_os("BENCH_HOTPATH_JSON").map(PathBuf::from),
+            cases: Mutex::new(Vec::new()),
         }
     }
 }
@@ -61,6 +92,7 @@ impl Bench {
             measure_budget: Duration::from_millis(250),
             warmup_budget: Duration::from_millis(50),
             max_iters: 2_000,
+            ..Bench::default()
         }
     }
 
@@ -97,7 +129,46 @@ impl Bench {
             min: samples[0],
         };
         println!("{}", stats.report());
+        self.record_json(&stats);
         stats
+    }
+
+    /// Append `stats` to the JSON report (no-op when `json_path` is
+    /// unset). The file is rewritten after each case as: everything a
+    /// *previous* writer left there (minus entries this runner is
+    /// superseding by name) + this runner's cases — so `cargo bench`
+    /// running several bench binaries against one report path (they all
+    /// inherit `BENCH_HOTPATH_JSON`) accumulates instead of clobbering.
+    /// Bench binaries run sequentially, so there are no concurrent
+    /// writers within a `cargo bench` invocation.
+    fn record_json(&self, stats: &Stats) {
+        let Some(path) = &self.json_path else {
+            return;
+        };
+        let mut cases = self.cases.lock().unwrap();
+        cases.push(Json::obj(vec![
+            ("name", Json::str(stats.name.as_str())),
+            ("iters", Json::num(stats.iters as f64)),
+            ("median_ns", Json::num(stats.median.as_nanos() as f64)),
+            ("p95_ns", Json::num(stats.p95.as_nanos() as f64)),
+            ("mean_ns", Json::num(stats.mean.as_nanos() as f64)),
+            ("min_ns", Json::num(stats.min.as_nanos() as f64)),
+        ]));
+        let mut merged: Vec<Json> = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|v| v.as_arr().map(<[Json]>::to_vec))
+            .unwrap_or_default()
+            .into_iter()
+            .filter(|prev| {
+                !cases.iter().any(|mine| mine.get("name") == prev.get("name"))
+            })
+            .collect();
+        merged.extend(cases.iter().cloned());
+        let doc = Json::Arr(merged).to_string();
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("bench: could not write {}: {e}", path.display());
+        }
     }
 }
 
@@ -105,27 +176,72 @@ impl Bench {
 mod tests {
     use super::*;
 
+    fn tiny() -> Bench {
+        let mut b = Bench::default();
+        b.measure_budget = Duration::from_millis(10);
+        b.warmup_budget = Duration::from_millis(1);
+        b.max_iters = 100;
+        b.json_path = None;
+        b
+    }
+
     #[test]
     fn runs_and_reports() {
-        let b = Bench {
-            measure_budget: Duration::from_millis(20),
-            warmup_budget: Duration::from_millis(2),
-            max_iters: 100,
-        };
-        let s = b.run("noop", || 1 + 1);
+        let s = tiny().run("noop", || 1 + 1);
         assert!(s.iters >= 1);
         assert!(s.median <= s.p95);
         assert!(s.min <= s.median);
     }
 
     #[test]
+    fn json_report_written_when_path_set() {
+        let path = std::env::temp_dir().join(format!(
+            "bench_hotpath_test_{}.json",
+            std::process::id()
+        ));
+        let mut b = tiny();
+        b.json_path = Some(path.clone());
+        b.run("json-emission-case", || 2 + 2);
+        b.run("second-case", || 3 + 3);
+        let text = std::fs::read_to_string(&path).expect("report file written");
+        let _ = std::fs::remove_file(&path);
+        let doc = Json::parse(&text).expect("valid json");
+        let arr = doc.as_arr().expect("array of cases");
+        assert_eq!(arr.len(), 2, "one entry per case");
+        let case = arr
+            .iter()
+            .find(|c| c.get("name").as_str() == Some("json-emission-case"))
+            .expect("case recorded");
+        assert!(case.get("median_ns").as_f64().unwrap() >= 0.0);
+        assert!(case.get("iters").as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn json_report_merges_with_prior_writers() {
+        // Several bench binaries share one report path under
+        // `cargo bench`; a later writer must keep earlier entries.
+        let path = std::env::temp_dir().join(format!(
+            "bench_hotpath_merge_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(
+            &path,
+            r#"[{"name":"earlier-binary-case","median_ns":42}]"#,
+        )
+        .unwrap();
+        let mut b = tiny();
+        b.json_path = Some(path.clone());
+        b.run("merge-case", || 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let arr = Json::parse(&text).unwrap().as_arr().unwrap().to_vec();
+        assert!(arr.iter().any(|c| c.get("name").as_str() == Some("earlier-binary-case")));
+        assert!(arr.iter().any(|c| c.get("name").as_str() == Some("merge-case")));
+    }
+
+    #[test]
     fn median_ns_positive_for_real_work() {
-        let b = Bench {
-            measure_budget: Duration::from_millis(10),
-            warmup_budget: Duration::from_millis(1),
-            max_iters: 50,
-        };
-        let s = b.run("sum", || (0..1000u64).sum::<u64>());
+        let s = tiny().run("sum", || (0..1000u64).sum::<u64>());
         assert!(s.median_ns() > 0.0);
     }
 }

@@ -1,0 +1,231 @@
+//! Vendored minimal stand-in for the `anyhow` crate (the build is fully
+//! offline — no crates.io). Implements exactly the API surface the sasp
+//! crate uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and [`Context`] on `Result` and `Option`.
+//!
+//! Mirrors anyhow's structure (context via a private extension trait
+//! implemented both for `Error` and blanket for std errors) so the
+//! coherence story is identical to the real crate.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a root cause (message or boxed std error) plus a
+/// stack of human-readable context frames, outermost first.
+pub struct Error {
+    context: Vec<String>,
+    root: Root,
+}
+
+enum Root {
+    Msg(String),
+    Source(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+impl Error {
+    /// Create from a display-able message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { context: Vec::new(), root: Root::Msg(message.to_string()) }
+    }
+
+    /// Wrap a std error as the root cause.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { context: Vec::new(), root: Root::Source(Box::new(error)) }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    fn frames(&self) -> Vec<String> {
+        let mut out = self.context.clone();
+        match &self.root {
+            Root::Msg(m) => out.push(m.clone()),
+            Root::Source(e) => {
+                let mut cur: Option<&(dyn StdError + 'static)> = Some(e.as_ref());
+                while let Some(err) = cur {
+                    out.push(err.to_string());
+                    cur = err.source();
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    /// The outermost description only (context chain goes to `Debug`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let frames = self.frames();
+        write!(f, "{}", frames.first().map(String::as_str).unwrap_or("unknown error"))
+    }
+}
+
+impl fmt::Debug for Error {
+    /// The full chain, anyhow-style: outermost line, then "Caused by".
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let frames = self.frames();
+        write!(f, "{}", frames.first().map(String::as_str).unwrap_or("unknown error"))?;
+        if frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` —
+// that is what makes the blanket `From` impl below coherent, exactly as
+// in the real anyhow.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Private extension trait so a single blanket `Context` impl can serve
+/// both `Result<T, Error>` and `Result<T, impl std::error::Error>`.
+pub trait ChainableError {
+    fn ext_context(self, context: String) -> Error;
+}
+
+impl ChainableError for Error {
+    fn ext_context(self, context: String) -> Error {
+        self.context(context)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> ChainableError for E {
+    fn ext_context(self, context: String) -> Error {
+        Error::new(self).context(context)
+    }
+}
+
+/// Attach context to errors (and convert `Option` to `Result`).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ChainableError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_on_std_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading x").unwrap_err();
+        assert_eq!(e.to_string(), "reading x");
+        assert!(format!("{e:?}").contains("gone"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert!(format!("{e:?}").contains("inner 7"));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+    }
+}

@@ -1,0 +1,240 @@
+//! Stub of the PJRT bindings the runtime layer programs against.
+//!
+//! The vendor set has no `xla_extension` build, so this crate provides
+//! the same API surface with two behaviours:
+//!
+//! - [`Literal`] is a **real** container (shape + element type + bytes)
+//!   — tensor<->literal conversion and everything that only shuffles
+//!   data works, and is unit-tested in the sasp crate.
+//! - Client / compilation / execution calls return a descriptive
+//!   [`Error`] — every PJRT-dependent path in sasp is artifact-gated, so
+//!   tests and benches skip cleanly instead of hitting these.
+//!
+//! Swapping in a real `xla` crate (see `rust/Cargo.toml`) restores full
+//! PJRT execution without touching sasp code.
+
+use std::fmt;
+
+/// Stub error type (std error, so it flows into `anyhow::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla crate (PJRT is stubbed in this build; \
+         see rust/Cargo.toml)"
+    )))
+}
+
+/// Element types used by the sasp artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    S8,
+}
+
+impl ElementType {
+    pub fn size_in_bytes(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::S8 => 1,
+        }
+    }
+}
+
+/// Rust scalar types a [`Literal`] can be viewed as.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        b[0] as i8
+    }
+}
+
+/// A dense host literal: element type + shape + little-endian bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = shape.iter().product::<usize>().max(
+            if shape.is_empty() { 1 } else { 0 },
+        );
+        if numel * ty.size_in_bytes() != data.len() {
+            return Err(Error(format!(
+                "literal data length {} != shape {:?} x {} bytes",
+                data.len(),
+                shape,
+                ty.size_in_bytes()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn raw_bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let sz = self.ty.size_in_bytes();
+        Ok(self.data.chunks_exact(sz).map(T::from_le_bytes).collect())
+    }
+
+    /// Unwrap a 1-tuple result literal (identity in the stub — tuples
+    /// only arise from real PJRT execution).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// Parsed HLO module text (the stub keeps the text verbatim).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation ready to compile.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// Stub PJRT client: constructible (so engine setup and `sasp info`
+/// work), but compilation is unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (PJRT unavailable; link the real xla crate)".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an HLO module")
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a compiled module")
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("fetching a device buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals = [1.5f32, -2.0, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2],
+            &[0u8; 4]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn execution_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: String::new() });
+        assert!(client.compile(&comp).is_err());
+    }
+}

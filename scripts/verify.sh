@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# Tier-1 verify + perf smoke.
+#
+# 1. cargo build --release && cargo test -q   (the repo's tier-1 gate)
+# 2. a short-budget run of benches/hotpath.rs with JSON recording
+#    (BENCH_hotpath.json at the repo root — the machine-tracked perf
+#    trajectory EXPERIMENTS.md logs across PRs)
+# 3. same-run relative perf guards, so regressions fail loudly without
+#    depending on absolute machine speed:
+#      - the zero-alloc compute_into path must not be slower than the
+#        allocating compute wrapper
+#      - the parallel sweep must not be slower than the serial sweep
+#        (equal is fine on a single core)
+#
+# Usage: scripts/verify.sh [--no-bench]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+ROOT="$PWD"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+(cd rust && cargo build --release && cargo test -q)
+
+if [[ "${1:-}" == "--no-bench" ]]; then
+    echo "verify OK (bench smoke skipped)"
+    exit 0
+fi
+
+echo
+echo "== perf smoke: benches/hotpath.rs (short budget) =="
+export BENCH_MEASURE_MS="${BENCH_MEASURE_MS:-150}"
+export BENCH_WARMUP_MS="${BENCH_WARMUP_MS:-30}"
+export BENCH_HOTPATH_JSON="$ROOT/BENCH_hotpath.json"
+rm -f "$BENCH_HOTPATH_JSON"
+(cd rust && cargo bench --bench hotpath)
+
+if [[ ! -s "$BENCH_HOTPATH_JSON" ]]; then
+    echo "FAIL: $BENCH_HOTPATH_JSON was not written" >&2
+    exit 1
+fi
+
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$BENCH_HOTPATH_JSON" <<'EOF'
+import json, sys
+
+cases = {c["name"]: c for c in json.load(open(sys.argv[1]))}
+
+def median(name):
+    if name not in cases:
+        sys.exit(f"FAIL: bench case missing from report: {name!r}")
+    return cases[name]["median_ns"]
+
+compute = median("systolic: per-cycle 8x8 tile, M=32")
+into = median("systolic: per-cycle 8x8 tile, M=32, compute_into")
+serial = median("explorer: 24-point espnet_asr sweep, serial")
+parallel = median("explorer: 24-point espnet_asr sweep, parallel")
+
+failures = []
+# Short budgets are noisy; guard with generous slack.
+if into > compute * 1.25:
+    failures.append(
+        f"compute_into ({into:.0f} ns) slower than compute ({compute:.0f} ns)")
+if parallel > serial * 1.25:
+    failures.append(
+        f"parallel sweep ({parallel/1e6:.2f} ms) slower than serial "
+        f"({serial/1e6:.2f} ms)")
+
+print(f"systolic per-cycle 8x8 M=32:  {compute/1e3:.1f} us median")
+print(f"  .. compute_into:            {into/1e3:.1f} us median")
+print(f"24-point sweep serial:        {serial/1e6:.2f} ms median")
+print(f"  .. parallel:                {parallel/1e6:.2f} ms median")
+for f in failures:
+    print("FAIL:", f, file=sys.stderr)
+if failures:
+    sys.exit(1)
+EOF
+else
+    echo "python3 not found; skipping relative perf guards"
+fi
+
+echo
+echo "verify OK — perf report: $BENCH_HOTPATH_JSON"
