@@ -1,10 +1,12 @@
 //! Batched inference serving: the pruned model deployed behind a request
-//! queue — latency/throughput on the real PJRT execution path.
+//! queue — latency/throughput on a real execution path.
 //!
 //! A producer thread generates synthetic utterances at a Poisson-ish
 //! arrival rate; the server core batches them (fixed batch, deadline
-//! flush) and runs the compiled encoder. Reports p50/p95 latency,
-//! throughput and batch fill.
+//! flush) and runs the encoder. With compiled artifacts present the
+//! backend is the PJRT engine; otherwise the native engine serves a
+//! 25%-pruned INT8 configuration fully offline — the multi-backend
+//! serving path.
 //!
 //! Run: `cargo run --release --example serve [artifacts] [n_requests]`.
 
@@ -14,9 +16,11 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use sasp::coordinator::serve::{Request, ServeConfig, Server};
-use sasp::data::load_bundle;
+use sasp::coordinator::serve::{Request, ServeBackend, ServeConfig, Server};
+use sasp::data::{load_bundle, Bundle};
+use sasp::infer::{synth_weights, ModelDims, NativeBackend};
 use sasp::runtime::Engine;
+use sasp::systolic::Quant;
 use sasp::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -26,18 +30,66 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(128);
 
-    let mut engine = Engine::new(&dir)?;
-    let params = load_bundle(format!("{dir}/params_asr.bin"))?;
-    let manifest = engine.load("asr_encoder_ref")?.manifest.clone();
-    let (t, f) = (manifest.model.seq_len, 40usize);
+    if std::path::Path::new(&format!("{dir}/asr_encoder_ref.hlo.txt")).exists() {
+        let mut engine = Engine::new(&dir)?;
+        let params = load_bundle(format!("{dir}/params_asr.bin"))?;
+        let manifest = engine.load("asr_encoder_ref")?.manifest.clone();
+        let batch = manifest.model.batch;
+        let (t, f) = (manifest.model.seq_len, 40usize);
+        let mut server = Server::new(
+            &mut engine,
+            "asr_encoder_ref",
+            params,
+            ServeConfig { batch, max_wait: Duration::from_millis(5) },
+        )?;
+        println!("backend: PJRT ({})", engine.platform());
+        drive(&mut server, &mut engine, t, f, n_requests)
+    } else {
+        println!("no PJRT artifacts under '{dir}' — serving on the native engine");
+        let dims = ModelDims::tiny_asr();
+        let batch = 4usize;
+        let mut backend = NativeBackend::new(synth_weights(&dims, 7), batch)?;
+        // The deployed configuration: 25% SASP at the artifact tile,
+        // INT8 sign-magnitude kernels.
+        let plan = backend.prepare(dims.tile, 0.25, Quant::Int8)?;
+        println!(
+            "backend: native engine ({}x{} tile, INT8, {:.0}% ff tiles pruned)",
+            dims.tile,
+            dims.tile,
+            plan.achieved_rate * 100.0
+        );
+        let manifest = backend.manifest().clone();
+        let mut server = Server::with_manifest(
+            &manifest,
+            "native_asr_encoder",
+            Bundle::default(),
+            ServeConfig { batch, max_wait: Duration::from_millis(5) },
+        )?;
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        let report = drive(&mut server, &mut backend, t, f, n_requests);
+        let st = backend.stats();
+        // `utterances` counts every forward row, including the rows
+        // partial batches pad with repeats — so it can exceed the
+        // request count printed by `drive`.
+        println!(
+            "native schedule: {} forward rows (incl. batch padding), \
+             {} ff tiles skipped ({:.0}% of ff schedule)",
+            st.utterances,
+            st.ff.tiles_skipped,
+            st.ff.sparsity() * 100.0
+        );
+        report
+    }
+}
 
-    let mut server = Server::new(
-        &mut engine,
-        "asr_encoder_ref",
-        params,
-        ServeConfig { batch: manifest.model.batch, max_wait: Duration::from_millis(5) },
-    )?;
-
+/// Shared producer + serving loop over any backend.
+fn drive(
+    server: &mut Server,
+    backend: &mut impl ServeBackend,
+    t: usize,
+    f: usize,
+    n_requests: usize,
+) -> Result<()> {
     let (req_tx, req_rx) = mpsc::channel::<Request>();
     let (resp_tx, resp_rx) = mpsc::channel();
 
@@ -46,15 +98,14 @@ fn main() -> Result<()> {
         let mut rng = Rng::new(42);
         for id in 0..n_requests as u64 {
             let feat_len = rng.index(t - 20) + 20;
-            let feats: Vec<f32> =
-                (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
+            let feats: Vec<f32> = (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
             let _ = req_tx.send(Request { id, feats, feat_len });
             thread::sleep(Duration::from_micros(500 + rng.index(3000) as u64));
         }
         // Dropping req_tx closes the queue and drains the server.
     });
 
-    let report = server.run(&mut engine, req_rx, resp_tx)?;
+    let report = server.run(backend, req_rx, resp_tx)?;
     producer.join().unwrap();
 
     let responses: Vec<_> = resp_rx.try_iter().collect();

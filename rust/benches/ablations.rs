@@ -29,7 +29,8 @@ fn main() {
         let f8 = cpu / sys.run_encoder(&spec, &ArrayConfig::square(8, Quant::Fp32), None).cycles;
         let i8_ = cpu / sys.run_encoder(&spec, &ArrayConfig::square(8, Quant::Int8), None).cycles;
         println!(
-            "  extra={extra:>5} cycles/tile: 4x4 fp32 {f4:.2} vs int8 {i4:.2} ({}), 8x8 fp32 {f8:.2} vs int8 {i8_:.2} ({})",
+            "  extra={extra:>5} cycles/tile: 4x4 fp32 {f4:.2} vs int8 {i4:.2} \
+             ({}), 8x8 fp32 {f8:.2} vs int8 {i8_:.2} ({})",
             if i4 < f4 { "fp32 wins — paper shape" } else { "int8 wins" },
             if i8_ > f8 { "int8 wins — paper shape" } else { "fp32 wins" },
         );

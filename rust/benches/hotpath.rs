@@ -8,6 +8,7 @@
 
 use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::data::Tensor;
+use sasp::infer::{synth_weights, ModelDims, NativeBackend};
 use sasp::model::zoo;
 use sasp::pruning::{global_prune, synthetic_ff_norms};
 use sasp::runtime::Engine;
@@ -99,6 +100,29 @@ fn main() {
         sched
             .gemm_into(&gx, &gw, m, k, n, Some(&mask), 0.01, &mut y)
             .tiles_live
+    });
+
+    // Native inference engine: whole tiny-ASR forward passes (one
+    // utterance each). The masked INT8 case at 50% ff tile sparsity must
+    // be measurably faster than the dense INT8 case — the functional
+    // SASP saving scripts/verify.sh guards on.
+    let dims = ModelDims::tiny_asr();
+    let mut nb = NativeBackend::new(synth_weights(&dims, 7), 1).expect("backend");
+    let feats: Vec<f32> = (0..dims.seq_len * dims.input_dim)
+        .map(|_| rng.normal() as f32 * 0.5)
+        .collect();
+    let pad = vec![1.0f32; dims.seq_len];
+    nb.prepare(dims.tile, 0.0, Quant::Fp32).expect("prepare");
+    b.run("infer: tiny_asr forward, fp32 dense", || {
+        nb.forward_batch(&feats, &pad, 1)[0]
+    });
+    nb.prepare(dims.tile, 0.0, Quant::Int8).expect("prepare");
+    b.run("infer: tiny_asr forward, int8 dense", || {
+        nb.forward_batch(&feats, &pad, 1)[0]
+    });
+    nb.prepare(dims.tile, 0.5, Quant::Int8).expect("prepare");
+    b.run("infer: tiny_asr forward, int8 50% pruned", || {
+        nb.forward_batch(&feats, &pad, 1)[0]
     });
 
     // Runtime: tensor -> literal conversion (the PJRT argument path).

@@ -24,7 +24,9 @@ use crate::qos::decode::ctc_greedy;
 use crate::runtime::{Engine, Manifest};
 
 /// The execution surface the server needs. Production uses the PJRT
-/// [`Engine`]; tests drive the batching logic with a stub.
+/// [`Engine`] or the native engine ([`crate::infer::NativeBackend`],
+/// which also publishes the [`Manifest`] it serves — the fully offline
+/// path); tests drive the batching logic with a stub.
 pub trait ServeBackend {
     fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor>;
 }
@@ -107,19 +109,9 @@ impl Server {
         params: Bundle,
         cfg: ServeConfig,
     ) -> Result<Server> {
-        let mut args = Vec::with_capacity(manifest.args.len());
-        for spec in &manifest.args {
-            match spec.name.as_str() {
-                "feats" | "pad_mask" => {
-                    args.push(Tensor::zeros(&spec.shape, DType::F32));
-                }
-                name if name.starts_with("mask.") => {
-                    let numel: usize = spec.shape.iter().product();
-                    args.push(Tensor::from_i32(&spec.shape, &vec![1; numel]));
-                }
-                name => args.push(params.require(name)?.clone()),
-            }
-        }
+        // Shared manifest contract (data args zeroed, masks all-ones,
+        // params by name) — same assembly the QoS backends use.
+        let args = manifest.assemble_args(&params)?;
         let feats_idx = manifest
             .arg_index("feats")
             .context("artifact has no 'feats' argument")?;

@@ -1,0 +1,377 @@
+//! [`NativeBackend`] — the native engine packaged as an execution
+//! backend for both serving surfaces:
+//!
+//! - [`crate::qos::QosBackend`]: the QoS evaluators hand over a pruned
+//!   (tile-zeroed, optionally fake-quantized) parameter bundle; the
+//!   backend recovers the tile masks from the zeroed tiles and runs with
+//!   *true* skipping — the functional counterpart of what the analytic
+//!   engine charges for the same masks.
+//! - [`crate::coordinator::serve::ServeBackend`]: the batched serving
+//!   loop executes against the native forward pass through a
+//!   self-describing [`Manifest`], so `coordinator::serve` needs no PJRT
+//!   artifact at all.
+//!
+//! For direct use (examples, benches), [`NativeBackend::prepare`] prunes
+//! the backend's own master weights at a (tile, rate, quant)
+//! configuration — no bundle-zeroing round trip, masks flow straight
+//! from [`crate::pruning::global_prune`] into the tile-skipping kernels.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::serve::ServeBackend;
+use crate::data::{Bundle, DType, Tensor};
+use crate::pruning::{global_prune, tile_l1_norms, PrunePlan, TileNorms};
+use crate::qos::QosBackend;
+use crate::runtime::{manifest::ModelMeta, ArgSpec, Manifest};
+use crate::sysim::TileMask;
+use crate::systolic::Quant;
+
+use super::encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
+
+/// Per-feed-forward-GEMM tile L1 norms of a weight set.
+pub fn ff_norms(w: &EncoderWeights, tile: usize) -> Result<Vec<TileNorms>> {
+    let dims = &w.dims;
+    ensure!(dims.tile_ok(tile), "tile {tile} does not divide the model");
+    let (d, f) = (dims.d_model, dims.d_ff);
+    let mut out = Vec::with_capacity(2 * dims.n_blocks);
+    for blk in &w.blocks {
+        out.push(tile_l1_norms(&Tensor::from_f32(&[d, f], &blk.w1), tile));
+        out.push(tile_l1_norms(&Tensor::from_f32(&[f, d], &blk.w2), tile));
+    }
+    Ok(out)
+}
+
+/// Recover tile masks from (possibly) tile-zeroed weights: a tile whose
+/// L1 norm is exactly zero contributes nothing and is marked dead. On
+/// clean weights this returns (near-)full masks; on `prepare_params`
+/// output it reproduces the pruning plan's masks exactly.
+pub fn recover_masks(w: &EncoderWeights, tile: usize) -> Result<Vec<TileMask>> {
+    let norms = ff_norms(w, tile)?;
+    Ok(norms
+        .iter()
+        .map(|tn| TileMask {
+            kt: tn.kt,
+            nt: tn.nt,
+            live: tn.norms.iter().map(|v| *v != 0.0).collect(),
+        })
+        .collect())
+}
+
+/// The native engine as a pluggable execution backend.
+pub struct NativeBackend {
+    master: EncoderWeights,
+    model: PreparedModel,
+    fwd: Forward,
+    batch: usize,
+    /// Built once (tile refreshed on re-staging) so the serving hot
+    /// path neither reallocates nor reassembles it per batch.
+    serve_manifest: Manifest,
+}
+
+impl NativeBackend {
+    /// Stage `weights` dense at their default tile, FP32. `batch` is the
+    /// serving batch size (the QoS path accepts any batch).
+    pub fn new(weights: EncoderWeights, batch: usize) -> Result<Self> {
+        ensure!(batch > 0, "batch must be positive");
+        let model = PreparedModel::new(&weights, weights.dims.tile, Quant::Fp32, None)?;
+        let serve_manifest = build_manifest(&weights.dims, batch, model.tile);
+        Ok(NativeBackend {
+            master: weights,
+            model,
+            fwd: Forward::new(),
+            batch,
+            serve_manifest,
+        })
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.master.dims
+    }
+
+    /// The currently staged model configuration.
+    pub fn model(&self) -> &PreparedModel {
+        &self.model
+    }
+
+    /// Cumulative schedule statistics since the last reset.
+    pub fn stats(&self) -> &ForwardStats {
+        &self.fwd.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.fwd.stats = ForwardStats::default();
+    }
+
+    /// Prune the master weights at `(tile, rate)` via the global L1
+    /// ranking and stage the model in `quant` format. Returns the plan
+    /// (masks + achieved rate); the staged kernels skip those tiles.
+    pub fn prepare(&mut self, tile: usize, rate: f64, quant: Quant) -> Result<PrunePlan> {
+        let norms = ff_norms(&self.master, tile)?;
+        let plan = global_prune(&norms, rate);
+        self.model = PreparedModel::new(&self.master, tile, quant, Some(&plan.masks))?;
+        self.serve_manifest.model.tile = tile;
+        Ok(plan)
+    }
+
+    /// Run one padded batch of utterances; returns CTC log-probs
+    /// `[batch, seq, vocab]` flattened.
+    pub fn forward_batch(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Vec<f32> {
+        let dims = self.model.dims;
+        let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
+        assert_eq!(feats.len(), batch * t * f, "feats must be batch x seq x feat");
+        assert_eq!(pad.len(), batch * t, "pad must be batch x seq");
+        let mut lp = vec![0.0f32; batch * t * v];
+        let mut row = Vec::new();
+        for i in 0..batch {
+            self.fwd.run_feats(
+                &self.model,
+                &feats[i * t * f..(i + 1) * t * f],
+                &pad[i * t..(i + 1) * t],
+                &mut row,
+            );
+            lp[i * t * v..(i + 1) * t * v].copy_from_slice(&row);
+        }
+        lp
+    }
+
+    /// The serving manifest this backend satisfies — same contract shape
+    /// the AOT artifacts publish, with only the two data arguments.
+    pub fn manifest(&self) -> &Manifest {
+        &self.serve_manifest
+    }
+}
+
+/// Build the native serving manifest for one configuration.
+fn build_manifest(dims: &ModelDims, batch: usize, tile: usize) -> Manifest {
+    let (b, t) = (batch, dims.seq_len);
+    Manifest {
+        name: "native_asr_encoder".to_string(),
+        args: vec![
+            ArgSpec {
+                name: "feats".to_string(),
+                shape: vec![b, t, dims.input_dim],
+                dtype: DType::F32,
+            },
+            ArgSpec {
+                name: "pad_mask".to_string(),
+                shape: vec![b, t],
+                dtype: DType::F32,
+            },
+        ],
+        output_shape: vec![b, t, dims.vocab],
+        output_dtype: DType::F32,
+        model: ModelMeta {
+            d_model: dims.d_model,
+            d_ff: dims.d_ff,
+            n_blocks: dims.n_blocks,
+            vocab: dims.vocab,
+            tile,
+            ctc_blank: dims.ctc_blank as i64,
+            batch: b,
+            seq_len: t,
+            token_input: dims.token_input,
+        },
+    }
+}
+
+impl QosBackend for NativeBackend {
+    fn configure(&mut self, params: &Bundle, tile: usize, quant: Quant) -> Result<()> {
+        let w = EncoderWeights::from_bundle(self.master.dims, params)?;
+        // Recover skipping at the evaluation tile when it is legal for
+        // these dimensions; otherwise at the model's own default tile
+        // (the recovered masks are conservative either way: only
+        // exactly-zero tiles are skipped).
+        let tile = if w.dims.tile_ok(tile) { tile } else { w.dims.tile };
+        let masks = recover_masks(&w, tile)?;
+        self.model = PreparedModel::new(&w, tile, quant, Some(&masks))?;
+        self.serve_manifest.model.tile = tile;
+        Ok(())
+    }
+
+    fn run_asr(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let dims = self.model.dims;
+        ensure!(!dims.token_input, "ASR inference on a token-input model");
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        ensure!(
+            feats.len() == batch * t * f && pad.len() == batch * t,
+            "ASR batch shapes: feats {} (want {}), pad {} (want {})",
+            feats.len(),
+            batch * t * f,
+            pad.len(),
+            batch * t
+        );
+        Ok(self.forward_batch(feats, pad, batch))
+    }
+
+    fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>> {
+        let dims = self.model.dims;
+        ensure!(dims.token_input, "MT inference on a feature-input model");
+        let (t, v) = (dims.seq_len, dims.vocab);
+        ensure!(src.len() == batch * t, "src must be batch x seq");
+        let mut logits = vec![0.0f32; batch * t * v];
+        let mut row = Vec::new();
+        for i in 0..batch {
+            self.fwd
+                .run_tokens(&self.model, &src[i * t..(i + 1) * t], &mut row);
+            logits[i * t * v..(i + 1) * t * v].copy_from_slice(&row);
+        }
+        Ok(logits)
+    }
+}
+
+impl ServeBackend for NativeBackend {
+    fn execute(&mut self, _artifact: &str, args: &[Tensor]) -> Result<Tensor> {
+        // The manifest is cached; its arg order is fixed at construction
+        // (feats, pad_mask). Validation is shape/dtype checks only.
+        self.serve_manifest.validate_args(args)?;
+        let feats = args[0].f32s();
+        let pad = args[1].f32s();
+        let lp = self.forward_batch(&feats, &pad, self.batch);
+        Ok(Tensor::from_f32(&self.serve_manifest.output_shape, &lp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::synth::{synth_testset, synth_weights};
+    use crate::infer::testutil::{mini_dims, zero_ff_tiles};
+    use crate::qos::AsrEvaluator;
+
+    fn mini_evaluator(n_utts: usize) -> (AsrEvaluator, NativeBackend) {
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 21);
+        let ts = synth_testset(&w, n_utts, 1).unwrap();
+        let params = w.to_bundle();
+        let meta = crate::qos::EvalMeta {
+            n_blocks: dims.n_blocks,
+            batch: 2,
+            vocab: dims.vocab,
+            blank: dims.ctc_blank,
+            tile_hint: dims.tile,
+        };
+        let eval = AsrEvaluator::from_parts("native", params, &ts, &meta).unwrap();
+        let backend = NativeBackend::new(w, 2).unwrap();
+        (eval, backend)
+    }
+
+    #[test]
+    fn baseline_wer_is_zero_on_teacher_labels() {
+        let (eval, mut be) = mini_evaluator(5);
+        let p = eval.evaluate_with(&mut be, 8, 0.0, Quant::Fp32).unwrap();
+        assert_eq!(p.qos, 0.0, "dense FP32 must reproduce its own labels");
+        assert_eq!(p.achieved_rate, 0.0);
+    }
+
+    #[test]
+    fn qos_path_skips_recovered_tiles() {
+        let (eval, mut be) = mini_evaluator(4);
+        be.reset_stats();
+        let p = eval.evaluate_with(&mut be, 8, 0.5, Quant::Int8).unwrap();
+        assert!((p.achieved_rate - 0.5).abs() < 0.1);
+        let st = be.stats();
+        assert!(
+            st.ff.tiles_skipped > 0,
+            "recovered masks must skip pruned tiles: {st:?}"
+        );
+        // Recovered sparsity tracks the requested rate (random weights
+        // have no naturally zero tiles).
+        let frac = st.ff.tiles_skipped as f64
+            / (st.ff.tiles_live + st.ff.tiles_skipped) as f64;
+        assert!((frac - p.achieved_rate).abs() < 1e-9, "{frac} vs {}", p.achieved_rate);
+        assert!(p.qos >= 0.0);
+    }
+
+    #[test]
+    fn prepare_and_configure_agree() {
+        // The direct pruning path (prepare) and the QoS bundle path
+        // (prune-by-zeroing + mask recovery) must produce identical
+        // log-probs for the same configuration — in both weight
+        // formats (staging zeroes dead tiles before quantization, so
+        // the INT8 scales agree too).
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 23);
+        let plan = global_prune(&ff_norms(&w, 8).unwrap(), 0.4);
+        let mut wz = w.clone();
+        zero_ff_tiles(&mut wz, &plan.masks, 8);
+        let mut rng = crate::util::rng::Rng::new(6);
+        let feats: Vec<f32> = (0..dims.seq_len * dims.input_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let pad = vec![1.0f32; dims.seq_len];
+
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let mut direct = NativeBackend::new(w.clone(), 1).unwrap();
+            direct.prepare(8, 0.4, quant).unwrap();
+            let mut via_bundle = NativeBackend::new(w.clone(), 1).unwrap();
+            via_bundle.configure(&wz.to_bundle(), 8, quant).unwrap();
+            let a = direct.forward_batch(&feats, &pad, 1);
+            let b = via_bundle.forward_batch(&feats, &pad, 1);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() <= 1e-6, "{quant:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn serve_backend_contract() {
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 25);
+        let mut be = NativeBackend::new(w, 3).unwrap();
+        let man = be.manifest().clone();
+        assert_eq!(man.args[0].shape, vec![3, dims.seq_len, dims.input_dim]);
+        assert_eq!(man.model.batch, 3);
+        assert_eq!(man.model.ctc_blank, dims.ctc_blank as i64);
+        let feats = Tensor::zeros(&man.args[0].shape, DType::F32);
+        let pad = Tensor::zeros(&man.args[1].shape, DType::F32);
+        let out = be.execute("native_asr_encoder", &[feats, pad]).unwrap();
+        assert_eq!(out.shape, vec![3, dims.seq_len, dims.vocab]);
+        // CTC log-probs: every frame is a normalized distribution.
+        let lp = out.f32s();
+        let row: f32 = lp[..dims.vocab].iter().map(|v| v.exp()).sum();
+        assert!((row - 1.0).abs() < 1e-4, "sum {row}");
+        // Wrong arity is rejected via the manifest contract.
+        let only = Tensor::zeros(&man.args[0].shape, DType::F32);
+        assert!(be.execute("native_asr_encoder", &[only]).is_err());
+    }
+
+    #[test]
+    fn recover_masks_roundtrips_prune_plan() {
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 27);
+        let plan = global_prune(&ff_norms(&w, 8).unwrap(), 0.3);
+        let mut wz = w.clone();
+        zero_ff_tiles(&mut wz, &plan.masks, 8);
+        let rec = recover_masks(&wz, 8).unwrap();
+        assert_eq!(rec, plan.masks);
+    }
+
+    #[test]
+    fn int8_qos_matches_fp32_on_fake_quantized_bundle() {
+        // The evaluator fake-quantizes the bundle for INT8; running that
+        // bundle through the FP32 kernels or re-packing it for the INT8
+        // kernels must give the same hypotheses (kernel equivalence at
+        // QoS scope).
+        let (eval, mut be) = mini_evaluator(4);
+        let a = eval.evaluate_with(&mut be, 8, 0.2, Quant::Int8).unwrap();
+        // Same configuration, but force the backend to stay FP32 over
+        // the fake-quantized params by evaluating through a wrapper that
+        // rewrites quant.
+        struct ForceFp32<'a>(&'a mut NativeBackend);
+        impl crate::qos::QosBackend for ForceFp32<'_> {
+            fn configure(&mut self, p: &Bundle, tile: usize, _q: Quant) -> Result<()> {
+                self.0.configure(p, tile, Quant::Fp32)
+            }
+            fn run_asr(&mut self, f: &[f32], p: &[f32], b: usize) -> Result<Vec<f32>> {
+                self.0.run_asr(f, p, b)
+            }
+            fn run_mt(&mut self, s: &[i32], b: usize) -> Result<Vec<f32>> {
+                self.0.run_mt(s, b)
+            }
+        }
+        let mut forced = ForceFp32(&mut be);
+        let b = eval.evaluate_with(&mut forced, 8, 0.2, Quant::Int8).unwrap();
+        assert_eq!(a.qos, b.qos, "kernel INT8 vs fake-quant FP32 WER");
+    }
+}

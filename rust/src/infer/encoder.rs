@@ -1,0 +1,804 @@
+//! Encoder weights + the native forward pass.
+//!
+//! The architecture is exactly `python/compile/model.py`: input
+//! projection (or token embedding) + sinusoidal positions, then pre-LN
+//! blocks of MHSA and a SASP feed-forward (w1 → ReLU → w2), a final
+//! LayerNorm and the vocabulary head (log-softmax for the CTC models).
+//! Parameter names and shapes follow `param_names` there, so the same
+//! `tensorfile` bundles drive the PJRT artifact and this engine.
+//!
+//! Attention projections and the feed-forward pair run through the
+//! [`super::gemm`] tile kernels (the array-executed GEMMs); the dynamic
+//! score/context GEMMs, LayerNorms, softmax and the head run as plain
+//! software ops (the core-executed remainder), matching the paper's
+//! execution split.
+
+use anyhow::{ensure, Result};
+
+use crate::data::{Bundle, Tensor};
+use crate::quant::fake_quantize;
+use crate::sysim::TileMask;
+use crate::systolic::Quant;
+
+use super::gemm::{gemm_f32, Linear, TileStats};
+use super::ops;
+
+/// Shape hyper-parameters of one encoder model — the rust mirror of
+/// python's `ModelConfig` plus the serving-relevant sequence length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    /// Acoustic feature dimension (ASR); unused when `token_input`.
+    pub input_dim: usize,
+    /// Output vocabulary (including the CTC blank).
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_blocks: usize,
+    /// Fixed sequence length of one utterance / sentence.
+    pub seq_len: usize,
+    /// Default SASP tile (the size baked into the AOT artifact).
+    pub tile: usize,
+    /// CTC blank index (ASR); ignored for MT.
+    pub ctc_blank: i32,
+    /// MT: embed int tokens instead of projecting features.
+    pub token_input: bool,
+}
+
+impl ModelDims {
+    /// The trained tiny ASR stand-in (`ASR_TINY` in python).
+    pub fn tiny_asr() -> Self {
+        ModelDims {
+            input_dim: 40,
+            vocab: 28,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            n_blocks: 4,
+            seq_len: 96,
+            tile: 8,
+            ctc_blank: 27,
+            token_input: false,
+        }
+    }
+
+    /// The trained tiny MT stand-in (`MT_TINY` in python).
+    pub fn tiny_mt() -> Self {
+        ModelDims {
+            input_dim: 32,
+            vocab: 32,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            n_blocks: 2,
+            seq_len: 32,
+            tile: 8,
+            ctc_blank: -1,
+            token_input: true,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Whether `tile` is a legal SASP tile for these dimensions.
+    pub fn tile_ok(&self, tile: usize) -> bool {
+        tile > 0 && self.d_model % tile == 0 && self.d_ff % tile == 0
+    }
+}
+
+/// One encoder block's FP32 weights (python naming in comments).
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// The full FP32 weight set of one encoder.
+#[derive(Clone, Debug)]
+pub struct EncoderWeights {
+    pub dims: ModelDims,
+    pub in_w: Vec<f32>,
+    pub in_b: Vec<f32>,
+    pub blocks: Vec<BlockWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+fn take(b: &Bundle, name: &str, shape: &[usize]) -> Result<Vec<f32>> {
+    let t = b.require(name)?;
+    ensure!(
+        t.shape == shape,
+        "{name}: shape {:?} != expected {:?}",
+        t.shape,
+        shape
+    );
+    Ok(t.f32s())
+}
+
+impl EncoderWeights {
+    /// Rows of the input projection / embedding matrix.
+    fn in_rows(dims: &ModelDims) -> usize {
+        if dims.token_input { dims.vocab } else { dims.input_dim }
+    }
+
+    /// Load from a `tensorfile` bundle laid out like python
+    /// `param_names` (the `params_asr.bin` / `params_mt.bin` format).
+    pub fn from_bundle(dims: ModelDims, b: &Bundle) -> Result<Self> {
+        let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+        let in_rows = Self::in_rows(&dims);
+        let mut blocks = Vec::with_capacity(dims.n_blocks);
+        for i in 0..dims.n_blocks {
+            let p = format!("block{i}.");
+            blocks.push(BlockWeights {
+                ln1_g: take(b, &format!("{p}ln1.g"), &[d])?,
+                ln1_b: take(b, &format!("{p}ln1.b"), &[d])?,
+                wq: take(b, &format!("{p}attn.wq"), &[d, d])?,
+                wk: take(b, &format!("{p}attn.wk"), &[d, d])?,
+                wv: take(b, &format!("{p}attn.wv"), &[d, d])?,
+                wo: take(b, &format!("{p}attn.wo"), &[d, d])?,
+                ln2_g: take(b, &format!("{p}ln2.g"), &[d])?,
+                ln2_b: take(b, &format!("{p}ln2.b"), &[d])?,
+                w1: take(b, &format!("{p}ff.w1"), &[d, f])?,
+                b1: take(b, &format!("{p}ff.b1"), &[f])?,
+                w2: take(b, &format!("{p}ff.w2"), &[f, d])?,
+                b2: take(b, &format!("{p}ff.b2"), &[d])?,
+            });
+        }
+        Ok(EncoderWeights {
+            in_w: take(b, "in_proj.w", &[in_rows, d])?,
+            in_b: take(b, "in_proj.b", &[d])?,
+            blocks,
+            lnf_g: take(b, "ln_f.g", &[d])?,
+            lnf_b: take(b, "ln_f.b", &[d])?,
+            head_w: take(b, "head.w", &[d, v])?,
+            head_b: take(b, "head.b", &[v])?,
+            dims,
+        })
+    }
+
+    /// Serialize back to the python `param_names` bundle layout.
+    pub fn to_bundle(&self) -> Bundle {
+        let (d, f, v) = (self.dims.d_model, self.dims.d_ff, self.dims.vocab);
+        let in_rows = Self::in_rows(&self.dims);
+        let mut b = Bundle::default();
+        b.insert("in_proj.w", Tensor::from_f32(&[in_rows, d], &self.in_w));
+        b.insert("in_proj.b", Tensor::from_f32(&[d], &self.in_b));
+        for (i, blk) in self.blocks.iter().enumerate() {
+            let p = format!("block{i}.");
+            b.insert(&format!("{p}ln1.g"), Tensor::from_f32(&[d], &blk.ln1_g));
+            b.insert(&format!("{p}ln1.b"), Tensor::from_f32(&[d], &blk.ln1_b));
+            b.insert(&format!("{p}attn.wq"), Tensor::from_f32(&[d, d], &blk.wq));
+            b.insert(&format!("{p}attn.wk"), Tensor::from_f32(&[d, d], &blk.wk));
+            b.insert(&format!("{p}attn.wv"), Tensor::from_f32(&[d, d], &blk.wv));
+            b.insert(&format!("{p}attn.wo"), Tensor::from_f32(&[d, d], &blk.wo));
+            b.insert(&format!("{p}ln2.g"), Tensor::from_f32(&[d], &blk.ln2_g));
+            b.insert(&format!("{p}ln2.b"), Tensor::from_f32(&[d], &blk.ln2_b));
+            b.insert(&format!("{p}ff.w1"), Tensor::from_f32(&[d, f], &blk.w1));
+            b.insert(&format!("{p}ff.b1"), Tensor::from_f32(&[f], &blk.b1));
+            b.insert(&format!("{p}ff.w2"), Tensor::from_f32(&[f, d], &blk.w2));
+            b.insert(&format!("{p}ff.b2"), Tensor::from_f32(&[d], &blk.b2));
+        }
+        b.insert("ln_f.g", Tensor::from_f32(&[d], &self.lnf_g));
+        b.insert("ln_f.b", Tensor::from_f32(&[d], &self.lnf_b));
+        b.insert("head.w", Tensor::from_f32(&[d, v], &self.head_w));
+        b.insert("head.b", Tensor::from_f32(&[v], &self.head_b));
+        b
+    }
+}
+
+/// One block, staged for execution: kernel-format weight GEMMs plus the
+/// tile masks the feed-forward pair skips by.
+#[derive(Clone, Debug)]
+pub struct PreparedBlock {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Linear,
+    pub b1: Vec<f32>,
+    pub w2: Linear,
+    pub b2: Vec<f32>,
+    pub mask1: TileMask,
+    pub mask2: TileMask,
+}
+
+/// A model staged for inference at one (tile, quant, masks)
+/// configuration.
+#[derive(Clone, Debug)]
+pub struct PreparedModel {
+    pub dims: ModelDims,
+    pub tile: usize,
+    pub quant: Quant,
+    /// Input projection / embedding (always executed in FP32 precision;
+    /// fake-quantized in INT8 mode, matching the PTQ set of `qos::eval`).
+    pub in_w: Vec<f32>,
+    pub in_b: Vec<f32>,
+    pub blocks: Vec<PreparedBlock>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    /// Precomputed `seq_len x d_model` position table.
+    pub pe: Vec<f32>,
+}
+
+/// Fake-quantize a copy of a software-executed matrix in INT8 mode.
+fn soft_weight(w: &[f32], rows: usize, cols: usize, quant: Quant) -> Vec<f32> {
+    match quant {
+        Quant::Fp32 => w.to_vec(),
+        Quant::Int8 => {
+            let mut t = Tensor::from_f32(&[rows, cols], w);
+            fake_quantize(&mut t);
+            t.f32s()
+        }
+    }
+}
+
+/// Stage an array-executed weight GEMM in the configured format.
+fn kernel_weight(w: &[f32], k: usize, n: usize, quant: Quant) -> Linear {
+    match quant {
+        Quant::Fp32 => Linear::from_f32(w.to_vec(), k, n),
+        Quant::Int8 => Linear::quantized(w, k, n),
+    }
+}
+
+/// Stage a *masked* weight GEMM: dead tiles are zeroed **before**
+/// quantization, matching the paper's prune-then-PTQ order (and the QoS
+/// harness's `prepare_params`), so the INT8 per-tensor scale ranges over
+/// live weights only. Execution never reads the dead tiles either way —
+/// this fixes the scale, not the schedule.
+fn masked_kernel_weight(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    tile: usize,
+    mask: &TileMask,
+    quant: Quant,
+) -> Linear {
+    if mask.live_count() == mask.n_tiles() {
+        return kernel_weight(w, k, n, quant);
+    }
+    let mut wz = w.to_vec();
+    for (idx, v) in wz.iter_mut().enumerate() {
+        let (kk, nn) = (idx / n, idx % n);
+        if !mask.is_live(kk / tile, nn / tile) {
+            *v = 0.0;
+        }
+    }
+    kernel_weight(&wz, k, n, quant)
+}
+
+impl PreparedModel {
+    /// Stage `w` for execution. `masks` supplies one [`TileMask`] per
+    /// feed-forward GEMM in execution order (`[w1_0, w2_0, w1_1, ...]`,
+    /// grid `ceil(K/tile) x ceil(N/tile)`); `None` runs dense.
+    pub fn new(
+        w: &EncoderWeights,
+        tile: usize,
+        quant: Quant,
+        masks: Option<&[TileMask]>,
+    ) -> Result<Self> {
+        let dims = w.dims;
+        let (d, f) = (dims.d_model, dims.d_ff);
+        ensure!(dims.tile_ok(tile), "tile {tile} does not divide {d}x{f}");
+        if let Some(ms) = masks {
+            ensure!(
+                ms.len() == 2 * dims.n_blocks,
+                "expected {} ff masks, got {}",
+                2 * dims.n_blocks,
+                ms.len()
+            );
+        }
+        let (kt1, nt1) = (d / tile, f / tile);
+        let mut blocks = Vec::with_capacity(dims.n_blocks);
+        for (i, blk) in w.blocks.iter().enumerate() {
+            let mask1 = match masks {
+                Some(ms) => ms[2 * i].clone(),
+                None => TileMask::full(kt1, nt1),
+            };
+            let mask2 = match masks {
+                Some(ms) => ms[2 * i + 1].clone(),
+                None => TileMask::full(nt1, kt1),
+            };
+            ensure!(
+                (mask1.kt, mask1.nt) == (kt1, nt1)
+                    && (mask2.kt, mask2.nt) == (nt1, kt1),
+                "block {i}: ff mask grid does not match tile {tile}"
+            );
+            blocks.push(PreparedBlock {
+                ln1_g: blk.ln1_g.clone(),
+                ln1_b: blk.ln1_b.clone(),
+                wq: kernel_weight(&blk.wq, d, d, quant),
+                wk: kernel_weight(&blk.wk, d, d, quant),
+                wv: kernel_weight(&blk.wv, d, d, quant),
+                wo: kernel_weight(&blk.wo, d, d, quant),
+                ln2_g: blk.ln2_g.clone(),
+                ln2_b: blk.ln2_b.clone(),
+                w1: masked_kernel_weight(&blk.w1, d, f, tile, &mask1, quant),
+                b1: blk.b1.clone(),
+                w2: masked_kernel_weight(&blk.w2, f, d, tile, &mask2, quant),
+                b2: blk.b2.clone(),
+                mask1,
+                mask2,
+            });
+        }
+        let in_rows = EncoderWeights::in_rows(&dims);
+        Ok(PreparedModel {
+            dims,
+            tile,
+            quant,
+            in_w: soft_weight(&w.in_w, in_rows, d, quant),
+            in_b: w.in_b.clone(),
+            blocks,
+            lnf_g: w.lnf_g.clone(),
+            lnf_b: w.lnf_b.clone(),
+            head_w: soft_weight(&w.head_w, d, dims.vocab, quant),
+            head_b: w.head_b.clone(),
+            pe: ops::sinusoidal_pe(dims.seq_len, d),
+        })
+    }
+
+    /// Mean feed-forward tile sparsity of the staged masks.
+    pub fn ff_sparsity(&self) -> f64 {
+        let mut dead = 0usize;
+        let mut total = 0usize;
+        for blk in &self.blocks {
+            dead += blk.mask1.n_tiles() - blk.mask1.live_count();
+            dead += blk.mask2.n_tiles() - blk.mask2.live_count();
+            total += blk.mask1.n_tiles() + blk.mask2.n_tiles();
+        }
+        dead as f64 / total.max(1) as f64
+    }
+}
+
+/// Per-run schedule statistics, split by GEMM role.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ForwardStats {
+    /// Feed-forward GEMMs (the SASP-pruned, array-executed pair).
+    pub ff: TileStats,
+    /// Attention projections (array-executed, never pruned).
+    pub attn: TileStats,
+    /// Input projection + vocabulary head (software-executed).
+    pub other: TileStats,
+    /// Utterances processed since the last reset.
+    pub utterances: usize,
+}
+
+/// The forward-pass runtime: owns every intermediate buffer, so steady
+/// state (one utterance after another) performs no allocation.
+pub struct Forward {
+    h: Vec<f32>,
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    ctx: Vec<f32>,
+    tmp: Vec<f32>,
+    mid: Vec<f32>,
+    /// All-ones pad mask for the token (MT) path, reused across calls.
+    ones: Vec<f32>,
+    pub stats: ForwardStats,
+}
+
+impl Default for Forward {
+    fn default() -> Self {
+        Forward::new()
+    }
+}
+
+impl Forward {
+    pub fn new() -> Self {
+        Forward {
+            h: Vec::new(),
+            hn: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            scores: Vec::new(),
+            ctx: Vec::new(),
+            tmp: Vec::new(),
+            mid: Vec::new(),
+            ones: Vec::new(),
+            stats: ForwardStats::default(),
+        }
+    }
+
+    /// ASR: one utterance of `seq_len x input_dim` features with a
+    /// `seq_len` validity mask → CTC log-probs `seq_len x vocab` in
+    /// `out`.
+    pub fn run_feats(
+        &mut self,
+        m: &PreparedModel,
+        feats: &[f32],
+        pad: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let dims = &m.dims;
+        assert!(!dims.token_input, "feature input on a token-input model");
+        let t = dims.seq_len;
+        assert_eq!(feats.len(), t * dims.input_dim, "feats must be seq x input");
+        assert_eq!(pad.len(), t, "pad mask must be seq");
+        let st = gemm_f32(
+            feats,
+            &m.in_w,
+            t,
+            dims.input_dim,
+            dims.d_model,
+            None,
+            m.tile,
+            &mut self.h,
+        );
+        self.stats.other.add(&st);
+        self.encode(m, pad);
+        self.head(m, out, true);
+        self.stats.utterances += 1;
+    }
+
+    /// MT: one `seq_len` token sentence → per-position logits
+    /// `seq_len x vocab` in `out` (no log-softmax — the MT head).
+    pub fn run_tokens(&mut self, m: &PreparedModel, tokens: &[i32], out: &mut Vec<f32>) {
+        let dims = &m.dims;
+        assert!(dims.token_input, "token input on a feature-input model");
+        let t = dims.seq_len;
+        assert_eq!(tokens.len(), t, "tokens must be seq");
+        let d = dims.d_model;
+        self.h.clear();
+        self.h.resize(t * d, 0.0);
+        for (row, tok) in tokens.iter().enumerate() {
+            let ti = *tok as usize;
+            assert!(ti < dims.vocab, "token {ti} out of vocab {}", dims.vocab);
+            self.h[row * d..(row + 1) * d].copy_from_slice(&m.in_w[ti * d..(ti + 1) * d]);
+        }
+        // Take/restore the reusable ones buffer so `encode` can borrow
+        // it alongside `&mut self` (same pattern as the systolic array's
+        // register planes).
+        let mut ones = std::mem::take(&mut self.ones);
+        ones.clear();
+        ones.resize(t, 1.0);
+        self.encode(m, &ones);
+        self.ones = ones;
+        self.head(m, out, false);
+        self.stats.utterances += 1;
+    }
+
+    /// Shared encoder stack over `self.h` (which holds the projected /
+    /// embedded input before bias + positions).
+    fn encode(&mut self, m: &PreparedModel, pad: &[f32]) {
+        let dims = &m.dims;
+        let (t, d) = (dims.seq_len, dims.d_model);
+        let (h_heads, hd) = (dims.n_heads, dims.head_dim());
+        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        ops::add_bias(&mut self.h, &m.in_b);
+        ops::residual_add(&mut self.h, &m.pe);
+        self.hn.clear();
+        self.scores.clear();
+        self.scores.resize(t * t, 0.0);
+        self.ctx.clear();
+        self.ctx.resize(t * d, 0.0);
+
+        for blk in &m.blocks {
+            // --- pre-LN multi-head self-attention ------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln1_g, &blk.ln1_b);
+            let sq = blk.wq.gemm(&self.hn, t, None, m.tile, &mut self.q);
+            let sk = blk.wk.gemm(&self.hn, t, None, m.tile, &mut self.k);
+            let sv = blk.wv.gemm(&self.hn, t, None, m.tile, &mut self.v);
+            self.stats.attn.add(&sq);
+            self.stats.attn.add(&sk);
+            self.stats.attn.add(&sv);
+            for head in 0..h_heads {
+                let c0 = head * hd;
+                // Dynamic score GEMM (activation x activation — software
+                // FP32, like the artifact's einsum; never pruned).
+                for a in 0..t {
+                    for b in 0..t {
+                        let mut acc = 0.0f32;
+                        for j in 0..hd {
+                            acc += self.q[a * d + c0 + j] * self.k[b * d + c0 + j];
+                        }
+                        self.scores[a * t + b] =
+                            acc * inv_sqrt_hd + (1.0 - pad[b]) * -1e9;
+                    }
+                }
+                ops::softmax_rows(&mut self.scores, t);
+                // Dynamic context GEMM.
+                for a in 0..t {
+                    for j in 0..hd {
+                        let mut acc = 0.0f32;
+                        for b in 0..t {
+                            acc += self.scores[a * t + b] * self.v[b * d + c0 + j];
+                        }
+                        self.ctx[a * d + c0 + j] = acc;
+                    }
+                }
+            }
+            let so = blk.wo.gemm(&self.ctx, t, None, m.tile, &mut self.tmp);
+            self.stats.attn.add(&so);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- pre-LN SASP feed-forward --------------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
+            let s1 = blk.w1.gemm(&self.hn, t, Some(&blk.mask1), m.tile, &mut self.mid);
+            self.stats.ff.add(&s1);
+            ops::add_bias(&mut self.mid, &blk.b1);
+            ops::relu(&mut self.mid);
+            let s2 = blk.w2.gemm(&self.mid, t, Some(&blk.mask2), m.tile, &mut self.tmp);
+            self.stats.ff.add(&s2);
+            ops::add_bias(&mut self.tmp, &blk.b2);
+            ops::residual_add(&mut self.h, &self.tmp);
+        }
+    }
+
+    /// Final LayerNorm + vocabulary head (+ log-softmax for CTC).
+    fn head(&mut self, m: &PreparedModel, out: &mut Vec<f32>, log_probs: bool) {
+        let dims = &m.dims;
+        let (t, d, v) = (dims.seq_len, dims.d_model, dims.vocab);
+        self.hn.clear();
+        self.hn.extend_from_slice(&self.h);
+        ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
+        let st = gemm_f32(&self.hn, &m.head_w, t, d, v, None, m.tile, out);
+        self.stats.other.add(&st);
+        ops::add_bias(out, &m.head_b);
+        if log_probs {
+            ops::log_softmax_rows(out, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::testutil::{mini_dims, zero_ff_tiles};
+    use crate::qos::ctc_greedy;
+    use crate::util::rng::Rng;
+
+    fn random_masks(dims: &ModelDims, tile: usize, p_dead: f64, seed: u64) -> Vec<TileMask> {
+        let mut rng = Rng::new(seed);
+        let (kt, nt) = (dims.d_model / tile, dims.d_ff / tile);
+        let mut out = Vec::new();
+        for _ in 0..dims.n_blocks {
+            out.push(TileMask {
+                kt,
+                nt,
+                live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+            });
+            out.push(TileMask {
+                kt: nt,
+                nt: kt,
+                live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+            });
+        }
+        out
+    }
+
+    fn random_input(dims: &ModelDims, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let feats: Vec<f32> = (0..dims.seq_len * dims.input_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let pad = vec![1.0f32; dims.seq_len];
+        (feats, pad)
+    }
+
+    #[test]
+    fn bundle_roundtrip_preserves_weights() {
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 5);
+        let b = w.to_bundle();
+        let back = EncoderWeights::from_bundle(dims, &b).unwrap();
+        assert_eq!(w.in_w, back.in_w);
+        assert_eq!(w.blocks[1].w2, back.blocks[1].w2);
+        assert_eq!(w.head_b, back.head_b);
+    }
+
+    #[test]
+    fn from_bundle_rejects_wrong_shapes() {
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 5);
+        let mut b = w.to_bundle();
+        b.insert("head.w", Tensor::from_f32(&[2, 2], &[0.0; 4]));
+        assert!(EncoderWeights::from_bundle(dims, &b).is_err());
+    }
+
+    #[test]
+    fn dense_none_equals_full_masks() {
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 5);
+        let (feats, pad) = random_input(&dims, 1);
+        let dense = PreparedModel::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let full_masks = random_masks(&dims, dims.tile, 0.0, 1);
+        let full = PreparedModel::new(&w, dims.tile, Quant::Fp32, Some(&full_masks)).unwrap();
+        let mut fwd = Forward::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fwd.run_feats(&dense, &feats, &pad, &mut a);
+        fwd.run_feats(&full, &feats, &pad, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(dense.ff_sparsity(), 0.0);
+    }
+
+    #[test]
+    fn tile_skipping_equals_zeroed_weights_end_to_end() {
+        // The SASP identity through the whole encoder: skipping ff tiles
+        // == running dense over weights with those tiles zeroed.
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 7);
+        let tile = dims.tile;
+        let masks = random_masks(&dims, tile, 0.4, 3);
+        let (feats, pad) = random_input(&dims, 2);
+
+        let masked = PreparedModel::new(&w, tile, Quant::Fp32, Some(&masks)).unwrap();
+        let mut wz = w.clone();
+        zero_ff_tiles(&mut wz, &masks, tile);
+        let zeroed = PreparedModel::new(&wz, tile, Quant::Fp32, None).unwrap();
+
+        let mut fwd = Forward::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fwd.run_feats(&masked, &feats, &pad, &mut a);
+        let skipped = fwd.stats.ff.tiles_skipped;
+        fwd.run_feats(&zeroed, &feats, &pad, &mut b);
+        assert!(skipped > 0, "mask must actually skip tiles");
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn int8_forward_matches_fake_quantized_fp32_forward() {
+        // Kernel INT8 == FP32 over prune-then-fake-quantized weights,
+        // end to end (the gemm-level identity composed through the
+        // network; the reference applies the same prune→PTQ order the
+        // staging path uses, so the per-tensor scales agree).
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 9);
+        let masks = random_masks(&dims, dims.tile, 0.3, 5);
+        let (feats, pad) = random_input(&dims, 4);
+
+        let int8 = PreparedModel::new(&w, dims.tile, Quant::Int8, Some(&masks)).unwrap();
+        let mut wfq = w.clone();
+        zero_ff_tiles(&mut wfq, &masks, dims.tile);
+        let fq2 = |vals: &mut Vec<f32>, r: usize, c: usize| {
+            let mut t = Tensor::from_f32(&[r, c], vals);
+            fake_quantize(&mut t);
+            *vals = t.f32s();
+        };
+        let (d, f) = (dims.d_model, dims.d_ff);
+        fq2(&mut wfq.in_w, dims.input_dim, d);
+        fq2(&mut wfq.head_w, d, dims.vocab);
+        for blk in wfq.blocks.iter_mut() {
+            fq2(&mut blk.wq, d, d);
+            fq2(&mut blk.wk, d, d);
+            fq2(&mut blk.wv, d, d);
+            fq2(&mut blk.wo, d, d);
+            fq2(&mut blk.w1, d, f);
+            fq2(&mut blk.w2, f, d);
+        }
+        let fp32 = PreparedModel::new(&wfq, dims.tile, Quant::Fp32, Some(&masks)).unwrap();
+
+        let mut fwd = Forward::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fwd.run_feats(&int8, &feats, &pad, &mut a);
+        fwd.run_feats(&fp32, &feats, &pad, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn functional_stats_match_analytic_accounting() {
+        // The analytic x functional cross-check at encoder scope: the ff
+        // schedule the forward pass executed must cost exactly what the
+        // analytic engine charges for the same GEMMs and masks.
+        use crate::model::{GemmKind, GemmShape};
+        use crate::sysim::engine::gemm_on_array;
+        use crate::sysim::SimParams;
+        use crate::systolic::ArrayConfig;
+
+        let dims = mini_dims();
+        let tile = dims.tile;
+        let w = crate::infer::synth::synth_weights(&dims, 11);
+        let masks = random_masks(&dims, tile, 0.5, 7);
+        let model = PreparedModel::new(&w, tile, Quant::Int8, Some(&masks)).unwrap();
+        let (feats, pad) = random_input(&dims, 6);
+        let mut fwd = Forward::new();
+        let mut out = Vec::new();
+        fwd.run_feats(&model, &feats, &pad, &mut out);
+
+        let cfg = ArrayConfig::square(tile, Quant::Int8);
+        let p = SimParams::default();
+        let (t, d, f) = (dims.seq_len, dims.d_model, dims.d_ff);
+        let mut macs = 0u64;
+        let mut bus_words = 0u64;
+        for i in 0..dims.n_blocks {
+            let g1 = GemmShape { m: t, k: d, n: f, kind: GemmKind::FeedForward };
+            let g2 = GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward };
+            let c1 = gemm_on_array(&g1, &cfg, &p, Some(&masks[2 * i]));
+            let c2 = gemm_on_array(&g2, &cfg, &p, Some(&masks[2 * i + 1]));
+            macs += c1.counts.macs + c2.counts.macs;
+            bus_words += c1.counts.bus_words + c2.counts.bus_words;
+        }
+        assert_eq!(fwd.stats.ff.timing.macs as u64, macs);
+        assert_eq!(fwd.stats.ff.timing.total_words() as u64, bus_words);
+        let live: usize = masks.iter().map(TileMask::live_count).sum();
+        let dead: usize = masks.iter().map(|m| m.n_tiles() - m.live_count()).sum();
+        assert_eq!(fwd.stats.ff.tiles_live, live);
+        assert_eq!(fwd.stats.ff.tiles_skipped, dead);
+    }
+
+    #[test]
+    fn pruning_changes_but_does_not_destroy_output() {
+        // Moderate ff pruning perturbs log-probs without NaNs; decode
+        // still yields a valid token sequence.
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 13);
+        let masks = random_masks(&dims, dims.tile, 0.25, 9);
+        let dense = PreparedModel::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let pruned = PreparedModel::new(&w, dims.tile, Quant::Fp32, Some(&masks)).unwrap();
+        let (feats, pad) = random_input(&dims, 8);
+        let mut fwd = Forward::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fwd.run_feats(&dense, &feats, &pad, &mut a);
+        fwd.run_feats(&pruned, &feats, &pad, &mut b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(b.iter().all(|v| v.is_finite()));
+        assert!(a != b, "pruning must perturb the outputs");
+        let hyp = ctc_greedy(&b, dims.seq_len, dims.vocab, dims.ctc_blank);
+        assert!(hyp.iter().all(|s| *s >= 0 && (*s as usize) < dims.vocab));
+    }
+
+    #[test]
+    fn token_input_forward_runs() {
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let w = crate::infer::synth::synth_weights(&dims, 17);
+        let model = PreparedModel::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let mut rng = Rng::new(2);
+        let tokens: Vec<i32> = (0..dims.seq_len)
+            .map(|_| rng.index(dims.vocab) as i32)
+            .collect();
+        let mut fwd = Forward::new();
+        let mut out = Vec::new();
+        fwd.run_tokens(&model, &tokens, &mut out);
+        assert_eq!(out.len(), dims.seq_len * dims.vocab);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prepared_model_rejects_bad_tile_and_masks() {
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 19);
+        assert!(PreparedModel::new(&w, 5, Quant::Fp32, None).is_err());
+        let bad = vec![TileMask::full(1, 1); 2 * dims.n_blocks];
+        assert!(PreparedModel::new(&w, dims.tile, Quant::Fp32, Some(&bad)).is_err());
+        let short = vec![TileMask::full(4, 8)];
+        assert!(PreparedModel::new(&w, dims.tile, Quant::Fp32, Some(&short)).is_err());
+    }
+}

@@ -1,0 +1,481 @@
+//! Tiled masked GEMM kernels — the compute core of the native engine.
+//!
+//! Both kernels execute the *same schedule* as the per-cycle
+//! [`crate::systolic::scheduler::TileScheduler`]: the weight matrix is a
+//! `ceil(K/t) x ceil(N/t)` grid of tiles, iterated j-outer (output
+//! columns hot) / k-inner (accumulation sweep), and a tile whose
+//! [`TileMask`] bit is dead is skipped outright — no weight touch, no
+//! multiply. Per-live-tile costs are accounted with the same closed-form
+//! [`TileTiming`] the analytic system simulator charges, which is what
+//! makes the functional and analytic layers cross-checkable on identical
+//! masks (asserted in the tests below).
+//!
+//! Within a tile the K index ascends and partial products accumulate
+//! straight into the output row, so every output element sees its
+//! products in plain k-ascending order — the FP32 kernel is
+//! value-identical to a naive masked matmul, and the INT8 kernel (which
+//! dequantizes each sign-magnitude byte through a 256-entry table of
+//! exactly the fake-quantized values) is value-identical to the FP32
+//! kernel over fake-quantized weights. That makes the FP32 path the
+//! oracle for the INT8 path at full precision, not just to a tolerance.
+
+use crate::arith::SignMag8;
+use crate::data::Tensor;
+use crate::quant::{quantize, QuantizedTensor};
+use crate::sysim::TileMask;
+use crate::systolic::{ArrayConfig, Quant, TileTiming};
+
+/// Tile-schedule statistics of one or more masked GEMMs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileStats {
+    /// Weight tiles executed.
+    pub tiles_live: usize,
+    /// Weight tiles skipped via the mask (the SASP saving).
+    pub tiles_skipped: usize,
+    /// Closed-form cost of the executed schedule (same accounting as the
+    /// analytic engine and the per-cycle scheduler).
+    pub timing: TileTiming,
+}
+
+impl TileStats {
+    pub fn add(&mut self, o: &TileStats) {
+        self.tiles_live += o.tiles_live;
+        self.tiles_skipped += o.tiles_skipped;
+        self.timing.add(&o.timing);
+    }
+
+    /// Fraction of tiles skipped.
+    pub fn sparsity(&self) -> f64 {
+        let n = self.tiles_live + self.tiles_skipped;
+        self.tiles_skipped as f64 / n.max(1) as f64
+    }
+}
+
+fn check_grid(k: usize, n: usize, tile: usize, mask: Option<&TileMask>) -> (usize, usize) {
+    assert!(tile > 0, "tile must be positive");
+    let kt = k.div_ceil(tile);
+    let nt = n.div_ceil(tile);
+    if let Some(ms) = mask {
+        assert_eq!((ms.kt, ms.nt), (kt, nt), "mask/gemm tile grid mismatch");
+    }
+    (kt, nt)
+}
+
+/// The single tiled schedule both kernels share: j-outer / k-inner over
+/// the `kt x nt` grid, dead tiles skipped, per-live-tile
+/// [`TileTiming::live`] charged. `w_at(kk, c)` supplies the (dequantized)
+/// weight element — monomorphized per kernel, so the FP operation
+/// sequence is *identical* across weight formats (the basis of the
+/// INT8-vs-FP32 oracle identity).
+fn gemm_tiled(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    mask: Option<&TileMask>,
+    tile: usize,
+    quant: Quant,
+    y: &mut Vec<f32>,
+    w_at: impl Fn(usize, usize) -> f32,
+) -> TileStats {
+    assert_eq!(x.len(), m * k, "x must be m x k");
+    let (kt, nt) = check_grid(k, n, tile, mask);
+    y.clear();
+    y.resize(m * n, 0.0);
+    let mut stats = TileStats::default();
+    if m == 0 {
+        return stats;
+    }
+    let per_tile = TileTiming::live(&ArrayConfig::square(tile, quant), m);
+    for j in 0..nt {
+        let n0 = j * tile;
+        let n_hi = (n0 + tile).min(n);
+        for i in 0..kt {
+            if let Some(ms) = mask {
+                if !ms.is_live(i, j) {
+                    stats.tiles_skipped += 1;
+                    continue;
+                }
+            }
+            let k0 = i * tile;
+            let k_hi = (k0 + tile).min(k);
+            for r in 0..m {
+                let xrow = &x[r * k..r * k + k];
+                let yrow = &mut y[r * n + n0..r * n + n_hi];
+                for kk in k0..k_hi {
+                    let xv = xrow[kk];
+                    for (cc, yv) in yrow.iter_mut().enumerate() {
+                        *yv += xv * w_at(kk, n0 + cc);
+                    }
+                }
+            }
+            stats.tiles_live += 1;
+            stats.timing.add(&per_tile);
+        }
+    }
+    stats
+}
+
+/// `y = x[m,k] * w[k,n]` (row-major), skipping dead tiles. `y` is
+/// cleared and resized to `m*n`.
+pub fn gemm_f32(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    mask: Option<&TileMask>,
+    tile: usize,
+    y: &mut Vec<f32>,
+) -> TileStats {
+    assert_eq!(w.len(), k * n, "w must be k x n");
+    gemm_tiled(x, m, k, n, mask, tile, Quant::Fp32, y, |kk, c| w[kk * n + c])
+}
+
+/// A weight matrix quantized to sign-magnitude INT8 with a per-tensor
+/// scale — what `SA_PROG` ships over the bus (§3.2/§3.3), one byte per
+/// weight instead of four.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub k: usize,
+    pub n: usize,
+    /// Row-major `k x n` sign-magnitude encodings
+    /// ([`SignMag8::to_bits`]).
+    pub bits: Vec<u8>,
+    /// Dequantization scale: `w ≈ mag * scale`.
+    pub scale: f32,
+    /// 256-entry dequantization table: `lut[bits] = to_i8(bits) * scale`
+    /// — exactly the fake-quantized weight values, so the INT8 kernel is
+    /// value-identical to the FP32 kernel over `fake_quantize`d weights.
+    lut: Vec<f32>,
+}
+
+impl QuantizedLinear {
+    /// Quantize a row-major `k x n` FP32 matrix ([`crate::quant`] PTQ).
+    pub fn from_f32(w: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        let t = Tensor::from_f32(&[k, n], w);
+        Self::from_quantized(&quantize(&t))
+    }
+
+    /// Wrap an already-quantized tensor (must be 2-D).
+    pub fn from_quantized(q: &QuantizedTensor) -> Self {
+        assert_eq!(q.shape.len(), 2, "quantized weights must be 2-D");
+        let (k, n) = (q.shape[0], q.shape[1]);
+        let bits: Vec<u8> = q.sign_mag().iter().map(|sm| sm.to_bits()).collect();
+        let mut lut = vec![0.0f32; 256];
+        for (b, slot) in lut.iter_mut().enumerate() {
+            *slot = SignMag8::from_bits(b as u8).to_i8() as f32 * q.scale;
+        }
+        QuantizedLinear { k, n, bits, scale: q.scale, lut }
+    }
+
+    /// Dequantized value of one stored weight byte.
+    pub fn dequant(&self, bits: u8) -> f32 {
+        self.lut[bits as usize]
+    }
+}
+
+/// INT8 variant of [`gemm_f32`]: the identical schedule, weights read
+/// as sign-magnitude bytes and dequantized through the table.
+pub fn gemm_int8(
+    x: &[f32],
+    w: &QuantizedLinear,
+    m: usize,
+    mask: Option<&TileMask>,
+    tile: usize,
+    y: &mut Vec<f32>,
+) -> TileStats {
+    let (k, n) = (w.k, w.n);
+    let (bits, lut) = (&w.bits, &w.lut);
+    gemm_tiled(x, m, k, n, mask, tile, Quant::Int8, y, |kk, c| {
+        lut[bits[kk * n + c] as usize]
+    })
+}
+
+/// One weight GEMM of the prepared model: FP32 or kernel-INT8.
+#[derive(Clone, Debug)]
+pub enum Linear {
+    F32 { k: usize, n: usize, w: Vec<f32> },
+    Int8(QuantizedLinear),
+}
+
+impl Linear {
+    pub fn from_f32(w: Vec<f32>, k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        Linear::F32 { k, n, w }
+    }
+
+    pub fn quantized(w: &[f32], k: usize, n: usize) -> Self {
+        Linear::Int8(QuantizedLinear::from_f32(w, k, n))
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            Linear::F32 { k, .. } => *k,
+            Linear::Int8(q) => q.k,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            Linear::F32 { n, .. } => *n,
+            Linear::Int8(q) => q.n,
+        }
+    }
+
+    /// Run the masked GEMM for `m` input rows.
+    pub fn gemm(
+        &self,
+        x: &[f32],
+        m: usize,
+        mask: Option<&TileMask>,
+        tile: usize,
+        y: &mut Vec<f32>,
+    ) -> TileStats {
+        match self {
+            Linear::F32 { k, n, w } => gemm_f32(x, w, m, *k, *n, mask, tile, y),
+            Linear::Int8(q) => gemm_int8(x, q, m, mask, tile, y),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GemmKind, GemmShape};
+    use crate::quant::fake_quantize;
+    use crate::sysim::engine::gemm_on_array;
+    use crate::sysim::SimParams;
+    use crate::systolic::TileScheduler;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Reference: naive matmul with dead tiles treated as zero weights.
+    fn masked_matmul(
+        x: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        mask: Option<&TileMask>,
+        t: usize,
+    ) -> Vec<f32> {
+        let nt = n.div_ceil(t);
+        let mut y = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    let live = mask.map_or(true, |ms| ms.live[(kk / t) * nt + j / t]);
+                    if live {
+                        acc += x[i * k + kk] * w[kk * n + j];
+                    }
+                }
+                y[i * n + j] = acc;
+            }
+        }
+        y
+    }
+
+    fn random_mask(rng: &mut Rng, kt: usize, nt: usize, p_dead: f64) -> TileMask {
+        TileMask {
+            kt,
+            nt,
+            live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+        }
+    }
+
+    #[test]
+    fn f32_gemm_matches_reference_matmul() {
+        check("infer gemm_f32 == masked matmul", 24, |rng: &mut Rng| {
+            let t = [2usize, 4, 8][rng.index(3)];
+            let m = rng.index(10) + 1;
+            let k = rng.index(3 * t) + 1;
+            let n = rng.index(3 * t) + 1;
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mask = random_mask(rng, k.div_ceil(t), n.div_ceil(t), 0.3);
+            let mut y = Vec::new();
+            let stats = gemm_f32(&x, &w, m, k, n, Some(&mask), t, &mut y);
+            let want = masked_matmul(&x, &w, m, k, n, Some(&mask), t);
+            let close = y
+                .iter()
+                .zip(&want)
+                .all(|(g, r)| (g - r).abs() <= 1e-5 * r.abs().max(1.0));
+            let counts_ok = stats.tiles_live == mask.live_count()
+                && stats.tiles_skipped == mask.n_tiles() - mask.live_count();
+            (close && counts_ok, format!("t={t} m={m} k={k} n={n}"))
+        });
+    }
+
+    #[test]
+    fn prop_int8_gemm_matches_fake_quantized_f32_oracle() {
+        // Satellite property: the INT8 tiled GEMM agrees with the FP32
+        // tiled GEMM over fake-quantized weights within 1 ULP of the
+        // dequant scale — including on masked (pruned) tiles. By kernel
+        // construction they run the identical FP op sequence, so the
+        // difference is exactly zero; the ULP bound is the contract.
+        check("int8 gemm == fake-quant f32 gemm", 32, |rng: &mut Rng| {
+            let t = [2usize, 4, 8][rng.index(3)];
+            let m = rng.index(8) + 1;
+            let k = rng.index(3 * t) + 1;
+            let n = rng.index(3 * t) + 1;
+            let scale_pow = rng.index(5) as i32 - 2;
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n)
+                .map(|_| (rng.normal() as f32) * 10f32.powi(scale_pow))
+                .collect();
+            let mask = random_mask(rng, k.div_ceil(t), n.div_ceil(t), 0.4);
+            let q = QuantizedLinear::from_f32(&w, k, n);
+            let mut got = Vec::new();
+            gemm_int8(&x, &q, m, Some(&mask), t, &mut got);
+            let mut wfq = Tensor::from_f32(&[k, n], &w);
+            let fq_scale = fake_quantize(&mut wfq);
+            let mut want = Vec::new();
+            gemm_f32(&x, &wfq.f32s(), m, k, n, Some(&mask), t, &mut want);
+            let tol = fq_scale.abs() * f32::EPSILON;
+            for (g, r) in got.iter().zip(&want) {
+                if (g - r).abs() > tol {
+                    return (false, format!("t={t} m={m} k={k} n={n}: {g} vs {r}"));
+                }
+            }
+            (q.scale == fq_scale, format!("scale {} vs {}", q.scale, fq_scale))
+        });
+    }
+
+    #[test]
+    fn dequant_table_matches_sign_magnitude() {
+        let w = vec![1.27f32, -1.27, 0.0, 0.635];
+        let q = QuantizedLinear::from_f32(&w, 2, 2);
+        assert!((q.scale - 0.01).abs() < 1e-6);
+        assert!((q.dequant(SignMag8 { sign: false, mag: 127 }.to_bits()) - 1.27).abs() < 1e-6);
+        assert!((q.dequant(SignMag8 { sign: true, mag: 127 }.to_bits()) + 1.27).abs() < 1e-6);
+        // Negative zero dequantizes to exactly 0.
+        assert_eq!(q.dequant(SignMag8 { sign: true, mag: 0 }.to_bits()), 0.0);
+    }
+
+    #[test]
+    fn stats_match_per_cycle_scheduler_on_identical_masks() {
+        // Functional x functional cross-check: same x/w/mask through the
+        // native kernel and through the per-cycle TileScheduler must give
+        // the same outputs (tolerance: FTZ arithmetic vs plain f32) and
+        // the *same* closed-form schedule accounting, exactly.
+        let mut rng = Rng::new(41);
+        let (t, m, k, n) = (4usize, 6, 16, 12);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask = random_mask(&mut rng, 4, 3, 0.4);
+        let mut y = Vec::new();
+        let stats = gemm_f32(&x, &w, m, k, n, Some(&mask), t, &mut y);
+        let mut sched = TileScheduler::new(ArrayConfig::square(t, Quant::Fp32));
+        let (want, sstats) = sched.gemm(&x, &w, m, k, n, Some(&mask), 1.0);
+        for (g, r) in y.iter().zip(&want) {
+            assert!((g - r).abs() <= 1e-4 * r.abs().max(1.0), "{g} vs {r}");
+        }
+        assert_eq!(stats.tiles_live, sstats.tiles_live);
+        assert_eq!(stats.tiles_skipped, sstats.tiles_skipped);
+        assert_eq!(stats.timing, sstats.timing);
+    }
+
+    #[test]
+    fn stats_match_analytic_engine_on_identical_masks() {
+        // Functional x analytic cross-check: the schedule the native
+        // kernel actually executed must equal what the analytic system
+        // simulator charges for the same GEMM + mask.
+        let mut rng = Rng::new(43);
+        let (t, m, k, n) = (8usize, 16, 32, 24);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask = random_mask(&mut rng, 4, 3, 0.5);
+        let g = GemmShape { m, k, n, kind: GemmKind::FeedForward };
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let cfg = ArrayConfig::square(t, quant);
+            let cost = gemm_on_array(&g, &cfg, &SimParams::default(), Some(&mask));
+            let mut y = Vec::new();
+            let stats = match quant {
+                Quant::Fp32 => gemm_f32(&x, &w, m, k, n, Some(&mask), t, &mut y),
+                Quant::Int8 => {
+                    let q = QuantizedLinear::from_f32(&w, k, n);
+                    gemm_int8(&x, &q, m, Some(&mask), t, &mut y)
+                }
+            };
+            assert_eq!(cost.counts.macs, stats.timing.macs as u64, "{quant:?}");
+            assert_eq!(
+                cost.counts.bus_words,
+                stats.timing.total_words() as u64,
+                "{quant:?}"
+            );
+            assert_eq!(
+                cost.counts.array_busy_cycles,
+                stats.timing.array_cycles as u64,
+                "{quant:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_equals_full_mask_and_none() {
+        let mut rng = Rng::new(3);
+        let (t, m, k, n) = (4usize, 5, 8, 8);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let sa = gemm_f32(&x, &w, m, k, n, None, t, &mut a);
+        let full = TileMask::full(2, 2);
+        let sb = gemm_f32(&x, &w, m, k, n, Some(&full), t, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        assert_eq!(sa.tiles_live, 4);
+        assert_eq!(sa.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn fully_pruned_column_is_zero() {
+        let mut rng = Rng::new(23);
+        let (t, m, k, n) = (4usize, 3, 8, 8);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask = TileMask { kt: 2, nt: 2, live: vec![false, true, false, true] };
+        let mut y = Vec::new();
+        let stats = gemm_f32(&x, &w, m, k, n, Some(&mask), t, &mut y);
+        for mm in 0..m {
+            for cc in 0..t {
+                assert_eq!(y[mm * n + cc], 0.0);
+            }
+        }
+        assert!(y.iter().any(|v| *v != 0.0));
+        assert_eq!(stats.tiles_skipped, 2);
+        assert_eq!(stats.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn linear_dispatch_consistent() {
+        let mut rng = Rng::new(9);
+        let (t, m, k, n) = (4usize, 3, 8, 8);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let lin_f = Linear::from_f32(w.clone(), k, n);
+        let lin_q = Linear::quantized(&w, k, n);
+        assert_eq!((lin_f.k(), lin_f.n()), (k, n));
+        assert_eq!((lin_q.k(), lin_q.n()), (k, n));
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        lin_f.gemm(&x, m, None, t, &mut a);
+        lin_q.gemm(&x, m, None, t, &mut b);
+        // INT8 roundtrip error bounded by scale/2 per weight, k per output.
+        for (g, r) in a.iter().zip(&b) {
+            assert!((g - r).abs() < 0.5, "{g} vs {r}");
+        }
+    }
+
+    #[test]
+    fn empty_m_returns_empty() {
+        let w = vec![1.0f32; 16];
+        let mut y = vec![9.0f32; 3];
+        let stats = gemm_f32(&[], &w, 0, 4, 4, None, 4, &mut y);
+        assert!(y.is_empty());
+        assert_eq!(stats, TileStats::default());
+    }
+}

@@ -1,0 +1,85 @@
+//! Native pruned+quantized inference engine — the transformer encoder
+//! forward pass executed entirely in rust, no PJRT required.
+//!
+//! The PJRT path ([`crate::runtime`]) runs the AOT-compiled artifacts,
+//! but needs `make artifacts` and a linked `xla_extension`; the tier-1
+//! build stubs `xla` out, so on a fresh checkout the repository could not
+//! execute the model whose QoS numbers it reports. This module closes
+//! that gap with a functional engine over the same weight format
+//! ([`crate::data::tensorfile`] bundles, python `param_names` layout):
+//!
+//! - [`gemm`] — the tiled masked GEMM kernels. The tile grid, the
+//!   j-outer/k-inner schedule, and the dead-tile skip are exactly those
+//!   of [`crate::systolic::scheduler::TileScheduler`] (cross-validated in
+//!   tests, per-tile costs accounted with the same
+//!   [`crate::systolic::TileTiming`]), so the functional engine and the
+//!   analytic system simulator charge identical schedules for identical
+//!   [`crate::sysim::TileMask`]s. The INT8 kernel stores weights as
+//!   sign-magnitude bytes ([`crate::arith::SignMag8`]) with the
+//!   [`crate::quant`] per-tensor scale; the FP32 kernel over
+//!   fake-quantized weights is its value-exact oracle.
+//! - [`ops`] — the non-GEMM operators (LayerNorm, masked softmax, ReLU,
+//!   GELU, residual adds, sinusoidal positions, log-softmax CTC head),
+//!   mirroring `python/compile/model.py`.
+//! - [`encoder`] — model dimensions, weight containers, and the
+//!   buffer-reusing forward pass over [`crate::model::zoo`]-shaped
+//!   encoders (pre-LN MHSA + SASP feed-forward).
+//! - [`backend`] — [`NativeBackend`]: prunes/quantizes its weights and
+//!   serves as both a [`crate::coordinator::serve::ServeBackend`] and a
+//!   [`crate::qos::QosBackend`], making `qos/eval`, `coordinator/serve`,
+//!   and the `asr_pipeline`/`serve` examples fully offline.
+//! - [`synth`] — deterministic synthetic weights + a self-labeled test
+//!   set (references = the dense FP32 model's own greedy decode), so QoS
+//!   degradation curves are measurable without trained artifacts.
+
+pub mod backend;
+pub mod encoder;
+pub mod gemm;
+pub mod ops;
+pub mod synth;
+
+pub use backend::NativeBackend;
+pub use encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
+pub use gemm::{Linear, QuantizedLinear, TileStats};
+pub use synth::{synth_testset, synth_weights};
+
+/// Shared fixtures for this module's test suites.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::Tensor;
+    use crate::pruning::norms::apply_mask_to_weights;
+    use crate::sysim::TileMask;
+
+    use super::encoder::{EncoderWeights, ModelDims};
+
+    /// A small model that keeps debug-mode tests fast.
+    pub fn mini_dims() -> ModelDims {
+        ModelDims {
+            input_dim: 8,
+            vocab: 12,
+            d_model: 32,
+            n_heads: 4,
+            d_ff: 64,
+            n_blocks: 2,
+            seq_len: 24,
+            tile: 8,
+            ctc_blank: 11,
+            token_input: false,
+        }
+    }
+
+    /// Zero the feed-forward tiles the masks mark dead, in place — the
+    /// prune-by-zeroing reference the skipping paths are checked
+    /// against.
+    pub fn zero_ff_tiles(w: &mut EncoderWeights, masks: &[TileMask], tile: usize) {
+        let (d, f) = (w.dims.d_model, w.dims.d_ff);
+        for (i, blk) in w.blocks.iter_mut().enumerate() {
+            let mut t1 = Tensor::from_f32(&[d, f], &blk.w1);
+            apply_mask_to_weights(&mut t1, &masks[2 * i], tile);
+            blk.w1 = t1.f32s();
+            let mut t2 = Tensor::from_f32(&[f, d], &blk.w2);
+            apply_mask_to_weights(&mut t2, &masks[2 * i + 1], tile);
+            blk.w2 = t2.f32s();
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Non-GEMM operators of the native engine — the software-executed
+//! remainder of an encoder block (the paper's §4.1: GEMMs dominate, the
+//! rest runs on the core). Semantics mirror `python/compile/model.py`
+//! so the native engine computes the same function as the AOT artifact.
+
+/// In-place LayerNorm over each length-`d` row of `x`: population
+/// variance, `eps = 1e-5`, learned gain/shift — `_layer_norm` in the
+/// python model.
+pub fn layer_norm(x: &mut [f32], d: usize, gamma: &[f32], beta: &[f32]) {
+    assert!(d > 0 && x.len() % d == 0, "rows must be length {d}");
+    assert_eq!(gamma.len(), d);
+    assert_eq!(beta.len(), d);
+    for row in x.chunks_exact_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row
+            .iter()
+            .map(|v| {
+                let c = v - mean;
+                c * c
+            })
+            .sum::<f32>()
+            / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (v, (g, b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+            *v = (*v - mean) * inv * g + b;
+        }
+    }
+}
+
+/// Numerically stable in-place softmax over each length-`n` row.
+pub fn softmax_rows(x: &mut [f32], n: usize) {
+    assert!(n > 0 && x.len() % n == 0);
+    for row in x.chunks_exact_mut(n) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, v| a.max(*v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// In-place log-softmax over each length-`n` row (the CTC head's
+/// `jax.nn.log_softmax`).
+pub fn log_softmax_rows(x: &mut [f32], n: usize) {
+    assert!(n > 0 && x.len() % n == 0);
+    for row in x.chunks_exact_mut(n) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, v| a.max(*v));
+        let sum: f32 = row.iter().map(|v| (*v - max).exp()).sum();
+        let lse = max + sum.ln();
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// In-place ReLU (the tiny trained models' feed-forward activation).
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place GELU (tanh approximation) — the activation of the full-size
+/// Table 1 encoders; the tiny artifacts use [`relu`].
+pub fn gelu(x: &mut [f32]) {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    for v in x.iter_mut() {
+        let u = *v;
+        let inner = SQRT_2_OVER_PI * (u + 0.044_715 * u * u * u);
+        *v = 0.5 * u * (1.0 + inner.tanh());
+    }
+}
+
+/// `x[row] += bias` for each length-`bias.len()` row.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    assert!(n > 0 && x.len() % n == 0);
+    for row in x.chunks_exact_mut(n) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `acc += x` elementwise (residual connections, position table add).
+pub fn residual_add(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}
+
+/// Fixed sinusoidal position table, row-major `t x d` — the same
+/// `sin/cos(pos / 10000^(2*(i/2)/d))` layout as `sinusoidal_pe` in the
+/// python model.
+pub fn sinusoidal_pe(t: usize, d: usize) -> Vec<f32> {
+    let mut pe = vec![0.0f32; t * d];
+    for pos in 0..t {
+        for dim in 0..d {
+            let exponent = (2 * (dim / 2)) as f64 / d as f64;
+            let angle = pos as f64 / 10000f64.powf(exponent);
+            pe[pos * d + dim] = if dim % 2 == 0 {
+                angle.sin() as f32
+            } else {
+                angle.cos() as f32
+            };
+        }
+    }
+    pe
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0, /* row 2 */ -5.0, 0.0, 5.0, 10.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        layer_norm(&mut x, 4, &g, &b);
+        for row in x.chunks_exact(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_gain_shift() {
+        let mut x = vec![-1.0f32, 1.0];
+        layer_norm(&mut x, 2, &[2.0, 2.0], &[1.0, 1.0]);
+        // Normalized row is [-1, 1] (up to eps), scaled by 2 shifted by 1.
+        assert!((x[0] + 1.0).abs() < 1e-3, "{x:?}");
+        assert!((x[1] - 3.0).abs() < 1e-3, "{x:?}");
+    }
+
+    #[test]
+    fn softmax_rows_normalized_and_ordered() {
+        let mut x = vec![0.0f32, 1.0, 2.0, /* large magnitudes */ 1000.0, 1001.0, 999.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+        assert!(x[4] > x[3] && x[3] > x[5], "stable under large inputs");
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax_log() {
+        let mut a = vec![0.3f32, -1.2, 2.5, 0.0];
+        let mut b = a.clone();
+        log_softmax_rows(&mut a, 4);
+        softmax_rows(&mut b, 4);
+        for (la, sb) in a.iter().zip(&b) {
+            assert!((la - sb.ln()).abs() < 1e-5, "{la} vs ln {sb}");
+        }
+    }
+
+    #[test]
+    fn relu_and_gelu_basics() {
+        let mut x = vec![-2.0f32, -0.5, 0.0, 0.5, 2.0];
+        let mut y = x.clone();
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 0.0, 0.5, 2.0]);
+        gelu(&mut y);
+        // GELU(0) = 0; GELU(2) ~ 1.954; GELU(-2) ~ -0.045.
+        assert_eq!(y[2], 0.0);
+        assert!((y[4] - 1.954).abs() < 5e-3, "{}", y[4]);
+        assert!((y[0] + 0.045).abs() < 5e-3, "{}", y[0]);
+    }
+
+    #[test]
+    fn bias_and_residual() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        add_bias(&mut x, &[10.0, 20.0]);
+        assert_eq!(x, vec![11.0, 22.0, 13.0, 24.0]);
+        residual_add(&mut x, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(x, vec![12.0, 23.0, 14.0, 25.0]);
+    }
+
+    #[test]
+    fn sinusoidal_pe_layout() {
+        let pe = sinusoidal_pe(4, 6);
+        // Position 0: sin(0) = 0 on even dims, cos(0) = 1 on odd dims.
+        assert_eq!(&pe[0..6], &[0.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
+        // Position 1, dim 0: sin(1).
+        assert!((pe[6] - 1f64.sin() as f32).abs() < 1e-6);
+        // Position 1, dim 1: cos(1 / 10000^0) = cos(1) (dim//2 == 0).
+        assert!((pe[7] - 1f64.cos() as f32).abs() < 1e-6);
+        // Position 2, dim 2: sin(2 / 10000^(2/6)).
+        let want = (2.0 / 10000f64.powf(2.0 / 6.0)).sin() as f32;
+        assert!((pe[2 * 6 + 2] - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,191 @@
+//! Deterministic synthetic models + self-labeled test sets — what makes
+//! the QoS surfaces runnable on a checkout with no trained artifacts.
+//!
+//! Weights follow python `init_params` (scaled-normal dense layers, unit
+//! LayerNorm gains, zero biases) from the crate's own xoshiro RNG, so
+//! every run regenerates the identical model. The test set is labeled by
+//! the model itself: references are the **dense FP32** engine's greedy
+//! CTC decode, so the unpruned baseline scores WER 0 by construction and
+//! every pruned/quantized configuration measures pure degradation — the
+//! same role the trained tiny model plays for the PJRT path.
+
+use anyhow::Result;
+
+use crate::data::{Bundle, Tensor};
+use crate::qos::ctc_greedy;
+use crate::systolic::Quant;
+use crate::util::rng::Rng;
+
+use super::encoder::{BlockWeights, EncoderWeights, Forward, ModelDims, PreparedModel};
+
+fn dense(rng: &mut Rng, m: usize, n: usize) -> Vec<f32> {
+    let std = (2.0 / (m + n) as f64).sqrt();
+    (0..m * n).map(|_| (rng.normal() * std) as f32).collect()
+}
+
+/// Scaled-normal encoder weights for `dims` (python `init_params`).
+pub fn synth_weights(dims: &ModelDims, seed: u64) -> EncoderWeights {
+    let mut rng = Rng::new(seed ^ 0x1A7E_57EE);
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let in_rows = if dims.token_input { v } else { dims.input_dim };
+    let in_w = dense(&mut rng, in_rows, d);
+    let blocks = (0..dims.n_blocks)
+        .map(|_| BlockWeights {
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            wq: dense(&mut rng, d, d),
+            wk: dense(&mut rng, d, d),
+            wv: dense(&mut rng, d, d),
+            wo: dense(&mut rng, d, d),
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+            w1: dense(&mut rng, d, f),
+            b1: vec![0.0; f],
+            w2: dense(&mut rng, f, d),
+            b2: vec![0.0; d],
+        })
+        .collect();
+    EncoderWeights {
+        dims: *dims,
+        in_w,
+        in_b: vec![0.0; d],
+        blocks,
+        lnf_g: vec![1.0; d],
+        lnf_b: vec![0.0; d],
+        head_w: dense(&mut rng, d, v),
+        head_b: vec![0.0; v],
+    }
+}
+
+/// A synthetic ASR test set over `w`, in the `testset_asr.bin` bundle
+/// layout (`feats`, `feat_len`, `labels`, `label_len`): random feature
+/// matrices with varying valid lengths, labeled by the dense FP32
+/// model's own greedy decode.
+pub fn synth_testset(w: &EncoderWeights, n_utts: usize, seed: u64) -> Result<Bundle> {
+    let dims = w.dims;
+    assert!(!dims.token_input, "ASR test sets need a feature-input model");
+    assert!(n_utts > 0);
+    let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
+    let mut rng = Rng::new(seed ^ 0x7E57_5E7);
+
+    let teacher = PreparedModel::new(w, dims.tile, Quant::Fp32, None)?;
+    let mut fwd = Forward::new();
+    let mut lp = Vec::new();
+
+    let mut feats = Vec::with_capacity(n_utts * t * f);
+    let mut feat_len = Vec::with_capacity(n_utts);
+    let mut refs: Vec<Vec<i32>> = Vec::with_capacity(n_utts);
+    for _ in 0..n_utts {
+        let len = t / 2 + rng.index(t / 2 + 1);
+        let utt: Vec<f32> = (0..t * f)
+            .map(|i| {
+                if i / f < len {
+                    rng.normal() as f32 * 0.5
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let mut pad = vec![0.0f32; t];
+        for p in pad.iter_mut().take(len) {
+            *p = 1.0;
+        }
+        fwd.run_feats(&teacher, &utt, &pad, &mut lp);
+        refs.push(ctc_greedy(&lp, len, v, dims.ctc_blank));
+        feats.extend_from_slice(&utt);
+        feat_len.push(len as i32);
+    }
+
+    let lmax = refs.iter().map(Vec::len).max().unwrap_or(0).max(1);
+    let mut labels = vec![0i32; n_utts * lmax];
+    let mut label_len = Vec::with_capacity(n_utts);
+    for (i, r) in refs.iter().enumerate() {
+        labels[i * lmax..i * lmax + r.len()].copy_from_slice(r);
+        label_len.push(r.len() as i32);
+    }
+
+    let mut b = Bundle::default();
+    b.insert("feats", Tensor::from_f32(&[n_utts, t, f], &feats));
+    b.insert("feat_len", Tensor::from_i32(&[n_utts], &feat_len));
+    b.insert("labels", Tensor::from_i32(&[n_utts, lmax], &labels));
+    b.insert("label_len", Tensor::from_i32(&[n_utts], &label_len));
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tensorfile::{emit_bundle, parse_bundle};
+    use crate::data::DType;
+    use crate::infer::testutil::mini_dims;
+
+    #[test]
+    fn weights_deterministic_and_shaped() {
+        let dims = mini_dims();
+        let a = synth_weights(&dims, 3);
+        let b = synth_weights(&dims, 3);
+        let c = synth_weights(&dims, 4);
+        assert_eq!(a.in_w, b.in_w);
+        assert_eq!(a.blocks[1].w1, b.blocks[1].w1);
+        assert_ne!(a.in_w, c.in_w, "different seeds differ");
+        assert_eq!(a.in_w.len(), dims.input_dim * dims.d_model);
+        assert_eq!(a.blocks.len(), dims.n_blocks);
+        assert!(a.blocks[0].ln1_g.iter().all(|g| *g == 1.0));
+        // Scaled init: weights are small but not degenerate.
+        let amax = a.in_w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(amax > 0.0 && amax < 2.0, "amax {amax}");
+    }
+
+    #[test]
+    fn testset_layout_and_tensorfile_roundtrip() {
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 3);
+        let ts = synth_testset(&w, 5, 1).unwrap();
+        let feats = ts.get("feats").unwrap();
+        assert_eq!(feats.shape, vec![5, dims.seq_len, dims.input_dim]);
+        assert_eq!(feats.dtype, DType::F32);
+        let fl = ts.get("feat_len").unwrap().i32s();
+        assert_eq!(fl.len(), 5);
+        assert!(fl.iter().all(|l| *l as usize >= dims.seq_len / 2));
+        let labels = ts.get("labels").unwrap();
+        let ll = ts.get("label_len").unwrap().i32s();
+        assert_eq!(labels.shape[0], 5);
+        for (i, l) in ll.iter().enumerate() {
+            assert!(*l as usize <= labels.shape[1], "utt {i}");
+        }
+        // The bundle survives the tensorfile wire format.
+        let rt = parse_bundle(&emit_bundle(&ts)).unwrap();
+        assert_eq!(rt.get("feats"), ts.get("feats"));
+        assert_eq!(rt.get("labels"), ts.get("labels"));
+    }
+
+    #[test]
+    fn teacher_labels_reproduce_under_dense_decode() {
+        // Decoding the dense model again must reproduce the references
+        // exactly — the WER-0 baseline property the examples rely on.
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 5);
+        let ts = synth_testset(&w, 3, 2).unwrap();
+        let model = PreparedModel::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let mut fwd = Forward::new();
+        let feats = ts.get("feats").unwrap().f32s();
+        let fl = ts.get("feat_len").unwrap().i32s();
+        let labels = ts.get("labels").unwrap();
+        let lmax = labels.shape[1];
+        let lvals = labels.i32s();
+        let ll = ts.get("label_len").unwrap().i32s();
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        let mut lp = Vec::new();
+        for i in 0..3usize {
+            let len = fl[i] as usize;
+            let mut pad = vec![0.0f32; t];
+            for p in pad.iter_mut().take(len) {
+                *p = 1.0;
+            }
+            fwd.run_feats(&model, &feats[i * t * f..(i + 1) * t * f], &pad, &mut lp);
+            let hyp = ctc_greedy(&lp, len, dims.vocab, dims.ctc_blank);
+            let want = lvals[i * lmax..i * lmax + ll[i] as usize].to_vec();
+            assert_eq!(hyp, want, "utt {i}");
+        }
+    }
+}

@@ -20,7 +20,15 @@
 //!   design-space explorer that ties them together ([`coordinator`]).
 //!
 //! Python runs only at build time (`make artifacts`); the binary is
-//! self-contained afterwards.
+//! self-contained afterwards. The native inference engine ([`infer`])
+//! additionally runs the encoder end-to-end in pure rust, so the QoS and
+//! serving surfaces work with no PJRT artifacts at all.
+
+// GEMM-shaped signatures (x, w, dims, mask, tile, output...) exceed
+// clippy's argument-count threshold throughout the kernel layers
+// (systolic scheduler, sysim engine, infer kernels); the tuple/struct
+// alternatives obscure more than they help at these call sites.
+#![allow(clippy::too_many_arguments)]
 
 pub mod arith;
 pub mod config;
@@ -28,6 +36,7 @@ pub mod coordinator;
 pub mod data;
 pub mod harness;
 pub mod hwmodel;
+pub mod infer;
 pub mod model;
 pub mod pruning;
 pub mod qos;

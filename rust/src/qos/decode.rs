@@ -79,4 +79,55 @@ mod tests {
         let logits = vec![0.1, 0.9, 0.0, /* row 2 */ 5.0, 1.0, 2.0];
         assert_eq!(argmax_decode(&logits, 2, 3), vec![1, 0]);
     }
+
+    #[test]
+    fn empty_logits_decode_empty() {
+        // Zero valid frames / zero positions over an empty buffer must
+        // yield empty hypotheses, not panic.
+        assert!(ctc_greedy(&[], 0, 3, 2).is_empty());
+        assert!(argmax_decode(&[], 0, 3).is_empty());
+        // Zero valid frames with a non-empty buffer: frames are ignored.
+        let lp = one_hot_frames(&[0, 1], 3);
+        assert!(ctc_greedy(&lp, 0, 3, 2).is_empty());
+    }
+
+    #[test]
+    fn all_blank_long_sequence_decodes_empty() {
+        // All-blank across a long utterance, including blank at a
+        // non-zero index, collapses to nothing.
+        let path = vec![1i32; 50];
+        let lp = one_hot_frames(&path, 4);
+        assert!(ctc_greedy(&lp, 50, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn argmax_tie_breaks_to_lowest_index() {
+        // Exact ties keep the first maximum (strict `>` comparison) —
+        // the deterministic contract both serving paths rely on.
+        let logits = vec![
+            2.0, 2.0, 1.0, // tie between 0 and 1 -> 0
+            -1.0, 3.0, 3.0, // tie between 1 and 2 -> 1
+            7.0, 7.0, 7.0, // three-way tie -> 0
+        ];
+        assert_eq!(argmax_decode(&logits, 3, 3), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn ctc_tie_breaks_to_lowest_index() {
+        // A frame tied between the blank (2) and symbol 0 resolves to
+        // symbol 0 (lowest index), which is then emitted.
+        let mut lp = vec![-10.0f32; 2 * 3];
+        lp[0] = 0.0; // frame 0: symbol 0
+        lp[2] = 0.0; // frame 0: blank, tied with symbol 0
+        lp[3 + 2] = 0.0; // frame 1: blank alone
+        assert_eq!(ctc_greedy(&lp, 2, 3, 2), vec![0]);
+    }
+
+    #[test]
+    fn repeated_symbol_across_blank_re_emitted() {
+        // [0, blank, 0] emits 0 twice — the blank resets the repeat
+        // collapse (standard CTC best-path semantics).
+        let lp = one_hot_frames(&[0, 2, 0], 3);
+        assert_eq!(ctc_greedy(&lp, 3, 3, 2), vec![0, 0]);
+    }
 }

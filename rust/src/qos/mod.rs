@@ -1,12 +1,14 @@
 //! Quality-of-service tier: WER / BLEU metrics, CTC decoding, and the
-//! evaluators that run the pruned+quantized model through PJRT on the
-//! held-out test set — the paper's "inference is performed on a target
-//! dataset, in order to gather QoS metrics" (§3.1).
+//! evaluators that run the pruned+quantized model on the held-out test
+//! set — the paper's "inference is performed on a target dataset, in
+//! order to gather QoS metrics" (§3.1). Execution is pluggable via
+//! [`QosBackend`]: PJRT artifacts ([`PjrtBackend`]) or the native rust
+//! engine ([`crate::infer::NativeBackend`]).
 
 pub mod decode;
 pub mod eval;
 pub mod metrics;
 
 pub use decode::ctc_greedy;
-pub use eval::{AsrEvaluator, MtEvaluator, QosPoint};
+pub use eval::{AsrEvaluator, EvalMeta, MtEvaluator, PjrtBackend, QosBackend, QosPoint};
 pub use metrics::{bleu, edit_distance, token_error_rate};

@@ -18,13 +18,28 @@ pub struct QuantizedTensor {
 
 /// Per-tensor symmetric quantization: `scale = max|w| / 127`,
 /// `q = clamp(round_ties_even(w / scale), -127, 127)`.
+///
+/// Non-finite weights are sanitized rather than allowed to poison the
+/// per-tensor scale: `amax` ranges over finite values only (a single
+/// NaN/inf would otherwise produce a NaN/inf scale and garbage for the
+/// whole tensor), NaN quantizes to 0, and ±inf saturates to ±127.
 pub fn quantize(w: &Tensor) -> QuantizedTensor {
     let vals = w.f32s();
-    let amax = vals.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+    let amax = vals
+        .iter()
+        .filter(|v| v.is_finite())
+        .fold(0.0f32, |a, v| a.max(v.abs()));
     let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
     let values = vals
         .iter()
-        .map(|v| (v / scale).round_ties_even().clamp(-127.0, 127.0) as i8)
+        .map(|v| {
+            if v.is_nan() {
+                0
+            } else {
+                // ±inf / scale stays ±inf and clamps to ±127.
+                (v / scale).round_ties_even().clamp(-127.0, 127.0) as i8
+            }
+        })
         .collect();
     QuantizedTensor { values, shape: w.shape.clone(), scale }
 }
@@ -63,6 +78,29 @@ mod tests {
         let q = quantize(&w);
         assert!((q.scale - 0.01).abs() < 1e-6);
         assert_eq!(q.values, vec![0, 127, -127, 64]); // 63.5 rounds to even
+    }
+
+    #[test]
+    fn non_finite_weights_sanitized() {
+        // NaN/inf must not poison the scale: the finite values still
+        // quantize exactly as they would alone.
+        let w = Tensor::from_f32(
+            &[5],
+            &[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.27, -0.635],
+        );
+        let q = quantize(&w);
+        assert!((q.scale - 0.01).abs() < 1e-6, "scale {}", q.scale);
+        assert_eq!(q.values, vec![0, 127, -127, 127, -64]);
+        let dq = dequantize(&q).f32s();
+        assert!(dq.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn all_non_finite_tensor_gets_unit_scale() {
+        let w = Tensor::from_f32(&[2], &[f32::NAN, f32::INFINITY]);
+        let q = quantize(&w);
+        assert_eq!(q.scale, 1.0);
+        assert_eq!(q.values, vec![0, 127]);
     }
 
     #[test]

@@ -121,6 +121,32 @@ impl Manifest {
     pub fn arg_index(&self, name: &str) -> Option<usize> {
         self.args.iter().position(|a| a.name == name)
     }
+
+    /// Assemble the positional argument tensors per the manifest
+    /// contract: data inputs (`feats`/`pad_mask`/`src`) start as zeros
+    /// (rewritten per batch/chunk by the caller), `mask.*` arguments are
+    /// all-ones (pruning is encoded by zeroed weights), and every other
+    /// argument is a parameter pulled from the bundle by name. Shared by
+    /// the serving loop and the QoS backends so the contract lives in
+    /// one place.
+    pub fn assemble_args(&self, params: &crate::data::Bundle) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(self.args.len());
+        for spec in &self.args {
+            let t = match spec.name.as_str() {
+                "feats" | "pad_mask" | "src" => Tensor::zeros(&spec.shape, spec.dtype),
+                name if name.starts_with("mask.") => {
+                    let numel: usize = spec.shape.iter().product();
+                    Tensor::from_i32(&spec.shape, &vec![1i32; numel])
+                }
+                name => params
+                    .require(name)
+                    .with_context(|| format!("param arg {name}"))?
+                    .clone(),
+            };
+            out.push(t);
+        }
+        Ok(out)
+    }
 }
 
 fn shape_of(v: &Json) -> Result<Vec<usize>> {

@@ -101,7 +101,11 @@ pub fn gemm_on_array(
     };
     let quant_extra = if wpw == 4 { p.quant_tile_extra_cycles } else { 0.0 };
 
-    let tile_cfg = ArrayConfig { rows: t, cols: t, quant: if wpw == 4 { Quant::Int8 } else { Quant::Fp32 } };
+    let tile_cfg = ArrayConfig {
+        rows: t,
+        cols: t,
+        quant: if wpw == 4 { Quant::Int8 } else { Quant::Fp32 },
+    };
     let per_tile = TileTiming::live(&tile_cfg, g.m);
 
     // --- issue cycles ----------------------------------------------------

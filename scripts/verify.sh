@@ -1,16 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 verify + perf smoke.
+# Tier-1 verify + lint gates + perf smoke.
 #
 # 1. cargo build --release && cargo test -q   (the repo's tier-1 gate)
-# 2. a short-budget run of benches/hotpath.rs with JSON recording
+# 2. lint gates when the components are installed:
+#      - cargo fmt --check   (formatting drift)
+#      - cargo clippy --all-targets -- -D warnings
+# 3. a short-budget run of benches/hotpath.rs with JSON recording
 #    (BENCH_hotpath.json at the repo root — the machine-tracked perf
 #    trajectory EXPERIMENTS.md logs across PRs)
-# 3. same-run relative perf guards, so regressions fail loudly without
+# 4. same-run relative perf guards, so regressions fail loudly without
 #    depending on absolute machine speed:
 #      - the zero-alloc compute_into path must not be slower than the
 #        allocating compute wrapper
 #      - the parallel sweep must not be slower than the serial sweep
 #        (equal is fine on a single core)
+#      - the native engine's masked INT8 forward pass at 50% ff tile
+#        sparsity must be measurably faster than its dense INT8 pass
+#        (the functional SASP saving)
 #
 # Usage: scripts/verify.sh [--no-bench]
 
@@ -20,6 +26,19 @@ ROOT="$PWD"
 
 echo "== tier-1: cargo build --release && cargo test -q =="
 (cd rust && cargo build --release && cargo test -q)
+
+echo
+echo "== lint gates: cargo fmt --check, cargo clippy -D warnings =="
+if (cd rust && cargo fmt --version) >/dev/null 2>&1; then
+    (cd rust && cargo fmt --check)
+else
+    echo "rustfmt component not installed; fmt gate skipped"
+fi
+if (cd rust && cargo clippy --version) >/dev/null 2>&1; then
+    (cd rust && cargo clippy --all-targets -- -D warnings)
+else
+    echo "clippy component not installed; clippy gate skipped"
+fi
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "verify OK (bench smoke skipped)"
@@ -54,6 +73,8 @@ compute = median("systolic: per-cycle 8x8 tile, M=32")
 into = median("systolic: per-cycle 8x8 tile, M=32, compute_into")
 serial = median("explorer: 24-point espnet_asr sweep, serial")
 parallel = median("explorer: 24-point espnet_asr sweep, parallel")
+inf_dense = median("infer: tiny_asr forward, int8 dense")
+inf_pruned = median("infer: tiny_asr forward, int8 50% pruned")
 
 failures = []
 # Short budgets are noisy; guard with generous slack.
@@ -64,11 +85,19 @@ if parallel > serial * 1.25:
     failures.append(
         f"parallel sweep ({parallel/1e6:.2f} ms) slower than serial "
         f"({serial/1e6:.2f} ms)")
+# 50% ff tile sparsity removes ~half the feed-forward MACs (~53% of the
+# tiny model's total); require at least a 8% wall-clock win.
+if inf_pruned > inf_dense * 0.92:
+    failures.append(
+        f"masked int8 forward ({inf_pruned/1e6:.2f} ms) not measurably "
+        f"faster than dense ({inf_dense/1e6:.2f} ms) at 50% sparsity")
 
 print(f"systolic per-cycle 8x8 M=32:  {compute/1e3:.1f} us median")
 print(f"  .. compute_into:            {into/1e3:.1f} us median")
 print(f"24-point sweep serial:        {serial/1e6:.2f} ms median")
 print(f"  .. parallel:                {parallel/1e6:.2f} ms median")
+print(f"native int8 forward, dense:   {inf_dense/1e6:.2f} ms median")
+print(f"  .. 50% ff tiles pruned:     {inf_pruned/1e6:.2f} ms median")
 for f in failures:
     print("FAIL:", f, file=sys.stderr)
 if failures:
