@@ -1,119 +1,52 @@
 //! End-to-end driver: the full SASP pipeline on the ASR model.
 //!
-//! With compiled artifacts present (`make artifacts`), runs the trained
-//! encoder through PJRT exactly as before. Without them — the fresh
-//! checkout / tier-1 case — it runs **fully offline** on the native
-//! engine ([`sasp::infer`]): a deterministic synthetic model is written
-//! through the `tensorfile` weight format, the test set is labeled by
-//! the dense FP32 forward pass itself (baseline WER 0 by construction),
-//! and the pruning-rate sweep executes with true tile skipping through
-//! the INT8 sign-magnitude kernels, cross-checked against the analytic
-//! timing model on the paper's headline configuration.
+//! Backend selection is [`Backend::auto`] — one entry point for every
+//! serving surface. With compiled artifacts present (`make artifacts`),
+//! the trained encoder runs through PJRT exactly as before. Without
+//! them — the fresh checkout / tier-1 case — the batched
+//! weight-stationary native engine runs **fully offline**: a
+//! deterministic synthetic tiny model, a test set labeled by the dense
+//! FP32 forward pass itself (baseline WER 0 by construction), and the
+//! pruning-rate sweep executing with true tile skipping through the
+//! INT8 sign-magnitude kernels, cross-checked against the analytic
+//! timing model at the paper's headline configuration.
 //!
 //! Run: `cargo run --release --example asr_pipeline [artifacts_dir]`.
 
 use anyhow::Result;
 
+use sasp::coordinator::serve::Backend;
 use sasp::coordinator::Explorer;
-use sasp::data::{load_bundle, save_bundle};
-use sasp::infer::{synth_testset, synth_weights, EncoderWeights, ModelDims, NativeBackend};
 use sasp::model::zoo;
-use sasp::qos::{AsrEvaluator, EvalMeta};
-use sasp::runtime::Engine;
 use sasp::systolic::Quant;
 use sasp::util::json::Json;
 
 fn main() -> Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    if std::path::Path::new(&format!("{dir}/asr_encoder_ref.hlo.txt")).exists() {
-        pjrt_pipeline(&dir)
-    } else {
-        println!("no PJRT artifacts under '{dir}' — running the native engine offline\n");
-        native_pipeline(&dir)
-    }
-}
+    let mut backend = Backend::auto(&dir)?;
+    println!("execution backend: {}", backend.describe());
 
-/// The artifact-backed pipeline (unchanged behaviour).
-fn pjrt_pipeline(dir: &str) -> Result<()> {
-    // --- training provenance -------------------------------------------
-    if let Ok(log) = std::fs::read_to_string(format!("{dir}/train_log_asr.json")) {
-        let v = Json::parse(&log)?;
-        let entries = v.as_arr().unwrap_or(&[]).to_vec();
-        println!("training loss curve (from python build step):");
-        for e in entries.iter().filter(|e| e.get("loss").as_f64().is_some()) {
-            let step = e.get("step").as_i64().unwrap_or(-1);
-            if step % 250 == 0 {
-                println!("  step {:>5}  loss {:>8.3}", step, e.get("loss").as_f64().unwrap());
+    // Training provenance (PJRT builds only — the python build step).
+    if !backend.is_native() {
+        if let Ok(log) = std::fs::read_to_string(format!("{dir}/train_log_asr.json")) {
+            let v = Json::parse(&log)?;
+            let entries = v.as_arr().unwrap_or(&[]).to_vec();
+            println!("training loss curve (from python build step):");
+            for e in entries.iter().filter(|e| e.get("loss").as_f64().is_some()) {
+                let step = e.get("step").as_i64().unwrap_or(-1);
+                if step % 250 == 0 {
+                    println!(
+                        "  step {:>5}  loss {:>8.3}",
+                        step,
+                        e.get("loss").as_f64().unwrap()
+                    );
+                }
             }
         }
     }
 
-    let mut engine = Engine::new(dir)?;
-    let eval = AsrEvaluator::new(&mut engine, dir, "asr_encoder_ref")?;
+    let eval = backend.asr_evaluator(&dir, 16)?;
     println!("\ntest set: {} utterances", eval.n_utts());
-    let base = eval.evaluate(&mut engine, 32, 0.0, Quant::Fp32)?;
-    println!("baseline WER (FP32, unpruned): {:.4}", base.qos);
-
-    println!("\nSASP sweep @ 32x32 FP32_INT8 (the headline configuration):");
-    println!(
-        "{:>6} {:>10} {:>10} {:>12} {:>12} {:>12}",
-        "rate", "WER", "ΔWER", "speedup*", "vs dense", "energy J*"
-    );
-    let ex = Explorer::new(zoo::espnet_asr());
-    let dense_fp32 = ex.timing_point(32, Quant::Fp32, 0.0);
-    for rate in [0.0, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.40] {
-        let q = eval.evaluate(&mut engine, 32, rate, Quant::Int8)?;
-        let t = ex.timing_point(32, Quant::Int8, rate);
-        println!(
-            "{:>6.2} {:>10.4} {:>+10.4} {:>12.2} {:>11.1}% {:>12.4}",
-            rate,
-            q.qos,
-            q.qos - base.qos,
-            t.speedup_vs_cpu,
-            (t.speedup_vs_dense - 1.0) * 100.0,
-            t.energy_j
-        );
-    }
-
-    let q20 = eval.evaluate(&mut engine, 32, 0.20, Quant::Int8)?;
-    let t20 = ex.timing_point(32, Quant::Int8, 0.20);
-    headline(
-        dense_fp32.speedup_vs_cpu,
-        t20.speedup_vs_cpu,
-        t20.energy_j,
-        dense_fp32.energy_j,
-        q20.qos - base.qos,
-    );
-    println!("asr_pipeline OK");
-    Ok(())
-}
-
-/// The offline pipeline: synthetic tiny model through the native engine.
-fn native_pipeline(dir: &str) -> Result<()> {
-    let dims = ModelDims::tiny_asr();
-
-    // Weights flow through the real tensorfile format, exactly like the
-    // trained bundles would.
-    std::fs::create_dir_all(dir)?;
-    let path = format!("{dir}/native_params_asr.bin");
-    save_bundle(&path, &synth_weights(&dims, 7).to_bundle())?;
-    let params = load_bundle(&path)?;
-    let weights = EncoderWeights::from_bundle(dims, &params)?;
-    println!("synthetic tiny ASR model written + reloaded via {path}");
-
-    let batch = 4usize;
-    let testset = synth_testset(&weights, 16, 11)?;
-    let meta = EvalMeta {
-        n_blocks: dims.n_blocks,
-        batch,
-        vocab: dims.vocab,
-        blank: dims.ctc_blank,
-        tile_hint: dims.tile,
-    };
-    let eval = AsrEvaluator::from_parts("native", params, &testset, &meta)?;
-    let mut backend = NativeBackend::new(weights, batch)?;
-    println!("test set: {} utterances (teacher-labeled)", eval.n_utts());
-
     let base = eval.evaluate_with(&mut backend, 32, 0.0, Quant::Fp32)?;
     println!("baseline WER (FP32, unpruned): {:.4}", base.qos);
 
@@ -123,9 +56,10 @@ fn native_pipeline(dir: &str) -> Result<()> {
         "rate", "WER", "ΔWER", "ff skip%", "speedup*", "energy J*"
     );
     // Timing from the Table-1 ESPnet workload on the simulated platform;
-    // the functional engine cross-reports the tile skipping it executed.
-    // The paper's headline pruning rate; the sweep must include it so
-    // the headline row and cross-check below read from captured stats.
+    // the native engine additionally cross-reports the tile skipping it
+    // actually executed. The sweep must include the paper's headline
+    // pruning rate so the headline row and cross-check read from
+    // captured stats.
     const HEADLINE_RATE: f64 = 0.20;
     let ex = Explorer::new(zoo::espnet_asr());
     let dense_fp32 = ex.timing_point(32, Quant::Fp32, 0.0);
@@ -134,47 +68,57 @@ fn native_pipeline(dir: &str) -> Result<()> {
     let mut dense_macs = 0usize;
     let mut pruned_macs = 0usize;
     for rate in [0.0, 0.05, 0.10, 0.15, HEADLINE_RATE, 0.25, 0.30, 0.40] {
-        backend.reset_stats();
+        if let Some(nb) = backend.native_mut() {
+            nb.reset_stats();
+        }
         let q = eval.evaluate_with(&mut backend, 32, rate, Quant::Int8)?;
-        let st = backend.stats();
         let t = ex.timing_point(32, Quant::Int8, rate);
+        let (skip_col, ff_macs) = match backend.native_mut() {
+            Some(nb) => {
+                let st = nb.stats();
+                (format!("{:>9.1}%", st.ff.sparsity() * 100.0), st.ff.timing.macs)
+            }
+            None => (format!("{:>10}", "-"), 0),
+        };
         println!(
-            "{:>6.2} {:>10.4} {:>+10.4} {:>9.1}% {:>12.2} {:>12.4}",
+            "{:>6.2} {:>10.4} {:>+10.4} {} {:>12.2} {:>12.4}",
             rate,
             q.qos,
             q.qos - base.qos,
-            st.ff.sparsity() * 100.0,
+            skip_col,
             t.speedup_vs_cpu,
             t.energy_j
         );
         if rate == 0.0 {
-            dense_macs = st.ff.timing.macs;
+            dense_macs = ff_macs;
         }
         if rate == HEADLINE_RATE {
             q20 = q.qos;
             achieved20 = q.achieved_rate;
-            pruned_macs = st.ff.timing.macs;
+            pruned_macs = ff_macs;
         }
     }
-    assert!(pruned_macs > 0, "sweep must include the headline rate");
 
-    // Analytic x functional cross-check at the headline rate: the MAC
-    // reduction the native engine actually executed must equal the rate
-    // the pruning plan achieved (equal-cost tiles: skipping is exactly
-    // proportional).
-    let measured = 1.0 - pruned_macs as f64 / dense_macs as f64;
-    println!(
-        "\ncross-check: functional ff MAC reduction at the headline rate: \
-         {:.2}% (pruning plan achieved: {:.2}%)",
-        measured * 100.0,
-        achieved20 * 100.0
-    );
-    assert!(
-        (measured - achieved20).abs() < 1e-9,
-        "functional/analytic mismatch: {measured} vs {achieved20}"
-    );
+    if backend.is_native() {
+        // Analytic x functional cross-check at the headline rate: the
+        // MAC reduction the batched engine actually executed must equal
+        // the rate the pruning plan achieved (equal-cost tiles: skipping
+        // is exactly proportional).
+        assert!(pruned_macs > 0, "sweep must include the headline rate");
+        let measured = 1.0 - pruned_macs as f64 / dense_macs as f64;
+        println!(
+            "\ncross-check: functional ff MAC reduction at the headline rate: \
+             {:.2}% (pruning plan achieved: {:.2}%)",
+            measured * 100.0,
+            achieved20 * 100.0
+        );
+        assert!(
+            (measured - achieved20).abs() < 1e-9,
+            "functional/analytic mismatch: {measured} vs {achieved20}"
+        );
+    }
 
-    let t20 = ex.timing_point(32, Quant::Int8, 0.20);
+    let t20 = ex.timing_point(32, Quant::Int8, HEADLINE_RATE);
     headline(
         dense_fp32.speedup_vs_cpu,
         t20.speedup_vs_cpu,
@@ -182,7 +126,7 @@ fn native_pipeline(dir: &str) -> Result<()> {
         dense_fp32.energy_j,
         q20 - base.qos,
     );
-    println!("asr_pipeline OK (native engine, no PJRT)");
+    println!("asr_pipeline OK ({} backend)", backend.label());
     Ok(())
 }
 

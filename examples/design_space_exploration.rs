@@ -2,8 +2,10 @@
 //!
 //! Sweeps array size × quantization × pruning rate: the timing/energy
 //! axis runs through `Explorer::sweep` (parallel over a scoped worker
-//! pool), the QoS axis through PJRT on the trained model, and the result
-//! is emitted both as a table and as a JSON dump for plotting.
+//! pool), the QoS axis through the auto-selected backend (PJRT on the
+//! trained model when artifacts exist, the batched native engine
+//! otherwise), and the result is emitted both as a table and as a JSON
+//! dump for plotting.
 //!
 //! Run: `cargo run --release --example design_space_exploration`.
 
@@ -13,17 +15,14 @@ use sasp::config::ExperimentConfig;
 use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::harness::QosCache;
 use sasp::model::zoo;
-use sasp::qos::AsrEvaluator;
-use sasp::runtime::Engine;
 use sasp::util::json::Json;
 
 fn main() -> Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let cfg = ExperimentConfig { artifacts_dir: dir.clone(), ..Default::default() };
 
-    let mut engine = Engine::new(&dir)?;
-    let asr = AsrEvaluator::new(&mut engine, &dir, "asr_encoder_ref")?;
-    let mut qos = QosCache::new(asr, None);
+    let mut qos = QosCache::auto(&dir)?;
+    eprintln!("QoS backend: {}", qos.backend_label());
     let ex = Explorer::new(zoo::espnet_asr());
 
     // Timing/energy for the whole grid in one parallel sweep.
@@ -43,7 +42,7 @@ fn main() -> Result<()> {
     );
     let mut points = Vec::new();
     for (sp, p) in grid.iter().zip(&timing) {
-        let wer = qos.wer(&mut engine, sp.tile, sp.rate, sp.quant)?;
+        let wer = qos.wer(sp.tile, sp.rate, sp.quant)?;
         println!(
             "{:>6} {:>10} {:>6.2} {:>10.4} {:>10.2} {:>12.4} {:>12.4}",
             sp.tile,

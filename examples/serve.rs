@@ -3,10 +3,12 @@
 //!
 //! A producer thread generates synthetic utterances at a Poisson-ish
 //! arrival rate; the server core batches them (fixed batch, deadline
-//! flush) and runs the encoder. With compiled artifacts present the
-//! backend is the PJRT engine; otherwise the native engine serves a
-//! 25%-pruned INT8 configuration fully offline — the multi-backend
-//! serving path.
+//! flush) and runs the encoder. Backend selection is
+//! [`Backend::auto`] — the one selection path every serving surface
+//! shares: the PJRT engine when compiled artifacts exist, otherwise the
+//! batched weight-stationary native engine serving a 25%-pruned INT8
+//! configuration fully offline (each live weight tile programmed once
+//! per batch, not once per utterance).
 //!
 //! Run: `cargo run --release --example serve [artifacts] [n_requests]`.
 
@@ -14,12 +16,9 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use sasp::coordinator::serve::{Request, ServeBackend, ServeConfig, Server};
-use sasp::data::{load_bundle, Bundle};
-use sasp::infer::{synth_weights, ModelDims, NativeBackend};
-use sasp::runtime::Engine;
+use sasp::coordinator::serve::{Backend, Request, ServeBackend, ServeConfig, Server};
 use sasp::systolic::Quant;
 use sasp::util::rng::Rng;
 
@@ -30,44 +29,39 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(128);
 
-    if std::path::Path::new(&format!("{dir}/asr_encoder_ref.hlo.txt")).exists() {
-        let mut engine = Engine::new(&dir)?;
-        let params = load_bundle(format!("{dir}/params_asr.bin"))?;
-        let manifest = engine.load("asr_encoder_ref")?.manifest.clone();
-        let batch = manifest.model.batch;
-        let (t, f) = (manifest.model.seq_len, 40usize);
-        let mut server = Server::new(
-            &mut engine,
-            "asr_encoder_ref",
-            params,
-            ServeConfig { batch, max_wait: Duration::from_millis(5) },
-        )?;
-        println!("backend: PJRT ({})", engine.platform());
-        drive(&mut server, &mut engine, t, f, n_requests)
-    } else {
-        println!("no PJRT artifacts under '{dir}' — serving on the native engine");
-        let dims = ModelDims::tiny_asr();
-        let batch = 4usize;
-        let mut backend = NativeBackend::new(synth_weights(&dims, 7), batch)?;
-        // The deployed configuration: 25% SASP at the artifact tile,
-        // INT8 sign-magnitude kernels.
-        let plan = backend.prepare(dims.tile, 0.25, Quant::Int8)?;
+    let mut backend = Backend::auto(&dir)?;
+    if let Some(nb) = backend.native_mut() {
+        // The deployed offline configuration: 25% SASP at the artifact
+        // tile, INT8 sign-magnitude kernels.
+        let tile = nb.dims().tile;
+        let plan = nb.prepare(tile, 0.25, Quant::Int8)?;
         println!(
-            "backend: native engine ({}x{} tile, INT8, {:.0}% ff tiles pruned)",
-            dims.tile,
-            dims.tile,
+            "no PJRT artifacts under '{dir}' — {:.0}% of ff tiles pruned for native serving",
             plan.achieved_rate * 100.0
         );
-        let manifest = backend.manifest().clone();
-        let mut server = Server::with_manifest(
-            &manifest,
-            "native_asr_encoder",
-            Bundle::default(),
-            ServeConfig { batch, max_wait: Duration::from_millis(5) },
-        )?;
-        let (t, f) = (dims.seq_len, dims.input_dim);
-        let report = drive(&mut server, &mut backend, t, f, n_requests);
-        let st = backend.stats();
+    }
+    println!("backend: {}", backend.describe());
+
+    let (manifest, params, artifact) = backend.serve_parts(&dir)?;
+    let batch = manifest.model.batch;
+    let t = manifest.model.seq_len;
+    let feats_idx = manifest
+        .arg_index("feats")
+        .context("serving manifest has no 'feats' argument")?;
+    let f = *manifest.args[feats_idx]
+        .shape
+        .last()
+        .context("feats argument has no shape")?;
+    let mut server = Server::with_manifest(
+        &manifest,
+        &artifact,
+        params,
+        ServeConfig { batch, max_wait: Duration::from_millis(5) },
+    )?;
+    drive(&mut server, &mut backend, t, f, n_requests)?;
+
+    if let Some(nb) = backend.native_mut() {
+        let st = nb.stats();
         // `utterances` counts every forward row, including the rows
         // partial batches pad with repeats — so it can exceed the
         // request count printed by `drive`.
@@ -78,8 +72,16 @@ fn main() -> Result<()> {
             st.ff.tiles_skipped,
             st.ff.sparsity() * 100.0
         );
-        report
+        // Weight-stationary reuse: per-utterance execution would have
+        // programmed every live ff tile once per row.
+        let per_utt_prog = st.ff.timing.prog_words * server.cfg.batch;
+        println!(
+            "ff weight programming: {} bus words (per-utterance loop \
+             would charge {} at this batch size)",
+            st.ff.timing.prog_words, per_utt_prog
+        );
     }
+    Ok(())
 }
 
 /// Shared producer + serving loop over any backend.

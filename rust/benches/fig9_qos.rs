@@ -1,32 +1,27 @@
 //! Bench + regeneration of Fig. 9: WER vs structured pruning rate across
-//! array (tile) sizes and quantization — the QoS axis, evaluated through
-//! the compiled PJRT artifact on the trained stand-in model.
-//!
-//! Requires `make artifacts`; exits cleanly with a notice otherwise.
+//! array (tile) sizes and quantization — the QoS axis, evaluated on the
+//! auto-selected backend: the compiled PJRT artifact + trained stand-in
+//! model when `make artifacts` has run, otherwise the batched native
+//! engine over the synthetic teacher-labeled test set (fully offline).
 
-use sasp::qos::AsrEvaluator;
-use sasp::runtime::Engine;
+use sasp::coordinator::serve::Backend;
 use sasp::systolic::Quant;
 use sasp::util::bench::Bench;
 
 fn main() {
-    if !std::path::Path::new("artifacts/asr_encoder_ref.hlo.txt").exists() {
-        println!("fig9_qos: artifacts not built (run `make artifacts`); skipping");
-        return;
-    }
-    let mut engine = Engine::new("artifacts").expect("engine");
-    let eval = AsrEvaluator::new(&mut engine, "artifacts", "asr_encoder_ref")
-        .expect("evaluator");
+    let mut backend = Backend::auto("artifacts").expect("backend");
+    println!("fig9_qos backend: {}", backend.describe());
+    let eval = backend.asr_evaluator("artifacts", 16).expect("evaluator");
     let b = Bench::quick();
-    b.run("fig9 one QoS point (64 utts via PJRT)", || {
-        eval.evaluate(&mut engine, 8, 0.2, Quant::Int8).unwrap().qos
+    b.run("fig9 one QoS point (testset inference)", || {
+        eval.evaluate_with(&mut backend, 8, 0.2, Quant::Int8).unwrap().qos
     });
     println!();
     println!("{:>6} {:>6} {:>12} {:>12}", "size", "rate", "FP32_FP32", "FP32_INT8");
     for n in [4usize, 8, 16, 32] {
         for rate in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5] {
-            let f = eval.evaluate(&mut engine, n, rate, Quant::Fp32).unwrap().qos;
-            let i = eval.evaluate(&mut engine, n, rate, Quant::Int8).unwrap().qos;
+            let f = eval.evaluate_with(&mut backend, n, rate, Quant::Fp32).unwrap().qos;
+            let i = eval.evaluate_with(&mut backend, n, rate, Quant::Int8).unwrap().qos;
             println!("{:>6} {:>6.2} {:>12.4} {:>12.4}", n, rate, f, i);
         }
     }

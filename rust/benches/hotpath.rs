@@ -8,7 +8,13 @@
 
 use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::data::Tensor;
-use sasp::infer::{synth_weights, ModelDims, NativeBackend};
+use sasp::infer::backend::ff_norms;
+use sasp::infer::batch::{gemm_batched_f32, gemm_batched_int8};
+use sasp::infer::gemm::{gemm_f32, gemm_int8};
+use sasp::infer::{
+    synth_weights, BatchForward, Forward, ModelDims, NativeBackend, PreparedModel,
+    QuantizedLinear,
+};
 use sasp::model::zoo;
 use sasp::pruning::{global_prune, synthetic_ff_norms};
 use sasp::runtime::Engine;
@@ -124,6 +130,123 @@ fn main() {
     b.run("infer: tiny_asr forward, int8 50% pruned", || {
         nb.forward_batch(&feats, &pad, 1)[0]
     });
+
+    // Batched weight-stationary engine vs the per-utterance reference
+    // loop — identical weights/masks/inputs, batch 4 (the serving case
+    // scripts/verify.sh guards: batched must beat per-utterance on both
+    // weight formats, GEMM and encoder scope).
+    let bs = 4usize;
+    let weights = synth_weights(&dims, 7);
+    let plan = global_prune(&ff_norms(&weights, dims.tile).expect("norms"), 0.25);
+    let (d, df) = (dims.d_model, dims.d_ff);
+    let seq = dims.seq_len;
+    let w1 = &weights.blocks[0].w1;
+    let w1_mask = &plan.masks[0];
+    let gx: Vec<f32> = (0..bs * seq * d).map(|_| rng.normal() as f32).collect();
+    let mut gy = Vec::new();
+    let mut scratch = Vec::new();
+    b.run("infer: ff gemm 4x96x64x256 fp32, per-utterance", || {
+        let mut acc = 0.0f32;
+        for u in 0..bs {
+            gemm_f32(
+                &gx[u * seq * d..(u + 1) * seq * d],
+                w1,
+                seq,
+                d,
+                df,
+                Some(w1_mask),
+                dims.tile,
+                &mut gy,
+            );
+            acc += gy[0];
+        }
+        acc
+    });
+    b.run("infer: ff gemm 4x96x64x256 fp32, batched ws", || {
+        gemm_batched_f32(
+            &gx,
+            w1,
+            bs,
+            seq,
+            d,
+            df,
+            Some(w1_mask),
+            dims.tile,
+            &mut gy,
+            &mut scratch,
+        );
+        gy[0]
+    });
+    let q1 = QuantizedLinear::from_f32(w1, d, df);
+    b.run("infer: ff gemm 4x96x64x256 int8, per-utterance", || {
+        let mut acc = 0.0f32;
+        for u in 0..bs {
+            gemm_int8(
+                &gx[u * seq * d..(u + 1) * seq * d],
+                &q1,
+                seq,
+                Some(w1_mask),
+                dims.tile,
+                &mut gy,
+            );
+            acc += gy[0];
+        }
+        acc
+    });
+    b.run("infer: ff gemm 4x96x64x256 int8, batched ws", || {
+        gemm_batched_int8(
+            &gx,
+            &q1,
+            bs,
+            seq,
+            Some(w1_mask),
+            dims.tile,
+            &mut gy,
+            &mut scratch,
+        );
+        gy[0]
+    });
+
+    // Encoder scope: whole tiny-ASR forwards, per-utterance loop vs one
+    // batched weight-stationary pass (bitwise-identical outputs).
+    let bfeats: Vec<f32> = (0..bs * seq * dims.input_dim)
+        .map(|_| rng.normal() as f32 * 0.5)
+        .collect();
+    let bpad = vec![1.0f32; bs * seq];
+    for quant in [Quant::Fp32, Quant::Int8] {
+        let label = match quant {
+            Quant::Fp32 => "fp32",
+            Quant::Int8 => "int8",
+        };
+        let model = PreparedModel::new(&weights, dims.tile, quant, Some(&plan.masks))
+            .expect("staged model");
+        let mut fwd = Forward::new();
+        let mut bf = BatchForward::new();
+        let mut outv = Vec::new();
+        b.run(
+            &format!("infer: tiny_asr encoder {label} 25% pruned, per-utterance x4"),
+            || {
+                let mut acc = 0.0f32;
+                for u in 0..bs {
+                    fwd.run_feats(
+                        &model,
+                        &bfeats[u * seq * dims.input_dim..(u + 1) * seq * dims.input_dim],
+                        &bpad[..seq],
+                        &mut outv,
+                    );
+                    acc += outv[0];
+                }
+                acc
+            },
+        );
+        b.run(
+            &format!("infer: tiny_asr encoder {label} 25% pruned, batched ws x4"),
+            || {
+                bf.run_feats(&model, bs, &bfeats, &bpad, &mut outv);
+                outv[0]
+            },
+        );
+    }
 
     // Runtime: tensor -> literal conversion (the PJRT argument path).
     let big = Tensor::from_f32(&[16, 96, 40], &vec![0.5f32; 16 * 96 * 40]);

@@ -1,29 +1,23 @@
 //! Bench + regeneration of Table 3: area / speedup / energy, no-SASP vs
 //! SASP at the WER inflection point, across sizes and quantization.
-//! End-to-end: QoS via PJRT + timing via the system simulator.
+//! End-to-end on the auto-selected backend: QoS via PJRT when artifacts
+//! exist, via the batched native engine otherwise, + timing via the
+//! system simulator.
 
 use sasp::config::ExperimentConfig;
 use sasp::harness::{self, QosCache};
-use sasp::qos::AsrEvaluator;
-use sasp::runtime::Engine;
 use sasp::util::bench::Bench;
 
 fn main() {
-    if !std::path::Path::new("artifacts/asr_encoder_ref.hlo.txt").exists() {
-        println!("table3_e2e: artifacts not built (run `make artifacts`); skipping");
-        return;
-    }
     let cfg = ExperimentConfig::default();
-    let mut engine = Engine::new("artifacts").expect("engine");
-    let asr = AsrEvaluator::new(&mut engine, "artifacts", "asr_encoder_ref")
-        .expect("evaluator");
-    let mut qos = QosCache::new(asr, None);
+    let mut qos = QosCache::auto("artifacts").expect("qos stack");
+    println!("table3_e2e backend: {}", qos.backend_label());
     // First generation populates the QoS cache (the expensive part) …
-    let report = harness::table3(&mut engine, &mut qos, &cfg).expect("table3");
+    let report = harness::table3(&mut qos, &cfg).expect("table3");
     // … then bench the cached regeneration (the explorer + search math).
     let b = Bench::default();
     b.run("table3 regen (QoS cached)", || {
-        harness::table3(&mut engine, &mut qos, &cfg).unwrap().lines.len()
+        harness::table3(&mut qos, &cfg).unwrap().lines.len()
     });
     println!();
     print!("{}", report.render());

@@ -14,14 +14,18 @@
 //! parameter tensor** on every batch; the steady-state loop now only
 //! rewrites the `feats`/`pad_mask` bytes in place.
 
+use std::path::Path;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::data::{Bundle, DType, Tensor};
+use crate::data::{load_bundle, Bundle, DType, Tensor};
+use crate::infer::{synth_testset, synth_weights, ModelDims, NativeBackend};
 use crate::qos::decode::ctc_greedy;
+use crate::qos::{AsrEvaluator, EvalMeta, PjrtState, QosBackend};
 use crate::runtime::{Engine, Manifest};
+use crate::systolic::Quant;
 
 /// The execution surface the server needs. Production uses the PJRT
 /// [`Engine`] or the native engine ([`crate::infer::NativeBackend`],
@@ -34,6 +38,173 @@ pub trait ServeBackend {
 impl ServeBackend for Engine {
     fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor> {
         Engine::execute(self, artifact, args)
+    }
+}
+
+/// The auto-selected execution backend — **one** selection path shared
+/// by `serve`, `asr_pipeline`, and the QoS harness
+/// ([`crate::harness::QosCache`]): PJRT over compiled artifacts when
+/// they exist, the batched native engine otherwise. Implements both
+/// [`ServeBackend`] and [`QosBackend`], so callers configure/execute
+/// without knowing which engine is underneath.
+pub enum Backend {
+    /// The PJRT engine plus the per-configuration QoS state of the
+    /// artifact it serves.
+    Pjrt { engine: Engine, qos: PjrtState },
+    /// The batched weight-stationary native engine (no artifacts).
+    Native(Box<NativeBackend>),
+}
+
+impl Backend {
+    /// The ASR encoder artifact every serving surface defaults to.
+    pub const ASR_ARTIFACT: &'static str = "asr_encoder_ref";
+
+    /// Pick the backend for `dir`: PJRT when the compiled ASR artifact
+    /// exists there, otherwise the batched native engine over the
+    /// deterministic synthetic tiny-ASR model (the fully offline path).
+    pub fn auto(dir: &str) -> Result<Backend> {
+        Self::auto_with(dir, Self::ASR_ARTIFACT, ModelDims::tiny_asr(), 7, 4)
+    }
+
+    /// [`Self::auto`] with explicit artifact name and native fallback
+    /// parameters (synthetic model dims/seed, serving batch).
+    pub fn auto_with(
+        dir: &str,
+        artifact: &str,
+        dims: ModelDims,
+        seed: u64,
+        batch: usize,
+    ) -> Result<Backend> {
+        if Path::new(&format!("{dir}/{artifact}.hlo.txt")).exists() {
+            Ok(Backend::Pjrt {
+                engine: Engine::new(dir)?,
+                qos: PjrtState::new(artifact),
+            })
+        } else {
+            let native = NativeBackend::new(synth_weights(&dims, seed), batch)?;
+            Ok(Backend::Native(Box::new(native)))
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self, Backend::Native(_))
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Native(_) => "native",
+        }
+    }
+
+    /// Human-readable backend description for example/CLI banners.
+    pub fn describe(&self) -> String {
+        match self {
+            Backend::Pjrt { engine, .. } => format!("PJRT ({})", engine.platform()),
+            Backend::Native(nb) => {
+                let m = nb.model();
+                let quant = match m.quant {
+                    Quant::Fp32 => "FP32",
+                    Quant::Int8 => "INT8",
+                };
+                format!(
+                    "native engine (batched weight-stationary, {}x{} tile, {quant})",
+                    m.tile, m.tile
+                )
+            }
+        }
+    }
+
+    /// The native engine, when that is what auto-selection picked.
+    pub fn native_mut(&mut self) -> Option<&mut NativeBackend> {
+        match self {
+            Backend::Pjrt { .. } => None,
+            Backend::Native(nb) => Some(nb),
+        }
+    }
+
+    /// The PJRT engine, when artifacts were found.
+    pub fn engine_mut(&mut self) -> Option<&mut Engine> {
+        match self {
+            Backend::Pjrt { engine, .. } => Some(engine),
+            Backend::Native(_) => None,
+        }
+    }
+
+    /// What [`Server::with_manifest`] needs for this backend: the
+    /// serving manifest, the parameter bundle, and the artifact name.
+    /// PJRT loads both from `dir`; the native engine publishes its own
+    /// manifest and needs no parameter arguments.
+    pub fn serve_parts(&mut self, dir: &str) -> Result<(Manifest, Bundle, String)> {
+        match self {
+            Backend::Pjrt { engine, qos } => {
+                let artifact = qos.artifact().to_string();
+                let manifest = engine.load(&artifact)?.manifest.clone();
+                let params = load_bundle(format!("{dir}/params_asr.bin"))?;
+                Ok((manifest, params, artifact))
+            }
+            Backend::Native(nb) => Ok((
+                nb.manifest().clone(),
+                Bundle::default(),
+                nb.manifest().name.clone(),
+            )),
+        }
+    }
+
+    /// Build the matching ASR QoS evaluator: artifact bundles for PJRT,
+    /// a teacher-labeled synthetic test set of `n_utts` utterances
+    /// (deterministic, baseline WER 0) for the native engine.
+    pub fn asr_evaluator(&mut self, dir: &str, n_utts: usize) -> Result<AsrEvaluator> {
+        match self {
+            Backend::Pjrt { engine, qos } => {
+                let artifact = qos.artifact().to_string();
+                AsrEvaluator::new(engine, dir, &artifact)
+            }
+            Backend::Native(nb) => {
+                let dims = *nb.dims();
+                let testset = synth_testset(nb.weights(), n_utts, 11)?;
+                let meta = EvalMeta {
+                    n_blocks: dims.n_blocks,
+                    batch: nb.batch(),
+                    vocab: dims.vocab,
+                    blank: dims.ctc_blank,
+                    tile_hint: dims.tile,
+                };
+                AsrEvaluator::from_parts("native", nb.weights().to_bundle(), &testset, &meta)
+            }
+        }
+    }
+}
+
+impl ServeBackend for Backend {
+    fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor> {
+        match self {
+            Backend::Pjrt { engine, .. } => engine.execute(artifact, args),
+            Backend::Native(nb) => nb.execute(artifact, args),
+        }
+    }
+}
+
+impl QosBackend for Backend {
+    fn configure(&mut self, params: &Bundle, tile: usize, quant: Quant) -> Result<()> {
+        match self {
+            Backend::Pjrt { engine, qos } => qos.configure(engine, params),
+            Backend::Native(nb) => nb.configure(params, tile, quant),
+        }
+    }
+
+    fn run_asr(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Pjrt { engine, qos } => qos.run_asr(engine, feats, pad, batch),
+            Backend::Native(nb) => nb.run_asr(feats, pad, batch),
+        }
+    }
+
+    fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Pjrt { engine, qos } => qos.run_mt(engine, src, batch),
+            Backend::Native(nb) => nb.run_mt(src, batch),
+        }
     }
 }
 
@@ -508,6 +679,88 @@ mod tests {
         .err()
         .expect("construction must fail on batch/artifact mismatch");
         assert!(format!("{err:?}").contains("configured batch"));
+    }
+
+    #[test]
+    fn backend_auto_selects_native_without_artifacts() {
+        let dims = crate::infer::testutil::mini_dims();
+        let mut backend = Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+            .unwrap();
+        assert!(backend.is_native());
+        assert_eq!(backend.label(), "native");
+        assert!(backend.describe().contains("native engine"));
+        assert!(backend.engine_mut().is_none());
+        assert!(backend.native_mut().is_some());
+        // The QoS surface works through the same object: teacher-labeled
+        // test set, so the dense FP32 point reproduces WER 0.
+        let eval = backend.asr_evaluator("unused", 3).unwrap();
+        let p = eval
+            .evaluate_with(&mut backend, dims.tile, 0.0, Quant::Fp32)
+            .unwrap();
+        assert_eq!(p.qos, 0.0, "dense FP32 must reproduce its own labels");
+    }
+
+    #[test]
+    fn backend_auto_prefers_pjrt_when_artifact_exists() {
+        // Selection is driven by the artifact file: auto must reach for
+        // PJRT, never silently fall back to the native engine. With the
+        // vendored xla stub that surfaces as a client-construction
+        // error; with a real xla crate swapped in it is Ok(Pjrt) —
+        // either way the selection decision is the same.
+        let dir = std::env::temp_dir().join(format!(
+            "sasp_backend_auto_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("asr_encoder_ref.hlo.txt"), "stub").unwrap();
+        let dims = crate::infer::testutil::mini_dims();
+        let got = Backend::auto_with(dir.to_str().unwrap(), "asr_encoder_ref", dims, 5, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+        // Err = stub build (PJRT attempted and unavailable) — also fine.
+        if let Ok(backend) = got {
+            assert!(
+                !backend.is_native(),
+                "artifact present: auto must not fall back to native"
+            );
+        }
+    }
+
+    #[test]
+    fn native_backend_serves_end_to_end() {
+        // The tentpole wiring: Backend::auto -> serve_parts -> Server
+        // runs real batched native inference behind the request queue.
+        let dims = crate::infer::testutil::mini_dims();
+        let mut backend =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+                .unwrap();
+        let (manifest, params, artifact) = backend.serve_parts("unused").unwrap();
+        assert_eq!(manifest.model.batch, 2);
+        let mut server = Server::with_manifest(
+            &manifest,
+            &artifact,
+            params,
+            ServeConfig { batch: 2, max_wait: Duration::from_millis(5) },
+        )
+        .unwrap();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        for id in 0..3u64 {
+            let feats = vec![0.25f32 * (id as f32 + 1.0); t * f];
+            req_tx.send(Request { id, feats, feat_len: t }).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 3);
+        assert_eq!(report.n_batches, 2, "3 requests at batch 2 -> 2 + 1");
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 3);
+        for r in &responses {
+            assert!(r.tokens.iter().all(|s| *s >= 0 && (*s as usize) < dims.vocab));
+        }
+        // The batched engine saw every forward row (incl. tail padding).
+        let st = backend.native_mut().unwrap().stats();
+        assert_eq!(st.utterances, 4);
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Generators for every table and figure of the evaluation section.
 //!
 //! Timing-only reports (Table 1/2, Fig. 6, and the timing axes of the
-//! rest) run without artifacts; QoS-bearing reports take a PJRT
-//! [`Engine`] + [`QosCache`] over the trained stand-in models.
+//! rest) need no model execution at all; QoS-bearing reports take a
+//! [`QosCache`], which owns the auto-selected execution backend — PJRT
+//! over the trained stand-in models when artifacts exist, the batched
+//! native engine (synthetic teacher-labeled test set) otherwise — so
+//! every report regenerates on a fresh checkout.
 
 use anyhow::Result;
 
@@ -10,7 +13,6 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Explorer, RateSearch, SweepPoint};
 use crate::hwmodel::{self, area_energy_product};
 use crate::model::zoo;
-use crate::runtime::Engine;
 use crate::systolic::{ArrayConfig, Quant};
 
 use super::{QosCache, Report};
@@ -83,14 +85,14 @@ pub fn fig6() -> Report {
 
 /// Fig. 7: SASP speedup & energy improvement under the QoS target,
 /// vs non-pruned quantized execution, per workload and array size.
-pub fn fig7(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+pub fn fig7(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
     let mut r = Report::new(
         "Fig. 7 — SASP gains under QoS target (vs non-pruned INT8)",
     );
-    let base_wer = qos.wer(engine, 8, 0.0, Quant::Int8)?;
+    let base_wer = qos.wer(8, 0.0, Quant::Int8)?;
     let wer_target = base_wer * cfg.wer_target_ratio;
     let base_bleu = match qos.mt {
-        Some(_) => qos.bleu(engine, 8, 0.0, Quant::Int8)?,
+        Some(_) => qos.bleu(8, 0.0, Quant::Int8)?,
         None => 0.0,
     };
     let bleu_floor = base_bleu * cfg.bleu_floor_ratio;
@@ -105,18 +107,18 @@ pub fn fig7(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> 
     let search = RateSearch { grid: cfg.rates.clone() };
     for spec in zoo::fig7_workloads() {
         let ex = Explorer::new(spec.clone());
-        // Pass 1 (serial — PJRT): rate* per size from the QoS curve.
+        // Pass 1 (serial — one QoS backend): rate* per size from the QoS curve.
         let mut points = Vec::with_capacity(cfg.sizes.len());
         for &n in &cfg.sizes {
             let is_mt = spec.name.contains("mustc") && qos.mt.is_some();
             let found = if is_mt {
                 search.max_rate(
-                    |rate| qos.bleu(engine, n, rate, Quant::Int8),
+                    |rate| qos.bleu(n, rate, Quant::Int8),
                     |b| b >= bleu_floor,
                 )?
             } else {
                 search.max_rate(
-                    |rate| qos.wer(engine, n, rate, Quant::Int8),
+                    |rate| qos.wer(n, rate, Quant::Int8),
                     |w| w <= wer_target,
                 )?
             };
@@ -153,7 +155,7 @@ pub fn fig8() -> Report {
 }
 
 /// Fig. 9: WER vs SASP rate, per array size and quantization.
-pub fn fig9(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+pub fn fig9(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
     let mut r = Report::new("Fig. 9 — WER vs structured pruning rate");
     let mut header = format!("{:>6} {:>10}", "size", "rate");
     for q in &cfg.quants {
@@ -164,7 +166,7 @@ pub fn fig9(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> 
         for &rate in &cfg.rates {
             let mut line = format!("{:>6} {:>10.2}", n, rate);
             for &q in &cfg.quants {
-                let wer = qos.wer(engine, n, rate, q)?;
+                let wer = qos.wer(n, rate, q)?;
                 line.push_str(&format!(" {:>12.4}", wer));
             }
             r.line(line);
@@ -174,7 +176,7 @@ pub fn fig9(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> 
 }
 
 /// Fig. 10: WER / speedup / area-energy trade-off scatter.
-pub fn fig10(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+pub fn fig10(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
     let mut r = Report::new("Fig. 10 — WER vs speedup vs area-energy");
     r.line(format!(
         "{:>6} {:>10} {:>8} {:>10} {:>10} {:>12}",
@@ -182,11 +184,11 @@ pub fn fig10(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) ->
     ));
     let ex = Explorer::new(zoo::espnet_asr());
     // Timing for the whole grid in one parallel sweep; QoS stays serial
-    // (one PJRT engine).
+    // (one execution backend).
     let grid = SweepPoint::grid(&cfg.sizes, &cfg.quants, &cfg.rates);
     let timing = ex.sweep(&grid);
     for (sp, p) in grid.iter().zip(&timing) {
-        let wer = qos.wer(engine, sp.tile, sp.rate, sp.quant)?;
+        let wer = qos.wer(sp.tile, sp.rate, sp.quant)?;
         let aep = area_energy_product(
             &ArrayConfig::square(sp.tile, sp.quant),
             p.energy_j,
@@ -205,9 +207,9 @@ pub fn fig10(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) ->
 }
 
 /// Fig. 11: speedup vs array size at fixed WER levels.
-pub fn fig11(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+pub fn fig11(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
     let mut r = Report::new("Fig. 11 — speedup vs size at fixed WER");
-    let base = qos.wer(engine, 8, 0.0, Quant::Fp32)?;
+    let base = qos.wer(8, 0.0, Quant::Fp32)?;
     // Three WER levels: near-baseline, the 5%-equivalent target, relaxed.
     let levels = [base * 1.1, base * cfg.wer_target_ratio, base * 2.0];
     r.line(format!(
@@ -216,14 +218,14 @@ pub fn fig11(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) ->
     ));
     let ex = Explorer::new(zoo::espnet_asr());
     let search = RateSearch { grid: cfg.rates.clone() };
-    // Pass 1 (serial — PJRT): the QoS-selected rate per (quant, size,
+    // Pass 1 (serial — one QoS backend): the rate per (quant, size,
     // WER level); pass 2 (parallel): one sweep over all of them.
     let mut points = Vec::new();
     for &q in &cfg.quants {
         for &n in &cfg.sizes {
             for target in levels {
                 let found = search.max_rate(
-                    |rate| qos.wer(engine, n, rate, q),
+                    |rate| qos.wer(n, rate, q),
                     |w| w <= target,
                 )?;
                 let rate = found.map_or(0.0, |f| f.0);
@@ -253,9 +255,9 @@ pub fn fig11(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) ->
 
 /// Table 3: area / speedup / energy, no-SASP vs SASP at the 5% WER
 /// inflection point.
-pub fn table3(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+pub fn table3(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
     let mut r = Report::new("Table 3 — SASP at the WER inflection point");
-    let base = qos.wer(engine, 8, 0.0, Quant::Fp32)?;
+    let base = qos.wer(8, 0.0, Quant::Fp32)?;
     let target = base * cfg.wer_target_ratio;
     r.line(format!("WER inflection target: {target:.4} (baseline {base:.4})"));
     r.line(format!(
@@ -264,13 +266,13 @@ pub fn table3(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -
     ));
     let ex = Explorer::new(zoo::espnet_asr());
     let search = RateSearch { grid: cfg.rates.clone() };
-    // Pass 1 (serial — PJRT): QoS-selected rate per (quant, size); pass 2
+    // Pass 1 (serial — one QoS backend): rate per (quant, size); pass 2
     // (parallel): dense + SASP timing points in one sweep.
     let mut points = Vec::new();
     for &q in &cfg.quants {
         for &n in &cfg.sizes {
             let found = search.max_rate(
-                |rate| qos.wer(engine, n, rate, q),
+                |rate| qos.wer(n, rate, q),
                 |w| w <= target,
             )?;
             let rate = found.map_or(0.0, |f| f.0);
@@ -296,7 +298,7 @@ pub fn table3(engine: &mut Engine, qos: &mut QosCache, cfg: &ExperimentConfig) -
 }
 
 /// The headline claim: 32x32 INT8 + 20% SASP vs non-pruned non-quantized.
-pub fn headline(engine: &mut Engine, qos: &mut QosCache) -> Result<Report> {
+pub fn headline(qos: &mut QosCache) -> Result<Report> {
     let mut r = Report::new("Headline — SASP+quant at 32x32, 20% rate");
     let ex = Explorer::new(zoo::espnet_asr());
     let dense_fp32 = ex.timing_point(32, Quant::Fp32, 0.0);
@@ -307,8 +309,8 @@ pub fn headline(engine: &mut Engine, qos: &mut QosCache) -> Result<Report> {
     let runtime_gain = 1.0
         - (1.0 / sasp_int8.speedup_vs_cpu) / (1.0 / dense_fp32.speedup_vs_cpu);
     let energy_gain = 1.0 - sasp_int8.energy_j / dense_fp32.energy_j;
-    let wer0 = qos.wer(engine, 32, 0.0, Quant::Fp32)?;
-    let wer1 = qos.wer(engine, 32, 0.20, Quant::Int8)?;
+    let wer0 = qos.wer(32, 0.0, Quant::Fp32)?;
+    let wer1 = qos.wer(32, 0.20, Quant::Int8)?;
     r.line(format!(
         "system speedup {:.1}% (paper: up to 44%), energy saving {:.1}% (paper: 42%)",
         runtime_gain * 100.0,

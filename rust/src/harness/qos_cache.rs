@@ -1,13 +1,19 @@
 //! Memoized QoS evaluation over the (tile, rate, quant) grid — several
 //! figures share the same points, and each point costs test-set
-//! inference through PJRT.
+//! inference.
+//!
+//! The cache owns the auto-selected execution backend
+//! ([`crate::coordinator::serve::Backend`]): PJRT over compiled
+//! artifacts when they exist, the batched native engine otherwise — so
+//! `sasp report fig9/fig10/fig11/table3/headline` (and fig7's WER axis)
+//! run fully offline instead of erroring on a fresh checkout.
 
 use std::collections::HashMap;
 
 use anyhow::Result;
 
+use crate::coordinator::serve::Backend;
 use crate::qos::{AsrEvaluator, MtEvaluator};
-use crate::runtime::Engine;
 use crate::systolic::Quant;
 
 /// Key with rate discretized to 1e-4 so f64 rates hash safely.
@@ -15,44 +21,57 @@ fn key(tile: usize, rate: f64, quant: Quant) -> (usize, u64, Quant) {
     (tile, (rate * 10_000.0).round() as u64, quant)
 }
 
-/// Cache over an ASR (WER) and optional MT (BLEU) evaluator.
+/// Number of synthetic utterances the offline (native) evaluator uses.
+const NATIVE_TESTSET_UTTS: usize = 16;
+
+/// Cache over an ASR (WER) and optional MT (BLEU) evaluator, executing
+/// on the auto-selected backend.
 pub struct QosCache {
     pub asr: AsrEvaluator,
     pub mt: Option<MtEvaluator>,
+    backend: Backend,
     wer: HashMap<(usize, u64, Quant), f64>,
     bleu: HashMap<(usize, u64, Quant), f64>,
 }
 
 impl QosCache {
-    pub fn new(asr: AsrEvaluator, mt: Option<MtEvaluator>) -> Self {
-        QosCache { asr, mt, wer: HashMap::new(), bleu: HashMap::new() }
+    pub fn new(backend: Backend, asr: AsrEvaluator, mt: Option<MtEvaluator>) -> Self {
+        QosCache { asr, mt, backend, wer: HashMap::new(), bleu: HashMap::new() }
     }
 
-    /// WER of the tiny ASR model at a configuration (memoized).
-    pub fn wer(
-        &mut self,
-        engine: &mut Engine,
-        tile: usize,
-        rate: f64,
-        quant: Quant,
-    ) -> Result<f64> {
+    /// Build the whole QoS stack for `dir` on the auto-selected
+    /// backend: PJRT evaluators over the artifact bundles when they
+    /// exist, the native evaluator over the synthetic teacher-labeled
+    /// test set otherwise (MT has no native path yet — see ROADMAP).
+    pub fn auto(dir: &str) -> Result<Self> {
+        let mut backend = Backend::auto(dir)?;
+        let asr = backend.asr_evaluator(dir, NATIVE_TESTSET_UTTS)?;
+        let mt = match backend.engine_mut() {
+            Some(engine) => MtEvaluator::new(engine, dir, "mt_encoder_ref").ok(),
+            None => None,
+        };
+        Ok(QosCache::new(backend, asr, mt))
+    }
+
+    /// Which execution backend the cache evaluates on.
+    pub fn backend_label(&self) -> &'static str {
+        self.backend.label()
+    }
+
+    /// WER of the ASR model at a configuration (memoized).
+    pub fn wer(&mut self, tile: usize, rate: f64, quant: Quant) -> Result<f64> {
         let k = key(tile, rate, quant);
         if let Some(v) = self.wer.get(&k) {
             return Ok(*v);
         }
-        let v = self.asr.evaluate(engine, tile, rate, quant)?.qos;
+        let v = self.asr.evaluate_with(&mut self.backend, tile, rate, quant)?.qos;
         self.wer.insert(k, v);
         Ok(v)
     }
 
-    /// BLEU of the tiny MT model at a configuration (memoized).
-    pub fn bleu(
-        &mut self,
-        engine: &mut Engine,
-        tile: usize,
-        rate: f64,
-        quant: Quant,
-    ) -> Result<f64> {
+    /// BLEU of the MT model at a configuration (memoized; PJRT only —
+    /// the native MT path is a ROADMAP item).
+    pub fn bleu(&mut self, tile: usize, rate: f64, quant: Quant) -> Result<f64> {
         let k = key(tile, rate, quant);
         if let Some(v) = self.bleu.get(&k) {
             return Ok(*v);
@@ -61,6 +80,10 @@ impl QosCache {
             .mt
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("no MT evaluator loaded"))?;
+        let engine = self
+            .backend
+            .engine_mut()
+            .ok_or_else(|| anyhow::anyhow!("MT QoS needs the PJRT backend"))?;
         let v = mt.evaluate(engine, tile, rate, quant)?.qos;
         self.bleu.insert(k, v);
         Ok(v)
@@ -68,5 +91,32 @@ impl QosCache {
 
     pub fn cached_points(&self) -> usize {
         self.wer.len() + self.bleu.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::testutil::mini_dims;
+
+    #[test]
+    fn native_cache_memoizes_offline_wer() {
+        let dims = mini_dims();
+        let mut backend =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+                .unwrap();
+        let asr = backend.asr_evaluator("unused", 3).unwrap();
+        let mut qos = QosCache::new(backend, asr, None);
+        assert_eq!(qos.backend_label(), "native");
+        let a = qos.wer(dims.tile, 0.0, Quant::Fp32).unwrap();
+        assert_eq!(a, 0.0, "teacher-labeled baseline");
+        assert_eq!(qos.cached_points(), 1);
+        let b = qos.wer(dims.tile, 0.0, Quant::Fp32).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(qos.cached_points(), 1, "second read hits the cache");
+        assert!(
+            qos.bleu(dims.tile, 0.0, Quant::Fp32).is_err(),
+            "no native MT path"
+        );
     }
 }

@@ -26,7 +26,8 @@ use crate::runtime::{manifest::ModelMeta, ArgSpec, Manifest};
 use crate::sysim::TileMask;
 use crate::systolic::Quant;
 
-use super::encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
+use super::batch::BatchForward;
+use super::encoder::{EncoderWeights, ForwardStats, ModelDims, PreparedModel};
 
 /// Per-feed-forward-GEMM tile L1 norms of a weight set.
 pub fn ff_norms(w: &EncoderWeights, tile: usize) -> Result<Vec<TileNorms>> {
@@ -57,12 +58,18 @@ pub fn recover_masks(w: &EncoderWeights, tile: usize) -> Result<Vec<TileMask>> {
         .collect())
 }
 
-/// The native engine as a pluggable execution backend.
+/// The native engine as a pluggable execution backend. Batches execute
+/// on the weight-stationary serving runtime ([`BatchForward`]) — every
+/// live tile loaded once per batch — whose outputs are bitwise
+/// identical to the per-utterance reference engine.
 pub struct NativeBackend {
     master: EncoderWeights,
     model: PreparedModel,
-    fwd: Forward,
+    fwd: BatchForward,
     batch: usize,
+    /// Stage INT8 weights with per-output-channel scales on the next
+    /// `prepare`/`configure`.
+    per_channel: bool,
     /// Built once (tile refreshed on re-staging) so the serving hot
     /// path neither reallocates nor reassembles it per batch.
     serve_manifest: Manifest,
@@ -78,8 +85,9 @@ impl NativeBackend {
         Ok(NativeBackend {
             master: weights,
             model,
-            fwd: Forward::new(),
+            fwd: BatchForward::new(),
             batch,
+            per_channel: false,
             serve_manifest,
         })
     }
@@ -88,9 +96,25 @@ impl NativeBackend {
         &self.master.dims
     }
 
+    /// The master (unpruned FP32) weights this backend was built over.
+    pub fn weights(&self) -> &EncoderWeights {
+        &self.master
+    }
+
+    /// The serving batch size the manifest publishes.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
     /// The currently staged model configuration.
     pub fn model(&self) -> &PreparedModel {
         &self.model
+    }
+
+    /// Use per-output-channel INT8 scales ([`crate::quant`]) on the
+    /// next `prepare`/`configure` (tighter PTQ at high rates).
+    pub fn set_per_channel(&mut self, on: bool) {
+        self.per_channel = on;
     }
 
     /// Cumulative schedule statistics since the last reset.
@@ -108,29 +132,22 @@ impl NativeBackend {
     pub fn prepare(&mut self, tile: usize, rate: f64, quant: Quant) -> Result<PrunePlan> {
         let norms = ff_norms(&self.master, tile)?;
         let plan = global_prune(&norms, rate);
-        self.model = PreparedModel::new(&self.master, tile, quant, Some(&plan.masks))?;
+        self.model = PreparedModel::new_with(
+            &self.master,
+            tile,
+            quant,
+            Some(&plan.masks),
+            self.per_channel,
+        )?;
         self.serve_manifest.model.tile = tile;
         Ok(plan)
     }
 
-    /// Run one padded batch of utterances; returns CTC log-probs
-    /// `[batch, seq, vocab]` flattened.
+    /// Run one padded batch of utterances through the weight-stationary
+    /// engine; returns CTC log-probs `[batch, seq, vocab]` flattened.
     pub fn forward_batch(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Vec<f32> {
-        let dims = self.model.dims;
-        let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
-        assert_eq!(feats.len(), batch * t * f, "feats must be batch x seq x feat");
-        assert_eq!(pad.len(), batch * t, "pad must be batch x seq");
-        let mut lp = vec![0.0f32; batch * t * v];
-        let mut row = Vec::new();
-        for i in 0..batch {
-            self.fwd.run_feats(
-                &self.model,
-                &feats[i * t * f..(i + 1) * t * f],
-                &pad[i * t..(i + 1) * t],
-                &mut row,
-            );
-            lp[i * t * v..(i + 1) * t * v].copy_from_slice(&row);
-        }
+        let mut lp = Vec::new();
+        self.fwd.run_feats(&self.model, batch, feats, pad, &mut lp);
         lp
     }
 
@@ -183,7 +200,7 @@ impl QosBackend for NativeBackend {
         // exactly-zero tiles are skipped).
         let tile = if w.dims.tile_ok(tile) { tile } else { w.dims.tile };
         let masks = recover_masks(&w, tile)?;
-        self.model = PreparedModel::new(&w, tile, quant, Some(&masks))?;
+        self.model = PreparedModel::new_with(&w, tile, quant, Some(&masks), self.per_channel)?;
         self.serve_manifest.model.tile = tile;
         Ok(())
     }
@@ -206,15 +223,9 @@ impl QosBackend for NativeBackend {
     fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>> {
         let dims = self.model.dims;
         ensure!(dims.token_input, "MT inference on a feature-input model");
-        let (t, v) = (dims.seq_len, dims.vocab);
-        ensure!(src.len() == batch * t, "src must be batch x seq");
-        let mut logits = vec![0.0f32; batch * t * v];
-        let mut row = Vec::new();
-        for i in 0..batch {
-            self.fwd
-                .run_tokens(&self.model, &src[i * t..(i + 1) * t], &mut row);
-            logits[i * t * v..(i + 1) * t * v].copy_from_slice(&row);
-        }
+        ensure!(src.len() == batch * dims.seq_len, "src must be batch x seq");
+        let mut logits = Vec::new();
+        self.fwd.run_tokens(&self.model, batch, src, &mut logits);
         Ok(logits)
     }
 }
@@ -334,6 +345,77 @@ mod tests {
         // Wrong arity is rejected via the manifest contract.
         let only = Tensor::zeros(&man.args[0].shape, DType::F32);
         assert!(be.execute("native_asr_encoder", &[only]).is_err());
+    }
+
+    #[test]
+    fn per_channel_int8_qos_no_worse_than_per_tensor() {
+        // Satellite contract: at the same pruning rate, per-channel INT8
+        // scales keep the model at least as close to the FP32 reference
+        // as per-tensor scales do — measured as mean |Δlog-prob| over a
+        // teacher-labeled test set — and the decoded QoS (WER) does not
+        // degrade beyond granularity noise.
+        use crate::qos::{ctc_greedy, token_error_rate};
+
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 31);
+        let ts = synth_testset(&w, 8, 3).unwrap();
+        let n = 8usize;
+        let (t, v) = (dims.seq_len, dims.vocab);
+        let feats = ts.get("feats").unwrap().f32s();
+        let feat_len = ts.get("feat_len").unwrap().i32s();
+        let labels = ts.get("labels").unwrap();
+        let lmax = labels.shape[1];
+        let lvals = labels.i32s();
+        let label_len = ts.get("label_len").unwrap().i32s();
+        let refs: Vec<Vec<i32>> = (0..n)
+            .map(|i| lvals[i * lmax..i * lmax + label_len[i] as usize].to_vec())
+            .collect();
+        let mut pad = vec![0.0f32; n * t];
+        for (i, l) in feat_len.iter().enumerate() {
+            for tt in 0..*l as usize {
+                pad[i * t + tt] = 1.0;
+            }
+        }
+
+        let run = |per_channel: bool, quant: Quant, rate: f64| -> Vec<f32> {
+            let mut be = NativeBackend::new(w.clone(), n).unwrap();
+            be.set_per_channel(per_channel);
+            be.prepare(dims.tile, rate, quant).unwrap();
+            be.forward_batch(&feats, &pad, n)
+        };
+        let reference = run(false, Quant::Fp32, 0.25);
+        let pt = run(false, Quant::Int8, 0.25);
+        let pc = run(true, Quant::Int8, 0.25);
+        let mad = |lp: &[f32]| -> f64 {
+            lp.iter()
+                .zip(&reference)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / lp.len() as f64
+        };
+        let (dev_pt, dev_pc) = (mad(&pt), mad(&pc));
+        assert!(
+            dev_pc <= dev_pt,
+            "per-channel dev {dev_pc} must not exceed per-tensor {dev_pt}"
+        );
+        let wer = |lp: &[f32]| -> f64 {
+            let hyps: Vec<Vec<i32>> = (0..n)
+                .map(|i| {
+                    ctc_greedy(
+                        &lp[i * t * v..(i + 1) * t * v],
+                        feat_len[i] as usize,
+                        v,
+                        dims.ctc_blank,
+                    )
+                })
+                .collect();
+            token_error_rate(&refs, &hyps)
+        };
+        let (wer_pt, wer_pc) = (wer(&pt), wer(&pc));
+        assert!(
+            wer_pc <= wer_pt + 0.05,
+            "per-channel WER {wer_pc} vs per-tensor {wer_pt}"
+        );
     }
 
     #[test]

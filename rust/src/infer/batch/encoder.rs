@@ -1,0 +1,471 @@
+//! The batched encoder forward pass — [`BatchForward`], the serving
+//! runtime's counterpart of the per-utterance
+//! [`crate::infer::encoder::Forward`].
+//!
+//! All weight GEMMs (attention projections, the SASP feed-forward pair,
+//! input projection and vocabulary head) run flattened over the
+//! `[batch*seq, d]` panel through the weight-stationary kernels of
+//! [`super::gemm`], so every live tile is loaded once per batch. The
+//! softmax-attention core is inherently per-utterance (scores are
+//! `seq x seq` within one utterance) and runs per utterance with that
+//! utterance's pad mask — exactly the arithmetic of the per-utterance
+//! engine, which is what keeps the whole batched forward **bitwise
+//! identical** to running the utterances one at a time (ragged pad
+//! tails included; asserted in the tests below).
+//!
+//! Buffers are owned and reused, so steady-state serving performs no
+//! allocation beyond growth to the largest batch seen.
+
+use super::super::encoder::{ForwardStats, PreparedModel};
+use super::super::ops;
+use super::gemm::gemm_batched_f32;
+
+/// The batched forward-pass runtime: owns every intermediate buffer
+/// (sized `batch * seq` rows) plus the tile-packing scratch.
+pub struct BatchForward {
+    h: Vec<f32>,
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    ctx: Vec<f32>,
+    tmp: Vec<f32>,
+    mid: Vec<f32>,
+    /// All-ones pad mask for the token (MT) path, reused across calls.
+    ones: Vec<f32>,
+    /// Packed-tile scratch of the weight-stationary kernels.
+    wtile: Vec<f32>,
+    pub stats: ForwardStats,
+}
+
+impl Default for BatchForward {
+    fn default() -> Self {
+        BatchForward::new()
+    }
+}
+
+impl BatchForward {
+    pub fn new() -> Self {
+        BatchForward {
+            h: Vec::new(),
+            hn: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            scores: Vec::new(),
+            ctx: Vec::new(),
+            tmp: Vec::new(),
+            mid: Vec::new(),
+            ones: Vec::new(),
+            wtile: Vec::new(),
+            stats: ForwardStats::default(),
+        }
+    }
+
+    /// ASR: one padded batch of `batch x seq_len x input_dim` features
+    /// with a `batch x seq_len` validity mask → CTC log-probs
+    /// `batch x seq_len x vocab` (flattened) in `out`.
+    pub fn run_feats(
+        &mut self,
+        m: &PreparedModel,
+        batch: usize,
+        feats: &[f32],
+        pad: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let dims = &m.dims;
+        assert!(!dims.token_input, "feature input on a token-input model");
+        assert!(batch > 0, "batch must be positive");
+        let t = dims.seq_len;
+        assert_eq!(
+            feats.len(),
+            batch * t * dims.input_dim,
+            "feats must be batch x seq x input"
+        );
+        assert_eq!(pad.len(), batch * t, "pad mask must be batch x seq");
+        let st = gemm_batched_f32(
+            feats,
+            &m.in_w,
+            batch,
+            t,
+            dims.input_dim,
+            dims.d_model,
+            None,
+            m.tile,
+            &mut self.h,
+            &mut self.wtile,
+        );
+        self.stats.other.add(&st);
+        self.encode(m, batch, pad);
+        self.head(m, batch, out, true);
+        self.stats.utterances += batch;
+    }
+
+    /// MT: one batch of `batch x seq_len` token sentences →
+    /// per-position logits `batch x seq_len x vocab` in `out`.
+    pub fn run_tokens(
+        &mut self,
+        m: &PreparedModel,
+        batch: usize,
+        tokens: &[i32],
+        out: &mut Vec<f32>,
+    ) {
+        let dims = &m.dims;
+        assert!(dims.token_input, "token input on a feature-input model");
+        assert!(batch > 0, "batch must be positive");
+        let t = dims.seq_len;
+        assert_eq!(tokens.len(), batch * t, "tokens must be batch x seq");
+        let d = dims.d_model;
+        self.h.clear();
+        self.h.resize(batch * t * d, 0.0);
+        for (row, tok) in tokens.iter().enumerate() {
+            let ti = *tok as usize;
+            assert!(ti < dims.vocab, "token {ti} out of vocab {}", dims.vocab);
+            self.h[row * d..(row + 1) * d].copy_from_slice(&m.in_w[ti * d..(ti + 1) * d]);
+        }
+        let mut ones = std::mem::take(&mut self.ones);
+        ones.clear();
+        ones.resize(batch * t, 1.0);
+        self.encode(m, batch, &ones);
+        self.ones = ones;
+        self.head(m, batch, out, false);
+        self.stats.utterances += batch;
+    }
+
+    /// Shared encoder stack over `self.h` (the projected / embedded
+    /// input of the whole batch, before bias + positions).
+    fn encode(&mut self, m: &PreparedModel, batch: usize, pad: &[f32]) {
+        let dims = &m.dims;
+        let (t, d) = (dims.seq_len, dims.d_model);
+        let rows = batch * t;
+        let (h_heads, hd) = (dims.n_heads, dims.head_dim());
+        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        ops::add_bias(&mut self.h, &m.in_b);
+        for u in 0..batch {
+            ops::residual_add(&mut self.h[u * t * d..(u + 1) * t * d], &m.pe);
+        }
+        self.scores.clear();
+        self.scores.resize(t * t, 0.0);
+        self.ctx.clear();
+        self.ctx.resize(rows * d, 0.0);
+
+        for blk in &m.blocks {
+            // --- pre-LN multi-head self-attention ------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln1_g, &blk.ln1_b);
+            let sq = blk
+                .wq
+                .gemm_batched(&self.hn, batch, t, None, m.tile, &mut self.q, &mut self.wtile);
+            let sk = blk
+                .wk
+                .gemm_batched(&self.hn, batch, t, None, m.tile, &mut self.k, &mut self.wtile);
+            let sv = blk
+                .wv
+                .gemm_batched(&self.hn, batch, t, None, m.tile, &mut self.v, &mut self.wtile);
+            self.stats.attn.add(&sq);
+            self.stats.attn.add(&sk);
+            self.stats.attn.add(&sv);
+            // The dynamic score/context GEMMs are per-utterance by
+            // construction (activation x activation within one
+            // utterance; software FP32, never pruned).
+            for u in 0..batch {
+                let base = u * t * d;
+                let pad_u = &pad[u * t..(u + 1) * t];
+                for head in 0..h_heads {
+                    let c0 = head * hd;
+                    for a in 0..t {
+                        for b in 0..t {
+                            let mut acc = 0.0f32;
+                            for j in 0..hd {
+                                acc += self.q[base + a * d + c0 + j]
+                                    * self.k[base + b * d + c0 + j];
+                            }
+                            self.scores[a * t + b] =
+                                acc * inv_sqrt_hd + (1.0 - pad_u[b]) * -1e9;
+                        }
+                    }
+                    ops::softmax_rows(&mut self.scores, t);
+                    for a in 0..t {
+                        for j in 0..hd {
+                            let mut acc = 0.0f32;
+                            for b in 0..t {
+                                acc += self.scores[a * t + b]
+                                    * self.v[base + b * d + c0 + j];
+                            }
+                            self.ctx[base + a * d + c0 + j] = acc;
+                        }
+                    }
+                }
+            }
+            let so = blk
+                .wo
+                .gemm_batched(&self.ctx, batch, t, None, m.tile, &mut self.tmp, &mut self.wtile);
+            self.stats.attn.add(&so);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- pre-LN SASP feed-forward --------------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
+            let s1 = blk.w1.gemm_batched(
+                &self.hn,
+                batch,
+                t,
+                Some(&blk.mask1),
+                m.tile,
+                &mut self.mid,
+                &mut self.wtile,
+            );
+            self.stats.ff.add(&s1);
+            ops::add_bias(&mut self.mid, &blk.b1);
+            ops::relu(&mut self.mid);
+            let s2 = blk.w2.gemm_batched(
+                &self.mid,
+                batch,
+                t,
+                Some(&blk.mask2),
+                m.tile,
+                &mut self.tmp,
+                &mut self.wtile,
+            );
+            self.stats.ff.add(&s2);
+            ops::add_bias(&mut self.tmp, &blk.b2);
+            ops::residual_add(&mut self.h, &self.tmp);
+        }
+    }
+
+    /// Final LayerNorm + vocabulary head (+ log-softmax for CTC).
+    fn head(&mut self, m: &PreparedModel, batch: usize, out: &mut Vec<f32>, log_probs: bool) {
+        let dims = &m.dims;
+        let (t, d, v) = (dims.seq_len, dims.d_model, dims.vocab);
+        self.hn.clear();
+        self.hn.extend_from_slice(&self.h);
+        ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
+        let st = gemm_batched_f32(
+            &self.hn,
+            &m.head_w,
+            batch,
+            t,
+            d,
+            v,
+            None,
+            m.tile,
+            out,
+            &mut self.wtile,
+        );
+        self.stats.other.add(&st);
+        ops::add_bias(out, &m.head_b);
+        if log_probs {
+            ops::log_softmax_rows(out, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::encoder::{EncoderWeights, Forward, ModelDims};
+    use crate::infer::testutil::mini_dims;
+    use crate::model::{GemmKind, GemmShape};
+    use crate::sysim::engine::gemm_on_array_batched;
+    use crate::sysim::{SimParams, TileMask};
+    use crate::systolic::{ArrayConfig, Quant};
+    use crate::util::rng::Rng;
+
+    fn random_masks(dims: &ModelDims, tile: usize, p_dead: f64, seed: u64) -> Vec<TileMask> {
+        let mut rng = Rng::new(seed);
+        let (kt, nt) = (dims.d_model / tile, dims.d_ff / tile);
+        let mut out = Vec::new();
+        for _ in 0..dims.n_blocks {
+            out.push(TileMask {
+                kt,
+                nt,
+                live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+            });
+            out.push(TileMask {
+                kt: nt,
+                nt: kt,
+                live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+            });
+        }
+        out
+    }
+
+    /// A ragged batch: random features, per-utterance valid lengths
+    /// covering full, half, and near-empty tails.
+    fn ragged_batch(dims: &ModelDims, batch: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let t = dims.seq_len;
+        let feats: Vec<f32> = (0..batch * t * dims.input_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let mut pad = vec![0.0f32; batch * t];
+        for u in 0..batch {
+            let len = match u % 3 {
+                0 => t,
+                1 => t / 2,
+                _ => 1 + rng.index(t - 1),
+            };
+            for tt in 0..len {
+                pad[u * t + tt] = 1.0;
+            }
+        }
+        (feats, pad)
+    }
+
+    fn prepared(w: &EncoderWeights, quant: Quant, seed: u64) -> PreparedModel {
+        let dims = w.dims;
+        let masks = random_masks(&dims, dims.tile, 0.4, seed);
+        PreparedModel::new(w, dims.tile, quant, Some(&masks)).unwrap()
+    }
+
+    /// The satellite contract: batched == per-utterance, value-exact —
+    /// bitwise for FP32, and bitwise for INT8 too (identical FP op
+    /// sequences), ragged pad tails included.
+    fn assert_batched_equals_per_utterance(quant: Quant) {
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 33);
+        let model = prepared(&w, quant, 35);
+        let batch = 5usize; // deliberately not a multiple of the 4-row microkernel block
+        let (feats, pad) = ragged_batch(&dims, batch, 37);
+        let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
+
+        let mut bf = BatchForward::new();
+        let mut got = Vec::new();
+        bf.run_feats(&model, batch, &feats, &pad, &mut got);
+        assert_eq!(got.len(), batch * t * v);
+
+        let mut fwd = Forward::new();
+        let mut row = Vec::new();
+        for u in 0..batch {
+            fwd.run_feats(
+                &model,
+                &feats[u * t * f..(u + 1) * t * f],
+                &pad[u * t..(u + 1) * t],
+                &mut row,
+            );
+            assert_eq!(
+                &got[u * t * v..(u + 1) * t * v],
+                row.as_slice(),
+                "{quant:?}: utterance {u} must match bitwise"
+            );
+        }
+        assert_eq!(bf.stats.utterances, batch);
+        assert_eq!(fwd.stats.utterances, batch);
+        // Identical skip schedule; batched programming amortized.
+        assert_eq!(bf.stats.ff.tiles_live * batch, fwd.stats.ff.tiles_live);
+        assert_eq!(bf.stats.ff.tiles_skipped * batch, fwd.stats.ff.tiles_skipped);
+        assert_eq!(bf.stats.ff.timing.macs, fwd.stats.ff.timing.macs);
+        assert_eq!(bf.stats.ff.timing.in_words, fwd.stats.ff.timing.in_words);
+        assert_eq!(
+            bf.stats.ff.timing.prog_words * batch,
+            fwd.stats.ff.timing.prog_words,
+            "weight-stationary reuse: one programming pass per batch"
+        );
+        assert_eq!(bf.stats.attn.timing.macs, fwd.stats.attn.timing.macs);
+    }
+
+    #[test]
+    fn batched_forward_bitwise_equals_per_utterance_fp32() {
+        assert_batched_equals_per_utterance(Quant::Fp32);
+    }
+
+    #[test]
+    fn batched_forward_value_exact_per_utterance_int8() {
+        assert_batched_equals_per_utterance(Quant::Int8);
+    }
+
+    #[test]
+    fn batched_forward_per_channel_int8_matches_per_utterance() {
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 41);
+        let masks = random_masks(&dims, dims.tile, 0.3, 43);
+        let model =
+            PreparedModel::new_with(&w, dims.tile, Quant::Int8, Some(&masks), true).unwrap();
+        let batch = 3usize;
+        let (feats, pad) = ragged_batch(&dims, batch, 45);
+        let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
+        let mut bf = BatchForward::new();
+        let mut got = Vec::new();
+        bf.run_feats(&model, batch, &feats, &pad, &mut got);
+        let mut fwd = Forward::new();
+        let mut row = Vec::new();
+        for u in 0..batch {
+            fwd.run_feats(
+                &model,
+                &feats[u * t * f..(u + 1) * t * f],
+                &pad[u * t..(u + 1) * t],
+                &mut row,
+            );
+            assert_eq!(&got[u * t * v..(u + 1) * t * v], row.as_slice(), "utt {u}");
+        }
+    }
+
+    #[test]
+    fn batched_tokens_equal_per_utterance() {
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let w = crate::infer::synth::synth_weights(&dims, 47);
+        let model = prepared(&w, Quant::Fp32, 49);
+        let batch = 3usize;
+        let t = dims.seq_len;
+        let mut rng = Rng::new(8);
+        let tokens: Vec<i32> = (0..batch * t)
+            .map(|_| rng.index(dims.vocab) as i32)
+            .collect();
+        let mut bf = BatchForward::new();
+        let mut got = Vec::new();
+        bf.run_tokens(&model, batch, &tokens, &mut got);
+        let mut fwd = Forward::new();
+        let mut row = Vec::new();
+        let v = dims.vocab;
+        for u in 0..batch {
+            fwd.run_tokens(&model, &tokens[u * t..(u + 1) * t], &mut row);
+            assert_eq!(&got[u * t * v..(u + 1) * t * v], row.as_slice(), "utt {u}");
+        }
+    }
+
+    #[test]
+    fn batched_stats_match_analytic_batched_accounting() {
+        // The ff schedule the batched forward executed must cost exactly
+        // what the analytic engine charges for the same GEMMs + masks at
+        // the same batch — the encoder-scope functional x analytic
+        // cross-check of the reuse model.
+        let dims = mini_dims();
+        let tile = dims.tile;
+        let w = crate::infer::synth::synth_weights(&dims, 61);
+        let masks = random_masks(&dims, tile, 0.5, 63);
+        let model = PreparedModel::new(&w, tile, Quant::Int8, Some(&masks)).unwrap();
+        let batch = 4usize;
+        let (feats, pad) = ragged_batch(&dims, batch, 65);
+        let mut bf = BatchForward::new();
+        let mut out = Vec::new();
+        bf.run_feats(&model, batch, &feats, &pad, &mut out);
+
+        let cfg = ArrayConfig::square(tile, Quant::Int8);
+        let p = SimParams::default();
+        let (t, d, f) = (dims.seq_len, dims.d_model, dims.d_ff);
+        let mut macs = 0u64;
+        let mut bus_words = 0u64;
+        let mut array_cycles = 0u64;
+        for i in 0..dims.n_blocks {
+            let g1 = GemmShape { m: t, k: d, n: f, kind: GemmKind::FeedForward };
+            let g2 = GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward };
+            let c1 = gemm_on_array_batched(&g1, &cfg, &p, Some(&masks[2 * i]), batch);
+            let c2 = gemm_on_array_batched(&g2, &cfg, &p, Some(&masks[2 * i + 1]), batch);
+            macs += c1.counts.macs + c2.counts.macs;
+            bus_words += c1.counts.bus_words + c2.counts.bus_words;
+            array_cycles += c1.counts.array_busy_cycles + c2.counts.array_busy_cycles;
+        }
+        assert_eq!(bf.stats.ff.timing.macs as u64, macs);
+        assert_eq!(bf.stats.ff.timing.total_words() as u64, bus_words);
+        assert_eq!(bf.stats.ff.timing.array_cycles as u64, array_cycles);
+        let live: usize = masks.iter().map(TileMask::live_count).sum();
+        assert_eq!(bf.stats.ff.tiles_live, live);
+    }
+}

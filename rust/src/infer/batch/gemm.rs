@@ -1,0 +1,428 @@
+//! Batched weight-stationary GEMM kernels — the compute core of the
+//! serving runtime.
+//!
+//! The schedule is the same j-outer / k-inner tile grid as the
+//! per-utterance kernels ([`crate::infer::gemm`]), but the inputs are a
+//! flattened `[batch*m, k]` panel and the loop nest is inverted around
+//! the weights: each live tile is loaded (and, for INT8, dequantized
+//! through the table) **once per batch** into a packed cache-resident
+//! block, then every row of every utterance streams through it before
+//! the schedule moves to the next tile. That is the functional image of
+//! weight-stationary reuse — programming charged once, streaming charged
+//! per utterance — and the accounting matches: each live tile costs
+//! [`TileTiming::batched`], i.e. one [`TileTiming::live`] pass plus
+//! `batch-1` [`TileTiming::reuse`] passes (cross-checked against
+//! [`crate::sysim::engine::gemm_on_array_batched`] in the tests below).
+//!
+//! Value-exactness is bit-level, not approximate: within a tile every
+//! output element accumulates its partial products in plain k-ascending
+//! order — exactly the order of the per-utterance kernels — and the
+//! packed weight block holds exactly the values `w_at` would have
+//! produced (same table entries for INT8). So `gemm_batched_*` over a
+//! flattened batch equals running the per-utterance kernel once per
+//! utterance, bitwise, on both weight formats (asserted below).
+
+use crate::sysim::TileMask;
+use crate::systolic::{ArrayConfig, Quant, TileTiming};
+
+use super::super::gemm::{check_grid, Linear, QuantizedLinear, TileStats};
+
+/// Stream every input row through the packed stationary tile:
+/// `y[r, n0..n0+tn] += x[r, k0..k0+tk] * wt`, per-output-element
+/// products accumulated in k-ascending order (the bit-exactness
+/// contract). Rows go four at a time so each packed weight row is
+/// loaded once per four input rows — the register-level face of
+/// weight-stationary reuse.
+#[inline]
+fn stream_tile(
+    x: &[f32],
+    y: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+    tk: usize,
+    n0: usize,
+    tn: usize,
+    wt: &[f32],
+) {
+    debug_assert_eq!(wt.len(), tk * tn);
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let x0 = &x[r * k + k0..r * k + k0 + tk];
+        let x1 = &x[(r + 1) * k + k0..(r + 1) * k + k0 + tk];
+        let x2 = &x[(r + 2) * k + k0..(r + 2) * k + k0 + tk];
+        let x3 = &x[(r + 3) * k + k0..(r + 3) * k + k0 + tk];
+        let block = &mut y[r * n..(r + 4) * n];
+        let (y0, rest) = block.split_at_mut(n);
+        let (y1, rest) = rest.split_at_mut(n);
+        let (y2, y3) = rest.split_at_mut(n);
+        let y0 = &mut y0[n0..n0 + tn];
+        let y1 = &mut y1[n0..n0 + tn];
+        let y2 = &mut y2[n0..n0 + tn];
+        let y3 = &mut y3[n0..n0 + tn];
+        for kk in 0..tk {
+            let (a0, a1, a2, a3) = (x0[kk], x1[kk], x2[kk], x3[kk]);
+            let wrow = &wt[kk * tn..kk * tn + tn];
+            for (cc, &wv) in wrow.iter().enumerate() {
+                y0[cc] += a0 * wv;
+                y1[cc] += a1 * wv;
+                y2[cc] += a2 * wv;
+                y3[cc] += a3 * wv;
+            }
+        }
+        r += 4;
+    }
+    while r < rows {
+        let xrow = &x[r * k + k0..r * k + k0 + tk];
+        let yrow = &mut y[r * n + n0..r * n + n0 + tn];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &wt[kk * tn..kk * tn + tn];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// The shared batched schedule: `fill` packs one live tile's weight
+/// values (monomorphized per format, so the streamed FP op sequence is
+/// identical across formats), then every row streams through it.
+fn gemm_batched_tiled(
+    x: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    mask: Option<&TileMask>,
+    tile: usize,
+    quant: Quant,
+    y: &mut Vec<f32>,
+    wtile: &mut Vec<f32>,
+    fill: impl Fn(&mut [f32], usize, usize, usize, usize),
+) -> TileStats {
+    assert!(batch > 0, "batched GEMM needs at least one input block");
+    let rows = batch * m;
+    assert_eq!(x.len(), rows * k, "x must be (batch*m) x k");
+    let (kt, nt) = check_grid(k, n, tile, mask);
+    y.clear();
+    y.resize(rows * n, 0.0);
+    let mut stats = TileStats::default();
+    if rows == 0 {
+        return stats;
+    }
+    let per_tile = TileTiming::batched(&ArrayConfig::square(tile, quant), m, batch);
+    for j in 0..nt {
+        let n0 = j * tile;
+        let tn = (n0 + tile).min(n) - n0;
+        for i in 0..kt {
+            if let Some(ms) = mask {
+                if !ms.is_live(i, j) {
+                    stats.tiles_skipped += 1;
+                    continue;
+                }
+            }
+            let k0 = i * tile;
+            let tk = (k0 + tile).min(k) - k0;
+            wtile.clear();
+            wtile.resize(tk * tn, 0.0);
+            fill(wtile, k0, tk, n0, tn);
+            stream_tile(x, y, rows, k, n, k0, tk, n0, tn, wtile);
+            stats.tiles_live += 1;
+            stats.timing.add(&per_tile);
+        }
+    }
+    stats
+}
+
+/// Batched FP32 GEMM: `y[b*m, n] = x[b*m, k] * w[k, n]`, dead tiles
+/// skipped, each live tile packed once per batch. `wtile` is the
+/// caller-owned packing scratch (no steady-state allocation).
+pub fn gemm_batched_f32(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    mask: Option<&TileMask>,
+    tile: usize,
+    y: &mut Vec<f32>,
+    wtile: &mut Vec<f32>,
+) -> TileStats {
+    assert_eq!(w.len(), k * n, "w must be k x n");
+    gemm_batched_tiled(
+        x,
+        batch,
+        m,
+        k,
+        n,
+        mask,
+        tile,
+        Quant::Fp32,
+        y,
+        wtile,
+        |dst, k0, tk, n0, tn| {
+            for kk in 0..tk {
+                let row = (k0 + kk) * n + n0;
+                dst[kk * tn..kk * tn + tn].copy_from_slice(&w[row..row + tn]);
+            }
+        },
+    )
+}
+
+/// Batched INT8 GEMM: the identical schedule and streaming loop, with
+/// each live tile dequantized through the table(s) once per batch
+/// ([`QuantizedLinear::dequant_tile`]) instead of once per MAC.
+pub fn gemm_batched_int8(
+    x: &[f32],
+    w: &QuantizedLinear,
+    batch: usize,
+    m: usize,
+    mask: Option<&TileMask>,
+    tile: usize,
+    y: &mut Vec<f32>,
+    wtile: &mut Vec<f32>,
+) -> TileStats {
+    gemm_batched_tiled(
+        x,
+        batch,
+        m,
+        w.k,
+        w.n,
+        mask,
+        tile,
+        Quant::Int8,
+        y,
+        wtile,
+        |dst, k0, tk, n0, tn| w.dequant_tile(dst, k0, tk, n0, tn),
+    )
+}
+
+impl Linear {
+    /// Weight-stationary batched GEMM over `batch` blocks of `m` rows
+    /// (the serving-runtime counterpart of [`Linear::gemm`]).
+    pub fn gemm_batched(
+        &self,
+        x: &[f32],
+        batch: usize,
+        m: usize,
+        mask: Option<&TileMask>,
+        tile: usize,
+        y: &mut Vec<f32>,
+        wtile: &mut Vec<f32>,
+    ) -> TileStats {
+        match self {
+            Linear::F32 { k, n, w } => {
+                gemm_batched_f32(x, w, batch, m, *k, *n, mask, tile, y, wtile)
+            }
+            Linear::Int8(q) => gemm_batched_int8(x, q, batch, m, mask, tile, y, wtile),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::gemm::{gemm_f32, gemm_int8};
+    use crate::model::{GemmKind, GemmShape};
+    use crate::sysim::engine::gemm_on_array_batched;
+    use crate::sysim::SimParams;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_mask(rng: &mut Rng, kt: usize, nt: usize, p_dead: f64) -> TileMask {
+        TileMask {
+            kt,
+            nt,
+            live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+        }
+    }
+
+    /// Per-utterance reference: the PR-2 kernel run once per block,
+    /// outputs concatenated, stats summed.
+    fn per_utterance_f32(
+        x: &[f32],
+        w: &[f32],
+        batch: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        mask: Option<&TileMask>,
+        t: usize,
+    ) -> (Vec<f32>, TileStats) {
+        let mut out = Vec::with_capacity(batch * m * n);
+        let mut stats = TileStats::default();
+        let mut y = Vec::new();
+        for u in 0..batch {
+            let st = gemm_f32(&x[u * m * k..(u + 1) * m * k], w, m, k, n, mask, t, &mut y);
+            stats.add(&st);
+            out.extend_from_slice(&y);
+        }
+        (out, stats)
+    }
+
+    #[test]
+    fn prop_batched_f32_bitwise_equals_per_utterance() {
+        check("batched f32 == per-utterance f32", 32, |rng: &mut Rng| {
+            let t = [2usize, 4, 8][rng.index(3)];
+            let batch = rng.index(4) + 1;
+            let m = rng.index(8) + 1;
+            let k = rng.index(3 * t) + 1;
+            let n = rng.index(3 * t) + 1;
+            let x: Vec<f32> = (0..batch * m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mask = random_mask(rng, k.div_ceil(t), n.div_ceil(t), 0.3);
+            let (want, pstats) = per_utterance_f32(&x, &w, batch, m, k, n, Some(&mask), t);
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            let bstats =
+                gemm_batched_f32(&x, &w, batch, m, k, n, Some(&mask), t, &mut got, &mut scratch);
+            if got != want {
+                return (false, format!("t={t} b={batch} m={m} k={k} n={n}"));
+            }
+            // Same skip schedule; weight programming charged once per
+            // batch instead of once per utterance.
+            let ok = bstats.tiles_live * batch == pstats.tiles_live
+                && bstats.tiles_skipped * batch == pstats.tiles_skipped
+                && bstats.timing.macs == pstats.timing.macs
+                && bstats.timing.in_words == pstats.timing.in_words
+                && bstats.timing.prog_words * batch == pstats.timing.prog_words;
+            (ok, format!("stats b={batch}: {bstats:?} vs {pstats:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_batched_int8_bitwise_equals_per_utterance() {
+        check("batched int8 == per-utterance int8", 32, |rng: &mut Rng| {
+            let t = [2usize, 4, 8][rng.index(3)];
+            let batch = rng.index(4) + 1;
+            let m = rng.index(8) + 1;
+            let k = rng.index(3 * t) + 1;
+            let n = rng.index(3 * t) + 1;
+            let per_channel = rng.chance(0.5);
+            let x: Vec<f32> = (0..batch * m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let q = if per_channel {
+                QuantizedLinear::from_f32_per_channel(&w, k, n)
+            } else {
+                QuantizedLinear::from_f32(&w, k, n)
+            };
+            let mask = random_mask(rng, k.div_ceil(t), n.div_ceil(t), 0.4);
+            let mut want = Vec::with_capacity(batch * m * n);
+            let mut y = Vec::new();
+            for u in 0..batch {
+                gemm_int8(&x[u * m * k..(u + 1) * m * k], &q, m, Some(&mask), t, &mut y);
+                want.extend_from_slice(&y);
+            }
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            gemm_batched_int8(&x, &q, batch, m, Some(&mask), t, &mut got, &mut scratch);
+            (
+                got == want,
+                format!("t={t} b={batch} m={m} k={k} n={n} pc={per_channel}"),
+            )
+        });
+    }
+
+    #[test]
+    fn batched_timing_is_live_plus_reuse() {
+        // Per live tile, the functional engine charges exactly one live
+        // pass plus batch-1 reuse passes — the TileTiming::reuse model.
+        let mut rng = Rng::new(51);
+        let (t, batch, m, k, n) = (4usize, 3usize, 6usize, 16usize, 12usize);
+        let x: Vec<f32> = (0..batch * m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask = random_mask(&mut rng, 4, 3, 0.4);
+        let mut y = Vec::new();
+        let mut scratch = Vec::new();
+        let stats =
+            gemm_batched_f32(&x, &w, batch, m, k, n, Some(&mask), t, &mut y, &mut scratch);
+        let cfg = ArrayConfig::square(t, Quant::Fp32);
+        let mut want = TileTiming::skipped();
+        for _ in 0..mask.live_count() {
+            want.add(&TileTiming::live(&cfg, m));
+            for _ in 1..batch {
+                want.add(&TileTiming::reuse(&cfg, m));
+            }
+        }
+        assert_eq!(stats.timing, want);
+        assert_eq!(stats.tiles_live, mask.live_count());
+    }
+
+    #[test]
+    fn batched_stats_match_analytic_batched_engine() {
+        // Functional x analytic at batch scope: the schedule the batched
+        // kernel executed must cost exactly what the analytic simulator
+        // charges for the same GEMM + mask + batch.
+        let mut rng = Rng::new(53);
+        let (t, batch, m, k, n) = (8usize, 4usize, 16usize, 32usize, 24usize);
+        let x: Vec<f32> = (0..batch * m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask = random_mask(&mut rng, 4, 3, 0.5);
+        let g = GemmShape { m, k, n, kind: GemmKind::FeedForward };
+        let p = SimParams::default();
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let cfg = ArrayConfig::square(t, quant);
+            let cost = gemm_on_array_batched(&g, &cfg, &p, Some(&mask), batch);
+            let mut y = Vec::new();
+            let mut scratch = Vec::new();
+            let stats = match quant {
+                Quant::Fp32 => gemm_batched_f32(
+                    &x, &w, batch, m, k, n, Some(&mask), t, &mut y, &mut scratch,
+                ),
+                Quant::Int8 => {
+                    let q = QuantizedLinear::from_f32(&w, k, n);
+                    gemm_batched_int8(&x, &q, batch, m, Some(&mask), t, &mut y, &mut scratch)
+                }
+            };
+            assert_eq!(cost.counts.macs, stats.timing.macs as u64, "{quant:?}");
+            assert_eq!(
+                cost.counts.bus_words,
+                stats.timing.total_words() as u64,
+                "{quant:?}"
+            );
+            assert_eq!(
+                cost.counts.array_busy_cycles,
+                stats.timing.array_cycles as u64,
+                "{quant:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_dispatch_and_batch_one() {
+        // batch == 1 is the per-utterance kernel, bitwise, through the
+        // Linear front door in both formats.
+        let mut rng = Rng::new(57);
+        let (t, m, k, n) = (4usize, 7, 12, 8);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mask = random_mask(&mut rng, 3, 2, 0.3);
+        for lin in [
+            Linear::from_f32(w.clone(), k, n),
+            Linear::quantized(&w, k, n),
+            Linear::quantized_per_channel(&w, k, n),
+        ] {
+            let mut a = Vec::new();
+            let sa = lin.gemm(&x, m, Some(&mask), t, &mut a);
+            let mut b = Vec::new();
+            let mut scratch = Vec::new();
+            let sb = lin.gemm_batched(&x, 1, m, Some(&mask), t, &mut b, &mut scratch);
+            assert_eq!(a, b);
+            assert_eq!(sa, sb, "batch-1 accounting degenerates to live passes");
+        }
+    }
+
+    #[test]
+    fn empty_rows_return_empty() {
+        let w = vec![1.0f32; 16];
+        let mut y = vec![9.0f32; 3];
+        let mut scratch = Vec::new();
+        let stats =
+            gemm_batched_f32(&[], &w, 2, 0, 4, 4, None, 4, &mut y, &mut scratch);
+        assert!(y.is_empty());
+        assert_eq!(stats, TileStats::default());
+    }
+}

@@ -1,0 +1,30 @@
+//! Batched weight-stationary serving runtime — the throughput face of
+//! the native engine.
+//!
+//! The per-utterance engine ([`crate::infer::encoder::Forward`]) runs
+//! one utterance at a time and reprograms every live weight tile per
+//! utterance — exactly the reuse the analytic model's
+//! [`crate::systolic::TileTiming::reuse`] term says a weight-stationary
+//! array should not pay. This module closes that gap for serving:
+//!
+//! - [`gemm`] — flattened `[batch*seq, d]` GEMM kernels (FP32 and
+//!   sign-magnitude INT8) that load/dequantize each pruned weight tile
+//!   **once per batch** into a packed cache-resident block and stream
+//!   all utterances through it (4-row register blocking), on the same
+//!   j-outer/k-inner skip schedule as the per-utterance kernels. Each
+//!   live tile is charged [`crate::systolic::TileTiming::batched`] — one
+//!   live pass plus `batch-1` reuse passes — and the counts cross-check
+//!   exactly against [`crate::sysim::engine::gemm_on_array_batched`].
+//! - [`encoder`] — [`BatchForward`], the batched encoder forward: all
+//!   weight GEMMs flattened across the batch, pad-mask-aware
+//!   per-utterance attention, **bitwise identical** outputs to running
+//!   the per-utterance reference once per utterance (FP32 and INT8,
+//!   ragged pad tails included — the value-exactness contract that lets
+//!   [`crate::infer::NativeBackend`] serve batches on this path while
+//!   the per-utterance engine remains the stats-exact reference).
+
+pub mod encoder;
+pub mod gemm;
+
+pub use encoder::BatchForward;
+pub use gemm::{gemm_batched_f32, gemm_batched_int8};

@@ -16,7 +16,7 @@
 use anyhow::{ensure, Result};
 
 use crate::data::{Bundle, Tensor};
-use crate::quant::fake_quantize;
+use crate::quant::{fake_quantize, fake_quantize_per_channel};
 use crate::sysim::TileMask;
 use crate::systolic::Quant;
 
@@ -238,25 +238,32 @@ pub struct PreparedModel {
     pub head_b: Vec<f32>,
     /// Precomputed `seq_len x d_model` position table.
     pub pe: Vec<f32>,
+    /// Whether INT8 weights were staged with per-output-channel scales.
+    pub per_channel: bool,
 }
 
 /// Fake-quantize a copy of a software-executed matrix in INT8 mode.
-fn soft_weight(w: &[f32], rows: usize, cols: usize, quant: Quant) -> Vec<f32> {
+fn soft_weight(w: &[f32], rows: usize, cols: usize, quant: Quant, per_channel: bool) -> Vec<f32> {
     match quant {
         Quant::Fp32 => w.to_vec(),
         Quant::Int8 => {
             let mut t = Tensor::from_f32(&[rows, cols], w);
-            fake_quantize(&mut t);
+            if per_channel {
+                fake_quantize_per_channel(&mut t);
+            } else {
+                fake_quantize(&mut t);
+            }
             t.f32s()
         }
     }
 }
 
 /// Stage an array-executed weight GEMM in the configured format.
-fn kernel_weight(w: &[f32], k: usize, n: usize, quant: Quant) -> Linear {
-    match quant {
-        Quant::Fp32 => Linear::from_f32(w.to_vec(), k, n),
-        Quant::Int8 => Linear::quantized(w, k, n),
+fn kernel_weight(w: &[f32], k: usize, n: usize, quant: Quant, per_channel: bool) -> Linear {
+    match (quant, per_channel) {
+        (Quant::Fp32, _) => Linear::from_f32(w.to_vec(), k, n),
+        (Quant::Int8, false) => Linear::quantized(w, k, n),
+        (Quant::Int8, true) => Linear::quantized_per_channel(w, k, n),
     }
 }
 
@@ -272,9 +279,10 @@ fn masked_kernel_weight(
     tile: usize,
     mask: &TileMask,
     quant: Quant,
+    per_channel: bool,
 ) -> Linear {
     if mask.live_count() == mask.n_tiles() {
-        return kernel_weight(w, k, n, quant);
+        return kernel_weight(w, k, n, quant, per_channel);
     }
     let mut wz = w.to_vec();
     for (idx, v) in wz.iter_mut().enumerate() {
@@ -283,7 +291,7 @@ fn masked_kernel_weight(
             *v = 0.0;
         }
     }
-    kernel_weight(&wz, k, n, quant)
+    kernel_weight(&wz, k, n, quant, per_channel)
 }
 
 impl PreparedModel {
@@ -295,6 +303,21 @@ impl PreparedModel {
         tile: usize,
         quant: Quant,
         masks: Option<&[TileMask]>,
+    ) -> Result<Self> {
+        Self::new_with(w, tile, quant, masks, false)
+    }
+
+    /// [`Self::new`] with the per-output-channel INT8 scale flag: when
+    /// set (and `quant` is INT8), every quantized weight gets one scale
+    /// per output channel ([`crate::quant::quantize_per_channel`])
+    /// instead of the per-tensor scale — tighter PTQ at high pruning
+    /// rates. Ignored in FP32 mode.
+    pub fn new_with(
+        w: &EncoderWeights,
+        tile: usize,
+        quant: Quant,
+        masks: Option<&[TileMask]>,
+        per_channel: bool,
     ) -> Result<Self> {
         let dims = w.dims;
         let (d, f) = (dims.d_model, dims.d_ff);
@@ -326,15 +349,15 @@ impl PreparedModel {
             blocks.push(PreparedBlock {
                 ln1_g: blk.ln1_g.clone(),
                 ln1_b: blk.ln1_b.clone(),
-                wq: kernel_weight(&blk.wq, d, d, quant),
-                wk: kernel_weight(&blk.wk, d, d, quant),
-                wv: kernel_weight(&blk.wv, d, d, quant),
-                wo: kernel_weight(&blk.wo, d, d, quant),
+                wq: kernel_weight(&blk.wq, d, d, quant, per_channel),
+                wk: kernel_weight(&blk.wk, d, d, quant, per_channel),
+                wv: kernel_weight(&blk.wv, d, d, quant, per_channel),
+                wo: kernel_weight(&blk.wo, d, d, quant, per_channel),
                 ln2_g: blk.ln2_g.clone(),
                 ln2_b: blk.ln2_b.clone(),
-                w1: masked_kernel_weight(&blk.w1, d, f, tile, &mask1, quant),
+                w1: masked_kernel_weight(&blk.w1, d, f, tile, &mask1, quant, per_channel),
                 b1: blk.b1.clone(),
-                w2: masked_kernel_weight(&blk.w2, f, d, tile, &mask2, quant),
+                w2: masked_kernel_weight(&blk.w2, f, d, tile, &mask2, quant, per_channel),
                 b2: blk.b2.clone(),
                 mask1,
                 mask2,
@@ -345,14 +368,15 @@ impl PreparedModel {
             dims,
             tile,
             quant,
-            in_w: soft_weight(&w.in_w, in_rows, d, quant),
+            in_w: soft_weight(&w.in_w, in_rows, d, quant, per_channel),
             in_b: w.in_b.clone(),
             blocks,
             lnf_g: w.lnf_g.clone(),
             lnf_b: w.lnf_b.clone(),
-            head_w: soft_weight(&w.head_w, d, dims.vocab, quant),
+            head_w: soft_weight(&w.head_w, d, dims.vocab, quant, per_channel),
             head_b: w.head_b.clone(),
             pe: ops::sinusoidal_pe(dims.seq_len, d),
+            per_channel,
         })
     }
 
@@ -683,6 +707,50 @@ mod tests {
         let fq2 = |vals: &mut Vec<f32>, r: usize, c: usize| {
             let mut t = Tensor::from_f32(&[r, c], vals);
             fake_quantize(&mut t);
+            *vals = t.f32s();
+        };
+        let (d, f) = (dims.d_model, dims.d_ff);
+        fq2(&mut wfq.in_w, dims.input_dim, d);
+        fq2(&mut wfq.head_w, d, dims.vocab);
+        for blk in wfq.blocks.iter_mut() {
+            fq2(&mut blk.wq, d, d);
+            fq2(&mut blk.wk, d, d);
+            fq2(&mut blk.wv, d, d);
+            fq2(&mut blk.wo, d, d);
+            fq2(&mut blk.w1, d, f);
+            fq2(&mut blk.w2, f, d);
+        }
+        let fp32 = PreparedModel::new(&wfq, dims.tile, Quant::Fp32, Some(&masks)).unwrap();
+
+        let mut fwd = Forward::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fwd.run_feats(&int8, &feats, &pad, &mut a);
+        fwd.run_feats(&fp32, &feats, &pad, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn per_channel_int8_forward_matches_fake_quantized_fp32_forward() {
+        // The per-channel oracle identity at encoder scope: kernel INT8
+        // with per-column scales == FP32 over prune-then-per-channel
+        // fake-quantized weights.
+        use crate::quant::fake_quantize_per_channel;
+        let dims = mini_dims();
+        let w = crate::infer::synth::synth_weights(&dims, 29);
+        let masks = random_masks(&dims, dims.tile, 0.3, 15);
+        let (feats, pad) = random_input(&dims, 14);
+
+        let int8 =
+            PreparedModel::new_with(&w, dims.tile, Quant::Int8, Some(&masks), true).unwrap();
+        assert!(int8.per_channel);
+        let mut wfq = w.clone();
+        zero_ff_tiles(&mut wfq, &masks, dims.tile);
+        let fq2 = |vals: &mut Vec<f32>, r: usize, c: usize| {
+            let mut t = Tensor::from_f32(&[r, c], vals);
+            fake_quantize_per_channel(&mut t);
             *vals = t.f32s();
         };
         let (d, f) = (dims.d_model, dims.d_ff);

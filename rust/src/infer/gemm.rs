@@ -51,7 +51,12 @@ impl TileStats {
     }
 }
 
-fn check_grid(k: usize, n: usize, tile: usize, mask: Option<&TileMask>) -> (usize, usize) {
+pub(crate) fn check_grid(
+    k: usize,
+    n: usize,
+    tile: usize,
+    mask: Option<&TileMask>,
+) -> (usize, usize) {
     assert!(tile > 0, "tile must be positive");
     let kt = k.div_ceil(tile);
     let nt = n.div_ceil(tile);
@@ -132,9 +137,11 @@ pub fn gemm_f32(
     gemm_tiled(x, m, k, n, mask, tile, Quant::Fp32, y, |kk, c| w[kk * n + c])
 }
 
-/// A weight matrix quantized to sign-magnitude INT8 with a per-tensor
-/// scale — what `SA_PROG` ships over the bus (§3.2/§3.3), one byte per
-/// weight instead of four.
+/// A weight matrix quantized to sign-magnitude INT8 — what `SA_PROG`
+/// ships over the bus (§3.2/§3.3), one byte per weight instead of four.
+/// Scales are per-tensor by default, or per **output channel** (one per
+/// column, the ROADMAP's QoS-tightening follow-on) when constructed via
+/// [`QuantizedLinear::from_f32_per_channel`].
 #[derive(Clone, Debug)]
 pub struct QuantizedLinear {
     pub k: usize,
@@ -142,11 +149,17 @@ pub struct QuantizedLinear {
     /// Row-major `k x n` sign-magnitude encodings
     /// ([`SignMag8::to_bits`]).
     pub bits: Vec<u8>,
-    /// Dequantization scale: `w ≈ mag * scale`.
+    /// Per-tensor dequantization scale (`w ≈ mag * scale`); in
+    /// per-channel mode, the coarsest (maximum) column scale.
     pub scale: f32,
-    /// 256-entry dequantization table: `lut[bits] = to_i8(bits) * scale`
-    /// — exactly the fake-quantized weight values, so the INT8 kernel is
-    /// value-identical to the FP32 kernel over `fake_quantize`d weights.
+    /// Per-output-channel scales (`Some` = per-channel mode).
+    pub col_scales: Option<Vec<f32>>,
+    /// Dequantization table(s): `lut[bits] = to_i8(bits) * scale` — 256
+    /// entries per-tensor, or one 256-entry table **per column**
+    /// (`lut[c*256 + bits]`) in per-channel mode. Either way the entries
+    /// are exactly the fake-quantized weight values, so the INT8 kernel
+    /// is value-identical to the FP32 kernel over the matching
+    /// fake-quantized weights.
     lut: Vec<f32>,
 }
 
@@ -167,17 +180,85 @@ impl QuantizedLinear {
         for (b, slot) in lut.iter_mut().enumerate() {
             *slot = SignMag8::from_bits(b as u8).to_i8() as f32 * q.scale;
         }
-        QuantizedLinear { k, n, bits, scale: q.scale, lut }
+        QuantizedLinear { k, n, bits, scale: q.scale, col_scales: None, lut }
     }
 
-    /// Dequantized value of one stored weight byte.
+    /// Quantize with one scale per output channel
+    /// ([`crate::quant::quantize_per_channel`]): a 256-entry table per
+    /// column, value-identical to `fake_quantize_per_channel`d FP32.
+    pub fn from_f32_per_channel(w: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        let t = Tensor::from_f32(&[k, n], w);
+        let q = crate::quant::quantize_per_channel(&t);
+        let bits: Vec<u8> = q
+            .values
+            .iter()
+            .map(|v| SignMag8::from_i8(*v).to_bits())
+            .collect();
+        let mut lut = vec![0.0f32; 256 * n];
+        for (c, s) in q.scales.iter().enumerate() {
+            for b in 0..256usize {
+                lut[c * 256 + b] = SignMag8::from_bits(b as u8).to_i8() as f32 * s;
+            }
+        }
+        let scale = q.scales.iter().fold(0.0f32, |a, s| a.max(*s));
+        QuantizedLinear { k, n, bits, scale, col_scales: Some(q.scales), lut }
+    }
+
+    /// Dequantized value of one stored weight byte (per-tensor mode).
     pub fn dequant(&self, bits: u8) -> f32 {
+        assert!(
+            self.col_scales.is_none(),
+            "per-channel weights dequantize by column: use dequant_at"
+        );
         self.lut[bits as usize]
+    }
+
+    /// Dequantized value of the stored weight at `(kk, c)` in either
+    /// scale mode.
+    #[inline]
+    pub fn dequant_at(&self, kk: usize, c: usize) -> f32 {
+        let b = self.bits[kk * self.n + c] as usize;
+        if self.col_scales.is_some() {
+            self.lut[c * 256 + b]
+        } else {
+            self.lut[b]
+        }
+    }
+
+    /// Dequantize the `[k0, k0+tk) x [n0, n0+tn)` weight tile into `dst`
+    /// (row-major `tk x tn`) — one table pass per tile, which is what
+    /// lets the batched weight-stationary kernel dequantize each tile
+    /// **once per batch** instead of once per MAC.
+    pub fn dequant_tile(&self, dst: &mut [f32], k0: usize, tk: usize, n0: usize, tn: usize) {
+        debug_assert_eq!(dst.len(), tk * tn);
+        match &self.col_scales {
+            None => {
+                for kk in 0..tk {
+                    let row = (k0 + kk) * self.n + n0;
+                    let src = &self.bits[row..row + tn];
+                    let out = &mut dst[kk * tn..kk * tn + tn];
+                    for (o, &b) in out.iter_mut().zip(src) {
+                        *o = self.lut[b as usize];
+                    }
+                }
+            }
+            Some(_) => {
+                for kk in 0..tk {
+                    let row = (k0 + kk) * self.n + n0;
+                    let src = &self.bits[row..row + tn];
+                    let out = &mut dst[kk * tn..kk * tn + tn];
+                    for (cc, (o, &b)) in out.iter_mut().zip(src).enumerate() {
+                        *o = self.lut[(n0 + cc) * 256 + b as usize];
+                    }
+                }
+            }
+        }
     }
 }
 
 /// INT8 variant of [`gemm_f32`]: the identical schedule, weights read
-/// as sign-magnitude bytes and dequantized through the table.
+/// as sign-magnitude bytes and dequantized through the table(s).
 pub fn gemm_int8(
     x: &[f32],
     w: &QuantizedLinear,
@@ -188,9 +269,14 @@ pub fn gemm_int8(
 ) -> TileStats {
     let (k, n) = (w.k, w.n);
     let (bits, lut) = (&w.bits, &w.lut);
-    gemm_tiled(x, m, k, n, mask, tile, Quant::Int8, y, |kk, c| {
-        lut[bits[kk * n + c] as usize]
-    })
+    match &w.col_scales {
+        None => gemm_tiled(x, m, k, n, mask, tile, Quant::Int8, y, |kk, c| {
+            lut[bits[kk * n + c] as usize]
+        }),
+        Some(_) => gemm_tiled(x, m, k, n, mask, tile, Quant::Int8, y, |kk, c| {
+            lut[c * 256 + bits[kk * n + c] as usize]
+        }),
+    }
 }
 
 /// One weight GEMM of the prepared model: FP32 or kernel-INT8.
@@ -208,6 +294,10 @@ impl Linear {
 
     pub fn quantized(w: &[f32], k: usize, n: usize) -> Self {
         Linear::Int8(QuantizedLinear::from_f32(w, k, n))
+    }
+
+    pub fn quantized_per_channel(w: &[f32], k: usize, n: usize) -> Self {
+        Linear::Int8(QuantizedLinear::from_f32_per_channel(w, k, n))
     }
 
     pub fn k(&self) -> usize {
@@ -342,6 +432,74 @@ mod tests {
             }
             (q.scale == fq_scale, format!("scale {} vs {}", q.scale, fq_scale))
         });
+    }
+
+    #[test]
+    fn prop_per_channel_int8_matches_fake_quantized_f32_oracle() {
+        // The per-channel INT8 kernel agrees with the FP32 kernel over
+        // per-channel fake-quantized weights exactly — both read weight
+        // values computed as `to_i8(bits) * scales[c]`, so the FP op
+        // sequences are identical.
+        use crate::quant::fake_quantize_per_channel;
+        check("per-channel int8 gemm == fq f32 gemm", 24, |rng: &mut Rng| {
+            let t = [2usize, 4, 8][rng.index(3)];
+            let m = rng.index(8) + 1;
+            let k = rng.index(3 * t) + 1;
+            let n = rng.index(3 * t) + 1;
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mask = random_mask(rng, k.div_ceil(t), n.div_ceil(t), 0.4);
+            let q = QuantizedLinear::from_f32_per_channel(&w, k, n);
+            let mut got = Vec::new();
+            gemm_int8(&x, &q, m, Some(&mask), t, &mut got);
+            let mut wfq = Tensor::from_f32(&[k, n], &w);
+            let scales = fake_quantize_per_channel(&mut wfq);
+            let mut want = Vec::new();
+            gemm_f32(&x, &wfq.f32s(), m, k, n, Some(&mask), t, &mut want);
+            if got != want {
+                return (false, format!("t={t} m={m} k={k} n={n}"));
+            }
+            let sc = q.col_scales.as_ref().unwrap();
+            (sc == &scales, "col scales diverge from fake-quant".into())
+        });
+    }
+
+    #[test]
+    fn per_channel_dequant_at_and_tile() {
+        // Column 1 carries a 10x outlier, so its scale is 10x coarser
+        // while column 0 keeps fine resolution.
+        let w = vec![1.27f32, 12.7, -0.635, -12.7];
+        let q = QuantizedLinear::from_f32_per_channel(&w, 2, 2);
+        let sc = q.col_scales.as_ref().unwrap();
+        assert!((sc[0] - 0.01).abs() < 1e-6);
+        assert!((sc[1] - 0.1).abs() < 1e-6);
+        assert!((q.scale - 0.1).abs() < 1e-6, "tensor scale = coarsest column");
+        assert!((q.dequant_at(0, 0) - 1.27).abs() < 1e-6);
+        assert!((q.dequant_at(1, 1) + 12.7).abs() < 1e-6);
+        // dequant_tile reproduces dequant_at over the full grid.
+        let mut tile = vec![0.0f32; 4];
+        q.dequant_tile(&mut tile, 0, 2, 0, 2);
+        for kk in 0..2 {
+            for cc in 0..2 {
+                assert_eq!(tile[kk * 2 + cc], q.dequant_at(kk, cc));
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_dequant_tile_matches_dequant_at() {
+        let mut rng = Rng::new(17);
+        let (k, n) = (6usize, 10usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let q = QuantizedLinear::from_f32(&w, k, n);
+        let (tk, tn) = (3usize, 4usize);
+        let mut tile = vec![0.0f32; tk * tn];
+        q.dequant_tile(&mut tile, 2, tk, 5, tn);
+        for kk in 0..tk {
+            for cc in 0..tn {
+                assert_eq!(tile[kk * tn + cc], q.dequant_at(2 + kk, 5 + cc));
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,12 @@
 //!   sign-magnitude bytes ([`crate::arith::SignMag8`]) with the
 //!   [`crate::quant`] per-tensor scale; the FP32 kernel over
 //!   fake-quantized weights is its value-exact oracle.
+//! - [`batch`] — the batched weight-stationary serving runtime:
+//!   flattened `[batch*seq, d]` GEMMs that load each pruned tile once
+//!   per batch ([`crate::systolic::TileTiming::batched`] accounting) and
+//!   a batched encoder forward ([`BatchForward`]) that is bitwise
+//!   identical to the per-utterance reference — what
+//!   [`NativeBackend`] serves batches on.
 //! - [`ops`] — the non-GEMM operators (LayerNorm, masked softmax, ReLU,
 //!   GELU, residual adds, sinusoidal positions, log-softmax CTC head),
 //!   mirroring `python/compile/model.py`.
@@ -33,12 +39,14 @@
 //!   degradation curves are measurable without trained artifacts.
 
 pub mod backend;
+pub mod batch;
 pub mod encoder;
 pub mod gemm;
 pub mod ops;
 pub mod synth;
 
 pub use backend::NativeBackend;
+pub use batch::BatchForward;
 pub use encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
 pub use gemm::{Linear, QuantizedLinear, TileStats};
 pub use synth::{synth_testset, synth_weights};

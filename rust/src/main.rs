@@ -6,7 +6,8 @@
 //!             headline all
 //! sasp sweep              full design-space sweep (timing only)
 //! sasp qos <tile> <rate> <fp32|int8>
-//!                         evaluate one QoS point via PJRT
+//!                         evaluate one QoS point (PJRT when artifacts
+//!                         exist, batched native engine otherwise)
 //! sasp info               platform + artifact inventory
 //! ```
 //!
@@ -18,7 +19,6 @@ use sasp::config::ExperimentConfig;
 use sasp::coordinator::{Explorer, SweepPoint};
 use sasp::harness::{self, QosCache};
 use sasp::model::zoo;
-use sasp::qos::{AsrEvaluator, MtEvaluator};
 use sasp::runtime::Engine;
 use sasp::systolic::Quant;
 
@@ -70,11 +70,13 @@ fn load_config(cli: &Cli) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn qos_stack(cfg: &ExperimentConfig) -> Result<(Engine, QosCache)> {
-    let mut engine = Engine::new(&cfg.artifacts_dir)?;
-    let asr = AsrEvaluator::new(&mut engine, &cfg.artifacts_dir, "asr_encoder_ref")?;
-    let mt = MtEvaluator::new(&mut engine, &cfg.artifacts_dir, "mt_encoder_ref").ok();
-    Ok((engine, QosCache::new(asr, mt)))
+fn qos_stack(cfg: &ExperimentConfig) -> Result<QosCache> {
+    // Auto-selected: PJRT over compiled artifacts when they exist, the
+    // batched native engine (synthetic teacher-labeled test set)
+    // otherwise — QoS reports regenerate on a fresh checkout.
+    let qos = QosCache::auto(&cfg.artifacts_dir)?;
+    eprintln!("QoS backend: {}", qos.backend_label());
+    Ok(qos)
 }
 
 fn cmd_report(cli: &Cli) -> Result<()> {
@@ -88,26 +90,26 @@ fn cmd_report(cli: &Cli) -> Result<()> {
         "fig8" => return Ok(print!("{}", harness::fig8().render())),
         _ => {}
     }
-    let (mut engine, mut qos) = qos_stack(&cfg)?;
+    let mut qos = qos_stack(&cfg)?;
     let out = match id {
-        "fig7" => harness::fig7(&mut engine, &mut qos, &cfg)?.render(),
-        "fig9" => harness::fig9(&mut engine, &mut qos, &cfg)?.render(),
-        "fig10" => harness::fig10(&mut engine, &mut qos, &cfg)?.render(),
-        "fig11" => harness::fig11(&mut engine, &mut qos, &cfg)?.render(),
-        "table3" => harness::table3(&mut engine, &mut qos, &cfg)?.render(),
-        "headline" => harness::headline(&mut engine, &mut qos)?.render(),
+        "fig7" => harness::fig7(&mut qos, &cfg)?.render(),
+        "fig9" => harness::fig9(&mut qos, &cfg)?.render(),
+        "fig10" => harness::fig10(&mut qos, &cfg)?.render(),
+        "fig11" => harness::fig11(&mut qos, &cfg)?.render(),
+        "table3" => harness::table3(&mut qos, &cfg)?.render(),
+        "headline" => harness::headline(&mut qos)?.render(),
         "all" => {
             let mut s = String::new();
             s += &harness::table1().render();
             s += &harness::table2().render();
             s += &harness::fig6().render();
-            s += &harness::fig7(&mut engine, &mut qos, &cfg)?.render();
+            s += &harness::fig7(&mut qos, &cfg)?.render();
             s += &harness::fig8().render();
-            s += &harness::fig9(&mut engine, &mut qos, &cfg)?.render();
-            s += &harness::fig10(&mut engine, &mut qos, &cfg)?.render();
-            s += &harness::fig11(&mut engine, &mut qos, &cfg)?.render();
-            s += &harness::table3(&mut engine, &mut qos, &cfg)?.render();
-            s += &harness::headline(&mut engine, &mut qos)?.render();
+            s += &harness::fig9(&mut qos, &cfg)?.render();
+            s += &harness::fig10(&mut qos, &cfg)?.render();
+            s += &harness::fig11(&mut qos, &cfg)?.render();
+            s += &harness::table3(&mut qos, &cfg)?.render();
+            s += &harness::headline(&mut qos)?.render();
             s
         }
         other => bail!("unknown report id '{other}'"),
@@ -153,22 +155,33 @@ fn cmd_qos(cli: &Cli) -> Result<()> {
         "int8" => Quant::Int8,
         q => bail!("unknown quant '{q}'"),
     };
-    let (mut engine, mut qos) = qos_stack(&cfg)?;
-    let wer = qos.wer(&mut engine, tile, rate, quant)?;
+    let mut qos = qos_stack(&cfg)?;
+    let wer = qos.wer(tile, rate, quant)?;
     println!("tile={tile} rate={rate} quant={} WER={wer:.4}", quant.label());
     Ok(())
 }
 
 fn cmd_info(cli: &Cli) -> Result<()> {
     let cfg = load_config(cli)?;
-    let engine = Engine::new(&cfg.artifacts_dir)?;
-    println!("platform: {}", engine.platform());
+    match Engine::new(&cfg.artifacts_dir) {
+        Ok(engine) => println!("platform: {}", engine.platform()),
+        Err(e) => println!(
+            "platform: PJRT unavailable ({e:#}); QoS surfaces fall back to \
+             the batched native engine"
+        ),
+    }
     println!("artifacts dir: {}", cfg.artifacts_dir);
-    let mut entries: Vec<_> = std::fs::read_dir(&cfg.artifacts_dir)?
-        .filter_map(|e| e.ok())
-        .map(|e| e.path())
-        .collect();
-    entries.sort();
+    let entries = match std::fs::read_dir(&cfg.artifacts_dir) {
+        Ok(rd) => {
+            let mut v: Vec<_> = rd.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+            v.sort();
+            v
+        }
+        Err(_) => {
+            println!("  (no artifacts directory — run `make artifacts` for PJRT)");
+            Vec::new()
+        }
+    };
     for p in entries {
         if p.extension().map_or(false, |e| e == "txt" || e == "bin" || e == "json") {
             println!(

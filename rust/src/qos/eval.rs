@@ -58,32 +58,36 @@ pub trait QosBackend {
     fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>>;
 }
 
-/// PJRT execution of one artifact.
+/// Engine-independent PJRT execution state for one artifact: the
+/// manifest plus the converted argument literals of the current
+/// configuration. The [`Engine`] is supplied per call, so this state
+/// can live either behind a borrowed engine ([`PjrtBackend`]) or inside
+/// an engine-owning wrapper ([`crate::coordinator::serve::Backend`]).
 ///
 /// §Perf L3: `configure` converts the ~55 weight/mask literals once per
 /// configuration; `run_*` rewrites only the data literals per test-set
 /// chunk.
-pub struct PjrtBackend<'a> {
-    engine: &'a mut Engine,
+pub struct PjrtState {
     artifact: String,
     manifest: Option<Manifest>,
     literals: Vec<xla::Literal>,
 }
 
-impl<'a> PjrtBackend<'a> {
-    pub fn new(engine: &'a mut Engine, artifact: &str) -> Self {
-        PjrtBackend {
-            engine,
+impl PjrtState {
+    pub fn new(artifact: &str) -> Self {
+        PjrtState {
             artifact: artifact.to_string(),
             manifest: None,
             literals: Vec::new(),
         }
     }
-}
 
-impl QosBackend for PjrtBackend<'_> {
-    fn configure(&mut self, params: &Bundle, _tile: usize, _quant: Quant) -> Result<()> {
-        let manifest = self.engine.load(&self.artifact)?.manifest.clone();
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    pub fn configure(&mut self, engine: &mut Engine, params: &Bundle) -> Result<()> {
+        let manifest = engine.load(&self.artifact)?.manifest.clone();
         // One shared contract: Manifest::assemble_args zeroes the data
         // inputs (replaced per chunk below), builds all-ones masks, and
         // pulls parameters from the bundle by name.
@@ -97,7 +101,13 @@ impl QosBackend for PjrtBackend<'_> {
         Ok(())
     }
 
-    fn run_asr(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Result<Vec<f32>> {
+    pub fn run_asr(
+        &mut self,
+        engine: &mut Engine,
+        feats: &[f32],
+        pad: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
         let (fi, fshape, pi, pshape) = {
             let man = self.manifest.as_ref().context("configure() not called")?;
             let fi = man.arg_index("feats").context("artifact has no 'feats'")?;
@@ -113,11 +123,11 @@ impl QosBackend for PjrtBackend<'_> {
         );
         self.literals[fi] = tensor_to_literal(&Tensor::from_f32(&fshape, feats))?;
         self.literals[pi] = tensor_to_literal(&Tensor::from_f32(&pshape, pad))?;
-        let out = self.engine.execute_literals(&self.artifact, &self.literals)?;
+        let out = engine.execute_literals(&self.artifact, &self.literals)?;
         Ok(out.f32s())
     }
 
-    fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>> {
+    pub fn run_mt(&mut self, engine: &mut Engine, src: &[i32], batch: usize) -> Result<Vec<f32>> {
         let (si, sshape) = {
             let man = self.manifest.as_ref().context("configure() not called")?;
             let si = man.arg_index("src").context("artifact has no 'src'")?;
@@ -129,8 +139,35 @@ impl QosBackend for PjrtBackend<'_> {
             sshape.first()
         );
         self.literals[si] = tensor_to_literal(&Tensor::from_i32(&sshape, src))?;
-        let out = self.engine.execute_literals(&self.artifact, &self.literals)?;
+        let out = engine.execute_literals(&self.artifact, &self.literals)?;
         Ok(out.f32s())
+    }
+}
+
+/// PJRT execution of one artifact over a borrowed engine (the
+/// historical QoS backend shape; [`PjrtState`] holds the actual logic).
+pub struct PjrtBackend<'a> {
+    engine: &'a mut Engine,
+    state: PjrtState,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(engine: &'a mut Engine, artifact: &str) -> Self {
+        PjrtBackend { engine, state: PjrtState::new(artifact) }
+    }
+}
+
+impl QosBackend for PjrtBackend<'_> {
+    fn configure(&mut self, params: &Bundle, _tile: usize, _quant: Quant) -> Result<()> {
+        self.state.configure(self.engine, params)
+    }
+
+    fn run_asr(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.state.run_asr(self.engine, feats, pad, batch)
+    }
+
+    fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>> {
+        self.state.run_mt(self.engine, src, batch)
     }
 }
 

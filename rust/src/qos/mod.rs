@@ -10,5 +10,5 @@ pub mod eval;
 pub mod metrics;
 
 pub use decode::ctc_greedy;
-pub use eval::{AsrEvaluator, EvalMeta, MtEvaluator, PjrtBackend, QosBackend, QosPoint};
+pub use eval::{AsrEvaluator, EvalMeta, MtEvaluator, PjrtBackend, PjrtState, QosBackend, QosPoint};
 pub use metrics::{bleu, edit_distance, token_error_rate};

@@ -66,6 +66,78 @@ impl QuantizedTensor {
     }
 }
 
+/// Result of quantizing a 2-D `[k, n]` weight matrix with one symmetric
+/// scale per **output channel** (column) — the finer-grained PTQ that
+/// keeps a single outlier channel from stretching the whole tensor's
+/// grid. Same sign-magnitude value domain as [`QuantizedTensor`].
+#[derive(Clone, Debug)]
+pub struct ChannelQuantized {
+    /// Row-major `k x n` quantized values (range -127..=127).
+    pub values: Vec<i8>,
+    pub k: usize,
+    pub n: usize,
+    /// One dequantization scale per column: `w[:, c] ≈ q * scales[c]`.
+    pub scales: Vec<f32>,
+}
+
+/// The per-column scale under the same sanitization rules as
+/// [`quantize`]: finite-only amax, unit scale for all-zero columns.
+fn column_scale(col: impl Iterator<Item = f32>) -> f32 {
+    let amax = col
+        .filter(|v| v.is_finite())
+        .fold(0.0f32, |a, v| a.max(v.abs()));
+    if amax > 0.0 {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Per-output-channel symmetric quantization of a 2-D `[k, n]` weight:
+/// `scales[c] = max|w[:, c]| / 127`, values quantized exactly as
+/// [`quantize`] does (round-ties-even, NaN→0, ±inf saturates).
+pub fn quantize_per_channel(w: &Tensor) -> ChannelQuantized {
+    assert_eq!(w.shape.len(), 2, "per-channel quantization needs [k, n]");
+    let (k, n) = (w.shape[0], w.shape[1]);
+    let vals = w.f32s();
+    let scales: Vec<f32> = (0..n)
+        .map(|c| column_scale((0..k).map(|r| vals[r * n + c])))
+        .collect();
+    let values = vals
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            if v.is_nan() {
+                0
+            } else {
+                (v / scales[i % n]).round_ties_even().clamp(-127.0, 127.0) as i8
+            }
+        })
+        .collect();
+    ChannelQuantized { values, k, n, scales }
+}
+
+/// Dequantize a per-channel matrix back to f32 (the fake-quant numerics
+/// — value-identical to dequantizing inside the kernel column by
+/// column).
+pub fn dequantize_per_channel(q: &ChannelQuantized) -> Tensor {
+    let vals: Vec<f32> = q
+        .values
+        .iter()
+        .enumerate()
+        .map(|(i, v)| *v as f32 * q.scales[i % q.n])
+        .collect();
+    Tensor::from_f32(&[q.k, q.n], &vals)
+}
+
+/// Fake-quantize a 2-D weight in place with per-channel scales; returns
+/// the per-column scales.
+pub fn fake_quantize_per_channel(w: &mut Tensor) -> Vec<f32> {
+    let q = quantize_per_channel(w);
+    *w = dequantize_per_channel(&q);
+    q.scales
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +221,68 @@ mod tests {
             }
             (true, String::new())
         });
+    }
+
+    #[test]
+    fn per_channel_scales_are_column_amax() {
+        let w = Tensor::from_f32(
+            &[2, 3],
+            &[1.27, 0.5, 0.0, -0.635, 0.25, 0.0],
+        );
+        let q = quantize_per_channel(&w);
+        assert!((q.scales[0] - 0.01).abs() < 1e-6);
+        assert!((q.scales[1] - 0.5 / 127.0).abs() < 1e-8);
+        assert_eq!(q.scales[2], 1.0, "all-zero column gets unit scale");
+        assert_eq!(q.values, vec![127, 127, 0, -64, 64, 0]); // 63.5 -> 64
+    }
+
+    #[test]
+    fn per_channel_roundtrip_tighter_than_per_tensor() {
+        // The column grid is never coarser than the tensor grid, so the
+        // total roundtrip error shrinks (the QoS-tightening claim at the
+        // weight level). One column carries a large outlier to make the
+        // per-tensor scale visibly coarse.
+        let mut rng = Rng::new(11);
+        let (k, n) = (32usize, 16usize);
+        let mut vals: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        for r in 0..k {
+            vals[r * n] *= 50.0;
+        }
+        let w = Tensor::from_f32(&[k, n], &vals);
+        let pt = dequantize(&quantize(&w)).f32s();
+        let pc = dequantize_per_channel(&quantize_per_channel(&w)).f32s();
+        let sq = |dq: &[f32]| -> f64 {
+            vals.iter()
+                .zip(dq)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let (err_pt, err_pc) = (sq(&pt), sq(&pc));
+        assert!(err_pc < err_pt, "per-channel {err_pc} vs per-tensor {err_pt}");
+        // And per column, the error bound is the column's own half-step.
+        let q = quantize_per_channel(&w);
+        for (i, (a, b)) in vals.iter().zip(&pc).enumerate() {
+            assert!(
+                (a - b).abs() <= q.scales[i % n] / 2.0 + 1e-7,
+                "elem {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_channel_preserves_zeros_and_sanitizes() {
+        let w = Tensor::from_f32(
+            &[2, 2],
+            &[f32::NAN, 0.0, f32::INFINITY, 1.0],
+        );
+        let q = quantize_per_channel(&w);
+        // Column 0: NaN/inf ignored for the scale -> no finite nonzero
+        // values -> unit scale; NaN -> 0, inf saturates.
+        assert_eq!(q.scales[0], 1.0);
+        assert_eq!(q.values, vec![0, 0, 127, 127]);
+        let dq = dequantize_per_channel(&q).f32s();
+        assert!(dq.iter().all(|v| v.is_finite()));
+        assert_eq!(dq[1], 0.0, "exact zero survives per-channel PTQ");
     }
 
     #[test]

@@ -83,6 +83,24 @@ pub fn gemm_on_array(
     p: &SimParams,
     mask: Option<&TileMask>,
 ) -> GemmCost {
+    gemm_on_array_batched(g, cfg, p, mask, 1)
+}
+
+/// Batched weight-stationary execution: `batch` input blocks of `g.m`
+/// rows each run through the same tile schedule, with every live tile
+/// programmed **once** and streamed by all blocks before the schedule
+/// moves on ([`TileTiming::batched`] — one live pass plus `batch - 1`
+/// reuse passes per tile). This is the analytic counterpart of the
+/// batched serving engine ([`crate::infer::batch`]); `batch == 1`
+/// reduces exactly to [`gemm_on_array`].
+pub fn gemm_on_array_batched(
+    g: &GemmShape,
+    cfg: &ArrayConfig,
+    p: &SimParams,
+    mask: Option<&TileMask>,
+    batch: usize,
+) -> GemmCost {
+    assert!(batch > 0, "batched execution needs at least one input block");
     let t = cfg.tile();
     let kt = g.k.div_ceil(t);
     let nt = g.n.div_ceil(t);
@@ -106,9 +124,13 @@ pub fn gemm_on_array(
         cols: t,
         quant: if wpw == 4 { Quant::Int8 } else { Quant::Fp32 },
     };
-    let per_tile = TileTiming::live(&tile_cfg, g.m);
+    // One programming pass + (batch-1) reuse passes per live tile.
+    let per_tile = TileTiming::batched(&tile_cfg, g.m, batch);
 
     // --- issue cycles ----------------------------------------------------
+    // Setup and the quantized-programming surcharge are tied to tile
+    // programming, so they are charged once per live tile regardless of
+    // how many blocks reuse it; stream_insts already scales with batch.
     let issue = live as f64
         * (per_tile.prog_words as f64 * p.cpi_prog
             + per_tile.stream_insts as f64 * p.cpi_stream
@@ -117,12 +139,13 @@ pub fn gemm_on_array(
 
     // --- memory stalls ---------------------------------------------------
     let line = p.line_bytes as f64;
-    // Weights: cold, tiled-contiguous; only live tiles are fetched.
+    // Weights: cold, tiled-contiguous; only live tiles are fetched, and
+    // only once — the reuse passes hit the already-programmed array.
     let weight_lines = (live * t * t) as f64 * wbytes as f64 / line;
     // Inputs/outputs: unique lines touched once at L2 latency (see module
-    // docs); sized by the full M x K / M x N panels.
-    let in_lines = (g.m * g.k * 4) as f64 / line;
-    let out_lines = (g.m * g.n * 4) as f64 / line;
+    // docs); sized by the full M x K / M x N panels of every block.
+    let in_lines = (batch * g.m * g.k * 4) as f64 / line;
+    let out_lines = (batch * g.m * g.n * 4) as f64 / line;
     let stalls = weight_lines * (p.dram_latency + p.l2_latency) as f64
         + (in_lines + out_lines) * p.l2_latency as f64;
 
@@ -207,6 +230,60 @@ mod tests {
         let b = gemm_on_array(&g, &c, &p, Some(&mask));
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.counts, b.counts);
+    }
+
+    #[test]
+    fn batched_batch_one_equals_per_utterance() {
+        let g = ff(96, 64, 256);
+        let p = SimParams::default();
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let c = cfg(8, quant);
+            let mut mask = TileMask::full(8, 32);
+            for (i, l) in mask.live.iter_mut().enumerate() {
+                *l = i % 3 != 0;
+            }
+            let single = gemm_on_array(&g, &c, &p, Some(&mask));
+            let batched = gemm_on_array_batched(&g, &c, &p, Some(&mask), 1);
+            assert_eq!(single.cycles, batched.cycles, "{quant:?}");
+            assert_eq!(single.counts, batched.counts, "{quant:?}");
+        }
+    }
+
+    #[test]
+    fn batched_reuse_saves_exactly_programming() {
+        // vs running the same block `b` times per-utterance: streaming,
+        // MACs and array occupancy scale with b, while weight traffic
+        // (programming words, DRAM weight lines) is charged once.
+        let g = ff(96, 64, 256);
+        let p = SimParams::default();
+        let b = 4usize;
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let c = cfg(8, quant);
+            let mut mask = TileMask::full(8, 32);
+            for (i, l) in mask.live.iter_mut().enumerate() {
+                *l = i % 2 == 0;
+            }
+            let live = mask.live_count();
+            let single = gemm_on_array(&g, &c, &p, Some(&mask));
+            let batched = gemm_on_array_batched(&g, &c, &p, Some(&mask), b);
+            assert_eq!(batched.counts.macs, b as u64 * single.counts.macs);
+            assert_eq!(
+                batched.counts.array_busy_cycles,
+                b as u64 * single.counts.array_busy_cycles
+            );
+            assert_eq!(batched.counts.dram_accesses, single.counts.dram_accesses);
+            let tile_cfg = ArrayConfig { rows: 8, cols: 8, quant };
+            let prog = TileTiming::live(&tile_cfg, g.m).prog_words;
+            assert_eq!(
+                b as u64 * single.counts.bus_words - batched.counts.bus_words,
+                ((b - 1) * live * prog) as u64,
+                "{quant:?}: reuse must save exactly (b-1) programming passes"
+            );
+            assert!(
+                batched.cycles < b as f64 * single.cycles,
+                "{quant:?}: batched must beat b per-utterance runs"
+            );
+        }
     }
 
     #[test]

@@ -63,6 +63,25 @@ impl TileTiming {
         t
     }
 
+    /// Cost of one live tile streamed by `batch` consecutive input
+    /// blocks of `m` rows under weight-stationary reuse: programmed once
+    /// ([`Self::live`]), then reused for the remaining `batch - 1`
+    /// blocks ([`Self::reuse`]). This is the closed form the batched
+    /// serving engine ([`crate::infer::batch`]) charges per live tile —
+    /// the cross-utterance saving is exactly `(batch-1) * prog_words`.
+    pub fn batched(cfg: &ArrayConfig, m: usize, batch: usize) -> TileTiming {
+        assert!(batch > 0, "a batched tile pass needs at least one block");
+        let live = TileTiming::live(cfg, m);
+        TileTiming {
+            prog_words: live.prog_words,
+            in_words: batch * live.in_words,
+            out_words: batch * live.out_words,
+            stream_insts: batch * live.stream_insts,
+            array_cycles: batch * live.array_cycles,
+            macs: batch * live.macs,
+        }
+    }
+
     /// Accumulate another tile's cost.
     pub fn add(&mut self, other: &TileTiming) {
         self.prog_words += other.prog_words;
@@ -119,6 +138,45 @@ mod tests {
         assert_eq!(reuse.prog_words, 0);
         assert_eq!(reuse.in_words, live.in_words);
         assert_eq!(reuse.array_cycles, live.array_cycles);
+    }
+
+    #[test]
+    fn batched_is_live_plus_reuse() {
+        // The batched closed form is exactly one programming pass plus
+        // batch-1 reuse passes — elementwise, for every field.
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let cfg = ArrayConfig::square(8, quant);
+            for (m, b) in [(1usize, 1usize), (16, 2), (96, 4), (7, 5)] {
+                let got = TileTiming::batched(&cfg, m, b);
+                let mut want = TileTiming::live(&cfg, m);
+                for _ in 1..b {
+                    want.add(&TileTiming::reuse(&cfg, m));
+                }
+                assert_eq!(got, want, "m={m} b={b} {quant:?}");
+            }
+            assert_eq!(
+                TileTiming::batched(&cfg, 32, 1),
+                TileTiming::live(&cfg, 32),
+                "batch 1 degenerates to a plain live pass"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_saving_is_programming_only() {
+        let cfg = ArrayConfig::square(8, Quant::Int8);
+        let (m, b) = (24usize, 6usize);
+        let per_utt = TileTiming::live(&cfg, m);
+        let batched = TileTiming::batched(&cfg, m, b);
+        // Streaming/compute scale with the batch; programming does not.
+        assert_eq!(batched.in_words, b * per_utt.in_words);
+        assert_eq!(batched.macs, b * per_utt.macs);
+        assert_eq!(batched.prog_words, per_utt.prog_words);
+        assert_eq!(
+            b * per_utt.total_words() - batched.total_words(),
+            (b - 1) * per_utt.prog_words,
+            "the reuse saving is exactly (batch-1) programming passes"
+        );
     }
 
     #[test]
