@@ -1,28 +1,31 @@
 //! ASR → MT cascade (the paper's MuST-C case study, Table 1 row 3).
 //!
-//! Evaluates the MT stand-in model's BLEU under SASP pruning, simulates
-//! the cascade's two encoders (ASR stage + MT stage) on the modeled
-//! platform, and reports the joint runtime/energy picture with the BLEU
-//! floor of Table 1 (27 of 31 BLEU).
+//! Evaluates the MT model's BLEU under SASP pruning on the auto-selected
+//! backend — PJRT over compiled artifacts when they exist, otherwise the
+//! fully offline native path: token-input encoder + autoregressive
+//! KV-cache decoder over the synthetic teacher-labeled test set (dense
+//! FP32 baseline = BLEU 100 by construction). Simulates the cascade's
+//! two encoders (ASR stage + MT stage) on the modeled platform and
+//! reports the joint runtime/energy picture with the BLEU floor of
+//! Table 1 (27 of 31 BLEU).
 //!
 //! Run: `cargo run --release --example translation_cascade`.
 
 use anyhow::Result;
 
 use sasp::coordinator::{Explorer, RateSearch};
+use sasp::harness::QosCache;
 use sasp::model::zoo;
-use sasp::qos::MtEvaluator;
-use sasp::runtime::Engine;
 use sasp::systolic::Quant;
 
 fn main() -> Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let mut engine = Engine::new(&dir)?;
-    let eval = MtEvaluator::new(&mut engine, &dir, "mt_encoder_ref")?;
+    let mut qos = QosCache::auto(&dir)?;
+    println!("QoS backend: {}", qos.backend_label());
 
-    let base = eval.evaluate(&mut engine, 8, 0.0, Quant::Fp32)?;
-    let floor = base.qos * 27.0 / 31.0; // Table 1 QoS target ratio
-    println!("baseline BLEU {:.2}, floor {:.2}", base.qos, floor);
+    let base = qos.bleu(8, 0.0, Quant::Fp32)?;
+    let floor = base * 27.0 / 31.0; // Table 1 QoS target ratio
+    println!("baseline BLEU {base:.2}, floor {floor:.2}");
 
     println!(
         "\n{:>6} {:>6} {:>10} {:>12} {:>12}",
@@ -34,10 +37,10 @@ fn main() -> Result<()> {
     let search = RateSearch::default();
     for n in [4usize, 8, 16, 32] {
         let found = search.max_rate(
-            |rate| eval.evaluate(&mut engine, n, rate, Quant::Int8).map(|p| p.qos),
+            |rate| qos.bleu(n, rate, Quant::Int8),
             |b| b >= floor,
         )?;
-        let (rate, bleu_at) = found.unwrap_or((0.0, base.qos));
+        let (rate, bleu_at) = found.unwrap_or((0.0, base));
         let a_dense = asr_stage.timing_point(n, Quant::Int8, 0.0);
         let a_sasp = asr_stage.timing_point(n, Quant::Int8, rate);
         let m_dense = mt_stage.timing_point(n, Quant::Int8, 0.0);

@@ -12,8 +12,8 @@ use sasp::infer::backend::ff_norms;
 use sasp::infer::batch::{gemm_batched_f32, gemm_batched_int8};
 use sasp::infer::gemm::{gemm_f32, gemm_int8};
 use sasp::infer::{
-    synth_weights, BatchForward, Forward, ModelDims, NativeBackend, PreparedModel,
-    QuantizedLinear,
+    synth_decoder_weights, synth_weights, BatchForward, DecoderDims, DecoderForward, Forward,
+    ModelDims, NativeBackend, PreparedDecoder, PreparedModel, QuantizedLinear,
 };
 use sasp::model::zoo;
 use sasp::pruning::{global_prune, synthetic_ff_norms};
@@ -244,6 +244,53 @@ fn main() {
             || {
                 bf.run_feats(&model, bs, &bfeats, &bpad, &mut outv);
                 outv[0]
+            },
+        );
+    }
+
+    // Decode scope: KV-cache greedy stepping vs full-prefix recompute
+    // over 32 generated tokens (the serving shape of the autoregressive
+    // MT path). Outputs are bitwise identical; the KV cache turns the
+    // O(L^2) recompute loop into O(L) single-row steps, and
+    // scripts/verify.sh guards that the cached step wins on both weight
+    // formats at seq >= 32.
+    let mt_dims = ModelDims::tiny_mt();
+    let dec_dims = DecoderDims { max_len: 32, ..DecoderDims::tiny_mt() };
+    let enc_w = synth_weights(&mt_dims, 7);
+    let dec_w = synth_decoder_weights(&dec_dims, 7);
+    let enc_model =
+        PreparedModel::new(&enc_w, mt_dims.tile, Quant::Fp32, None).expect("enc model");
+    let src_len = mt_dims.seq_len;
+    let src: Vec<i32> = (0..src_len).map(|i| (i % mt_dims.vocab) as i32).collect();
+    let mut efwd = Forward::new();
+    let mut memory = Vec::new();
+    efwd.memory_tokens(&enc_model, &src, src_len, &mut memory);
+    let dec_tokens: Vec<i32> =
+        (0..32).map(|i| (i * 5 % dec_dims.vocab) as i32).collect();
+    for quant in [Quant::Fp32, Quant::Int8] {
+        let label = match quant {
+            Quant::Fp32 => "fp32",
+            Quant::Int8 => "int8",
+        };
+        let dm = PreparedDecoder::new(&dec_w, dec_dims.tile, quant, None).expect("dec model");
+        let mut dfwd = DecoderForward::new();
+        let mut lg = Vec::new();
+        b.run(&format!("infer: mt decode 32 steps {label}, kv-cache"), || {
+            dfwd.start(&dm, &memory, src_len);
+            for &t in &dec_tokens {
+                dfwd.step(&dm, t, &mut lg);
+            }
+            lg[0]
+        });
+        b.run(
+            &format!("infer: mt decode 32 steps {label}, full-prefix recompute"),
+            || {
+                let mut acc = 0.0f32;
+                for p in 1..=dec_tokens.len() {
+                    dfwd.full_prefix(&dm, &memory, src_len, &dec_tokens[..p], &mut lg);
+                    acc += lg[(p - 1) * dec_dims.vocab];
+                }
+                acc
             },
         );
     }

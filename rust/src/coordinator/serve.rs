@@ -206,6 +206,16 @@ impl QosBackend for Backend {
             Backend::Native(nb) => nb.run_mt(src, batch),
         }
     }
+
+    fn translate(&mut self, src: &[i32], src_len: &[usize], batch: usize) -> Result<Vec<Vec<i32>>> {
+        match self {
+            // The PJRT encoder artifacts have no autoregressive decoder.
+            Backend::Pjrt { .. } => {
+                anyhow::bail!("PJRT backend has no autoregressive MT decoder")
+            }
+            Backend::Native(nb) => QosBackend::translate(&mut **nb, src, src_len, batch),
+        }
+    }
 }
 
 /// Serving-loop configuration.
@@ -684,8 +694,9 @@ mod tests {
     #[test]
     fn backend_auto_selects_native_without_artifacts() {
         let dims = crate::infer::testutil::mini_dims();
-        let mut backend = Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
-            .unwrap();
+        let mut backend =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+                .unwrap();
         assert!(backend.is_native());
         assert_eq!(backend.label(), "native");
         assert!(backend.describe().contains("native engine"));

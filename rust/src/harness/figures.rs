@@ -91,9 +91,10 @@ pub fn fig7(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
     );
     let base_wer = qos.wer(8, 0.0, Quant::Int8)?;
     let wer_target = base_wer * cfg.wer_target_ratio;
-    let base_bleu = match qos.mt {
-        Some(_) => qos.bleu(8, 0.0, Quant::Int8)?,
-        None => 0.0,
+    let base_bleu = if qos.has_mt() {
+        qos.bleu(8, 0.0, Quant::Int8)?
+    } else {
+        0.0
     };
     let bleu_floor = base_bleu * cfg.bleu_floor_ratio;
     r.line(format!(
@@ -110,7 +111,7 @@ pub fn fig7(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
         // Pass 1 (serial — one QoS backend): rate* per size from the QoS curve.
         let mut points = Vec::with_capacity(cfg.sizes.len());
         for &n in &cfg.sizes {
-            let is_mt = spec.name.contains("mustc") && qos.mt.is_some();
+            let is_mt = spec.name.contains("mustc") && qos.has_mt();
             let found = if is_mt {
                 search.max_rate(
                     |rate| qos.bleu(n, rate, Quant::Int8),
@@ -168,6 +169,40 @@ pub fn fig9(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
             for &q in &cfg.quants {
                 let wer = qos.wer(n, rate, q)?;
                 line.push_str(&format!(" {:>12.4}", wer));
+            }
+            r.line(line);
+        }
+    }
+    Ok(r)
+}
+
+/// §MT: offline BLEU sweep — BLEU vs SASP rate per array size and
+/// quantization, the MT mirror of [`fig9`]'s WER sweep. On the native
+/// backend the points come from the autoregressive KV-cache decoder
+/// over the synthetic teacher-labeled set (dense FP32 baseline = BLEU
+/// 100); with PJRT artifacts they come from the compiled MT encoder.
+pub fn mt_report(qos: &mut QosCache, cfg: &ExperimentConfig) -> Result<Report> {
+    let mut r = Report::new("MT — BLEU vs structured pruning rate");
+    if !qos.has_mt() {
+        r.line("no MT evaluator available (PJRT MT artifact missing)");
+        return Ok(r);
+    }
+    let base = qos.bleu(8, 0.0, Quant::Fp32)?;
+    let floor = base * cfg.bleu_floor_ratio;
+    r.line(format!(
+        "baseline BLEU {base:.2} (dense FP32), Table 1 floor {floor:.2}"
+    ));
+    let mut header = format!("{:>6} {:>10}", "size", "rate");
+    for q in &cfg.quants {
+        header.push_str(&format!(" {:>12}", q.label()));
+    }
+    r.line(header);
+    for &n in &cfg.sizes {
+        for &rate in &cfg.rates {
+            let mut line = format!("{:>6} {:>10.2}", n, rate);
+            for &q in &cfg.quants {
+                let b = qos.bleu(n, rate, q)?;
+                line.push_str(&format!(" {:>12.2}", b));
             }
             r.line(line);
         }

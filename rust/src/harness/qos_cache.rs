@@ -6,14 +6,24 @@
 //! ([`crate::coordinator::serve::Backend`]): PJRT over compiled
 //! artifacts when they exist, the batched native engine otherwise — so
 //! `sasp report fig9/fig10/fig11/table3/headline` (and fig7's WER axis)
-//! run fully offline instead of erroring on a fresh checkout.
+//! run fully offline instead of erroring on a fresh checkout. The MT
+//! (BLEU) axis is offline too: without artifacts the cache builds a
+//! synthetic MT model (token-input encoder + autoregressive decoder,
+//! [`crate::infer::NativeBackend::new_mt`]) whose teacher-labeled test
+//! set scores BLEU 100 at the dense FP32 baseline. The native MT stack
+//! is built **lazily on the first [`QosCache::bleu`] call** — ASR-only
+//! reports never pay for (or fail on) the MT teacher decode.
 
 use std::collections::HashMap;
 
 use anyhow::Result;
 
 use crate::coordinator::serve::Backend;
-use crate::qos::{AsrEvaluator, MtEvaluator};
+use crate::infer::{
+    synth_decoder_weights, synth_mt_testset, synth_weights, DecoderDims, ModelDims,
+    NativeBackend,
+};
+use crate::qos::{AsrEvaluator, EvalMeta, MtEvaluator};
 use crate::systolic::Quant;
 
 /// Key with rate discretized to 1e-4 so f64 rates hash safely.
@@ -24,38 +34,111 @@ fn key(tile: usize, rate: f64, quant: Quant) -> (usize, u64, Quant) {
 /// Number of synthetic utterances the offline (native) evaluator uses.
 const NATIVE_TESTSET_UTTS: usize = 16;
 
+/// Number of synthetic sentences in the offline MT test set.
+const NATIVE_MT_SENTS: usize = 12;
+
+/// Serving batch of the offline MT backend.
+const NATIVE_MT_BATCH: usize = 4;
+
+/// The MT evaluation stack, in whichever mode auto-selection produced.
+enum MtStack {
+    /// PJRT artifact evaluator (executes on the cache's [`Backend`]).
+    Pjrt(MtEvaluator),
+    /// Greedy-mode evaluator over its own native encoder+decoder
+    /// backend.
+    Native {
+        eval: MtEvaluator,
+        backend: Box<NativeBackend>,
+    },
+}
+
 /// Cache over an ASR (WER) and optional MT (BLEU) evaluator, executing
 /// on the auto-selected backend.
 pub struct QosCache {
     pub asr: AsrEvaluator,
-    pub mt: Option<MtEvaluator>,
+    mt: Option<MtStack>,
+    /// Build the native MT stack on first [`Self::bleu`] (the offline
+    /// mode — deferred so ASR-only surfaces never pay for it).
+    lazy_native_mt: bool,
     backend: Backend,
     wer: HashMap<(usize, u64, Quant), f64>,
     bleu: HashMap<(usize, u64, Quant), f64>,
 }
 
+/// Build the fully offline MT stack: deterministic synthetic
+/// (encoder, decoder) weights, their teacher-labeled test set, the
+/// greedy-mode evaluator, and the `new_mt` backend.
+pub fn native_mt_stack(n_sents: usize) -> Result<(MtEvaluator, NativeBackend)> {
+    let dims = ModelDims::tiny_mt();
+    let dec_dims = DecoderDims::tiny_mt();
+    let enc = synth_weights(&dims, 13);
+    let dec = synth_decoder_weights(&dec_dims, 13);
+    let testset = synth_mt_testset(&enc, &dec, n_sents, 17)?;
+    let mut params = enc.to_bundle();
+    dec.append_to_bundle(&mut params);
+    let meta = EvalMeta {
+        n_blocks: dims.n_blocks,
+        batch: NATIVE_MT_BATCH,
+        vocab: dims.vocab,
+        blank: dims.ctc_blank,
+        tile_hint: dims.tile,
+    };
+    let eval = MtEvaluator::from_parts("native_mt", params, &testset, &meta, dec_dims.n_blocks)?;
+    let backend = NativeBackend::new_mt(enc, dec, NATIVE_MT_BATCH)?;
+    Ok((eval, backend))
+}
+
 impl QosCache {
+    /// Build over an already-selected backend and (for PJRT) evaluator.
     pub fn new(backend: Backend, asr: AsrEvaluator, mt: Option<MtEvaluator>) -> Self {
-        QosCache { asr, mt, backend, wer: HashMap::new(), bleu: HashMap::new() }
+        QosCache {
+            asr,
+            mt: mt.map(MtStack::Pjrt),
+            lazy_native_mt: false,
+            backend,
+            wer: HashMap::new(),
+            bleu: HashMap::new(),
+        }
+    }
+
+    /// Attach a native (greedy autoregressive) MT stack explicitly —
+    /// what [`Self::auto`] defers until the first BLEU query.
+    pub fn set_native_mt(&mut self, eval: MtEvaluator, backend: NativeBackend) {
+        self.mt = Some(MtStack::Native {
+            eval,
+            backend: Box::new(backend),
+        });
     }
 
     /// Build the whole QoS stack for `dir` on the auto-selected
     /// backend: PJRT evaluators over the artifact bundles when they
-    /// exist, the native evaluator over the synthetic teacher-labeled
-    /// test set otherwise (MT has no native path yet — see ROADMAP).
+    /// exist, native evaluators over synthetic teacher-labeled test
+    /// sets (ASR **and**, lazily, autoregressive MT) otherwise.
     pub fn auto(dir: &str) -> Result<Self> {
         let mut backend = Backend::auto(dir)?;
         let asr = backend.asr_evaluator(dir, NATIVE_TESTSET_UTTS)?;
-        let mt = match backend.engine_mut() {
-            Some(engine) => MtEvaluator::new(engine, dir, "mt_encoder_ref").ok(),
-            None => None,
-        };
-        Ok(QosCache::new(backend, asr, mt))
+        if backend.is_native() {
+            let mut cache = QosCache::new(backend, asr, None);
+            cache.lazy_native_mt = true;
+            Ok(cache)
+        } else {
+            let mt = match backend.engine_mut() {
+                Some(engine) => MtEvaluator::new(engine, dir, "mt_encoder_ref").ok(),
+                None => None,
+            };
+            Ok(QosCache::new(backend, asr, mt))
+        }
     }
 
     /// Which execution backend the cache evaluates on.
     pub fn backend_label(&self) -> &'static str {
         self.backend.label()
+    }
+
+    /// Whether a BLEU surface exists (loaded, or native-lazy and built
+    /// on first use).
+    pub fn has_mt(&self) -> bool {
+        self.mt.is_some() || self.lazy_native_mt
     }
 
     /// WER of the ASR model at a configuration (memoized).
@@ -69,22 +152,31 @@ impl QosCache {
         Ok(v)
     }
 
-    /// BLEU of the MT model at a configuration (memoized; PJRT only —
-    /// the native MT path is a ROADMAP item).
+    /// BLEU of the MT model at a configuration (memoized): the PJRT
+    /// artifact when one is loaded, the native autoregressive decoder
+    /// otherwise (constructed on first call).
     pub fn bleu(&mut self, tile: usize, rate: f64, quant: Quant) -> Result<f64> {
         let k = key(tile, rate, quant);
         if let Some(v) = self.bleu.get(&k) {
             return Ok(*v);
         }
-        let mt = self
-            .mt
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("no MT evaluator loaded"))?;
-        let engine = self
-            .backend
-            .engine_mut()
-            .ok_or_else(|| anyhow::anyhow!("MT QoS needs the PJRT backend"))?;
-        let v = mt.evaluate(engine, tile, rate, quant)?.qos;
+        if self.mt.is_none() && self.lazy_native_mt {
+            let (eval, nb) = native_mt_stack(NATIVE_MT_SENTS)?;
+            self.set_native_mt(eval, nb);
+        }
+        let v = match self.mt.as_mut() {
+            None => anyhow::bail!("no MT evaluator loaded"),
+            Some(MtStack::Native { eval, backend }) => {
+                eval.evaluate_with(&mut **backend, tile, rate, quant)?.qos
+            }
+            Some(MtStack::Pjrt(eval)) => {
+                let engine = self
+                    .backend
+                    .engine_mut()
+                    .ok_or_else(|| anyhow::anyhow!("MT QoS needs the PJRT backend"))?;
+                eval.evaluate(engine, tile, rate, quant)?.qos
+            }
+        };
         self.bleu.insert(k, v);
         Ok(v)
     }
@@ -108,6 +200,7 @@ mod tests {
         let asr = backend.asr_evaluator("unused", 3).unwrap();
         let mut qos = QosCache::new(backend, asr, None);
         assert_eq!(qos.backend_label(), "native");
+        assert!(!qos.has_mt());
         let a = qos.wer(dims.tile, 0.0, Quant::Fp32).unwrap();
         assert_eq!(a, 0.0, "teacher-labeled baseline");
         assert_eq!(qos.cached_points(), 1);
@@ -116,7 +209,53 @@ mod tests {
         assert_eq!(qos.cached_points(), 1, "second read hits the cache");
         assert!(
             qos.bleu(dims.tile, 0.0, Quant::Fp32).is_err(),
-            "no native MT path"
+            "no MT evaluator attached"
         );
+    }
+
+    #[test]
+    fn native_mt_stack_scores_bleu_100_baseline() {
+        // The offline BLEU acceptance point at the harness level: the
+        // auto-style native MT stack reports exactly 100 for the dense
+        // FP32 baseline and memoizes it.
+        let dims = mini_dims();
+        let mut backend =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+                .unwrap();
+        let asr = backend.asr_evaluator("unused", 3).unwrap();
+        let (mt, mt_backend) = native_mt_stack(4).unwrap();
+        let mut qos = QosCache::new(backend, asr, None);
+        qos.set_native_mt(mt, mt_backend);
+        assert!(qos.has_mt());
+        let base = qos.bleu(8, 0.0, Quant::Fp32).unwrap();
+        assert!((base - 100.0).abs() < 1e-9, "baseline BLEU {base}");
+        assert_eq!(qos.cached_points(), 1);
+        let again = qos.bleu(8, 0.0, Quant::Fp32).unwrap();
+        assert_eq!(base, again);
+        assert_eq!(qos.cached_points(), 1, "memoized");
+        // A pruned INT8 point degrades but stays in range.
+        let pruned = qos.bleu(8, 0.5, Quant::Int8).unwrap();
+        assert!((0.0..=100.0).contains(&pruned), "BLEU {pruned}");
+    }
+
+    #[test]
+    fn lazy_native_mt_defers_construction_until_bleu() {
+        let dims = mini_dims();
+        let mut backend =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+                .unwrap();
+        let asr = backend.asr_evaluator("unused", 3).unwrap();
+        let mut qos = QosCache::new(backend, asr, None);
+        qos.lazy_native_mt = true;
+        assert!(qos.has_mt(), "lazy stack counts as available");
+        assert!(qos.mt.is_none(), "but nothing is built yet");
+        // ASR-only use never touches the MT stack.
+        qos.wer(dims.tile, 0.0, Quant::Fp32).unwrap();
+        assert!(qos.mt.is_none());
+        // First BLEU call materializes it (tiny_mt stack — the dense
+        // baseline is the BLEU-100 teacher identity).
+        let base = qos.bleu(8, 0.0, Quant::Fp32).unwrap();
+        assert!((base - 100.0).abs() < 1e-9, "baseline BLEU {base}");
+        assert!(qos.mt.is_some(), "stack built on demand");
     }
 }

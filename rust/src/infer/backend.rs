@@ -27,6 +27,7 @@ use crate::sysim::TileMask;
 use crate::systolic::Quant;
 
 use super::batch::BatchForward;
+use super::decoder::{DecodeStats, DecoderForward, DecoderWeights, PreparedDecoder};
 use super::encoder::{EncoderWeights, ForwardStats, ModelDims, PreparedModel};
 
 /// Per-feed-forward-GEMM tile L1 norms of a weight set.
@@ -64,8 +65,13 @@ pub fn recover_masks(w: &EncoderWeights, tile: usize) -> Result<Vec<TileMask>> {
 /// identical to the per-utterance reference engine.
 pub struct NativeBackend {
     master: EncoderWeights,
+    /// Decoder master weights — present on the autoregressive MT path
+    /// ([`NativeBackend::new_mt`]), absent for encoder-only serving.
+    dec_master: Option<DecoderWeights>,
     model: PreparedModel,
+    dec_model: Option<PreparedDecoder>,
     fwd: BatchForward,
+    dec_fwd: DecoderForward,
     batch: usize,
     /// Stage INT8 weights with per-output-channel scales on the next
     /// `prepare`/`configure`.
@@ -84,12 +90,36 @@ impl NativeBackend {
         let serve_manifest = build_manifest(&weights.dims, batch, model.tile);
         Ok(NativeBackend {
             master: weights,
+            dec_master: None,
             model,
+            dec_model: None,
             fwd: BatchForward::new(),
+            dec_fwd: DecoderForward::new(),
             batch,
             per_channel: false,
             serve_manifest,
         })
+    }
+
+    /// Stage a full MT model: token-input encoder + autoregressive
+    /// decoder, both dense FP32 at their default tiles. The decoder
+    /// participates in every subsequent `prepare`/`configure`
+    /// (joint pruning, shared quant format) and powers
+    /// [`Self::translate`].
+    pub fn new_mt(enc: EncoderWeights, dec: DecoderWeights, batch: usize) -> Result<Self> {
+        ensure!(enc.dims.token_input, "MT backend needs a token-input encoder");
+        ensure!(
+            enc.dims.d_model == dec.dims.d_model
+                && enc.dims.n_heads == dec.dims.n_heads
+                && enc.dims.vocab == dec.dims.vocab
+                && enc.dims.tile == dec.dims.tile,
+            "encoder/decoder dims mismatch"
+        );
+        let dec_model = PreparedDecoder::new(&dec, dec.dims.tile, Quant::Fp32, None)?;
+        let mut be = Self::new(enc, batch)?;
+        be.dec_master = Some(dec);
+        be.dec_model = Some(dec_model);
+        Ok(be)
     }
 
     pub fn dims(&self) -> &ModelDims {
@@ -122,23 +152,50 @@ impl NativeBackend {
         &self.fwd.stats
     }
 
+    /// Cumulative decode-scope statistics (the autoregressive MT path).
+    pub fn decode_stats(&self) -> &DecodeStats {
+        &self.dec_fwd.stats
+    }
+
     pub fn reset_stats(&mut self) {
         self.fwd.stats = ForwardStats::default();
+        self.dec_fwd.stats = DecodeStats::default();
+    }
+
+    /// The staged decoder configuration, when this is an MT backend.
+    pub fn dec_model(&self) -> Option<&PreparedDecoder> {
+        self.dec_model.as_ref()
     }
 
     /// Prune the master weights at `(tile, rate)` via the global L1
-    /// ranking and stage the model in `quant` format. Returns the plan
-    /// (masks + achieved rate); the staged kernels skip those tiles.
+    /// ranking and stage the model in `quant` format. On the MT path the
+    /// decoder's feed-forward GEMMs join the **same global ranking**, so
+    /// one rate governs encode- and decode-side sparsity. Returns the
+    /// plan (masks + achieved rate); the staged kernels skip those
+    /// tiles.
     pub fn prepare(&mut self, tile: usize, rate: f64, quant: Quant) -> Result<PrunePlan> {
-        let norms = ff_norms(&self.master, tile)?;
+        let mut norms = ff_norms(&self.master, tile)?;
+        let enc_gemms = norms.len();
+        if let Some(dec) = &self.dec_master {
+            norms.extend(dec.ff_norms(tile)?);
+        }
         let plan = global_prune(&norms, rate);
         self.model = PreparedModel::new_with(
             &self.master,
             tile,
             quant,
-            Some(&plan.masks),
+            Some(&plan.masks[..enc_gemms]),
             self.per_channel,
         )?;
+        if let Some(dec) = &self.dec_master {
+            self.dec_model = Some(PreparedDecoder::new_with(
+                dec,
+                tile,
+                quant,
+                Some(&plan.masks[enc_gemms..]),
+                self.per_channel,
+            )?);
+        }
         self.serve_manifest.model.tile = tile;
         Ok(plan)
     }
@@ -152,29 +209,111 @@ impl NativeBackend {
     }
 
     /// The serving manifest this backend satisfies — same contract shape
-    /// the AOT artifacts publish, with only the two data arguments.
+    /// the AOT artifacts publish, with only the data arguments.
     pub fn manifest(&self) -> &Manifest {
         &self.serve_manifest
+    }
+
+    /// Autoregressive MT over one ragged batch: encode all sources with
+    /// real pad masks, precompute every decoder block's cross-attention
+    /// K/V **weight-stationary across the batch** (each live tile
+    /// loaded/dequantized once, [`crate::systolic::TileTiming::batched`]
+    /// accounting over the full padded `[batch * seq_len]` panel — the
+    /// rectangular batched schedule, same as the batched encoder; the
+    /// valid `src_len` rows are sliced per utterance), then greedy-decode
+    /// each utterance on the KV-cache runtime. Per-utterance outputs are
+    /// bitwise identical to the batch-of-one path (tested below).
+    pub fn translate(&mut self, src: &[i32], src_len: &[usize]) -> Result<Vec<Vec<i32>>> {
+        let dims = self.model.dims;
+        ensure!(dims.token_input, "MT translation on a feature-input model");
+        let dec = self
+            .dec_model
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("backend has no decoder staged"))?;
+        let batch = src_len.len();
+        ensure!(batch > 0, "empty batch");
+        let t = dims.seq_len;
+        ensure!(src.len() == batch * t, "src must be batch x seq");
+        for (u, &len) in src_len.iter().enumerate() {
+            ensure!(
+                len > 0 && len <= t,
+                "utterance {u}: src_len {len} out of 1..={t}"
+            );
+        }
+        let d = dims.d_model;
+
+        // Batched encode (real pad masks) → post-ln_f memory panel.
+        let mut memory = Vec::new();
+        self.fwd
+            .memory_tokens(&self.model, batch, src, src_len, &mut memory);
+
+        // Batched weight-stationary cross-K/V precompute: one panel per
+        // block, each live tile packed once for the whole batch.
+        let n_blocks = dec.blocks.len();
+        let mut ck: Vec<Vec<f32>> = vec![Vec::new(); n_blocks];
+        let mut cv: Vec<Vec<f32>> = vec![Vec::new(); n_blocks];
+        let mut wtile = Vec::new();
+        for (i, blk) in dec.blocks.iter().enumerate() {
+            let sk = blk
+                .xk
+                .gemm_batched(&memory, batch, t, None, dec.tile, &mut ck[i], &mut wtile);
+            let sv = blk
+                .xv
+                .gemm_batched(&memory, batch, t, None, dec.tile, &mut cv[i], &mut wtile);
+            self.dec_fwd.stats.cross_kv.add(&sk);
+            self.dec_fwd.stats.cross_kv.add(&sv);
+        }
+
+        // Per-utterance greedy decode over the shared precompute.
+        let mut out = Vec::with_capacity(batch);
+        let mut hyp = Vec::new();
+        for (u, &len) in src_len.iter().enumerate() {
+            let base = u * t * d;
+            self.dec_fwd.start_with(dec, len, |i| {
+                (
+                    &ck[i][base..base + len * d],
+                    &cv[i][base..base + len * d],
+                )
+            });
+            self.dec_fwd.generate_started(dec, &mut hyp);
+            out.push(hyp.clone());
+        }
+        Ok(out)
     }
 }
 
 /// Build the native serving manifest for one configuration.
 fn build_manifest(dims: &ModelDims, batch: usize, tile: usize) -> Manifest {
     let (b, t) = (batch, dims.seq_len);
-    Manifest {
-        name: "native_asr_encoder".to_string(),
-        args: vec![
-            ArgSpec {
-                name: "feats".to_string(),
-                shape: vec![b, t, dims.input_dim],
-                dtype: DType::F32,
-            },
-            ArgSpec {
-                name: "pad_mask".to_string(),
+    let (name, args) = if dims.token_input {
+        (
+            "native_mt_encoder".to_string(),
+            vec![ArgSpec {
+                name: "src".to_string(),
                 shape: vec![b, t],
-                dtype: DType::F32,
-            },
-        ],
+                dtype: DType::I32,
+            }],
+        )
+    } else {
+        (
+            "native_asr_encoder".to_string(),
+            vec![
+                ArgSpec {
+                    name: "feats".to_string(),
+                    shape: vec![b, t, dims.input_dim],
+                    dtype: DType::F32,
+                },
+                ArgSpec {
+                    name: "pad_mask".to_string(),
+                    shape: vec![b, t],
+                    dtype: DType::F32,
+                },
+            ],
+        )
+    };
+    Manifest {
+        name,
+        args,
         output_shape: vec![b, t, dims.vocab],
         output_dtype: DType::F32,
         model: ModelMeta {
@@ -201,6 +340,17 @@ impl QosBackend for NativeBackend {
         let tile = if w.dims.tile_ok(tile) { tile } else { w.dims.tile };
         let masks = recover_masks(&w, tile)?;
         self.model = PreparedModel::new_with(&w, tile, quant, Some(&masks), self.per_channel)?;
+        if let Some(dec_master) = &self.dec_master {
+            let dw = DecoderWeights::from_bundle(dec_master.dims, params)?;
+            let dec_masks = dw.recover_masks(tile)?;
+            self.dec_model = Some(PreparedDecoder::new_with(
+                &dw,
+                tile,
+                quant,
+                Some(&dec_masks),
+                self.per_channel,
+            )?);
+        }
         self.serve_manifest.model.tile = tile;
         Ok(())
     }
@@ -228,17 +378,30 @@ impl QosBackend for NativeBackend {
         self.fwd.run_tokens(&self.model, batch, src, &mut logits);
         Ok(logits)
     }
+
+    fn translate(&mut self, src: &[i32], src_len: &[usize], batch: usize) -> Result<Vec<Vec<i32>>> {
+        ensure!(src_len.len() == batch, "one src_len per utterance");
+        NativeBackend::translate(self, src, src_len)
+    }
 }
 
 impl ServeBackend for NativeBackend {
     fn execute(&mut self, _artifact: &str, args: &[Tensor]) -> Result<Tensor> {
         // The manifest is cached; its arg order is fixed at construction
-        // (feats, pad_mask). Validation is shape/dtype checks only.
+        // (feats + pad_mask, or src for token-input models). Validation
+        // is shape/dtype checks only.
         self.serve_manifest.validate_args(args)?;
-        let feats = args[0].f32s();
-        let pad = args[1].f32s();
-        let lp = self.forward_batch(&feats, &pad, self.batch);
-        Ok(Tensor::from_f32(&self.serve_manifest.output_shape, &lp))
+        let out = if self.model.dims.token_input {
+            let src = args[0].i32s();
+            let mut logits = Vec::new();
+            self.fwd.run_tokens(&self.model, self.batch, &src, &mut logits);
+            logits
+        } else {
+            let feats = args[0].f32s();
+            let pad = args[1].f32s();
+            self.forward_batch(&feats, &pad, self.batch)
+        };
+        Ok(Tensor::from_f32(&self.serve_manifest.output_shape, &out))
     }
 }
 
@@ -416,6 +579,136 @@ mod tests {
             wer_pc <= wer_pt + 0.05,
             "per-channel WER {wer_pc} vs per-tensor {wer_pt}"
         );
+    }
+
+    fn mini_mt_backend(batch: usize) -> NativeBackend {
+        use crate::infer::decoder::testutil::mini_dec_dims;
+        use crate::infer::synth::synth_decoder_weights;
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let enc = synth_weights(&dims, 43);
+        let dec = synth_decoder_weights(&mini_dec_dims(), 43);
+        NativeBackend::new_mt(enc, dec, batch).unwrap()
+    }
+
+    fn mt_batch(be: &NativeBackend, n: usize, seed: u64) -> (Vec<i32>, Vec<usize>) {
+        let dims = *be.dims();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let t = dims.seq_len;
+        let mut src = vec![0i32; n * t];
+        let mut lens = Vec::with_capacity(n);
+        for u in 0..n {
+            let len = t / 2 + rng.index(t / 2);
+            for tok in src[u * t..u * t + len].iter_mut() {
+                *tok = rng.index(dims.vocab) as i32;
+            }
+            lens.push(len);
+        }
+        (src, lens)
+    }
+
+    #[test]
+    fn mt_joint_prune_skips_decoder_tiles_too() {
+        let mut be = mini_mt_backend(2);
+        let plan = be.prepare(8, 0.5, Quant::Int8).unwrap();
+        assert!((plan.achieved_rate - 0.5).abs() < 0.1);
+        let enc_sp = be.model().ff_sparsity();
+        let dec_sp = be.dec_model().unwrap().ff_sparsity();
+        assert!(enc_sp > 0.0, "encoder ff must lose tiles");
+        assert!(dec_sp > 0.0, "decoder ff must lose tiles");
+        let (src, lens) = mt_batch(&be, 3, 1);
+        be.reset_stats();
+        let hyps = be.translate(&src, &lens).unwrap();
+        assert_eq!(hyps.len(), 3);
+        let ds = be.decode_stats();
+        assert!(ds.ff.tiles_skipped > 0, "decode path must skip pruned tiles");
+        assert!(ds.steps > 0);
+        assert_eq!(ds.utterances, 3);
+        // Cross-K/V ran weight-stationary: one programming pass per
+        // live tile for the whole batch.
+        assert!(ds.cross_kv.timing.prog_words > 0);
+    }
+
+    #[test]
+    fn batched_translate_bitwise_equals_batch_of_one() {
+        // Satellite: the batched cross-attention K/V precompute keeps
+        // per-utterance bitwise exactness, in both weight formats.
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let mut be = mini_mt_backend(4);
+            be.prepare(8, 0.3, quant).unwrap();
+            let (src, lens) = mt_batch(&be, 4, 2);
+            let batched = be.translate(&src, &lens).unwrap();
+            let kv_batched = be.decode_stats().cross_kv.timing;
+
+            let mut single = mini_mt_backend(4);
+            single.prepare(8, 0.3, quant).unwrap();
+            let t = be.dims().seq_len;
+            for u in 0..4usize {
+                let one = single
+                    .translate(&src[u * t..(u + 1) * t], &lens[u..u + 1])
+                    .unwrap();
+                assert_eq!(batched[u], one[0], "{quant:?}: utterance {u}");
+            }
+            // TileTiming::batched accounting: streaming scales with the
+            // batch, tile programming is charged once instead of four
+            // times — the weight-stationary reuse win.
+            let kv_single = single.decode_stats().cross_kv.timing;
+            assert_eq!(kv_batched.in_words, kv_single.in_words, "{quant:?}");
+            assert_eq!(kv_batched.macs, kv_single.macs, "{quant:?}");
+            assert_eq!(
+                4 * kv_batched.prog_words,
+                kv_single.prog_words,
+                "{quant:?}: batched K/V programs each tile once per batch"
+            );
+        }
+    }
+
+    #[test]
+    fn mt_prepare_and_configure_agree() {
+        // The direct pruning path and the QoS bundle path (zeroed tiles
+        // + mask recovery on encoder AND decoder) produce identical
+        // translations.
+        use crate::infer::decoder::testutil::zero_dec_ff_tiles;
+        let be0 = mini_mt_backend(1);
+        let enc = be0.weights().clone();
+        let dec = be0.dec_master.clone().unwrap();
+        let mut norms = ff_norms(&enc, 8).unwrap();
+        let enc_gemms = norms.len();
+        norms.extend(dec.ff_norms(8).unwrap());
+        let plan = global_prune(&norms, 0.4);
+        let mut encz = enc.clone();
+        zero_ff_tiles(&mut encz, &plan.masks[..enc_gemms], 8);
+        let mut decz = dec.clone();
+        zero_dec_ff_tiles(&mut decz, &plan.masks[enc_gemms..], 8);
+        let mut bundle = encz.to_bundle();
+        decz.append_to_bundle(&mut bundle);
+
+        let (src, lens) = mt_batch(&be0, 2, 3);
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let mut direct = NativeBackend::new_mt(enc.clone(), dec.clone(), 1).unwrap();
+            direct.prepare(8, 0.4, quant).unwrap();
+            let mut via_bundle = NativeBackend::new_mt(enc.clone(), dec.clone(), 1).unwrap();
+            via_bundle.configure(&bundle, 8, quant).unwrap();
+            let a = direct.translate(&src, &lens).unwrap();
+            let b = via_bundle.translate(&src, &lens).unwrap();
+            assert_eq!(a, b, "{quant:?}");
+        }
+    }
+
+    #[test]
+    fn mt_manifest_and_serve_contract() {
+        let mut be = mini_mt_backend(2);
+        let man = be.manifest().clone();
+        assert_eq!(man.name, "native_mt_encoder");
+        assert_eq!(man.args.len(), 1);
+        assert_eq!(man.args[0].shape, vec![2, be.dims().seq_len]);
+        assert!(man.model.token_input);
+        let src = Tensor::zeros(&man.args[0].shape, DType::I32);
+        let out = be.execute("native_mt_encoder", &[src]).unwrap();
+        assert_eq!(out.shape, vec![2, be.dims().seq_len, be.dims().vocab]);
     }
 
     #[test]

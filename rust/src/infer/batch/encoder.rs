@@ -32,8 +32,9 @@ pub struct BatchForward {
     ctx: Vec<f32>,
     tmp: Vec<f32>,
     mid: Vec<f32>,
-    /// All-ones pad mask for the token (MT) path, reused across calls.
-    ones: Vec<f32>,
+    /// Pad-mask buffer for the token (MT) path, rebuilt per call from
+    /// the batch's real source lengths, reused across calls.
+    pad_buf: Vec<f32>,
     /// Packed-tile scratch of the weight-stationary kernels.
     wtile: Vec<f32>,
     pub stats: ForwardStats,
@@ -57,7 +58,7 @@ impl BatchForward {
             ctx: Vec::new(),
             tmp: Vec::new(),
             mid: Vec::new(),
-            ones: Vec::new(),
+            pad_buf: Vec::new(),
             wtile: Vec::new(),
             stats: ForwardStats::default(),
         }
@@ -102,7 +103,7 @@ impl BatchForward {
         self.stats.utterances += batch;
     }
 
-    /// MT: one batch of `batch x seq_len` token sentences →
+    /// MT: one batch of full-length `batch x seq_len` token sentences →
     /// per-position logits `batch x seq_len x vocab` in `out`.
     pub fn run_tokens(
         &mut self,
@@ -111,11 +112,61 @@ impl BatchForward {
         tokens: &[i32],
         out: &mut Vec<f32>,
     ) {
+        let lens = vec![m.dims.seq_len; batch];
+        self.run_tokens_padded(m, batch, tokens, &lens, out);
+    }
+
+    /// MT with a ragged batch: utterance `u` has `src_len[u]` real
+    /// tokens; the pad tails are masked out of attention, so each
+    /// utterance's valid-prefix logits are bitwise identical to the
+    /// per-utterance padded run.
+    pub fn run_tokens_padded(
+        &mut self,
+        m: &PreparedModel,
+        batch: usize,
+        tokens: &[i32],
+        src_len: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        self.embed_encode_tokens(m, batch, tokens, src_len);
+        self.head(m, batch, out, false);
+        self.stats.utterances += batch;
+    }
+
+    /// Batched MT encoder memory for decoder cross-attention: embed +
+    /// encode the ragged batch and write the post-final-LayerNorm hidden
+    /// states `batch x seq_len x d_model` (flattened) into `memory`.
+    /// Rows beyond each utterance's `src_len` are pad rows.
+    pub fn memory_tokens(
+        &mut self,
+        m: &PreparedModel,
+        batch: usize,
+        tokens: &[i32],
+        src_len: &[usize],
+        memory: &mut Vec<f32>,
+    ) {
+        self.embed_encode_tokens(m, batch, tokens, src_len);
+        memory.clear();
+        memory.extend_from_slice(&self.h);
+        ops::layer_norm(memory, m.dims.d_model, &m.lnf_g, &m.lnf_b);
+        self.stats.utterances += batch;
+    }
+
+    /// Shared token path: embed the batch, build the real pad masks from
+    /// `src_len`, and run the encoder stack.
+    fn embed_encode_tokens(
+        &mut self,
+        m: &PreparedModel,
+        batch: usize,
+        tokens: &[i32],
+        src_len: &[usize],
+    ) {
         let dims = &m.dims;
         assert!(dims.token_input, "token input on a feature-input model");
         assert!(batch > 0, "batch must be positive");
         let t = dims.seq_len;
         assert_eq!(tokens.len(), batch * t, "tokens must be batch x seq");
+        assert_eq!(src_len.len(), batch, "one src_len per utterance");
         let d = dims.d_model;
         self.h.clear();
         self.h.resize(batch * t * d, 0.0);
@@ -124,13 +175,17 @@ impl BatchForward {
             assert!(ti < dims.vocab, "token {ti} out of vocab {}", dims.vocab);
             self.h[row * d..(row + 1) * d].copy_from_slice(&m.in_w[ti * d..(ti + 1) * d]);
         }
-        let mut ones = std::mem::take(&mut self.ones);
-        ones.clear();
-        ones.resize(batch * t, 1.0);
-        self.encode(m, batch, &ones);
-        self.ones = ones;
-        self.head(m, batch, out, false);
-        self.stats.utterances += batch;
+        let mut pad = std::mem::take(&mut self.pad_buf);
+        pad.clear();
+        pad.resize(batch * t, 0.0);
+        for (u, &len) in src_len.iter().enumerate() {
+            assert!(len > 0 && len <= t, "src_len {len} out of 1..={t}");
+            for p in pad[u * t..u * t + len].iter_mut() {
+                *p = 1.0;
+            }
+        }
+        self.encode(m, batch, &pad);
+        self.pad_buf = pad;
     }
 
     /// Shared encoder stack over `self.h` (the projected / embedded
@@ -427,6 +482,50 @@ mod tests {
         for u in 0..batch {
             fwd.run_tokens(&model, &tokens[u * t..(u + 1) * t], &mut row);
             assert_eq!(&got[u * t * v..(u + 1) * t * v], row.as_slice(), "utt {u}");
+        }
+    }
+
+    #[test]
+    fn ragged_token_batch_equals_per_utterance_padded() {
+        // Satellite: real source pad masks through the batched token
+        // path — each utterance of a ragged batch is bitwise identical
+        // to its per-utterance padded run, logits and memory both.
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let w = crate::infer::synth::synth_weights(&dims, 71);
+        let model = prepared(&w, Quant::Fp32, 73);
+        let batch = 3usize;
+        let t = dims.seq_len;
+        let mut rng = Rng::new(12);
+        let tokens: Vec<i32> = (0..batch * t)
+            .map(|_| rng.index(dims.vocab) as i32)
+            .collect();
+        let lens = vec![t, t / 2, t / 3 + 1];
+        let mut bf = BatchForward::new();
+        let mut got = Vec::new();
+        bf.run_tokens_padded(&model, batch, &tokens, &lens, &mut got);
+        let mut bmem = Vec::new();
+        bf.memory_tokens(&model, batch, &tokens, &lens, &mut bmem);
+        let (d, v) = (dims.d_model, dims.vocab);
+        let mut fwd = Forward::new();
+        let mut row = Vec::new();
+        let mut mem = Vec::new();
+        for u in 0..batch {
+            fwd.run_tokens_padded(&model, &tokens[u * t..(u + 1) * t], lens[u], &mut row);
+            assert_eq!(
+                &got[u * t * v..u * t * v + lens[u] * v],
+                &row[..lens[u] * v],
+                "utt {u} logits"
+            );
+            fwd.memory_tokens(&model, &tokens[u * t..(u + 1) * t], lens[u], &mut mem);
+            assert_eq!(
+                &bmem[u * t * d..u * t * d + lens[u] * d],
+                &mem[..lens[u] * d],
+                "utt {u} memory"
+            );
         }
     }
 

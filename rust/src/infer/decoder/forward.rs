@@ -1,0 +1,762 @@
+//! [`DecoderForward`] — the incremental KV-cache decode runtime plus the
+//! full-prefix recompute reference.
+//!
+//! Each generated token costs **one step**: six `[1, d]` GEMV
+//! projections plus the masked feed-forward pair per block, attention
+//! over the cached K/V prefix, and the vocabulary head. The caches make
+//! the step *bitwise identical* to re-running the whole prefix through
+//! the stack ([`DecoderForward::full_prefix`]): every kernel in
+//! [`super::super::gemm`] computes output rows independently with
+//! k-ascending accumulation, so a K/V row produced by the `m = 1` GEMV
+//! at its own step is the same f32 sequence the `m = len` recompute
+//! produces for that row, and causal attention is realized by iterating
+//! only the `0..=pos` prefix (no additive mask), which keeps the
+//! arithmetic of both paths literally identical. The identity is
+//! property-tested on both weight formats below.
+//!
+//! Cross-attention K/V are computed **once per utterance**
+//! (`m = src_len` GEMMs at [`DecoderForward::start`], accounted in
+//! [`DecodeStats::cross_kv`]) and reused every step — the decode-side
+//! weight-stationary reuse. The per-step GEMVs are accounted with
+//! [`crate::systolic::TileTiming`] at `m = 1`, matching
+//! [`crate::sysim::engine::gemm_on_array_decode`] exactly (asserted in
+//! the tests below).
+
+use super::super::gemm::{gemm_f32, TileStats};
+use super::super::ops;
+use super::PreparedDecoder;
+
+/// Per-run decode statistics, split by GEMM role.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Feed-forward GEMVs (the SASP-pruned pair, one `m = 1` pass per
+    /// block per step).
+    pub ff: TileStats,
+    /// Self/cross attention projections (`sq sk sv so xq xo`, `m = 1`
+    /// per block per step).
+    pub attn: TileStats,
+    /// Cross-attention K/V precompute — once per utterance, reused
+    /// every step. Per-utterance paths ([`DecoderForward::start`],
+    /// [`DecoderForward::full_prefix`]) charge `m = src_len`; the
+    /// batched translate path streams the full padded
+    /// `[batch * seq_len]` memory panel weight-stationary (the
+    /// rectangular batched schedule, like the batched encoder), so it
+    /// charges `m = seq_len` per utterance with programming amortized
+    /// across the batch.
+    pub cross_kv: TileStats,
+    /// Vocabulary head (software-executed).
+    pub other: TileStats,
+    /// Decode steps executed since the last reset.
+    pub steps: usize,
+    /// Utterances started since the last reset.
+    pub utterances: usize,
+}
+
+/// One query row attending over `n_keys` K/V rows (multi-head, no
+/// masking — callers pass the causal prefix or the valid source
+/// prefix). The **only** attention arithmetic in this module: the
+/// KV-cache step and the full-prefix recompute both run through here,
+/// which is what makes their agreement bitwise.
+fn attend_row(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    n_keys: usize,
+    d: usize,
+    n_heads: usize,
+    scores: &mut Vec<f32>,
+    ctx: &mut [f32],
+) {
+    debug_assert!(n_keys > 0 && keys.len() >= n_keys * d && vals.len() >= n_keys * d);
+    let hd = d / n_heads;
+    let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+    scores.clear();
+    scores.resize(n_keys, 0.0);
+    for head in 0..n_heads {
+        let c0 = head * hd;
+        for b in 0..n_keys {
+            let mut acc = 0.0f32;
+            for j in 0..hd {
+                acc += q[c0 + j] * keys[b * d + c0 + j];
+            }
+            scores[b] = acc * inv_sqrt_hd;
+        }
+        ops::softmax_rows(scores, n_keys);
+        for j in 0..hd {
+            let mut acc = 0.0f32;
+            for b in 0..n_keys {
+                acc += scores[b] * vals[b * d + c0 + j];
+            }
+            ctx[c0 + j] = acc;
+        }
+    }
+}
+
+/// The decode runtime: owns the per-block KV caches and every
+/// intermediate buffer, so steady-state generation performs no
+/// allocation beyond growth to the longest sequence seen.
+pub struct DecoderForward {
+    /// Per-block causal self-attention caches (`pos x d`, grown one row
+    /// per step).
+    self_k: Vec<Vec<f32>>,
+    self_v: Vec<Vec<f32>>,
+    /// Per-block cross-attention K/V (`src_len x d`, fixed per
+    /// utterance).
+    cross_k: Vec<Vec<f32>>,
+    cross_v: Vec<Vec<f32>>,
+    src_len: usize,
+    pos: usize,
+    h: Vec<f32>,
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    ctx: Vec<f32>,
+    tmp: Vec<f32>,
+    mid: Vec<f32>,
+    scores: Vec<f32>,
+    kv_row: Vec<f32>,
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    logits_buf: Vec<f32>,
+    pub stats: DecodeStats,
+}
+
+impl Default for DecoderForward {
+    fn default() -> Self {
+        DecoderForward::new()
+    }
+}
+
+impl DecoderForward {
+    pub fn new() -> Self {
+        DecoderForward {
+            self_k: Vec::new(),
+            self_v: Vec::new(),
+            cross_k: Vec::new(),
+            cross_v: Vec::new(),
+            src_len: 0,
+            pos: 0,
+            h: Vec::new(),
+            hn: Vec::new(),
+            q: Vec::new(),
+            ctx: Vec::new(),
+            tmp: Vec::new(),
+            mid: Vec::new(),
+            scores: Vec::new(),
+            kv_row: Vec::new(),
+            k_buf: Vec::new(),
+            v_buf: Vec::new(),
+            logits_buf: Vec::new(),
+            stats: DecodeStats::default(),
+        }
+    }
+
+    /// Number of steps taken for the current utterance (== the position
+    /// the next token will occupy).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn reset_caches(&mut self, n_blocks: usize) {
+        self.self_k.resize_with(n_blocks, Vec::new);
+        self.self_v.resize_with(n_blocks, Vec::new);
+        self.cross_k.resize_with(n_blocks, Vec::new);
+        self.cross_v.resize_with(n_blocks, Vec::new);
+        for c in self
+            .self_k
+            .iter_mut()
+            .chain(self.self_v.iter_mut())
+            .chain(self.cross_k.iter_mut())
+            .chain(self.cross_v.iter_mut())
+        {
+            c.clear();
+        }
+        self.pos = 0;
+    }
+
+    /// Begin one utterance: reset the self-attention caches and compute
+    /// the cross-attention K/V from the encoder memory (`src_len x
+    /// d_model`, the post-final-LayerNorm hidden states) — once, reused
+    /// by every subsequent [`Self::step`].
+    pub fn start(&mut self, m: &PreparedDecoder, memory: &[f32], src_len: usize) {
+        let d = m.dims.d_model;
+        assert!(src_len > 0, "empty source");
+        assert_eq!(memory.len(), src_len * d, "memory must be src_len x d");
+        self.reset_caches(m.blocks.len());
+        self.src_len = src_len;
+        for (i, blk) in m.blocks.iter().enumerate() {
+            let stk = blk.xk.gemm(memory, src_len, None, m.tile, &mut self.cross_k[i]);
+            let stv = blk.xv.gemm(memory, src_len, None, m.tile, &mut self.cross_v[i]);
+            self.stats.cross_kv.add(&stk);
+            self.stats.cross_kv.add(&stv);
+        }
+        self.stats.utterances += 1;
+    }
+
+    /// Begin one utterance with **externally precomputed** cross K/V
+    /// (the batched serving path, where the per-block K/V GEMMs run
+    /// weight-stationary across the whole batch): `kv(i)` returns the
+    /// block-`i` `(K, V)` slices, each `src_len x d_model`. The caller
+    /// owns the accounting of the batched precompute.
+    pub fn start_with<'a>(
+        &mut self,
+        m: &PreparedDecoder,
+        src_len: usize,
+        kv: impl Fn(usize) -> (&'a [f32], &'a [f32]),
+    ) {
+        let d = m.dims.d_model;
+        assert!(src_len > 0, "empty source");
+        self.reset_caches(m.blocks.len());
+        self.src_len = src_len;
+        for i in 0..m.blocks.len() {
+            let (k, v) = kv(i);
+            assert_eq!(k.len(), src_len * d, "block {i} cross-K shape");
+            assert_eq!(v.len(), src_len * d, "block {i} cross-V shape");
+            self.cross_k[i].extend_from_slice(k);
+            self.cross_v[i].extend_from_slice(v);
+        }
+        self.stats.utterances += 1;
+    }
+
+    /// One incremental decode step: feed the token occupying position
+    /// [`Self::pos`] and produce the next-token logits (`vocab`,
+    /// unnormalized) in `logits`.
+    pub fn step(&mut self, m: &PreparedDecoder, token: i32, logits: &mut Vec<f32>) {
+        let dims = &m.dims;
+        let (d, v) = (dims.d_model, dims.vocab);
+        let p = self.pos;
+        assert!(p < dims.max_len, "decode step past max_len {}", dims.max_len);
+        assert!(self.src_len > 0, "step before start()");
+        let ti = token as usize;
+        assert!(ti < v, "token {ti} out of vocab {v}");
+        self.h.clear();
+        self.h.extend_from_slice(&m.emb[ti * d..(ti + 1) * d]);
+        ops::residual_add(&mut self.h, &m.pe[p * d..(p + 1) * d]);
+        self.ctx.clear();
+        self.ctx.resize(d, 0.0);
+
+        for (i, blk) in m.blocks.iter().enumerate() {
+            // --- causal masked self-attention over the cached prefix --
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln1_g, &blk.ln1_b);
+            let sq = blk.sq.gemm(&self.hn, 1, None, m.tile, &mut self.q);
+            let sk = blk.sk.gemm(&self.hn, 1, None, m.tile, &mut self.kv_row);
+            self.self_k[i].extend_from_slice(&self.kv_row);
+            let sv = blk.sv.gemm(&self.hn, 1, None, m.tile, &mut self.kv_row);
+            self.self_v[i].extend_from_slice(&self.kv_row);
+            self.stats.attn.add(&sq);
+            self.stats.attn.add(&sk);
+            self.stats.attn.add(&sv);
+            attend_row(
+                &self.q,
+                &self.self_k[i],
+                &self.self_v[i],
+                p + 1,
+                d,
+                dims.n_heads,
+                &mut self.scores,
+                &mut self.ctx,
+            );
+            let so = blk.so.gemm(&self.ctx, 1, None, m.tile, &mut self.tmp);
+            self.stats.attn.add(&so);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- encoder-decoder cross-attention (K/V reused) ---------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.lnx_g, &blk.lnx_b);
+            let xq = blk.xq.gemm(&self.hn, 1, None, m.tile, &mut self.q);
+            self.stats.attn.add(&xq);
+            attend_row(
+                &self.q,
+                &self.cross_k[i],
+                &self.cross_v[i],
+                self.src_len,
+                d,
+                dims.n_heads,
+                &mut self.scores,
+                &mut self.ctx,
+            );
+            let xo = blk.xo.gemm(&self.ctx, 1, None, m.tile, &mut self.tmp);
+            self.stats.attn.add(&xo);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- pre-LN SASP feed-forward -----------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
+            let s1 = blk.w1.gemm(&self.hn, 1, Some(&blk.mask1), m.tile, &mut self.mid);
+            self.stats.ff.add(&s1);
+            ops::add_bias(&mut self.mid, &blk.b1);
+            ops::relu(&mut self.mid);
+            let s2 = blk.w2.gemm(&self.mid, 1, Some(&blk.mask2), m.tile, &mut self.tmp);
+            self.stats.ff.add(&s2);
+            ops::add_bias(&mut self.tmp, &blk.b2);
+            ops::residual_add(&mut self.h, &self.tmp);
+        }
+
+        self.hn.clear();
+        self.hn.extend_from_slice(&self.h);
+        ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
+        let st = gemm_f32(&self.hn, &m.head_w, 1, d, v, None, m.tile, logits);
+        self.stats.other.add(&st);
+        ops::add_bias(logits, &m.head_b);
+        self.pos += 1;
+        self.stats.steps += 1;
+    }
+
+    /// Greedy autoregressive generation over a started utterance:
+    /// BOS-seeded, stops at EOS or `max_len` steps. `out` receives the
+    /// generated tokens (BOS/EOS excluded).
+    pub fn generate_started(&mut self, m: &PreparedDecoder, out: &mut Vec<i32>) {
+        assert_eq!(self.pos, 0, "generate_started on a mid-stream decoder");
+        out.clear();
+        let mut logits = std::mem::take(&mut self.logits_buf);
+        let mut tok = m.dims.bos;
+        for _ in 0..m.dims.max_len {
+            self.step(m, tok, &mut logits);
+            let mut best = 0usize;
+            for (i, l) in logits.iter().enumerate() {
+                if *l > logits[best] {
+                    best = i;
+                }
+            }
+            let next = best as i32;
+            if next == m.dims.eos {
+                break;
+            }
+            out.push(next);
+            tok = next;
+        }
+        self.logits_buf = logits;
+    }
+
+    /// Greedy generation for one utterance: [`Self::start`] +
+    /// [`Self::generate_started`].
+    pub fn generate(
+        &mut self,
+        m: &PreparedDecoder,
+        memory: &[f32],
+        src_len: usize,
+        out: &mut Vec<i32>,
+    ) {
+        self.start(m, memory, src_len);
+        self.generate_started(m, out);
+    }
+
+    /// Full-prefix recompute reference: run the whole token prefix
+    /// through the decoder stack with no cache, producing next-token
+    /// logits for **every** position (`len x vocab` in `logits`). Row
+    /// `p` is bitwise identical to what [`Self::step`] produces at
+    /// position `p` — the KV-cache exactness contract.
+    pub fn full_prefix(
+        &mut self,
+        m: &PreparedDecoder,
+        memory: &[f32],
+        src_len: usize,
+        tokens: &[i32],
+        logits: &mut Vec<f32>,
+    ) {
+        let dims = &m.dims;
+        let (d, v) = (dims.d_model, dims.vocab);
+        let len = tokens.len();
+        assert!(len > 0 && len <= dims.max_len, "prefix length {len} out of range");
+        assert!(src_len > 0, "empty source");
+        assert_eq!(memory.len(), src_len * d, "memory must be src_len x d");
+        self.h.clear();
+        self.h.resize(len * d, 0.0);
+        for (row, tok) in tokens.iter().enumerate() {
+            let ti = *tok as usize;
+            assert!(ti < v, "token {ti} out of vocab {v}");
+            self.h[row * d..(row + 1) * d].copy_from_slice(&m.emb[ti * d..(ti + 1) * d]);
+            ops::residual_add(
+                &mut self.h[row * d..(row + 1) * d],
+                &m.pe[row * d..(row + 1) * d],
+            );
+        }
+        self.ctx.clear();
+        self.ctx.resize(len * d, 0.0);
+
+        for blk in &m.blocks {
+            // --- causal self-attention (recomputed, no cache) ---------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln1_g, &blk.ln1_b);
+            let sq = blk.sq.gemm(&self.hn, len, None, m.tile, &mut self.q);
+            let sk = blk.sk.gemm(&self.hn, len, None, m.tile, &mut self.k_buf);
+            let sv = blk.sv.gemm(&self.hn, len, None, m.tile, &mut self.v_buf);
+            self.stats.attn.add(&sq);
+            self.stats.attn.add(&sk);
+            self.stats.attn.add(&sv);
+            for a in 0..len {
+                attend_row(
+                    &self.q[a * d..(a + 1) * d],
+                    &self.k_buf,
+                    &self.v_buf,
+                    a + 1,
+                    d,
+                    dims.n_heads,
+                    &mut self.scores,
+                    &mut self.ctx[a * d..(a + 1) * d],
+                );
+            }
+            let so = blk.so.gemm(&self.ctx, len, None, m.tile, &mut self.tmp);
+            self.stats.attn.add(&so);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- cross-attention (K/V recomputed per call) ------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.lnx_g, &blk.lnx_b);
+            let xq = blk.xq.gemm(&self.hn, len, None, m.tile, &mut self.q);
+            let xk = blk.xk.gemm(memory, src_len, None, m.tile, &mut self.k_buf);
+            let xv = blk.xv.gemm(memory, src_len, None, m.tile, &mut self.v_buf);
+            self.stats.attn.add(&xq);
+            self.stats.cross_kv.add(&xk);
+            self.stats.cross_kv.add(&xv);
+            for a in 0..len {
+                attend_row(
+                    &self.q[a * d..(a + 1) * d],
+                    &self.k_buf,
+                    &self.v_buf,
+                    src_len,
+                    d,
+                    dims.n_heads,
+                    &mut self.scores,
+                    &mut self.ctx[a * d..(a + 1) * d],
+                );
+            }
+            let xo = blk.xo.gemm(&self.ctx, len, None, m.tile, &mut self.tmp);
+            self.stats.attn.add(&xo);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- pre-LN SASP feed-forward -----------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
+            let s1 = blk.w1.gemm(&self.hn, len, Some(&blk.mask1), m.tile, &mut self.mid);
+            self.stats.ff.add(&s1);
+            ops::add_bias(&mut self.mid, &blk.b1);
+            ops::relu(&mut self.mid);
+            let s2 = blk.w2.gemm(&self.mid, len, Some(&blk.mask2), m.tile, &mut self.tmp);
+            self.stats.ff.add(&s2);
+            ops::add_bias(&mut self.tmp, &blk.b2);
+            ops::residual_add(&mut self.h, &self.tmp);
+        }
+
+        self.hn.clear();
+        self.hn.extend_from_slice(&self.h);
+        ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
+        let st = gemm_f32(&self.hn, &m.head_w, len, d, v, None, m.tile, logits);
+        self.stats.other.add(&st);
+        ops::add_bias(logits, &m.head_b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{mini_dec_dims, random_dec_masks, zero_dec_ff_tiles};
+    use super::super::{DecoderDims, DecoderWeights, PreparedDecoder};
+    use super::*;
+    use crate::data::Tensor;
+    use crate::infer::synth::synth_decoder_weights;
+    use crate::quant::{fake_quantize, fake_quantize_per_channel};
+    use crate::systolic::Quant;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_memory(rng: &mut Rng, src_len: usize, d: usize) -> Vec<f32> {
+        (0..src_len * d).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    fn random_tokens(rng: &mut Rng, len: usize, vocab: usize) -> Vec<i32> {
+        (0..len).map(|_| rng.index(vocab) as i32).collect()
+    }
+
+    #[test]
+    fn prop_kv_cache_step_bitwise_equals_full_prefix() {
+        // The tentpole contract on both weight formats: stepping with
+        // the KV cache produces, at every position, exactly the logits
+        // the cache-free full-prefix recompute produces — bitwise.
+        check("kv-cache step == full-prefix recompute", 12, |rng: &mut Rng| {
+            let dims = mini_dec_dims();
+            let quant = if rng.chance(0.5) { Quant::Fp32 } else { Quant::Int8 };
+            let w = synth_decoder_weights(&dims, rng.next_u64());
+            let masks = random_dec_masks(&dims, dims.tile, 0.35, rng.next_u64());
+            let m = PreparedDecoder::new(&w, dims.tile, quant, Some(&masks)).unwrap();
+            let src_len = rng.index(12) + 2;
+            let memory = random_memory(rng, src_len, dims.d_model);
+            let len = rng.index(dims.max_len - 1) + 1;
+            let tokens = random_tokens(rng, len, dims.vocab);
+
+            let mut fwd = DecoderForward::new();
+            let mut stepped = Vec::new();
+            let mut row = Vec::new();
+            fwd.start(&m, &memory, src_len);
+            for &t in &tokens {
+                fwd.step(&m, t, &mut row);
+                stepped.extend_from_slice(&row);
+            }
+            let mut full = Vec::new();
+            fwd.full_prefix(&m, &memory, src_len, &tokens, &mut full);
+            if stepped != full {
+                return (false, format!("{quant:?} len={len} src={src_len}"));
+            }
+            // Causality: a shorter prefix reproduces the same rows.
+            let cut = len.div_ceil(2);
+            let mut part = Vec::new();
+            fwd.full_prefix(&m, &memory, src_len, &tokens[..cut], &mut part);
+            (
+                part == full[..cut * dims.vocab],
+                format!("{quant:?} causality at cut={cut}"),
+            )
+        });
+    }
+
+    #[test]
+    fn tile_skipping_equals_zeroed_weights() {
+        // SASP identity at decoder scope: skipping ff tiles == running
+        // dense over weights with those tiles zeroed.
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 7);
+        let masks = random_dec_masks(&dims, dims.tile, 0.4, 3);
+        let masked = PreparedDecoder::new(&w, dims.tile, Quant::Fp32, Some(&masks)).unwrap();
+        let mut wz = w.clone();
+        zero_dec_ff_tiles(&mut wz, &masks, dims.tile);
+        let zeroed = PreparedDecoder::new(&wz, dims.tile, Quant::Fp32, None).unwrap();
+
+        let mut rng = Rng::new(5);
+        let memory = random_memory(&mut rng, 9, dims.d_model);
+        let tokens = random_tokens(&mut rng, 6, dims.vocab);
+        let mut fwd = DecoderForward::new();
+        let mut a = Vec::new();
+        fwd.full_prefix(&masked, &memory, 9, &tokens, &mut a);
+        let skipped = fwd.stats.ff.tiles_skipped;
+        let mut b = Vec::new();
+        fwd.full_prefix(&zeroed, &memory, 9, &tokens, &mut b);
+        assert!(skipped > 0, "mask must actually skip tiles");
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+        }
+    }
+
+    /// Fake-quantize every 2-D decoder matrix in place with `fq`.
+    fn fq_all(w: &mut DecoderWeights, fq: impl Fn(&mut Vec<f32>, usize, usize)) {
+        let (d, f, v) = (w.dims.d_model, w.dims.d_ff, w.dims.vocab);
+        fq(&mut w.emb, v, d);
+        fq(&mut w.head_w, d, v);
+        for blk in w.blocks.iter_mut() {
+            for m in [
+                &mut blk.sq, &mut blk.sk, &mut blk.sv, &mut blk.so,
+                &mut blk.xq, &mut blk.xk, &mut blk.xv, &mut blk.xo,
+            ] {
+                fq(m, d, d);
+            }
+            fq(&mut blk.w1, d, f);
+            fq(&mut blk.w2, f, d);
+        }
+    }
+
+    fn assert_int8_matches_fq_fp32(per_channel: bool, seed: u64) {
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, seed);
+        let masks = random_dec_masks(&dims, dims.tile, 0.3, seed ^ 1);
+        let int8 =
+            PreparedDecoder::new_with(&w, dims.tile, Quant::Int8, Some(&masks), per_channel)
+                .unwrap();
+        assert_eq!(int8.per_channel, per_channel);
+        let mut wfq = w.clone();
+        zero_dec_ff_tiles(&mut wfq, &masks, dims.tile);
+        fq_all(&mut wfq, |vals, r, c| {
+            let mut t = Tensor::from_f32(&[r, c], vals);
+            if per_channel {
+                fake_quantize_per_channel(&mut t);
+            } else {
+                fake_quantize(&mut t);
+            }
+            *vals = t.f32s();
+        });
+        let fp32 = PreparedDecoder::new(&wfq, dims.tile, Quant::Fp32, Some(&masks)).unwrap();
+
+        let mut rng = Rng::new(seed ^ 2);
+        let src_len = 7usize;
+        let memory = random_memory(&mut rng, src_len, dims.d_model);
+        let mut fwd = DecoderForward::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        fwd.generate(&int8, &memory, src_len, &mut a);
+        let mut toks_a = Vec::new();
+        let mut row = Vec::new();
+        fwd.start(&int8, &memory, src_len);
+        fwd.step(&int8, dims.bos, &mut row);
+        toks_a.extend_from_slice(&row);
+        fwd.generate(&fp32, &memory, src_len, &mut b);
+        let mut toks_b = Vec::new();
+        fwd.start(&fp32, &memory, src_len);
+        fwd.step(&fp32, dims.bos, &mut row);
+        toks_b.extend_from_slice(&row);
+        // Kernel INT8 == FP32 over fake-quantized weights, exactly:
+        // identical first-step logits and identical greedy outputs.
+        assert_eq!(toks_a, toks_b, "pc={per_channel}: first-step logits");
+        assert_eq!(a, b, "pc={per_channel}: greedy decode");
+    }
+
+    #[test]
+    fn int8_decode_matches_fake_quantized_fp32() {
+        assert_int8_matches_fq_fp32(false, 11);
+    }
+
+    #[test]
+    fn per_channel_int8_decode_matches_fake_quantized_fp32() {
+        // Satellite: per-channel LUTs flow through the decoder staging
+        // path with the same oracle identity as the encoder.
+        assert_int8_matches_fq_fp32(true, 13);
+    }
+
+    #[test]
+    fn functional_decode_stats_match_analytic_accounting() {
+        // Decode-scope functional x analytic cross-check: the per-step
+        // [1, d] GEMVs must cost exactly what the analytic decode-step
+        // scheduler charges, and the cross-attention K/V precompute must
+        // cost exactly one m = src_len pass per projection — reused (not
+        // recharged) across steps.
+        use crate::model::{GemmKind, GemmShape};
+        use crate::sysim::engine::{gemm_on_array, gemm_on_array_decode};
+        use crate::sysim::SimParams;
+        use crate::systolic::ArrayConfig;
+
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 17);
+        let masks = random_dec_masks(&dims, dims.tile, 0.5, 19);
+        let m = PreparedDecoder::new(&w, dims.tile, Quant::Int8, Some(&masks)).unwrap();
+        let mut rng = Rng::new(23);
+        let src_len = 11usize;
+        let memory = random_memory(&mut rng, src_len, dims.d_model);
+        let mut fwd = DecoderForward::new();
+        let mut out = Vec::new();
+        fwd.generate(&m, &memory, src_len, &mut out);
+        let steps = fwd.stats.steps;
+        assert!(steps > 0);
+
+        let cfg = ArrayConfig::square(dims.tile, Quant::Int8);
+        let p = SimParams::default();
+        let (d, f) = (dims.d_model, dims.d_ff);
+        let proj = GemmShape { m: 1, k: d, n: d, kind: GemmKind::AttnProj };
+        let mut ff_macs = 0u64;
+        let mut ff_words = 0u64;
+        let mut ff_cycles = 0u64;
+        let mut attn_macs = 0u64;
+        let mut attn_words = 0u64;
+        let mut attn_cycles = 0u64;
+        let mut kv_macs = 0u64;
+        let mut kv_words = 0u64;
+        let mut kv_cycles = 0u64;
+        for i in 0..dims.n_blocks {
+            let g1 = GemmShape { m: 1, k: d, n: f, kind: GemmKind::FeedForward };
+            let g2 = GemmShape { m: 1, k: f, n: d, kind: GemmKind::FeedForward };
+            let c1 = gemm_on_array_decode(&g1, &cfg, &p, Some(&masks[2 * i]), steps);
+            let c2 = gemm_on_array_decode(&g2, &cfg, &p, Some(&masks[2 * i + 1]), steps);
+            ff_macs += c1.counts.macs + c2.counts.macs;
+            ff_words += c1.counts.bus_words + c2.counts.bus_words;
+            ff_cycles += c1.counts.array_busy_cycles + c2.counts.array_busy_cycles;
+            // sq sk sv so xq xo: six per-step projections.
+            let cp = gemm_on_array_decode(&proj, &cfg, &p, None, steps);
+            attn_macs += 6 * cp.counts.macs;
+            attn_words += 6 * cp.counts.bus_words;
+            attn_cycles += 6 * cp.counts.array_busy_cycles;
+            // Cross K/V: one m = src_len pass each, per utterance.
+            let gkv = GemmShape { m: src_len, k: d, n: d, kind: GemmKind::AttnProj };
+            let ckv = gemm_on_array(&gkv, &cfg, &p, None);
+            kv_macs += 2 * ckv.counts.macs;
+            kv_words += 2 * ckv.counts.bus_words;
+            kv_cycles += 2 * ckv.counts.array_busy_cycles;
+        }
+        assert_eq!(fwd.stats.ff.timing.macs as u64, ff_macs);
+        assert_eq!(fwd.stats.ff.timing.total_words() as u64, ff_words);
+        assert_eq!(fwd.stats.ff.timing.array_cycles as u64, ff_cycles);
+        assert_eq!(fwd.stats.attn.timing.macs as u64, attn_macs);
+        assert_eq!(fwd.stats.attn.timing.total_words() as u64, attn_words);
+        assert_eq!(fwd.stats.attn.timing.array_cycles as u64, attn_cycles);
+        assert_eq!(fwd.stats.cross_kv.timing.macs as u64, kv_macs);
+        assert_eq!(fwd.stats.cross_kv.timing.total_words() as u64, kv_words);
+        assert_eq!(fwd.stats.cross_kv.timing.array_cycles as u64, kv_cycles);
+        // The skip schedule: per step, each live ff tile once.
+        let live: usize = masks.iter().map(crate::sysim::TileMask::live_count).sum();
+        let dead: usize = masks.iter().map(|m| m.n_tiles() - m.live_count()).sum();
+        assert_eq!(fwd.stats.ff.tiles_live, steps * live);
+        assert_eq!(fwd.stats.ff.tiles_skipped, steps * dead);
+    }
+
+    #[test]
+    fn start_with_precomputed_kv_matches_start() {
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 29);
+        let m = PreparedDecoder::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let mut rng = Rng::new(31);
+        let src_len = 6usize;
+        let memory = random_memory(&mut rng, src_len, dims.d_model);
+        let tokens = random_tokens(&mut rng, 5, dims.vocab);
+
+        let mut fwd = DecoderForward::new();
+        let mut a = Vec::new();
+        let mut row = Vec::new();
+        fwd.start(&m, &memory, src_len);
+        for &t in &tokens {
+            fwd.step(&m, t, &mut row);
+            a.extend_from_slice(&row);
+        }
+        // Precompute the cross K/V externally with the same kernels.
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for blk in &m.blocks {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            blk.xk.gemm(&memory, src_len, None, m.tile, &mut k);
+            blk.xv.gemm(&memory, src_len, None, m.tile, &mut v);
+            ks.push(k);
+            vs.push(v);
+        }
+        let mut b = Vec::new();
+        fwd.start_with(&m, src_len, |i| (ks[i].as_slice(), vs[i].as_slice()));
+        for &t in &tokens {
+            fwd.step(&m, t, &mut row);
+            b.extend_from_slice(&row);
+        }
+        assert_eq!(a, b, "precomputed cross K/V must be transparent");
+    }
+
+    #[test]
+    fn generation_stops_at_eos_and_max_len() {
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 37);
+        let mut rng = Rng::new(41);
+        let memory = random_memory(&mut rng, 5, dims.d_model);
+        // Random tiny decoders rarely emit EOS: generation must cap at
+        // max_len steps.
+        let m = PreparedDecoder::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let mut fwd = DecoderForward::new();
+        let mut out = Vec::new();
+        fwd.generate(&m, &memory, 5, &mut out);
+        assert!(out.len() <= dims.max_len);
+        assert!(out.iter().all(|t| *t >= 0 && (*t as usize) < dims.vocab));
+        assert!(out.iter().all(|t| *t != dims.eos));
+        // A head biased hard toward EOS stops immediately: empty output.
+        let mut weos = w.clone();
+        weos.head_b[dims.eos as usize] = 1e6;
+        let meos = PreparedDecoder::new(&weos, dims.tile, Quant::Fp32, None).unwrap();
+        fwd.stats = DecodeStats::default();
+        fwd.generate(&meos, &memory, 5, &mut out);
+        assert!(out.is_empty(), "EOS-first decode must stop at once");
+        assert_eq!(fwd.stats.steps, 1);
+        assert_eq!(fwd.stats.utterances, 1);
+    }
+
+    #[test]
+    fn decoder_dims_helpers() {
+        let dims = DecoderDims::tiny_mt();
+        assert_eq!(dims.head_dim(), 16);
+        assert!(dims.tile_ok(8));
+        assert!(!dims.tile_ok(7));
+        assert!(!dims.tile_ok(0));
+    }
+}

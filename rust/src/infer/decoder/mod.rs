@@ -1,0 +1,525 @@
+//! Native transformer decoder — the autoregressive half of the MT
+//! engine, the decode-side twin of [`super::encoder`].
+//!
+//! A pre-LN decoder block is causal masked self-attention,
+//! encoder-decoder cross-attention, and the SASP feed-forward pair; the
+//! weight GEMMs (six `[d, d]` attention projections per block plus the
+//! pruned `w1`/`w2` pair) run on the same pruned-tile kernels as the
+//! encoder ([`super::gemm`]), so the FP32 and [`crate::arith::SignMag8`]
+//! formats carry the identical oracle relationship, and every executed
+//! tile is accounted with the same closed-form
+//! [`crate::systolic::TileTiming`] the analytic engine charges —
+//! including the decode regime's skinny `[1, d]` GEMVs, where tile
+//! occupancy shrinks to a single activation row per pass
+//! ([`crate::sysim::engine::gemm_on_array_decode`] is the analytic
+//! counterpart).
+//!
+//! - [`mod@self`] — decoder dimensions, FP32 weight containers with the
+//!   `dec.*` bundle naming (so one `tensorfile` bundle carries encoder
+//!   plus decoder parameters through the QoS prune/quantize pipeline),
+//!   and [`PreparedDecoder`], the staged (tile, quant, masks)
+//!   configuration.
+//! - [`forward`] — [`DecoderForward`]: the incremental KV-cache runtime
+//!   (one step per generated token, bitwise identical to full-prefix
+//!   recompute), greedy BOS→EOS generation, and the per-scope
+//!   [`DecodeStats`] accounting with cross-attention K/V computed once
+//!   per utterance and reused every step.
+
+pub mod forward;
+
+pub use forward::{DecodeStats, DecoderForward};
+
+use anyhow::{ensure, Result};
+
+use crate::data::{Bundle, Tensor};
+use crate::pruning::{tile_l1_norms, TileNorms};
+use crate::sysim::TileMask;
+use crate::systolic::Quant;
+
+use super::encoder::{kernel_weight, masked_kernel_weight, soft_weight};
+use super::gemm::Linear;
+use super::ops;
+
+/// Shape hyper-parameters of one decoder stack. `d_model`, `n_heads`
+/// and `vocab` must match the encoder feeding it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecoderDims {
+    /// Target vocabulary (shares the encoder's token space, including
+    /// BOS/EOS).
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_blocks: usize,
+    /// Maximum generated target length (the position-table size; BOS
+    /// occupies position 0).
+    pub max_len: usize,
+    /// Default SASP tile.
+    pub tile: usize,
+    /// Begin-of-sentence token seeding generation.
+    pub bos: i32,
+    /// End-of-sentence token stopping generation.
+    pub eos: i32,
+}
+
+impl DecoderDims {
+    /// The tiny-MT decoder stand-in paired with
+    /// [`super::encoder::ModelDims::tiny_mt`].
+    pub fn tiny_mt() -> Self {
+        DecoderDims {
+            vocab: 32,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            n_blocks: 2,
+            max_len: 24,
+            tile: 8,
+            bos: 1,
+            eos: 2,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Whether `tile` is a legal SASP tile for these dimensions.
+    pub fn tile_ok(&self, tile: usize) -> bool {
+        tile > 0 && self.d_model % tile == 0 && self.d_ff % tile == 0
+    }
+}
+
+/// One decoder block's FP32 weights.
+#[derive(Clone, Debug)]
+pub struct DecoderBlockWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    /// Causal self-attention projections.
+    pub sq: Vec<f32>,
+    pub sk: Vec<f32>,
+    pub sv: Vec<f32>,
+    pub so: Vec<f32>,
+    pub lnx_g: Vec<f32>,
+    pub lnx_b: Vec<f32>,
+    /// Encoder-decoder cross-attention projections.
+    pub xq: Vec<f32>,
+    pub xk: Vec<f32>,
+    pub xv: Vec<f32>,
+    pub xo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// The full FP32 weight set of one decoder stack.
+#[derive(Clone, Debug)]
+pub struct DecoderWeights {
+    pub dims: DecoderDims,
+    /// Target token embedding `[vocab, d_model]`.
+    pub emb: Vec<f32>,
+    pub blocks: Vec<DecoderBlockWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    /// Vocabulary head `[d_model, vocab]`.
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+fn take(b: &Bundle, name: &str, shape: &[usize]) -> Result<Vec<f32>> {
+    let t = b.require(name)?;
+    ensure!(
+        t.shape == shape,
+        "{name}: shape {:?} != expected {:?}",
+        t.shape,
+        shape
+    );
+    Ok(t.f32s())
+}
+
+impl DecoderWeights {
+    /// Load from a bundle carrying the `dec.*` entries (the layout
+    /// [`Self::append_to_bundle`] writes).
+    pub fn from_bundle(dims: DecoderDims, b: &Bundle) -> Result<Self> {
+        let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+        let mut blocks = Vec::with_capacity(dims.n_blocks);
+        for i in 0..dims.n_blocks {
+            let p = format!("dec.block{i}.");
+            blocks.push(DecoderBlockWeights {
+                ln1_g: take(b, &format!("{p}ln1.g"), &[d])?,
+                ln1_b: take(b, &format!("{p}ln1.b"), &[d])?,
+                sq: take(b, &format!("{p}self.wq"), &[d, d])?,
+                sk: take(b, &format!("{p}self.wk"), &[d, d])?,
+                sv: take(b, &format!("{p}self.wv"), &[d, d])?,
+                so: take(b, &format!("{p}self.wo"), &[d, d])?,
+                lnx_g: take(b, &format!("{p}lnx.g"), &[d])?,
+                lnx_b: take(b, &format!("{p}lnx.b"), &[d])?,
+                xq: take(b, &format!("{p}cross.wq"), &[d, d])?,
+                xk: take(b, &format!("{p}cross.wk"), &[d, d])?,
+                xv: take(b, &format!("{p}cross.wv"), &[d, d])?,
+                xo: take(b, &format!("{p}cross.wo"), &[d, d])?,
+                ln2_g: take(b, &format!("{p}ln2.g"), &[d])?,
+                ln2_b: take(b, &format!("{p}ln2.b"), &[d])?,
+                w1: take(b, &format!("{p}ff.w1"), &[d, f])?,
+                b1: take(b, &format!("{p}ff.b1"), &[f])?,
+                w2: take(b, &format!("{p}ff.w2"), &[f, d])?,
+                b2: take(b, &format!("{p}ff.b2"), &[d])?,
+            });
+        }
+        Ok(DecoderWeights {
+            emb: take(b, "dec.emb.w", &[v, d])?,
+            blocks,
+            lnf_g: take(b, "dec.ln_f.g", &[d])?,
+            lnf_b: take(b, "dec.ln_f.b", &[d])?,
+            head_w: take(b, "dec.head.w", &[d, v])?,
+            head_b: take(b, "dec.head.b", &[v])?,
+            dims,
+        })
+    }
+
+    /// Append the `dec.*` entries to `b` (alongside an encoder's
+    /// entries — one bundle per MT model).
+    pub fn append_to_bundle(&self, b: &mut Bundle) {
+        let (d, f, v) = (self.dims.d_model, self.dims.d_ff, self.dims.vocab);
+        b.insert("dec.emb.w", Tensor::from_f32(&[v, d], &self.emb));
+        for (i, blk) in self.blocks.iter().enumerate() {
+            let p = format!("dec.block{i}.");
+            b.insert(&format!("{p}ln1.g"), Tensor::from_f32(&[d], &blk.ln1_g));
+            b.insert(&format!("{p}ln1.b"), Tensor::from_f32(&[d], &blk.ln1_b));
+            b.insert(&format!("{p}self.wq"), Tensor::from_f32(&[d, d], &blk.sq));
+            b.insert(&format!("{p}self.wk"), Tensor::from_f32(&[d, d], &blk.sk));
+            b.insert(&format!("{p}self.wv"), Tensor::from_f32(&[d, d], &blk.sv));
+            b.insert(&format!("{p}self.wo"), Tensor::from_f32(&[d, d], &blk.so));
+            b.insert(&format!("{p}lnx.g"), Tensor::from_f32(&[d], &blk.lnx_g));
+            b.insert(&format!("{p}lnx.b"), Tensor::from_f32(&[d], &blk.lnx_b));
+            b.insert(&format!("{p}cross.wq"), Tensor::from_f32(&[d, d], &blk.xq));
+            b.insert(&format!("{p}cross.wk"), Tensor::from_f32(&[d, d], &blk.xk));
+            b.insert(&format!("{p}cross.wv"), Tensor::from_f32(&[d, d], &blk.xv));
+            b.insert(&format!("{p}cross.wo"), Tensor::from_f32(&[d, d], &blk.xo));
+            b.insert(&format!("{p}ln2.g"), Tensor::from_f32(&[d], &blk.ln2_g));
+            b.insert(&format!("{p}ln2.b"), Tensor::from_f32(&[d], &blk.ln2_b));
+            b.insert(&format!("{p}ff.w1"), Tensor::from_f32(&[d, f], &blk.w1));
+            b.insert(&format!("{p}ff.b1"), Tensor::from_f32(&[f], &blk.b1));
+            b.insert(&format!("{p}ff.w2"), Tensor::from_f32(&[f, d], &blk.w2));
+            b.insert(&format!("{p}ff.b2"), Tensor::from_f32(&[d], &blk.b2));
+        }
+        b.insert("dec.ln_f.g", Tensor::from_f32(&[d], &self.lnf_g));
+        b.insert("dec.ln_f.b", Tensor::from_f32(&[d], &self.lnf_b));
+        b.insert("dec.head.w", Tensor::from_f32(&[d, v], &self.head_w));
+        b.insert("dec.head.b", Tensor::from_f32(&[v], &self.head_b));
+    }
+
+    /// The decoder's prunable feed-forward names, in execution order —
+    /// the `dec.*` continuation of the encoder's `block{i}.ff.*` list.
+    pub fn ff_names(n_blocks: usize) -> Vec<String> {
+        (0..n_blocks)
+            .flat_map(|i| [format!("dec.block{i}.ff.w1"), format!("dec.block{i}.ff.w2")])
+            .collect()
+    }
+
+    /// Per-feed-forward-GEMM tile L1 norms (the pruning statistic).
+    pub fn ff_norms(&self, tile: usize) -> Result<Vec<TileNorms>> {
+        ensure!(self.dims.tile_ok(tile), "tile {tile} does not divide the decoder");
+        let (d, f) = (self.dims.d_model, self.dims.d_ff);
+        let mut out = Vec::with_capacity(2 * self.dims.n_blocks);
+        for blk in &self.blocks {
+            out.push(tile_l1_norms(&Tensor::from_f32(&[d, f], &blk.w1), tile));
+            out.push(tile_l1_norms(&Tensor::from_f32(&[f, d], &blk.w2), tile));
+        }
+        Ok(out)
+    }
+
+    /// Recover feed-forward tile masks from (possibly) tile-zeroed
+    /// weights — the decode-side counterpart of
+    /// [`super::backend::recover_masks`].
+    pub fn recover_masks(&self, tile: usize) -> Result<Vec<TileMask>> {
+        Ok(self
+            .ff_norms(tile)?
+            .iter()
+            .map(|tn| TileMask {
+                kt: tn.kt,
+                nt: tn.nt,
+                live: tn.norms.iter().map(|v| *v != 0.0).collect(),
+            })
+            .collect())
+    }
+}
+
+/// One decoder block staged for execution.
+#[derive(Clone, Debug)]
+pub struct PreparedDecoderBlock {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub sq: Linear,
+    pub sk: Linear,
+    pub sv: Linear,
+    pub so: Linear,
+    pub lnx_g: Vec<f32>,
+    pub lnx_b: Vec<f32>,
+    pub xq: Linear,
+    pub xk: Linear,
+    pub xv: Linear,
+    pub xo: Linear,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Linear,
+    pub b1: Vec<f32>,
+    pub w2: Linear,
+    pub b2: Vec<f32>,
+    pub mask1: TileMask,
+    pub mask2: TileMask,
+}
+
+/// A decoder staged for inference at one (tile, quant, masks)
+/// configuration — the decode-side twin of
+/// [`super::encoder::PreparedModel`].
+#[derive(Clone, Debug)]
+pub struct PreparedDecoder {
+    pub dims: DecoderDims,
+    pub tile: usize,
+    pub quant: Quant,
+    /// Token embedding (software-read; fake-quantized in INT8 mode,
+    /// matching the PTQ set of `qos::eval`).
+    pub emb: Vec<f32>,
+    pub blocks: Vec<PreparedDecoderBlock>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    /// Precomputed `max_len x d_model` target position table.
+    pub pe: Vec<f32>,
+    /// Whether INT8 weights were staged with per-output-channel scales.
+    pub per_channel: bool,
+}
+
+impl PreparedDecoder {
+    /// Stage `w` for execution. `masks` supplies one [`TileMask`] per
+    /// feed-forward GEMM in execution order (`[w1_0, w2_0, w1_1, ...]`);
+    /// `None` runs dense.
+    pub fn new(
+        w: &DecoderWeights,
+        tile: usize,
+        quant: Quant,
+        masks: Option<&[TileMask]>,
+    ) -> Result<Self> {
+        Self::new_with(w, tile, quant, masks, false)
+    }
+
+    /// [`Self::new`] with the per-output-channel INT8 scale flag — the
+    /// same per-column LUT staging as the encoder's
+    /// [`super::encoder::PreparedModel::new_with`], so decoder layers
+    /// participate in the per-channel PTQ satellite too.
+    pub fn new_with(
+        w: &DecoderWeights,
+        tile: usize,
+        quant: Quant,
+        masks: Option<&[TileMask]>,
+        per_channel: bool,
+    ) -> Result<Self> {
+        let dims = w.dims;
+        let (d, f) = (dims.d_model, dims.d_ff);
+        ensure!(dims.tile_ok(tile), "tile {tile} does not divide {d}x{f}");
+        ensure!(dims.max_len > 0, "max_len must be positive");
+        ensure!(
+            (dims.bos as usize) < dims.vocab && (dims.eos as usize) < dims.vocab,
+            "BOS/EOS must be in-vocabulary"
+        );
+        if let Some(ms) = masks {
+            ensure!(
+                ms.len() == 2 * dims.n_blocks,
+                "expected {} ff masks, got {}",
+                2 * dims.n_blocks,
+                ms.len()
+            );
+        }
+        let (kt1, nt1) = (d / tile, f / tile);
+        let mut blocks = Vec::with_capacity(dims.n_blocks);
+        for (i, blk) in w.blocks.iter().enumerate() {
+            let mask1 = match masks {
+                Some(ms) => ms[2 * i].clone(),
+                None => TileMask::full(kt1, nt1),
+            };
+            let mask2 = match masks {
+                Some(ms) => ms[2 * i + 1].clone(),
+                None => TileMask::full(nt1, kt1),
+            };
+            ensure!(
+                (mask1.kt, mask1.nt) == (kt1, nt1)
+                    && (mask2.kt, mask2.nt) == (nt1, kt1),
+                "decoder block {i}: ff mask grid does not match tile {tile}"
+            );
+            blocks.push(PreparedDecoderBlock {
+                ln1_g: blk.ln1_g.clone(),
+                ln1_b: blk.ln1_b.clone(),
+                sq: kernel_weight(&blk.sq, d, d, quant, per_channel),
+                sk: kernel_weight(&blk.sk, d, d, quant, per_channel),
+                sv: kernel_weight(&blk.sv, d, d, quant, per_channel),
+                so: kernel_weight(&blk.so, d, d, quant, per_channel),
+                lnx_g: blk.lnx_g.clone(),
+                lnx_b: blk.lnx_b.clone(),
+                xq: kernel_weight(&blk.xq, d, d, quant, per_channel),
+                xk: kernel_weight(&blk.xk, d, d, quant, per_channel),
+                xv: kernel_weight(&blk.xv, d, d, quant, per_channel),
+                xo: kernel_weight(&blk.xo, d, d, quant, per_channel),
+                ln2_g: blk.ln2_g.clone(),
+                ln2_b: blk.ln2_b.clone(),
+                w1: masked_kernel_weight(&blk.w1, d, f, tile, &mask1, quant, per_channel),
+                b1: blk.b1.clone(),
+                w2: masked_kernel_weight(&blk.w2, f, d, tile, &mask2, quant, per_channel),
+                b2: blk.b2.clone(),
+                mask1,
+                mask2,
+            });
+        }
+        Ok(PreparedDecoder {
+            dims,
+            tile,
+            quant,
+            emb: soft_weight(&w.emb, dims.vocab, d, quant, per_channel),
+            blocks,
+            lnf_g: w.lnf_g.clone(),
+            lnf_b: w.lnf_b.clone(),
+            head_w: soft_weight(&w.head_w, d, dims.vocab, quant, per_channel),
+            head_b: w.head_b.clone(),
+            pe: ops::sinusoidal_pe(dims.max_len, d),
+            per_channel,
+        })
+    }
+
+    /// Mean feed-forward tile sparsity of the staged masks.
+    pub fn ff_sparsity(&self) -> f64 {
+        let mut dead = 0usize;
+        let mut total = 0usize;
+        for blk in &self.blocks {
+            dead += blk.mask1.n_tiles() - blk.mask1.live_count();
+            dead += blk.mask2.n_tiles() - blk.mask2.live_count();
+            total += blk.mask1.n_tiles() + blk.mask2.n_tiles();
+        }
+        dead as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::data::Tensor;
+    use crate::pruning::norms::apply_mask_to_weights;
+    use crate::util::rng::Rng;
+
+    /// A small decoder that keeps debug-mode tests fast (pairs with
+    /// `infer::testutil::mini_dims` made token-input).
+    pub fn mini_dec_dims() -> DecoderDims {
+        DecoderDims {
+            vocab: 12,
+            d_model: 32,
+            n_heads: 4,
+            d_ff: 64,
+            n_blocks: 2,
+            max_len: 10,
+            tile: 8,
+            bos: 1,
+            eos: 2,
+        }
+    }
+
+    pub fn random_dec_masks(
+        dims: &DecoderDims,
+        tile: usize,
+        p_dead: f64,
+        seed: u64,
+    ) -> Vec<TileMask> {
+        let mut rng = Rng::new(seed);
+        let (kt, nt) = (dims.d_model / tile, dims.d_ff / tile);
+        let mut out = Vec::new();
+        for _ in 0..dims.n_blocks {
+            out.push(TileMask {
+                kt,
+                nt,
+                live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+            });
+            out.push(TileMask {
+                kt: nt,
+                nt: kt,
+                live: (0..kt * nt).map(|_| !rng.chance(p_dead)).collect(),
+            });
+        }
+        out
+    }
+
+    /// Zero the decoder feed-forward tiles the masks mark dead, in
+    /// place — the prune-by-zeroing reference.
+    pub fn zero_dec_ff_tiles(w: &mut DecoderWeights, masks: &[TileMask], tile: usize) {
+        let (d, f) = (w.dims.d_model, w.dims.d_ff);
+        for (i, blk) in w.blocks.iter_mut().enumerate() {
+            let mut t1 = Tensor::from_f32(&[d, f], &blk.w1);
+            apply_mask_to_weights(&mut t1, &masks[2 * i], tile);
+            blk.w1 = t1.f32s();
+            let mut t2 = Tensor::from_f32(&[f, d], &blk.w2);
+            apply_mask_to_weights(&mut t2, &masks[2 * i + 1], tile);
+            blk.w2 = t2.f32s();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{mini_dec_dims, random_dec_masks};
+    use super::*;
+    use crate::infer::synth::synth_decoder_weights;
+
+    #[test]
+    fn bundle_roundtrip_preserves_weights() {
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 5);
+        let mut b = Bundle::default();
+        w.append_to_bundle(&mut b);
+        let back = DecoderWeights::from_bundle(dims, &b).unwrap();
+        assert_eq!(w.emb, back.emb);
+        assert_eq!(w.blocks[1].xk, back.blocks[1].xk);
+        assert_eq!(w.blocks[0].w2, back.blocks[0].w2);
+        assert_eq!(w.head_b, back.head_b);
+    }
+
+    #[test]
+    fn from_bundle_rejects_wrong_shapes() {
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 5);
+        let mut b = Bundle::default();
+        w.append_to_bundle(&mut b);
+        b.insert("dec.head.w", Tensor::from_f32(&[2, 2], &[0.0; 4]));
+        assert!(DecoderWeights::from_bundle(dims, &b).is_err());
+    }
+
+    #[test]
+    fn ff_names_cover_recoverable_masks() {
+        let dims = mini_dec_dims();
+        let names = DecoderWeights::ff_names(dims.n_blocks);
+        assert_eq!(names.len(), 2 * dims.n_blocks);
+        assert_eq!(names[0], "dec.block0.ff.w1");
+        assert_eq!(names[3], "dec.block1.ff.w2");
+        // Zeroed tiles recover as dead masks.
+        let mut w = synth_decoder_weights(&dims, 7);
+        let masks = random_dec_masks(&dims, dims.tile, 0.4, 3);
+        testutil::zero_dec_ff_tiles(&mut w, &masks, dims.tile);
+        assert_eq!(w.recover_masks(dims.tile).unwrap(), masks);
+    }
+
+    #[test]
+    fn prepared_decoder_rejects_bad_configs() {
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 9);
+        assert!(PreparedDecoder::new(&w, 5, Quant::Fp32, None).is_err());
+        let short = vec![TileMask::full(4, 8)];
+        assert!(PreparedDecoder::new(&w, dims.tile, Quant::Fp32, Some(&short)).is_err());
+        let bad = vec![TileMask::full(1, 1); 2 * dims.n_blocks];
+        assert!(PreparedDecoder::new(&w, dims.tile, Quant::Fp32, Some(&bad)).is_err());
+        let mut oov = w.clone();
+        oov.dims.eos = oov.dims.vocab as i32;
+        assert!(PreparedDecoder::new(&oov, dims.tile, Quant::Fp32, None).is_err());
+        let ok = PreparedDecoder::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        assert_eq!(ok.ff_sparsity(), 0.0);
+        assert_eq!(ok.pe.len(), dims.max_len * dims.d_model);
+    }
+}

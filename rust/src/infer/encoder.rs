@@ -243,7 +243,13 @@ pub struct PreparedModel {
 }
 
 /// Fake-quantize a copy of a software-executed matrix in INT8 mode.
-fn soft_weight(w: &[f32], rows: usize, cols: usize, quant: Quant, per_channel: bool) -> Vec<f32> {
+pub(crate) fn soft_weight(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    quant: Quant,
+    per_channel: bool,
+) -> Vec<f32> {
     match quant {
         Quant::Fp32 => w.to_vec(),
         Quant::Int8 => {
@@ -259,7 +265,13 @@ fn soft_weight(w: &[f32], rows: usize, cols: usize, quant: Quant, per_channel: b
 }
 
 /// Stage an array-executed weight GEMM in the configured format.
-fn kernel_weight(w: &[f32], k: usize, n: usize, quant: Quant, per_channel: bool) -> Linear {
+pub(crate) fn kernel_weight(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    quant: Quant,
+    per_channel: bool,
+) -> Linear {
     match (quant, per_channel) {
         (Quant::Fp32, _) => Linear::from_f32(w.to_vec(), k, n),
         (Quant::Int8, false) => Linear::quantized(w, k, n),
@@ -272,7 +284,7 @@ fn kernel_weight(w: &[f32], k: usize, n: usize, quant: Quant, per_channel: bool)
 /// harness's `prepare_params`), so the INT8 per-tensor scale ranges over
 /// live weights only. Execution never reads the dead tiles either way —
 /// this fixes the scale, not the schedule.
-fn masked_kernel_weight(
+pub(crate) fn masked_kernel_weight(
     w: &[f32],
     k: usize,
     n: usize,
@@ -418,8 +430,10 @@ pub struct Forward {
     ctx: Vec<f32>,
     tmp: Vec<f32>,
     mid: Vec<f32>,
-    /// All-ones pad mask for the token (MT) path, reused across calls.
-    ones: Vec<f32>,
+    /// Pad-mask buffer for the token (MT) path, rebuilt per call from
+    /// the utterance's real source length (all-ones only for full
+    /// sentences), reused across calls.
+    pad_buf: Vec<f32>,
     pub stats: ForwardStats,
 }
 
@@ -441,7 +455,7 @@ impl Forward {
             ctx: Vec::new(),
             tmp: Vec::new(),
             mid: Vec::new(),
-            ones: Vec::new(),
+            pad_buf: Vec::new(),
             stats: ForwardStats::default(),
         }
     }
@@ -477,13 +491,55 @@ impl Forward {
         self.stats.utterances += 1;
     }
 
-    /// MT: one `seq_len` token sentence → per-position logits
-    /// `seq_len x vocab` in `out` (no log-softmax — the MT head).
+    /// MT: one full-length `seq_len` token sentence → per-position
+    /// logits `seq_len x vocab` in `out` (no log-softmax — the MT head).
     pub fn run_tokens(&mut self, m: &PreparedModel, tokens: &[i32], out: &mut Vec<f32>) {
+        self.run_tokens_padded(m, tokens, m.dims.seq_len, out);
+    }
+
+    /// MT with a ragged source: only the first `src_len` of the
+    /// `seq_len` token slots are real; the pad tail is masked out of
+    /// attention (so logits on the valid prefix are bitwise independent
+    /// of the pad content — tested below).
+    pub fn run_tokens_padded(
+        &mut self,
+        m: &PreparedModel,
+        tokens: &[i32],
+        src_len: usize,
+        out: &mut Vec<f32>,
+    ) {
+        self.embed_encode_tokens(m, tokens, src_len);
+        self.head(m, out, false);
+        self.stats.utterances += 1;
+    }
+
+    /// MT encoder memory for the decoder's cross-attention: embed +
+    /// encode a (possibly padded) source sentence and write the
+    /// **post-final-LayerNorm** hidden states `seq_len x d_model` into
+    /// `memory` (rows `>= src_len` are pad rows — callers slice the
+    /// valid prefix).
+    pub fn memory_tokens(
+        &mut self,
+        m: &PreparedModel,
+        tokens: &[i32],
+        src_len: usize,
+        memory: &mut Vec<f32>,
+    ) {
+        self.embed_encode_tokens(m, tokens, src_len);
+        memory.clear();
+        memory.extend_from_slice(&self.h);
+        ops::layer_norm(memory, m.dims.d_model, &m.lnf_g, &m.lnf_b);
+        self.stats.utterances += 1;
+    }
+
+    /// Shared token path: embed the sentence, build the real pad mask
+    /// from `src_len`, and run the encoder stack.
+    fn embed_encode_tokens(&mut self, m: &PreparedModel, tokens: &[i32], src_len: usize) {
         let dims = &m.dims;
         assert!(dims.token_input, "token input on a feature-input model");
         let t = dims.seq_len;
         assert_eq!(tokens.len(), t, "tokens must be seq");
+        assert!(src_len > 0 && src_len <= t, "src_len {src_len} out of 1..={t}");
         let d = dims.d_model;
         self.h.clear();
         self.h.resize(t * d, 0.0);
@@ -492,16 +548,17 @@ impl Forward {
             assert!(ti < dims.vocab, "token {ti} out of vocab {}", dims.vocab);
             self.h[row * d..(row + 1) * d].copy_from_slice(&m.in_w[ti * d..(ti + 1) * d]);
         }
-        // Take/restore the reusable ones buffer so `encode` can borrow
+        // Take/restore the reusable pad buffer so `encode` can borrow
         // it alongside `&mut self` (same pattern as the systolic array's
         // register planes).
-        let mut ones = std::mem::take(&mut self.ones);
-        ones.clear();
-        ones.resize(t, 1.0);
-        self.encode(m, &ones);
-        self.ones = ones;
-        self.head(m, out, false);
-        self.stats.utterances += 1;
+        let mut pad = std::mem::take(&mut self.pad_buf);
+        pad.clear();
+        pad.resize(t, 0.0);
+        for p in pad.iter_mut().take(src_len) {
+            *p = 1.0;
+        }
+        self.encode(m, &pad);
+        self.pad_buf = pad;
     }
 
     /// Shared encoder stack over `self.h` (which holds the projected /
@@ -857,6 +914,59 @@ mod tests {
         fwd.run_tokens(&model, &tokens, &mut out);
         assert_eq!(out.len(), dims.seq_len * dims.vocab);
         assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn padded_and_unpadded_sources_agree_on_prefix() {
+        // The satellite contract: a ragged source run at the full
+        // seq_len with a real pad mask must produce the same logits on
+        // the valid prefix as the same sentence run unpadded at
+        // seq_len == src_len. The additive -1e9 mask underflows pad
+        // scores to exactly 0 after softmax, so the agreement is
+        // bitwise, not approximate.
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let w = crate::infer::synth::synth_weights(&dims, 53);
+        let src_len = dims.seq_len / 2 + 3;
+        let short_dims = ModelDims { seq_len: src_len, ..dims };
+        // Weights do not depend on seq_len — rewrap them at the short
+        // length for the unpadded reference model.
+        let w_short = EncoderWeights { dims: short_dims, ..w.clone() };
+
+        let mut rng = Rng::new(21);
+        let mut tokens: Vec<i32> = (0..dims.seq_len)
+            .map(|_| rng.index(dims.vocab) as i32)
+            .collect();
+        let model = PreparedModel::new(&w, dims.tile, Quant::Fp32, None).unwrap();
+        let model_short =
+            PreparedModel::new(&w_short, dims.tile, Quant::Fp32, None).unwrap();
+
+        let mut fwd = Forward::new();
+        let mut padded = Vec::new();
+        fwd.run_tokens_padded(&model, &tokens, src_len, &mut padded);
+        let mut unpadded = Vec::new();
+        fwd.run_tokens(&model_short, &tokens[..src_len], &mut unpadded);
+        let v = dims.vocab;
+        assert_eq!(
+            &padded[..src_len * v],
+            unpadded.as_slice(),
+            "valid prefix must be bitwise independent of padding"
+        );
+        // And independent of the pad *content* too.
+        for tok in tokens.iter_mut().skip(src_len) {
+            *tok = (*tok + 1) % dims.vocab as i32;
+        }
+        let mut padded2 = Vec::new();
+        fwd.run_tokens_padded(&model, &tokens, src_len, &mut padded2);
+        assert_eq!(&padded[..src_len * v], &padded2[..src_len * v]);
+        // The memory surface applies the final LayerNorm.
+        let mut mem = Vec::new();
+        fwd.memory_tokens(&model, &tokens, src_len, &mut mem);
+        assert_eq!(mem.len(), dims.seq_len * dims.d_model);
+        assert!(mem.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -30,6 +30,11 @@
 //! - [`encoder`] — model dimensions, weight containers, and the
 //!   buffer-reusing forward pass over [`crate::model::zoo`]-shaped
 //!   encoders (pre-LN MHSA + SASP feed-forward).
+//! - [`decoder`] — the autoregressive transformer decoder: pre-LN
+//!   causal self-attention + encoder-decoder cross-attention + pruned
+//!   feed-forward blocks on the same tile kernels, an incremental KV
+//!   cache (bitwise identical to full-prefix recompute), and greedy
+//!   BOS→EOS generation — the decode-side twin of the encoder engine.
 //! - [`backend`] — [`NativeBackend`]: prunes/quantizes its weights and
 //!   serves as both a [`crate::coordinator::serve::ServeBackend`] and a
 //!   [`crate::qos::QosBackend`], making `qos/eval`, `coordinator/serve`,
@@ -40,6 +45,7 @@
 
 pub mod backend;
 pub mod batch;
+pub mod decoder;
 pub mod encoder;
 pub mod gemm;
 pub mod ops;
@@ -47,9 +53,10 @@ pub mod synth;
 
 pub use backend::NativeBackend;
 pub use batch::BatchForward;
+pub use decoder::{DecodeStats, DecoderDims, DecoderForward, DecoderWeights, PreparedDecoder};
 pub use encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
 pub use gemm::{Linear, QuantizedLinear, TileStats};
-pub use synth::{synth_testset, synth_weights};
+pub use synth::{synth_decoder_weights, synth_mt_testset, synth_testset, synth_weights};
 
 /// Shared fixtures for this module's test suites.
 #[cfg(test)]

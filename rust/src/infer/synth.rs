@@ -16,6 +16,9 @@ use crate::qos::ctc_greedy;
 use crate::systolic::Quant;
 use crate::util::rng::Rng;
 
+use super::decoder::{
+    DecoderBlockWeights, DecoderDims, DecoderForward, DecoderWeights, PreparedDecoder,
+};
 use super::encoder::{BlockWeights, EncoderWeights, Forward, ModelDims, PreparedModel};
 
 fn dense(rng: &mut Rng, m: usize, n: usize) -> Vec<f32> {
@@ -55,6 +58,113 @@ pub fn synth_weights(dims: &ModelDims, seed: u64) -> EncoderWeights {
         head_w: dense(&mut rng, d, v),
         head_b: vec![0.0; v],
     }
+}
+
+/// Scaled-normal decoder weights for `dims` (same init family as
+/// [`synth_weights`]; distinct seed mix so encoder and decoder never
+/// alias).
+pub fn synth_decoder_weights(dims: &DecoderDims, seed: u64) -> DecoderWeights {
+    let mut rng = Rng::new(seed ^ 0xDEC0_DE55);
+    let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let blocks = (0..dims.n_blocks)
+        .map(|_| DecoderBlockWeights {
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            sq: dense(&mut rng, d, d),
+            sk: dense(&mut rng, d, d),
+            sv: dense(&mut rng, d, d),
+            so: dense(&mut rng, d, d),
+            lnx_g: vec![1.0; d],
+            lnx_b: vec![0.0; d],
+            xq: dense(&mut rng, d, d),
+            xk: dense(&mut rng, d, d),
+            xv: dense(&mut rng, d, d),
+            xo: dense(&mut rng, d, d),
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+            w1: dense(&mut rng, d, f),
+            b1: vec![0.0; f],
+            w2: dense(&mut rng, f, d),
+            b2: vec![0.0; d],
+        })
+        .collect();
+    DecoderWeights {
+        dims: *dims,
+        emb: dense(&mut rng, v, d),
+        blocks,
+        lnf_g: vec![1.0; d],
+        lnf_b: vec![0.0; d],
+        head_w: dense(&mut rng, d, v),
+        head_b: vec![0.0; v],
+    }
+}
+
+/// A synthetic MT test set over the (encoder, decoder) pair, in the
+/// `testset_mt.bin`-plus-lengths layout (`src`, `src_len`, `tgt`,
+/// `tgt_len`): random ragged source sentences whose references are the
+/// **dense FP32** model's own greedy autoregressive decode — so the
+/// unpruned baseline scores corpus BLEU 100 by construction and every
+/// pruned/quantized configuration measures pure degradation.
+pub fn synth_mt_testset(
+    enc: &EncoderWeights,
+    dec: &DecoderWeights,
+    n_sents: usize,
+    seed: u64,
+) -> Result<Bundle> {
+    let dims = enc.dims;
+    assert!(dims.token_input, "MT test sets need a token-input encoder");
+    assert_eq!(dims.d_model, dec.dims.d_model, "encoder/decoder width mismatch");
+    assert!(n_sents > 0);
+    let (t, d) = (dims.seq_len, dims.d_model);
+    let mut rng = Rng::new(seed ^ 0x7E57_D0DE);
+
+    let teacher_enc = PreparedModel::new(enc, dims.tile, Quant::Fp32, None)?;
+    let teacher_dec = PreparedDecoder::new(dec, dec.dims.tile, Quant::Fp32, None)?;
+    let mut fwd = Forward::new();
+    let mut dfwd = DecoderForward::new();
+    let mut memory = Vec::new();
+
+    let mut src = Vec::with_capacity(n_sents * t);
+    let mut src_len = Vec::with_capacity(n_sents);
+    let mut refs: Vec<Vec<i32>> = Vec::with_capacity(n_sents);
+    for _ in 0..n_sents {
+        // Redraw sources whose teacher decode is empty (EOS-first) so
+        // the reference corpus always carries scoreable content; the
+        // kept reference is still exactly the model's own decode.
+        let mut tgt = Vec::new();
+        let mut sent = vec![0i32; t];
+        let mut len = 1usize;
+        for attempt in 0..8 {
+            len = (t / 2 + rng.index(t / 2) + 1).min(t);
+            sent.fill(0);
+            for tok in sent.iter_mut().take(len) {
+                *tok = rng.index(dims.vocab) as i32;
+            }
+            fwd.memory_tokens(&teacher_enc, &sent, len, &mut memory);
+            dfwd.generate(&teacher_dec, &memory[..len * d], len, &mut tgt);
+            if !tgt.is_empty() || attempt == 7 {
+                break;
+            }
+        }
+        refs.push(tgt);
+        src.extend_from_slice(&sent);
+        src_len.push(len as i32);
+    }
+
+    let tmax = refs.iter().map(Vec::len).max().unwrap_or(0).max(1);
+    let mut tgt = vec![0i32; n_sents * tmax];
+    let mut tgt_len = Vec::with_capacity(n_sents);
+    for (i, r) in refs.iter().enumerate() {
+        tgt[i * tmax..i * tmax + r.len()].copy_from_slice(r);
+        tgt_len.push(r.len() as i32);
+    }
+
+    let mut b = Bundle::default();
+    b.insert("src", Tensor::from_i32(&[n_sents, t], &src));
+    b.insert("src_len", Tensor::from_i32(&[n_sents], &src_len));
+    b.insert("tgt", Tensor::from_i32(&[n_sents, tmax], &tgt));
+    b.insert("tgt_len", Tensor::from_i32(&[n_sents], &tgt_len));
+    Ok(b)
 }
 
 /// A synthetic ASR test set over `w`, in the `testset_asr.bin` bundle
@@ -157,6 +267,50 @@ mod tests {
         let rt = parse_bundle(&emit_bundle(&ts)).unwrap();
         assert_eq!(rt.get("feats"), ts.get("feats"));
         assert_eq!(rt.get("labels"), ts.get("labels"));
+    }
+
+    #[test]
+    fn mt_testset_layout_and_teacher_reproduction() {
+        use crate::infer::decoder::testutil::mini_dec_dims;
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let dec_dims = mini_dec_dims();
+        let enc = synth_weights(&dims, 3);
+        let dec = synth_decoder_weights(&dec_dims, 3);
+        let ts = synth_mt_testset(&enc, &dec, 4, 2).unwrap();
+        let src = ts.get("src").unwrap();
+        assert_eq!(src.shape, vec![4, dims.seq_len]);
+        let sl = ts.get("src_len").unwrap().i32s();
+        assert!(sl.iter().all(|l| *l as usize >= dims.seq_len / 2));
+        let tgt = ts.get("tgt").unwrap();
+        let tl = ts.get("tgt_len").unwrap().i32s();
+        assert_eq!(tgt.shape[0], 4);
+        for (i, l) in tl.iter().enumerate() {
+            assert!(*l as usize <= tgt.shape[1], "sent {i}");
+            assert!(*l as usize <= dec_dims.max_len, "sent {i}");
+        }
+        // Regenerating with the dense FP32 teacher reproduces the
+        // references exactly — the BLEU-100 baseline property.
+        let teacher_enc = PreparedModel::new(&enc, dims.tile, Quant::Fp32, None).unwrap();
+        let teacher_dec =
+            PreparedDecoder::new(&dec, dec_dims.tile, Quant::Fp32, None).unwrap();
+        let mut fwd = Forward::new();
+        let mut dfwd = DecoderForward::new();
+        let mut memory = Vec::new();
+        let mut hyp = Vec::new();
+        let svals = src.i32s();
+        let tvals = tgt.i32s();
+        let (t, d, tmax) = (dims.seq_len, dims.d_model, tgt.shape[1]);
+        for i in 0..4usize {
+            let len = sl[i] as usize;
+            fwd.memory_tokens(&teacher_enc, &svals[i * t..(i + 1) * t], len, &mut memory);
+            dfwd.generate(&teacher_dec, &memory[..len * d], len, &mut hyp);
+            let want = tvals[i * tmax..i * tmax + tl[i] as usize].to_vec();
+            assert_eq!(hyp, want, "sent {i}");
+        }
     }
 
     #[test]

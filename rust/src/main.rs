@@ -3,7 +3,7 @@
 //! ```text
 //! sasp report <id>        regenerate a paper table/figure
 //!        ids: table1 table2 table3 fig6 fig7 fig8 fig9 fig10 fig11
-//!             headline all
+//!             mt headline all
 //! sasp sweep              full design-space sweep (timing only)
 //! sasp qos <tile> <rate> <fp32|int8>
 //!                         evaluate one QoS point (PJRT when artifacts
@@ -97,6 +97,7 @@ fn cmd_report(cli: &Cli) -> Result<()> {
         "fig10" => harness::fig10(&mut qos, &cfg)?.render(),
         "fig11" => harness::fig11(&mut qos, &cfg)?.render(),
         "table3" => harness::table3(&mut qos, &cfg)?.render(),
+        "mt" => harness::mt_report(&mut qos, &cfg)?.render(),
         "headline" => harness::headline(&mut qos)?.render(),
         "all" => {
             let mut s = String::new();
@@ -109,6 +110,7 @@ fn cmd_report(cli: &Cli) -> Result<()> {
             s += &harness::fig10(&mut qos, &cfg)?.render();
             s += &harness::fig11(&mut qos, &cfg)?.render();
             s += &harness::table3(&mut qos, &cfg)?.render();
+            s += &harness::mt_report(&mut qos, &cfg)?.render();
             s += &harness::headline(&mut qos)?.render();
             s
         }

@@ -56,6 +56,20 @@ pub trait QosBackend {
     /// One padded MT batch: `src [batch*seq]` tokens → logits
     /// `[batch*seq*vocab]`.
     fn run_mt(&mut self, src: &[i32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Autoregressive MT over one ragged batch: padded `src
+    /// [batch*seq]` tokens plus per-utterance source lengths → greedy
+    /// generated target sequences (BOS/EOS stripped). Backends without
+    /// a decoder (PJRT encoder artifacts, stubs) keep the default
+    /// error; [`crate::infer::NativeBackend`] overrides it.
+    fn translate(
+        &mut self,
+        _src: &[i32],
+        _src_len: &[usize],
+        _batch: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        anyhow::bail!("backend has no autoregressive MT decoder")
+    }
 }
 
 /// Engine-independent PJRT execution state for one artifact: the
@@ -184,6 +198,13 @@ impl ModelHarness {
         let ff_names: Vec<String> = (0..n_blocks)
             .flat_map(|i| [format!("block{i}.ff.w1"), format!("block{i}.ff.w2")])
             .collect();
+        Self::build_named(artifact, params, ff_names)
+    }
+
+    /// Build over an explicit prunable-GEMM name list — the MT path's
+    /// constructor, where the decoder's `dec.block{i}.ff.*` weights join
+    /// the encoder's in one global ranking.
+    fn build_named(artifact: &str, params: Bundle, ff_names: Vec<String>) -> Result<Self> {
         for n in &ff_names {
             params.require(n)?;
         }
@@ -416,14 +437,25 @@ impl AsrEvaluator {
     }
 }
 
-/// MT evaluator over `artifacts/testset_mt.bin` (BLEU, higher better).
+/// MT evaluator (BLEU, higher better). Two decode modes:
+///
+/// - **per-position argmax** over the encoder logits — the historical
+///   PJRT-artifact contract (`testset_mt.bin`, references are full
+///   `seq_len` rows);
+/// - **greedy autoregressive** through [`QosBackend::translate`] — the
+///   native decoder path over a lengths-carrying test set
+///   ([`crate::infer::synth::synth_mt_testset`] layout), references are
+///   the dense FP32 model's own greedy decode (baseline BLEU 100).
 pub struct MtEvaluator {
     harness: ModelHarness,
     src: Vec<i32>,
+    src_len: Vec<usize>,
     refs: Vec<Vec<i32>>,
     batch: usize,
     seq_len: usize,
     vocab: usize,
+    /// Greedy autoregressive decoding (vs per-position argmax).
+    greedy: bool,
 }
 
 impl MtEvaluator {
@@ -440,12 +472,82 @@ impl MtEvaluator {
             .collect();
         Ok(MtEvaluator {
             src: src_t.i32s(),
+            src_len: vec![seq_len; n],
             refs,
             batch: m.model.batch,
             seq_len,
             vocab: m.model.vocab,
             harness,
+            greedy: false,
         })
+    }
+
+    /// Engine-free construction over in-memory bundles — the native
+    /// (offline) autoregressive path. `params` carries encoder plus
+    /// `dec.*` decoder weights; `dec_blocks` decoder blocks join the
+    /// prunable-GEMM list; `testset` is the `src`/`src_len`/`tgt`/
+    /// `tgt_len` layout.
+    pub fn from_parts(
+        artifact: &str,
+        params: Bundle,
+        testset: &Bundle,
+        meta: &EvalMeta,
+        dec_blocks: usize,
+    ) -> Result<Self> {
+        ensure!(meta.batch > 0, "batch must be positive");
+        let mut ff_names: Vec<String> = (0..meta.n_blocks)
+            .flat_map(|i| [format!("block{i}.ff.w1"), format!("block{i}.ff.w2")])
+            .collect();
+        ff_names.extend(crate::infer::DecoderWeights::ff_names(dec_blocks));
+        let harness = ModelHarness::build_named(artifact, params, ff_names)?;
+        let src_t = testset.require("src")?;
+        ensure!(src_t.shape.len() == 2, "src must be [n, seq]");
+        let (n, seq_len) = (src_t.shape[0], src_t.shape[1]);
+        let src_len: Vec<usize> = testset
+            .require("src_len")?
+            .i32s()
+            .iter()
+            .map(|l| *l as usize)
+            .collect();
+        ensure!(src_len.len() == n, "one src_len per sentence");
+        for (i, l) in src_len.iter().enumerate() {
+            ensure!(
+                *l > 0 && *l <= seq_len,
+                "sentence {i}: src_len {l} out of 1..={seq_len}"
+            );
+        }
+        let tgt = testset.require("tgt")?;
+        ensure!(
+            tgt.shape.len() == 2 && tgt.shape[0] == n,
+            "tgt must be [n, tmax]"
+        );
+        let tgt_len = testset.require("tgt_len")?.i32s();
+        ensure!(tgt_len.len() == n, "one tgt_len per sentence");
+        let tmax = tgt.shape[1];
+        for (i, l) in tgt_len.iter().enumerate() {
+            ensure!(
+                (0..=tmax as i32).contains(l),
+                "sentence {i}: tgt_len {l} out of 0..={tmax}"
+            );
+        }
+        let tvals = tgt.i32s();
+        let refs: Vec<Vec<i32>> = (0..n)
+            .map(|i| tvals[i * tmax..i * tmax + tgt_len[i] as usize].to_vec())
+            .collect();
+        Ok(MtEvaluator {
+            src: src_t.i32s(),
+            src_len,
+            refs,
+            batch: meta.batch,
+            seq_len,
+            vocab: meta.vocab,
+            harness,
+            greedy: true,
+        })
+    }
+
+    pub fn n_sents(&self) -> usize {
+        self.refs.len()
     }
 
     pub fn evaluate_with<B: QosBackend>(
@@ -457,6 +559,18 @@ impl MtEvaluator {
     ) -> Result<QosPoint> {
         let (params, plan) = self.harness.prepare_params(tile, rate, quant)?;
         backend.configure(&params, tile, quant)?;
+        let hyps = if self.greedy {
+            self.translate_configured(backend)?
+        } else {
+            self.argmax_configured(backend)?
+        };
+        let score = bleu(&self.refs, &hyps, 4);
+        Ok(QosPoint { tile, rate, quant, qos: score, achieved_rate: plan.achieved_rate })
+    }
+
+    /// Per-position argmax decode over encoder logits (the PJRT
+    /// contract), chunked into padded batches.
+    fn argmax_configured<B: QosBackend>(&self, backend: &mut B) -> Result<Vec<Vec<i32>>> {
         let n = self.refs.len();
         let (b, t) = (self.batch, self.seq_len);
         let mut hyps = Vec::with_capacity(n);
@@ -485,8 +599,39 @@ impl MtEvaluator {
             }
             chunk += 1;
         }
-        let score = bleu(&self.refs, &hyps, 4);
-        Ok(QosPoint { tile, rate, quant, qos: score, achieved_rate: plan.achieved_rate })
+        Ok(hyps)
+    }
+
+    /// Greedy autoregressive decode through the backend's translate
+    /// surface, chunked into batches. Unlike the fixed-batch PJRT
+    /// argmax path, the decoder backends accept any batch, so the tail
+    /// chunk is sent short instead of padded with discarded
+    /// repeat-decodes.
+    fn translate_configured<B: QosBackend>(&self, backend: &mut B) -> Result<Vec<Vec<i32>>> {
+        let n = self.refs.len();
+        let (b, t) = (self.batch, self.seq_len);
+        let mut hyps = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + b).min(n);
+            let cb = hi - lo;
+            let mut src = vec![0i32; cb * t];
+            let mut lens = Vec::with_capacity(cb);
+            for i in 0..cb {
+                let s = lo + i;
+                src[i * t..(i + 1) * t].copy_from_slice(&self.src[s * t..(s + 1) * t]);
+                lens.push(self.src_len[s]);
+            }
+            let out = backend.translate(&src, &lens, cb)?;
+            ensure!(
+                out.len() == cb,
+                "backend returned {} translations, expected {cb}",
+                out.len()
+            );
+            hyps.extend(out);
+            lo = hi;
+        }
+        Ok(hyps)
     }
 
     /// PJRT convenience wrapper (the historical signature).
@@ -582,6 +727,53 @@ mod tests {
         for h in &hyps {
             assert_eq!(h, &vec![2]);
         }
+    }
+
+    #[test]
+    fn native_mt_evaluator_baseline_bleu_100() {
+        // The acceptance contract: the greedy-mode evaluator over the
+        // synthetic teacher-labeled MT set scores exactly BLEU 100 for
+        // the dense FP32 baseline (references are the model's own
+        // decode), fully offline.
+        use crate::infer::decoder::testutil::mini_dec_dims;
+        use crate::infer::synth::{synth_decoder_weights, synth_mt_testset, synth_weights};
+        use crate::infer::testutil::mini_dims;
+        use crate::infer::{ModelDims, NativeBackend};
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let dec_dims = mini_dec_dims();
+        let enc = synth_weights(&dims, 61);
+        let dec = synth_decoder_weights(&dec_dims, 61);
+        let ts = synth_mt_testset(&enc, &dec, 6, 3).unwrap();
+        let mut params = enc.to_bundle();
+        dec.append_to_bundle(&mut params);
+        let meta = EvalMeta {
+            n_blocks: dims.n_blocks,
+            batch: 2,
+            vocab: dims.vocab,
+            blank: -1,
+            tile_hint: dims.tile,
+        };
+        let eval =
+            MtEvaluator::from_parts("native_mt", params, &ts, &meta, dec_dims.n_blocks)
+                .unwrap();
+        assert_eq!(eval.n_sents(), 6);
+        let mut be = NativeBackend::new_mt(enc, dec, 2).unwrap();
+        let p = eval.evaluate_with(&mut be, 8, 0.0, Quant::Fp32).unwrap();
+        assert!(
+            (p.qos - 100.0).abs() < 1e-9,
+            "dense FP32 must reproduce its own references: BLEU {}",
+            p.qos
+        );
+        assert_eq!(p.achieved_rate, 0.0);
+        // A pruned+quantized point still evaluates (degradation is
+        // measurable, never NaN).
+        let q = eval.evaluate_with(&mut be, 8, 0.5, Quant::Int8).unwrap();
+        assert!((0.0..=100.0).contains(&q.qos), "BLEU {}", q.qos);
+        assert!((q.achieved_rate - 0.5).abs() < 0.1);
     }
 
     #[test]

@@ -34,14 +34,27 @@ pub fn token_error_rate(refs: &[Vec<i32>], hyps: &[Vec<i32>]) -> f64 {
     errs as f64 / total.max(1) as f64
 }
 
-/// Corpus BLEU-N with brevity penalty (uniform weights, the standard MT
-/// metric of Table 1's MuST-C row).
+/// Corpus BLEU-N with brevity penalty (uniform weights over the
+/// *effective* order, the standard MT metric of Table 1's MuST-C row).
+///
+/// Clipped n-gram counts are pooled over the whole corpus (corpus BLEU,
+/// not a mean of sentence scores). An order is dropped from the
+/// geometric mean only when the **reference** corpus has no n-grams of
+/// that order (effective-order smoothing for short-reference corpora) —
+/// so a corpus whose hypotheses equal its references scores exactly 100
+/// even when every sentence is shorter than `max_n`, while a *degraded*
+/// hypothesis corpus that cannot express an order the references do
+/// express scores 0 at that order (standard corpus-BLEU behavior — no
+/// credit for collapsing to short outputs). A corpus with zero matches
+/// at any reference-expressible order scores 0.
 pub fn bleu(refs: &[Vec<i32>], hyps: &[Vec<i32>], max_n: usize) -> f64 {
     assert_eq!(refs.len(), hyps.len());
-    let mut log_sum = 0.0f64;
+    assert!(max_n > 0, "max_n must be positive");
+    let mut precisions: Vec<f64> = Vec::with_capacity(max_n);
     for n in 1..=max_n {
-        let (mut matched, mut total) = (0usize, 0usize);
+        let (mut matched, mut total, mut ref_total) = (0usize, 0usize, 0usize);
         for (r, h) in refs.iter().zip(hyps) {
+            ref_total += r.len().saturating_sub(n - 1);
             if h.len() < n {
                 continue;
             }
@@ -59,11 +72,19 @@ pub fn bleu(refs: &[Vec<i32>], hyps: &[Vec<i32>], max_n: usize) -> f64 {
                 }
             }
         }
-        if total == 0 || matched == 0 {
-            return 0.0;
+        if ref_total == 0 {
+            continue; // order beyond the reference corpus — drop it
         }
-        log_sum += (matched as f64 / total as f64).ln() / max_n as f64;
+        if matched == 0 {
+            return 0.0; // includes total == 0: hyps can't express the order
+        }
+        precisions.push(matched as f64 / total as f64);
     }
+    if precisions.is_empty() {
+        return 0.0; // no reference content at any order
+    }
+    let log_sum: f64 =
+        precisions.iter().map(|p| p.ln()).sum::<f64>() / precisions.len() as f64;
     let hyp_len: usize = hyps.iter().map(Vec::len).sum();
     let ref_len: usize = refs.iter().map(Vec::len).sum();
     let bp = if hyp_len >= ref_len {
@@ -72,6 +93,13 @@ pub fn bleu(refs: &[Vec<i32>], hyps: &[Vec<i32>], max_n: usize) -> f64 {
         (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
     };
     100.0 * bp * log_sum.exp()
+}
+
+/// Sentence BLEU: [`bleu`] of a single pair. Averaging this over a
+/// corpus is **not** corpus BLEU — corpus BLEU pools the clipped counts
+/// before taking precisions (see the aggregation test below).
+pub fn sentence_bleu(r: &[i32], h: &[i32], max_n: usize) -> f64 {
+    bleu(&[r.to_vec()], &[h.to_vec()], max_n)
 }
 
 #[cfg(test)]
@@ -123,6 +151,93 @@ mod tests {
         let short = bleu(&refs, &[vec![1, 2, 3, 4]], 2);
         assert!(short < full);
         assert!(short > 0.0);
+    }
+
+    #[test]
+    fn bleu_empty_hypothesis_is_zero() {
+        let refs = vec![vec![1, 2, 3, 4, 5]];
+        let hyps = vec![vec![]];
+        assert_eq!(bleu(&refs, &hyps, 4), 0.0);
+        // A whole corpus of empty hypotheses (and even empty references)
+        // scores 0, never NaN or 100.
+        let empty: Vec<Vec<i32>> = vec![vec![], vec![]];
+        assert_eq!(bleu(&empty, &empty, 4), 0.0);
+    }
+
+    #[test]
+    fn bleu_empty_reference_is_zero() {
+        let refs = vec![vec![]];
+        let hyps = vec![vec![1, 2, 3, 4]];
+        let b = bleu(&refs, &hyps, 4);
+        assert_eq!(b, 0.0, "nothing can match an empty reference: {b}");
+    }
+
+    #[test]
+    fn bleu_hypothesis_shorter_than_max_ngram_uses_effective_order() {
+        // A perfect 3-token corpus has no 4-grams; the geometric mean
+        // ranges over the expressible orders only, so identity is still
+        // exactly 100 (and a 1-token identity corpus too).
+        let refs = vec![vec![7, 8, 9]];
+        assert!((bleu(&refs, &refs, 4) - 100.0).abs() < 1e-9);
+        let one = vec![vec![5]];
+        assert!((bleu(&one, &one, 4) - 100.0).abs() < 1e-9);
+        // Imperfect short hypotheses still score strictly below 100 on
+        // the orders they can express (any expressible order with zero
+        // matches — here the 3-gram — zeroes the whole score).
+        let hyp = vec![vec![7, 8, 1]];
+        let b2 = bleu(&refs, &hyp, 2);
+        assert!(b2 > 0.0 && b2 < 100.0, "{b2}");
+        assert_eq!(bleu(&refs, &hyp, 4), 0.0, "unmatched 3-gram zeroes BLEU-4");
+        // Degraded (collapsed-short) hypotheses get no effective-order
+        // credit: the references *can* express 4-grams, so BLEU-4 is 0,
+        // exactly as standard corpus BLEU scores it.
+        let long_refs = vec![vec![1, 2, 3, 4]];
+        let short_hyp = vec![vec![1, 2, 3]];
+        assert_eq!(bleu(&long_refs, &short_hyp, 4), 0.0);
+        assert!(bleu(&long_refs, &short_hyp, 3) > 0.0, "expressible orders score");
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_boundary() {
+        // BP is exactly 1 at equal corpus length, and exp(1 - r/c) the
+        // moment the hypothesis corpus is one token short.
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let equal = bleu(&refs, &refs, 2);
+        assert!((equal - 100.0).abs() < 1e-9);
+        let shorter = vec![vec![1, 2, 3, 4, 5, 6, 7]];
+        let b = bleu(&refs, &shorter, 1);
+        // Unigram precision is 1 (7/7 match), so the score is pure BP.
+        let want = 100.0 * (1.0 - 8.0 / 7.0f64).exp();
+        assert!((b - want).abs() < 1e-9, "{b} vs {want}");
+        // Longer-than-reference hypotheses get no brevity bonus: the
+        // extra token costs precision instead.
+        let longer = vec![vec![1, 2, 3, 4, 5, 6, 7, 8, 9]];
+        let bl = bleu(&refs, &longer, 1);
+        assert!((bl - 100.0 * 8.0 / 9.0).abs() < 1e-9, "{bl}");
+    }
+
+    #[test]
+    fn bleu_corpus_pools_counts_not_sentence_scores() {
+        // Corpus BLEU pools clipped counts across sentences; averaging
+        // per-sentence BLEU is a different (wrong) aggregation. One
+        // perfect long sentence + one disjoint short one: the mean of
+        // sentence scores is 50, the pooled corpus score is not.
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8], vec![9, 9]];
+        let hyps = vec![vec![1, 2, 3, 4, 5, 6, 7, 8], vec![4, 4]];
+        let corpus = bleu(&refs, &hyps, 2);
+        let s0 = sentence_bleu(&refs[0], &hyps[0], 2);
+        let s1 = sentence_bleu(&refs[1], &hyps[1], 2);
+        assert!((s0 - 100.0).abs() < 1e-9);
+        assert_eq!(s1, 0.0);
+        let mean = (s0 + s1) / 2.0;
+        assert!(corpus > 0.0, "pooled counts keep the corpus score positive");
+        assert!(
+            (corpus - mean).abs() > 1.0,
+            "corpus {corpus} must not equal mean-of-sentences {mean}"
+        );
+        // Pooled unigrams: 8 matched of 10; pooled bigrams: 7 of 8.
+        let want = 100.0 * ((8.0f64 / 10.0).ln() / 2.0 + (7.0f64 / 8.0).ln() / 2.0).exp();
+        assert!((corpus - want).abs() < 1e-9, "{corpus} vs {want}");
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod metrics;
 
 pub use decode::ctc_greedy;
 pub use eval::{AsrEvaluator, EvalMeta, MtEvaluator, PjrtBackend, PjrtState, QosBackend, QosPoint};
-pub use metrics::{bleu, edit_distance, token_error_rate};
+pub use metrics::{bleu, edit_distance, sentence_bleu, token_error_rate};

@@ -170,6 +170,33 @@ pub fn gemm_on_array_batched(
     GemmCost { cycles, counts }
 }
 
+/// Autoregressive decode-step scheduling: the same weight GEMM executed
+/// once per generated token with a single-row (`m = 1`) input — the
+/// skinny GEMV shape of KV-cached decoding, where tile occupancy shrinks
+/// to one activation row per pass (FlexSA's motivating regime). Each
+/// step re-programs the live tiles (the array is shared by every GEMM of
+/// a layer between steps), so the per-step cost is exactly
+/// [`gemm_on_array`] at `m = 1` and the decode total is linear in
+/// `steps`. This is the analytic counterpart of the functional decoder's
+/// per-step [`TileTiming`] accounting ([`crate::infer::decoder`]);
+/// cross-attention K/V GEMMs are *not* decode-stepped — they run once
+/// per utterance at `m = src_len` and are reused every step.
+pub fn gemm_on_array_decode(
+    g: &GemmShape,
+    cfg: &ArrayConfig,
+    p: &SimParams,
+    mask: Option<&TileMask>,
+    steps: usize,
+) -> GemmCost {
+    let g1 = GemmShape { m: 1, ..*g };
+    let per_step = gemm_on_array(&g1, cfg, p, mask);
+    let mut total = GemmCost::default();
+    for _ in 0..steps {
+        total.add(&per_step);
+    }
+    total
+}
+
 /// Software-only GEMM on the in-order core (the paper's non-accelerated
 /// baseline for Table 3 / Fig. 11 speedups).
 pub fn gemm_on_cpu(g: &GemmShape, p: &SimParams) -> GemmCost {
@@ -284,6 +311,54 @@ mod tests {
                 "{quant:?}: batched must beat b per-utterance runs"
             );
         }
+    }
+
+    #[test]
+    fn decode_steps_are_linear_and_match_m1_gemm() {
+        let g = ff(96, 64, 256);
+        let p = SimParams::default();
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let c = cfg(8, quant);
+            let mut mask = TileMask::full(8, 32);
+            for (i, l) in mask.live.iter_mut().enumerate() {
+                *l = i % 3 != 0;
+            }
+            let one = gemm_on_array_decode(&g, &c, &p, Some(&mask), 1);
+            let g1 = GemmShape { m: 1, ..g };
+            let want = gemm_on_array(&g1, &c, &p, Some(&mask));
+            assert_eq!(one.counts, want.counts, "{quant:?}");
+            assert_eq!(one.cycles, want.cycles, "{quant:?}");
+            let many = gemm_on_array_decode(&g, &c, &p, Some(&mask), 17);
+            assert_eq!(many.counts.macs, 17 * one.counts.macs, "{quant:?}");
+            assert_eq!(many.counts.bus_words, 17 * one.counts.bus_words);
+            assert_eq!(
+                many.counts.array_busy_cycles,
+                17 * one.counts.array_busy_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn decode_step_reprograms_while_batched_reuses() {
+        // The decode regime's cost structure: `steps` single-row passes
+        // re-program the tiles every step, while the weight-stationary
+        // batched schedule of the same total row count programs once —
+        // the gap is exactly the repeated programming traffic.
+        let g = ff(1, 64, 256);
+        let p = SimParams::default();
+        let c = cfg(8, Quant::Int8);
+        let steps = 24usize;
+        let decode = gemm_on_array_decode(&g, &c, &p, None, steps);
+        let batched = gemm_on_array_batched(&g, &c, &p, None, steps);
+        assert_eq!(decode.counts.macs, batched.counts.macs);
+        let tile_cfg = ArrayConfig { rows: 8, cols: 8, quant: Quant::Int8 };
+        let prog = TileTiming::live(&tile_cfg, 1).prog_words as u64;
+        let n_tiles = 8u64 * 32;
+        assert_eq!(
+            decode.counts.bus_words - batched.counts.bus_words,
+            (steps as u64 - 1) * n_tiles * prog,
+            "per-step reprogramming is the decode overhead"
+        );
     }
 
     #[test]

@@ -20,6 +20,9 @@
 #      - the batched weight-stationary engine must beat the per-utterance
 #        loop at batch 4, on both the FP32 and INT8 paths, at GEMM and
 #        whole-encoder scope (the serving-runtime reuse win)
+#      - the autoregressive MT decoder's KV-cache stepping must beat the
+#        full-prefix recompute loop over 32 generated tokens, on both
+#        the FP32 and INT8 paths (the decode-side caching win)
 #
 # Usage: scripts/verify.sh [--no-bench]
 
@@ -86,6 +89,10 @@ e32p = median("infer: tiny_asr encoder fp32 25% pruned, per-utterance x4")
 e32b = median("infer: tiny_asr encoder fp32 25% pruned, batched ws x4")
 e8p = median("infer: tiny_asr encoder int8 25% pruned, per-utterance x4")
 e8b = median("infer: tiny_asr encoder int8 25% pruned, batched ws x4")
+d32c = median("infer: mt decode 32 steps fp32, kv-cache")
+d32r = median("infer: mt decode 32 steps fp32, full-prefix recompute")
+d8c = median("infer: mt decode 32 steps int8, kv-cache")
+d8r = median("infer: mt decode 32 steps int8, full-prefix recompute")
 
 failures = []
 # Short budgets are noisy; guard with generous slack.
@@ -116,6 +123,18 @@ for name, batched, per_utt, slack in [
         failures.append(
             f"{name} ({batched/1e6:.2f} ms) not faster than per-utterance "
             f"({per_utt/1e6:.2f} ms) at batch 4 (required <= {slack}x)")
+# KV-cache decode vs full-prefix recompute over 32 tokens: the cached
+# step touches one row per GEMV while the recompute loop re-runs the
+# whole growing prefix (~16x more row-passes); require a clear win.
+for name, cached, recompute in [
+    ("fp32 kv-cache decode", d32c, d32r),
+    ("int8 kv-cache decode", d8c, d8r),
+]:
+    if cached > recompute * 0.6:
+        failures.append(
+            f"{name} ({cached/1e6:.2f} ms) not faster than full-prefix "
+            f"recompute ({recompute/1e6:.2f} ms) over 32 steps "
+            f"(required <= 0.6x)")
 
 print(f"systolic per-cycle 8x8 M=32:  {compute/1e3:.1f} us median")
 print(f"  .. compute_into:            {into/1e3:.1f} us median")
@@ -131,6 +150,10 @@ print(f"encoder fp32 per-utt x4:      {e32p/1e6:.2f} ms median")
 print(f"  .. batched ws:              {e32b/1e6:.2f} ms median")
 print(f"encoder int8 per-utt x4:      {e8p/1e6:.2f} ms median")
 print(f"  .. batched ws:              {e8b/1e6:.2f} ms median")
+print(f"mt decode fp32 recompute:     {d32r/1e6:.2f} ms median")
+print(f"  .. kv-cache:                {d32c/1e6:.2f} ms median")
+print(f"mt decode int8 recompute:     {d8r/1e6:.2f} ms median")
+print(f"  .. kv-cache:                {d8c/1e6:.2f} ms median")
 for f in failures:
     print("FAIL:", f, file=sys.stderr)
 if failures:
