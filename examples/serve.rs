@@ -2,15 +2,17 @@
 //! queue — latency/throughput on a real execution path.
 //!
 //! A producer thread generates synthetic utterances at a Poisson-ish
-//! arrival rate; the server core batches them (fixed batch, deadline
-//! flush) and runs the encoder. Backend selection is
+//! arrival rate; the server core batches them under the backend's
+//! natural flush policy and runs the encoder. Backend selection is
 //! [`Backend::auto`] — the one selection path every serving surface
-//! shares: the PJRT engine when compiled artifacts exist, otherwise the
+//! shares: the PJRT engine when compiled artifacts exist (fixed-batch
+//! flushes, zeroed slack rows accounted in the report), otherwise the
 //! batched weight-stationary native engine serving a 25%-pruned INT8
-//! configuration fully offline (each live weight tile programmed once
-//! per batch, not once per utterance).
+//! configuration fully offline with **dynamic batching** (each flush
+//! executes exactly the queued utterances) sharded across worker
+//! threads.
 //!
-//! Run: `cargo run --release --example serve [artifacts] [n_requests]`.
+//! Run: `cargo run --release --example serve [artifacts] [n_requests] [threads]`.
 
 use std::sync::mpsc;
 use std::thread;
@@ -28,6 +30,12 @@ fn main() -> Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(128);
+    let threads: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
 
     let mut backend = Backend::auto(&dir)?;
     if let Some(nb) = backend.native_mut() {
@@ -52,33 +60,38 @@ fn main() -> Result<()> {
         .shape
         .last()
         .context("feats argument has no shape")?;
-    let mut server = Server::with_manifest(
-        &manifest,
-        &artifact,
-        params,
-        ServeConfig { batch, max_wait: Duration::from_millis(5) },
-    )?;
+    // The native engine takes any batch, so it serves dynamic flushes
+    // (up to 4x the manifest batch) sharded across worker threads; the
+    // fixed-shape PJRT artifact keeps fixed batches on one thread.
+    let cfg = if backend.is_native() {
+        ServeConfig::dynamic(4 * batch, threads)
+    } else {
+        ServeConfig::fixed(batch, Duration::from_millis(5))
+    };
+    println!(
+        "flush policy: {:?}, max batch {}, {} worker thread(s)",
+        cfg.flush, cfg.max_batch, cfg.threads
+    );
+    let mut server = Server::with_manifest(&manifest, &artifact, params, cfg)?;
     drive(&mut server, &mut backend, t, f, n_requests)?;
 
     if let Some(nb) = backend.native_mut() {
         let st = nb.stats();
-        // `utterances` counts every forward row, including the rows
-        // partial batches pad with repeats — so it can exceed the
-        // request count printed by `drive`.
+        // Dynamic batching executes exactly the queued rows, so the
+        // utterance count equals the request count — no slack work.
         println!(
-            "native schedule: {} forward rows (incl. batch padding), \
+            "native schedule: {} forward rows (exactly the requests served), \
              {} ff tiles skipped ({:.0}% of ff schedule)",
             st.utterances,
             st.ff.tiles_skipped,
             st.ff.sparsity() * 100.0
         );
-        // Weight-stationary reuse: per-utterance execution would have
-        // programmed every live ff tile once per row.
-        let per_utt_prog = st.ff.timing.prog_words * server.cfg.batch;
+        // Weight-stationary reuse: every live ff tile is programmed
+        // once per flushed shard, not once per utterance row.
         println!(
-            "ff weight programming: {} bus words (per-utterance loop \
-             would charge {} at this batch size)",
-            st.ff.timing.prog_words, per_utt_prog
+            "ff weight programming: {} bus words (charged once per \
+             flushed shard, not once per utterance)",
+            st.ff.timing.prog_words
         );
     }
     Ok(())
@@ -101,7 +114,7 @@ fn drive(
         for id in 0..n_requests as u64 {
             let feat_len = rng.index(t - 20) + 20;
             let feats: Vec<f32> = (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
-            let _ = req_tx.send(Request { id, feats, feat_len });
+            let _ = req_tx.send(Request::new(id, feats, feat_len));
             thread::sleep(Duration::from_micros(500 + rng.index(3000) as u64));
         }
         // Dropping req_tx closes the queue and drains the server.
@@ -113,12 +126,14 @@ fn drive(
     let responses: Vec<_> = resp_rx.try_iter().collect();
     println!("served {} responses in {} batches", responses.len(), report.n_batches);
     println!(
-        "latency p50 {:?}  p95 {:?}  | mean batch fill {:.1}/{} | throughput {:.1} req/s",
+        "latency p50 {:?}  p95 {:?}  | mean batch fill {:.1}/{} | throughput {:.1} req/s \
+         | slack rows {}",
         report.p50,
         report.p95,
         report.mean_batch_fill,
-        server.cfg.batch,
-        report.throughput_rps
+        server.cfg.max_batch,
+        report.throughput_rps,
+        report.slack_rows
     );
     assert_eq!(report.n_requests, n_requests);
     println!("serve OK");

@@ -295,6 +295,57 @@ fn main() {
         );
     }
 
+    // Serving runtime end-to-end: 16 queued utterances through the
+    // batcher + native backend — single-threaded fixed batches of 4 vs
+    // one dynamic flush sharded over 4 worker threads (the runtime's
+    // two new scaling levers; scripts/verify.sh guards that the
+    // dynamic+threaded path wins).
+    {
+        use sasp::coordinator::serve::{Request, ServeConfig, Server};
+        use std::sync::mpsc;
+        use std::time::Duration;
+
+        let sdims = ModelDims::tiny_asr();
+        let n_req = 16usize;
+        let sfeats: Vec<f32> = (0..sdims.seq_len * sdims.input_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let serve_case = |label: &str, cfg: ServeConfig| {
+            let mut nb =
+                NativeBackend::new(synth_weights(&sdims, 7), cfg.max_batch).expect("backend");
+            nb.prepare(sdims.tile, 0.25, Quant::Int8).expect("prepare");
+            let manifest = nb.manifest().clone();
+            let mut server = Server::with_manifest(
+                &manifest,
+                &manifest.name,
+                sasp::data::Bundle::default(),
+                cfg,
+            )
+            .expect("server");
+            b.run(label, || {
+                let (req_tx, req_rx) = mpsc::channel::<Request>();
+                let (resp_tx, resp_rx) = mpsc::channel();
+                for id in 0..n_req as u64 {
+                    req_tx
+                        .send(Request::new(id, sfeats.clone(), sdims.seq_len))
+                        .unwrap();
+                }
+                drop(req_tx);
+                let report = server.run(&mut nb, req_rx, resp_tx).unwrap();
+                assert_eq!(resp_rx.try_iter().count(), n_req);
+                report.n_batches
+            });
+        };
+        serve_case(
+            "serve: 16 utts int8 25% pruned, fixed batch 4, 1 thread",
+            ServeConfig::fixed(4, Duration::from_millis(1)),
+        );
+        serve_case(
+            "serve: 16 utts int8 25% pruned, dynamic batch<=16, 4 threads",
+            ServeConfig::dynamic(16, 4),
+        );
+    }
+
     // Runtime: tensor -> literal conversion (the PJRT argument path).
     let big = Tensor::from_f32(&[16, 96, 40], &vec![0.5f32; 16 * 96 * 40]);
     b.run("runtime: tensor->literal 240KB f32", || {

@@ -6,4 +6,4 @@ pub mod explorer;
 pub mod serve;
 
 pub use explorer::{DesignPoint, Explorer, RateSearch, SweepPoint};
-pub use serve::{Backend, ServeBackend, ServeConfig, ServeReport, Server};
+pub use serve::{Backend, FlushPolicy, ServeBackend, ServeConfig, ServeReport, Server};

@@ -1,18 +1,41 @@
 //! Batched inference serving loop — the edge-deployment face of the
-//! coordinator. Requests (utterances) arrive on a queue; a batcher thread
-//! forms fixed-size batches (padding the tail with repeats, exactly like
-//! the evaluator) under a deadline; the execution backend runs them; the
-//! caller gets decoded hypotheses plus latency metrics.
+//! coordinator. Requests (utterances) arrive on a queue; the batcher
+//! groups them under a [`FlushPolicy`]; the execution backend runs each
+//! flush; the caller gets decoded hypotheses plus latency metrics.
+//!
+//! Two flush policies drive the runtime's scaling levers:
+//!
+//! - [`FlushPolicy::Fixed`] waits (up to `max_wait`, measured from the
+//!   first queued request's arrival) for a full `max_batch` — the
+//!   fixed-shape artifact contract. On a backend that cannot resize its
+//!   batch (PJRT), partial flushes are padded with **zeroed slack rows**
+//!   (zero features, zero pad mask) that are counted explicitly in
+//!   [`ServeReport::slack_rows`] — never with repeated live requests,
+//!   which would silently burn compute and pollute backend statistics.
+//! - [`FlushPolicy::Dynamic`] is work-conserving: it flushes whatever is
+//!   queued the moment the executor is free (up to `max_batch`). On an
+//!   any-batch backend ([`ServeBackend::any_batch`], the native engine)
+//!   each flush executes **exactly** the queued rows — no padding, no
+//!   slack work — and the backend shards the flush's utterances across
+//!   [`ServeConfig::threads`] worker threads, each utterance bitwise
+//!   identical to the single-threaded run.
+//!
+//! An idle server blocks on the request channel — it never ticks
+//! `max_wait` wake-ups while the queue is empty, and the batching window
+//! starts at the first request's arrival, so late arrivals get their
+//! full window.
 //!
 //! Implemented over std threads/channels (no tokio in the vendor set);
 //! the PJRT client is kept on the worker thread, requests cross via mpsc.
 //!
 //! §Perf: everything static is hoisted into [`Server::new`] — the
 //! artifact is loaded once, and the positional argument vector (weights,
-//! masks, parameter tensors) is built once. The seed implementation
-//! re-called `engine.load()`, cloned the manifest, and cloned **every
-//! parameter tensor** on every batch; the steady-state loop now only
-//! rewrites the `feats`/`pad_mask` bytes in place.
+//! masks, parameter tensors) is built once. The steady-state loop only
+//! rewrites the `feats`/`pad_mask` bytes in place (fixed path) or the
+//! reused dynamic argument tensors (any-batch path). The remaining
+//! per-flush cost on the native path is the byte<->f32 conversion at
+//! the [`ServeBackend`] tensor boundary (the contract PJRT needs);
+//! bypassing it for in-process callers is a known follow-on.
 
 use std::path::Path;
 use std::sync::mpsc;
@@ -33,6 +56,27 @@ use crate::systolic::Quant;
 /// path); tests drive the batching logic with a stub.
 pub trait ServeBackend {
     fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor>;
+
+    /// Whether the backend executes a batch of any size in one call (the
+    /// native engine). Fixed-shape backends (PJRT artifacts, the test
+    /// stubs) take padded full-batch arguments instead.
+    fn any_batch(&self) -> bool {
+        false
+    }
+
+    /// Execute exactly `rows` utterances whose arguments are sized
+    /// `[rows, ...]` — the dynamic-batch entry point. Only meaningful
+    /// when [`Self::any_batch`] is true (the serving loop never calls
+    /// it otherwise); the default delegates to [`Self::execute`], which
+    /// is only correct if the backend's fixed batch equals `rows`.
+    fn execute_rows(&mut self, artifact: &str, args: &[Tensor], rows: usize) -> Result<Tensor> {
+        let _ = rows;
+        self.execute(artifact, args)
+    }
+
+    /// Hint: shard batched execution across `threads` worker threads.
+    /// Backends without a thread pool ignore it.
+    fn set_threads(&mut self, _threads: usize) {}
 }
 
 impl ServeBackend for Engine {
@@ -60,28 +104,41 @@ impl Backend {
     pub const ASR_ARTIFACT: &'static str = "asr_encoder_ref";
 
     /// Pick the backend for `dir`: PJRT when the compiled ASR artifact
-    /// exists there, otherwise the batched native engine over the
-    /// deterministic synthetic tiny-ASR model (the fully offline path).
+    /// is readable there, otherwise the batched native engine over the
+    /// deterministic synthetic tiny-ASR model (the fully offline path),
+    /// sharding batches across one worker thread per available core.
     pub fn auto(dir: &str) -> Result<Backend> {
-        Self::auto_with(dir, Self::ASR_ARTIFACT, ModelDims::tiny_asr(), 7, 4)
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::auto_with(dir, Self::ASR_ARTIFACT, ModelDims::tiny_asr(), 7, 4, threads)
     }
 
     /// [`Self::auto`] with explicit artifact name and native fallback
-    /// parameters (synthetic model dims/seed, serving batch).
+    /// parameters (synthetic model dims/seed, serving batch, worker
+    /// threads for sharded batch execution).
     pub fn auto_with(
         dir: &str,
         artifact: &str,
         dims: ModelDims,
         seed: u64,
         batch: usize,
+        threads: usize,
     ) -> Result<Backend> {
-        if Path::new(&format!("{dir}/{artifact}.hlo.txt")).exists() {
+        // Probe via Path::join (a trailing-slash or otherwise odd `dir`
+        // must not break selection) and require the artifact to actually
+        // be readable: an existing-but-unreadable file would otherwise
+        // only fail later, inside `Engine::new`/`Engine::load`, where
+        // the offline native fallback is no longer reachable.
+        let hlo = Path::new(dir).join(format!("{artifact}.hlo.txt"));
+        if hlo.is_file() && std::fs::File::open(&hlo).is_ok() {
             Ok(Backend::Pjrt {
                 engine: Engine::new(dir)?,
                 qos: PjrtState::new(artifact),
             })
         } else {
-            let native = NativeBackend::new(synth_weights(&dims, seed), batch)?;
+            let mut native = NativeBackend::new(synth_weights(&dims, seed), batch)?;
+            native.set_threads(threads);
             Ok(Backend::Native(Box::new(native)))
         }
     }
@@ -183,6 +240,29 @@ impl ServeBackend for Backend {
             Backend::Native(nb) => nb.execute(artifact, args),
         }
     }
+
+    fn any_batch(&self) -> bool {
+        matches!(self, Backend::Native(_))
+    }
+
+    fn execute_rows(&mut self, artifact: &str, args: &[Tensor], rows: usize) -> Result<Tensor> {
+        match self {
+            // The PJRT artifact is compiled for one fixed batch; handing
+            // it `[rows, ...]`-shaped literals would fail (or worse,
+            // not) deep inside argument marshalling. Callers must use
+            // the padded fixed-shape `execute` path instead.
+            Backend::Pjrt { .. } => anyhow::bail!(
+                "PJRT backend is fixed-batch; pad to the artifact batch and use execute()"
+            ),
+            Backend::Native(nb) => ServeBackend::execute_rows(nb.as_mut(), artifact, args, rows),
+        }
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        if let Backend::Native(nb) = self {
+            nb.set_threads(threads);
+        }
+    }
 }
 
 impl QosBackend for Backend {
@@ -218,13 +298,57 @@ impl QosBackend for Backend {
     }
 }
 
+/// When the batcher hands queued requests to the executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushPolicy {
+    /// Wait (up to `max_wait` from the first queued request's arrival)
+    /// for a full `max_batch`, then flush — the fixed-shape artifact
+    /// contract; partial flushes are padded with zeroed slack rows on
+    /// fixed-shape backends.
+    Fixed,
+    /// Work-conserving: flush whatever is queued as soon as the
+    /// executor is free (up to `max_batch`); any-batch backends execute
+    /// exactly the queued rows. `max_wait` is unused — batches grow
+    /// naturally while the previous flush executes.
+    Dynamic,
+}
+
 /// Serving-loop configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Model batch size (must match the artifact).
-    pub batch: usize,
-    /// Max time the batcher waits to fill a batch before flushing.
+    /// Largest batch one flush executes. Under [`FlushPolicy::Fixed`]
+    /// this must equal the artifact's compiled batch.
+    pub max_batch: usize,
+    /// The batching window of [`FlushPolicy::Fixed`], measured from the
+    /// first queued request's arrival.
     pub max_wait: Duration,
+    pub flush: FlushPolicy,
+    /// Worker threads an any-batch backend shards each flush across.
+    pub threads: usize,
+}
+
+impl ServeConfig {
+    /// The fixed-batch policy at the artifact batch, single-threaded.
+    pub fn fixed(batch: usize, max_wait: Duration) -> ServeConfig {
+        ServeConfig {
+            max_batch: batch,
+            max_wait,
+            flush: FlushPolicy::Fixed,
+            threads: 1,
+        }
+    }
+
+    /// The dynamic any-batch policy with a thread-sharded executor.
+    /// There is no `max_wait` knob: the batching window does not apply —
+    /// batches grow naturally while the previous flush executes.
+    pub fn dynamic(max_batch: usize, threads: usize) -> ServeConfig {
+        ServeConfig {
+            max_batch,
+            max_wait: Duration::ZERO,
+            flush: FlushPolicy::Dynamic,
+            threads,
+        }
+    }
 }
 
 /// One inference request: an utterance.
@@ -232,6 +356,18 @@ pub struct Request {
     pub id: u64,
     pub feats: Vec<f32>,
     pub feat_len: usize,
+    /// When the request entered the system ([`Request::new`] stamps it;
+    /// construct right before sending). Latency is measured from here,
+    /// so time spent queued in the channel while a flush executes —
+    /// the very mechanism of dynamic batching — counts.
+    pub arrived: Instant,
+}
+
+impl Request {
+    /// Build a request stamped with the current instant.
+    pub fn new(id: u64, feats: Vec<f32>, feat_len: usize) -> Request {
+        Request { id, feats, feat_len, arrived: Instant::now() }
+    }
 }
 
 /// One response.
@@ -247,10 +383,25 @@ pub struct Response {
 pub struct ServeReport {
     pub n_requests: usize,
     pub n_batches: usize,
+    /// Nearest-rank latency percentiles over the served requests.
     pub p50: Duration,
     pub p95: Duration,
     pub mean_batch_fill: f64,
     pub throughput_rps: f64,
+    /// Zeroed padding rows executed on fixed-shape backends (slack
+    /// work the any-batch path avoids entirely).
+    pub slack_rows: usize,
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample list: the
+/// smallest element with at least `p`% of the samples at or below it
+/// (rank `ceil(p·n/100)`, 1-based). Empty input reports zero.
+fn percentile(sorted: &[Duration], p: usize) -> Duration {
+    if sorted.is_empty() {
+        return Duration::default();
+    }
+    let rank = (p * sorted.len()).div_ceil(100).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
 /// Single-threaded synchronous server core: batching logic + execution.
@@ -259,9 +410,17 @@ pub struct ServeReport {
 pub struct Server {
     pub cfg: ServeConfig,
     artifact: String,
-    /// Prebuilt positional arguments; only the `feats`/`pad_mask` slots
-    /// are rewritten (in place) per batch.
+    /// Prebuilt fixed-shape positional arguments (the artifact batch);
+    /// only the `feats`/`pad_mask` slots are rewritten (in place) per
+    /// batch. Used for fixed-shape backends.
     args: Vec<Tensor>,
+    /// Reused `[rows, ...]` argument tensors of the any-batch path
+    /// (`feats` + `pad_mask`, resized per flush, no steady-state
+    /// allocation beyond growth to the largest flush seen).
+    dyn_args: Vec<Tensor>,
+    /// The batch the artifact/manifest was built for (== the padded
+    /// batch of fixed-shape execution).
+    model_batch: usize,
     feats_idx: usize,
     pad_idx: usize,
     seq_len: usize,
@@ -303,34 +462,51 @@ impl Server {
             .shape
             .last()
             .context("feats argument has no shape")?;
-        // The batch the caller configured must be the batch the artifact
-        // was compiled for — the reusable argument tensors are sized from
-        // the manifest, so a mismatch caught here would otherwise surface
-        // as an out-of-bounds slice (or silent zero-row padding) in the
-        // serving loop.
         let seq_len = manifest.model.seq_len;
+        let model_batch = manifest.model.batch;
+        ensure!(cfg.max_batch > 0, "max_batch must be positive");
+        ensure!(cfg.threads > 0, "threads must be positive");
         ensure!(
-            manifest.args[feats_idx].shape == [cfg.batch, seq_len, feat_dim],
-            "feats shape {:?} != configured batch {} x seq {} x feat {}",
+            manifest.args[feats_idx].shape == [model_batch, seq_len, feat_dim],
+            "feats shape {:?} != manifest batch {} x seq {} x feat {}",
             manifest.args[feats_idx].shape,
-            cfg.batch,
+            model_batch,
             seq_len,
             feat_dim
         );
         ensure!(
-            manifest.args[pad_idx].shape == [cfg.batch, seq_len],
-            "pad_mask shape {:?} != configured batch {} x seq {}",
+            manifest.args[pad_idx].shape == [model_batch, seq_len],
+            "pad_mask shape {:?} != manifest batch {} x seq {}",
             manifest.args[pad_idx].shape,
-            cfg.batch,
+            model_batch,
             seq_len
         );
+        // Under the fixed policy the flush size must be the batch the
+        // artifact was compiled for — the reusable argument tensors are
+        // sized from the manifest, so a mismatch caught here would
+        // otherwise surface as an out-of-bounds slice in the serving
+        // loop. The dynamic policy sizes its own argument tensors per
+        // flush, so any `max_batch` is legal there.
+        if cfg.flush == FlushPolicy::Fixed {
+            ensure!(
+                cfg.max_batch == model_batch,
+                "fixed flush: configured batch {} != artifact batch {}",
+                cfg.max_batch,
+                model_batch
+            );
+        }
         Ok(Server {
             cfg,
             artifact: artifact.to_string(),
             args,
+            dyn_args: vec![
+                Tensor::zeros(&[0, seq_len, feat_dim], DType::F32),
+                Tensor::zeros(&[0, seq_len], DType::F32),
+            ],
+            model_batch,
             feats_idx,
             pad_idx,
-            seq_len: manifest.model.seq_len,
+            seq_len,
             feat_dim,
             vocab: manifest.model.vocab,
             blank: manifest.model.ctc_blank as i32,
@@ -344,32 +520,77 @@ impl Server {
         rx: mpsc::Receiver<Request>,
         tx: mpsc::Sender<Response>,
     ) -> Result<ServeReport> {
+        backend.set_threads(self.cfg.threads);
+        // One flush never exceeds what the backend can execute: a
+        // fixed-shape backend is capped at the artifact batch even when
+        // a dynamic `max_batch` asks for more (the surplus simply rides
+        // into the next flush).
+        let cap = if backend.any_batch() {
+            self.cfg.max_batch
+        } else {
+            self.cfg.max_batch.min(self.model_batch)
+        };
         let mut latencies: Vec<Duration> = Vec::new();
         let mut fills: Vec<usize> = Vec::new();
         let t0 = Instant::now();
         let mut n_requests = 0usize;
-        let mut pending: Vec<(Request, Instant)> = Vec::new();
+        let mut pending: Vec<Request> = Vec::new();
+        let mut slack_rows = 0usize;
         let mut open = true;
         while open || !pending.is_empty() {
-            // Fill up to batch or deadline.
-            let deadline = Instant::now() + self.cfg.max_wait;
-            while open && pending.len() < self.cfg.batch {
-                let timeout = deadline.saturating_duration_since(Instant::now());
-                match rx.recv_timeout(timeout) {
-                    Ok(r) => pending.push((r, Instant::now())),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // Idle: block until the first request arrives — no
+            // `max_wait` wake-ups while the queue is empty.
+            if open && pending.is_empty() {
+                match rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => {
                         open = false;
+                        continue;
+                    }
+                }
+            }
+            match self.cfg.flush {
+                FlushPolicy::Fixed => {
+                    // The batching window runs from the first queued
+                    // request's arrival, so a request that lands after
+                    // an idle stretch still gets its full window.
+                    if let Some(first) = pending.first() {
+                        let deadline = first.arrived + self.cfg.max_wait;
+                        while open && pending.len() < cap {
+                            let timeout =
+                                deadline.saturating_duration_since(Instant::now());
+                            match rx.recv_timeout(timeout) {
+                                Ok(r) => pending.push(r),
+                                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    open = false;
+                                }
+                            }
+                        }
+                    }
+                }
+                FlushPolicy::Dynamic => {
+                    // Work-conserving: take everything already queued
+                    // (batches grow while the previous flush executes).
+                    while open && pending.len() < cap {
+                        match rx.try_recv() {
+                            Ok(r) => pending.push(r),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                            }
+                        }
                     }
                 }
             }
             if pending.is_empty() {
                 continue;
             }
-            let take = pending.len().min(self.cfg.batch);
-            let batch: Vec<(Request, Instant)> = pending.drain(..take).collect();
+            let take = pending.len().min(cap);
+            let batch: Vec<Request> = pending.drain(..take).collect();
             fills.push(batch.len());
-            let responses = self.run_batch(backend, &batch)?;
+            let (responses, slack) = self.run_batch(backend, &batch)?;
+            slack_rows += slack;
             for r in responses {
                 latencies.push(r.latency);
                 n_requests += 1;
@@ -378,64 +599,90 @@ impl Server {
         }
         latencies.sort_unstable();
         let total = t0.elapsed().as_secs_f64();
-        let n = latencies.len().max(1);
         Ok(ServeReport {
             n_requests,
             n_batches: fills.len(),
-            p50: latencies.get(n / 2).copied().unwrap_or_default(),
-            p95: latencies.get(n * 95 / 100).copied().unwrap_or_default(),
+            p50: percentile(&latencies, 50),
+            p95: percentile(&latencies, 95),
             mean_batch_fill: fills.iter().sum::<usize>() as f64
                 / fills.len().max(1) as f64,
             throughput_rps: n_requests as f64 / total.max(1e-9),
+            slack_rows,
         })
     }
 
-    /// Execute one batch (padding the tail with repeats of the last
-    /// request, discarded on output). Steady state writes only the
-    /// `feats`/`pad_mask` bytes — no loads, clones, or allocations of
-    /// the parameter arguments.
+    /// Execute one batch and return the responses plus the number of
+    /// slack rows executed. On an any-batch backend exactly
+    /// `batch.len()` rows run — no padding, no slack work, so backend
+    /// statistics stay per-request-exact. On fixed-shape backends the
+    /// tail is padded with zeroed rows (zero features **and** zero pad
+    /// mask — never repeats of live requests, which would silently burn
+    /// compute and pollute backend accounting) and the slack is counted
+    /// explicitly. Steady state writes only the `feats`/`pad_mask`
+    /// bytes — no loads, clones, or allocations of the parameter
+    /// arguments.
     fn run_batch(
         &mut self,
         backend: &mut impl ServeBackend,
-        batch: &[(Request, Instant)],
-    ) -> Result<Vec<Response>> {
-        assert!(!batch.is_empty() && batch.len() <= self.cfg.batch);
-        let (b, t, f) = (self.cfg.batch, self.seq_len, self.feat_dim);
-
-        {
-            let feats = &mut self.args[self.feats_idx];
-            debug_assert_eq!(feats.data.len(), b * t * f * 4);
-            for i in 0..b {
-                let (req, _) = &batch[i.min(batch.len() - 1)];
-                // Strict: a wrong-length request must not silently leave
-                // stale frames from the previous batch in this row (the
-                // argument tensor is reused across batches).
-                assert_eq!(
-                    req.feats.len(),
-                    t * f,
-                    "request {} feats length != seq_len x feat_dim",
-                    req.id
-                );
-                write_f32s(feats, i * t * f, &req.feats);
-            }
-        }
-        {
-            let pad = &mut self.args[self.pad_idx];
-            pad.data.fill(0);
-            let one = 1.0f32.to_le_bytes();
-            for i in 0..b {
-                let (req, _) = &batch[i.min(batch.len() - 1)];
-                for tt in 0..req.feat_len.min(t) {
-                    let at = (i * t + tt) * 4;
-                    pad.data[at..at + 4].copy_from_slice(&one);
-                }
-            }
+        batch: &[Request],
+    ) -> Result<(Vec<Response>, usize)> {
+        let n = batch.len();
+        assert!(n > 0 && n <= self.cfg.max_batch);
+        let (t, f) = (self.seq_len, self.feat_dim);
+        for req in batch {
+            // Strict: a wrong-length request must not silently leave
+            // stale frames from the previous batch in its row (the
+            // argument tensors are reused across batches).
+            assert_eq!(
+                req.feats.len(),
+                t * f,
+                "request {} feats length != seq_len x feat_dim",
+                req.id
+            );
         }
 
-        let out = backend.execute(&self.artifact, &self.args)?;
+        let (out, slack) = if backend.any_batch() {
+            {
+                let feats = &mut self.dyn_args[0];
+                feats.shape = vec![n, t, f];
+                feats.data.resize(n * t * f * 4, 0);
+                write_feats_rows(feats, batch, t, f);
+            }
+            {
+                let pad = &mut self.dyn_args[1];
+                pad.shape = vec![n, t];
+                pad.data.clear();
+                pad.data.resize(n * t * 4, 0);
+                write_pad_rows(pad, batch, t);
+            }
+            (backend.execute_rows(&self.artifact, &self.dyn_args, n)?, 0)
+        } else {
+            let b = self.model_batch;
+            ensure!(
+                n <= b,
+                "flush of {n} exceeds the fixed artifact batch {b}"
+            );
+            {
+                let feats = &mut self.args[self.feats_idx];
+                debug_assert_eq!(feats.data.len(), b * t * f * 4);
+                write_feats_rows(feats, batch, t, f);
+                // Zero the slack rows: the tensor is reused across
+                // batches, so stale frames must not leak into them.
+                feats.data[n * t * f * 4..].fill(0);
+            }
+            {
+                let pad = &mut self.args[self.pad_idx];
+                // Slack rows keep an all-zero pad mask: executed by the
+                // fixed-shape artifact but masked out of attention.
+                pad.data.fill(0);
+                write_pad_rows(pad, batch, t);
+            }
+            (backend.execute(&self.artifact, &self.args)?, b - n)
+        };
+
         let lp = out.f32s();
-        let mut responses = Vec::with_capacity(batch.len());
-        for (i, (req, arrived)) in batch.iter().enumerate() {
+        let mut responses = Vec::with_capacity(n);
+        for (i, req) in batch.iter().enumerate() {
             let tokens = ctc_greedy(
                 &lp[i * t * self.vocab..(i + 1) * t * self.vocab],
                 req.feat_len.min(t),
@@ -445,10 +692,31 @@ impl Server {
             responses.push(Response {
                 id: req.id,
                 tokens,
-                latency: arrived.elapsed(),
+                latency: req.arrived.elapsed(),
             });
         }
-        Ok(responses)
+        Ok((responses, slack))
+    }
+}
+
+/// Write each request's features into its row of `feats` (row `i` =
+/// request `i`). Shared by the dynamic and fixed execution paths so the
+/// row layout lives in one place.
+fn write_feats_rows(feats: &mut Tensor, batch: &[Request], t: usize, f: usize) {
+    for (i, req) in batch.iter().enumerate() {
+        write_f32s(feats, i * t * f, &req.feats);
+    }
+}
+
+/// Set the `1.0` validity prefix of each request's pad-mask row (the
+/// buffer must already be zeroed — slack rows and pad tails stay 0).
+fn write_pad_rows(pad: &mut Tensor, batch: &[Request], t: usize) {
+    let one = 1.0f32.to_le_bytes();
+    for (i, req) in batch.iter().enumerate() {
+        for tt in 0..req.feat_len.min(t) {
+            let at = (i * t + tt) * 4;
+            pad.data[at..at + 4].copy_from_slice(&one);
+        }
     }
 }
 
@@ -504,7 +772,17 @@ mod tests {
             &test_manifest(),
             "stub_encoder",
             test_params(),
-            ServeConfig { batch: B, max_wait },
+            ServeConfig::fixed(B, max_wait),
+        )
+        .unwrap()
+    }
+
+    fn dynamic_server(max_batch: usize, threads: usize) -> Server {
+        Server::with_manifest(
+            &test_manifest(),
+            "stub_encoder",
+            test_params(),
+            ServeConfig::dynamic(max_batch, threads),
         )
         .unwrap()
     }
@@ -514,7 +792,7 @@ mod tests {
     fn request(id: u64) -> Request {
         let mut feats = vec![0.0f32; T * F];
         feats[0] = (id % (VOCAB as u64 - 1) + 1) as f32;
-        Request { id, feats, feat_len: T }
+        Request::new(id, feats, T)
     }
 
     fn expected_tokens(id: u64) -> Vec<i32> {
@@ -573,8 +851,14 @@ mod tests {
 
     #[test]
     fn serve_config_fields() {
-        let c = ServeConfig { batch: 16, max_wait: Duration::from_millis(5) };
-        assert_eq!(c.batch, 16);
+        let f = ServeConfig::fixed(16, Duration::from_millis(5));
+        assert_eq!(f.max_batch, 16);
+        assert_eq!(f.flush, FlushPolicy::Fixed);
+        assert_eq!(f.threads, 1);
+        let d = ServeConfig::dynamic(32, 4);
+        assert_eq!(d.max_batch, 32);
+        assert_eq!(d.flush, FlushPolicy::Dynamic);
+        assert_eq!(d.threads, 4);
     }
 
     #[test]
@@ -586,8 +870,30 @@ mod tests {
             p95: Duration::from_millis(9),
             mean_batch_fill: 5.0,
             throughput_rps: 100.0,
+            slack_rows: 0,
         };
         assert!(r.p95 >= r.p50);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_edges() {
+        let ms = Duration::from_millis;
+        // n = 0: no samples, report zero.
+        assert_eq!(percentile(&[], 50), Duration::default());
+        assert_eq!(percentile(&[], 95), Duration::default());
+        // n = 1: every percentile is the single sample.
+        assert_eq!(percentile(&[ms(7)], 50), ms(7));
+        assert_eq!(percentile(&[ms(7)], 95), ms(7));
+        // n = 2: p50 is the first sample (rank ceil(0.5*2) = 1), p95
+        // the second.
+        assert_eq!(percentile(&[ms(1), ms(2)], 50), ms(1));
+        assert_eq!(percentile(&[ms(1), ms(2)], 95), ms(2));
+        // n = 20: p95 is the 19th sample (rank ceil(0.95*20) = 19) —
+        // the seed's `n*95/100` indexed the 20th (the max).
+        let twenty: Vec<Duration> = (1..=20).map(ms).collect();
+        assert_eq!(percentile(&twenty, 50), ms(10));
+        assert_eq!(percentile(&twenty, 95), ms(19));
+        assert_eq!(percentile(&twenty, 100), ms(20));
     }
 
     #[test]
@@ -600,6 +906,7 @@ mod tests {
         assert_eq!(report.n_requests, 10);
         assert_eq!(report.n_batches, 3);
         assert!((report.mean_batch_fill - 10.0 / 3.0).abs() < 1e-9);
+        assert_eq!(report.slack_rows, 2, "the tail flush pads 2 of 4 rows");
         assert_eq!(responses.len(), 10);
         for r in &responses {
             assert_eq!(r.tokens, expected_tokens(r.id), "request {}", r.id);
@@ -607,20 +914,29 @@ mod tests {
     }
 
     #[test]
-    fn tail_batch_padded_with_last_request_and_discarded() {
+    fn tail_batch_slack_rows_zeroed_and_accounted() {
+        // Bugfix regression: the seed padded partial batches with
+        // repeats of the last request — fully executed, silently
+        // counted in backend statistics. Fixed-shape slack rows must
+        // now carry zero features and a zero pad mask, and be reported.
         let mut server = test_server(Duration::from_millis(5));
         let mut backend = StubBackend::new();
         let (report, responses) = serve_all(&mut server, &mut backend, &[7, 8, 9]);
         assert_eq!(report.n_batches, 1);
+        assert_eq!(report.slack_rows, 1);
         assert_eq!(responses.len(), 3, "padding rows must not produce responses");
-        // The executed feats tensor repeats the last request in rows 3..B.
         let feats = backend.calls[0][0].f32s();
-        let last_row = &feats[2 * T * F..3 * T * F];
+        let pad = backend.calls[0][1].f32s();
         for pad_row in 3..B {
-            assert_eq!(
-                &feats[pad_row * T * F..(pad_row + 1) * T * F],
-                last_row,
-                "row {pad_row} must repeat the last real request"
+            assert!(
+                feats[pad_row * T * F..(pad_row + 1) * T * F]
+                    .iter()
+                    .all(|v| *v == 0.0),
+                "slack row {pad_row} features must be zero, not a repeat"
+            );
+            assert!(
+                pad[pad_row * T..(pad_row + 1) * T].iter().all(|v| *v == 0.0),
+                "slack row {pad_row} pad mask must be zero"
             );
         }
     }
@@ -684,18 +1000,27 @@ mod tests {
             &test_manifest(),
             "stub_encoder",
             test_params(),
-            ServeConfig { batch: B + 1, max_wait: Duration::from_millis(1) },
+            ServeConfig::fixed(B + 1, Duration::from_millis(1)),
         )
         .err()
         .expect("construction must fail on batch/artifact mismatch");
         assert!(format!("{err:?}").contains("configured batch"));
+        // The dynamic policy sizes its own arguments, so any max_batch
+        // is legal there.
+        assert!(Server::with_manifest(
+            &test_manifest(),
+            "stub_encoder",
+            test_params(),
+            ServeConfig::dynamic(B + 5, 2),
+        )
+        .is_ok());
     }
 
     #[test]
     fn backend_auto_selects_native_without_artifacts() {
         let dims = crate::infer::testutil::mini_dims();
         let mut backend =
-            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
                 .unwrap();
         assert!(backend.is_native());
         assert_eq!(backend.label(), "native");
@@ -725,7 +1050,12 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("asr_encoder_ref.hlo.txt"), "stub").unwrap();
         let dims = crate::infer::testutil::mini_dims();
-        let got = Backend::auto_with(dir.to_str().unwrap(), "asr_encoder_ref", dims, 5, 2);
+        let got = Backend::auto_with(dir.to_str().unwrap(), "asr_encoder_ref", dims, 5, 2, 1);
+        // A trailing-slash dir must probe the same artifact path
+        // (Path::join, not string formatting).
+        let slashed = format!("{}/", dir.to_str().unwrap());
+        let got_slashed =
+            Backend::auto_with(&slashed, "asr_encoder_ref", dims, 5, 2, 1);
         let _ = std::fs::remove_dir_all(&dir);
         // Err = stub build (PJRT attempted and unavailable) — also fine.
         if let Ok(backend) = got {
@@ -734,6 +1064,29 @@ mod tests {
                 "artifact present: auto must not fall back to native"
             );
         }
+        if let Ok(backend) = got_slashed {
+            assert!(
+                !backend.is_native(),
+                "trailing-slash dir must still find the artifact"
+            );
+        }
+    }
+
+    #[test]
+    fn backend_auto_falls_back_when_artifact_unreadable() {
+        // The dir exists but the artifact cannot be opened (here: the
+        // artifact path is a directory) — auto must fall back to the
+        // native engine instead of deferring the failure to Engine::new.
+        let dir = std::env::temp_dir().join(format!(
+            "sasp_backend_auto_unreadable_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(dir.join("asr_encoder_ref.hlo.txt")).unwrap();
+        let dims = crate::infer::testutil::mini_dims();
+        let got = Backend::auto_with(dir.to_str().unwrap(), "asr_encoder_ref", dims, 5, 2, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+        let backend = got.expect("unreadable artifact must not fail selection");
+        assert!(backend.is_native(), "must fall back to the native engine");
     }
 
     #[test]
@@ -742,7 +1095,7 @@ mod tests {
         // runs real batched native inference behind the request queue.
         let dims = crate::infer::testutil::mini_dims();
         let mut backend =
-            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
                 .unwrap();
         let (manifest, params, artifact) = backend.serve_parts("unused").unwrap();
         assert_eq!(manifest.model.batch, 2);
@@ -750,7 +1103,7 @@ mod tests {
             &manifest,
             &artifact,
             params,
-            ServeConfig { batch: 2, max_wait: Duration::from_millis(5) },
+            ServeConfig::fixed(2, Duration::from_millis(5)),
         )
         .unwrap();
         let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -758,20 +1111,226 @@ mod tests {
         let (t, f) = (dims.seq_len, dims.input_dim);
         for id in 0..3u64 {
             let feats = vec![0.25f32 * (id as f32 + 1.0); t * f];
-            req_tx.send(Request { id, feats, feat_len: t }).unwrap();
+            req_tx.send(Request::new(id, feats, t)).unwrap();
         }
         drop(req_tx);
         let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
         assert_eq!(report.n_requests, 3);
         assert_eq!(report.n_batches, 2, "3 requests at batch 2 -> 2 + 1");
+        assert_eq!(report.slack_rows, 0, "any-batch path executes no slack");
         let responses: Vec<Response> = resp_rx.try_iter().collect();
         assert_eq!(responses.len(), 3);
         for r in &responses {
             assert!(r.tokens.iter().all(|s| *s >= 0 && (*s as usize) < dims.vocab));
         }
-        // The batched engine saw every forward row (incl. tail padding).
+        // The batched engine executed exactly the queued rows — the
+        // seed padded the tail flush with a repeat and counted it.
         let st = backend.native_mut().unwrap().stats();
-        assert_eq!(st.utterances, 4);
+        assert_eq!(st.utterances, 3);
+    }
+
+    #[test]
+    fn tail_batch_native_stats_equal_standalone_batch_of_one() {
+        // Bugfix regression (ISSUE 5): native stats for a served tail
+        // batch of 1 must equal a standalone batch-of-1 run — the seed
+        // executed the padding repeats, inflating TileTiming/throughput
+        // /energy accounting.
+        let dims = crate::infer::testutil::mini_dims();
+        let mut backend =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
+                .unwrap();
+        let (manifest, params, artifact) = backend.serve_parts("unused").unwrap();
+        let mut server = Server::with_manifest(
+            &manifest,
+            &artifact,
+            params,
+            ServeConfig::fixed(2, Duration::from_millis(2)),
+        )
+        .unwrap();
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        let feats: Vec<f32> = (0..t * f).map(|i| (i % 7) as f32 * 0.125).collect();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        req_tx
+            .send(Request::new(0, feats.clone(), t))
+            .unwrap();
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        let _ = resp_rx.try_iter().count();
+        assert_eq!(report.n_requests, 1);
+        assert_eq!(report.slack_rows, 0);
+        let served = *backend.native_mut().unwrap().stats();
+
+        let mut reference =
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
+                .unwrap();
+        let nb = reference.native_mut().unwrap();
+        let pad = vec![1.0f32; t];
+        let _ = nb.forward_batch(&feats, &pad, 1);
+        assert_eq!(
+            &served,
+            nb.stats(),
+            "a tail batch of 1 must cost exactly one utterance"
+        );
+        assert_eq!(served.utterances, 1);
+    }
+
+    /// Any-batch stub: executes exactly the rows it is handed and
+    /// records each flush's row count.
+    struct AnyBatchStub {
+        rows_seen: Vec<usize>,
+    }
+
+    impl ServeBackend for AnyBatchStub {
+        fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor> {
+            let rows = args[0].shape[0];
+            self.execute_rows(artifact, args, rows)
+        }
+
+        fn any_batch(&self) -> bool {
+            true
+        }
+
+        fn execute_rows(
+            &mut self,
+            artifact: &str,
+            args: &[Tensor],
+            rows: usize,
+        ) -> Result<Tensor> {
+            assert_eq!(artifact, "stub_encoder");
+            assert_eq!(args.len(), 2);
+            assert_eq!(args[0].shape, vec![rows, T, F], "feats sized to the flush");
+            assert_eq!(args[1].shape, vec![rows, T], "pad mask sized to the flush");
+            self.rows_seen.push(rows);
+            let feats = args[0].f32s();
+            let mut lp = vec![0.0f32; rows * T * VOCAB];
+            for i in 0..rows {
+                let cls = feats[i * T * F] as usize % VOCAB;
+                for tt in 0..T {
+                    let base = (i * T + tt) * VOCAB;
+                    let hot = if tt == 0 { cls } else { BLANK as usize };
+                    lp[base + hot] = 5.0;
+                }
+            }
+            Ok(Tensor::from_f32(&[rows, T, VOCAB], &lp))
+        }
+    }
+
+    #[test]
+    fn dynamic_flush_executes_exact_queued_rows() {
+        // The tentpole contract: on an any-batch backend the dynamic
+        // policy flushes whatever is queued — one flush of 3, no
+        // padding, no slack work.
+        let mut server = dynamic_server(8, 2);
+        let mut backend = AnyBatchStub { rows_seen: Vec::new() };
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in [7u64, 8, 9] {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 3);
+        assert_eq!(report.n_batches, 1, "everything queued flushes at once");
+        assert_eq!(report.slack_rows, 0);
+        assert!((report.mean_batch_fill - 3.0).abs() < 1e-9);
+        assert_eq!(backend.rows_seen, vec![3]);
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 3);
+        for r in &responses {
+            assert_eq!(r.tokens, expected_tokens(r.id), "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn dynamic_flush_respects_max_batch() {
+        let mut server = dynamic_server(2, 1);
+        let mut backend = AnyBatchStub { rows_seen: Vec::new() };
+        let ids: Vec<u64> = (1..=5).collect();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for &id in &ids {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 5);
+        assert_eq!(backend.rows_seen, vec![2, 2, 1], "capped at max_batch");
+        assert_eq!(resp_rx.try_iter().count(), 5);
+    }
+
+    #[test]
+    fn dynamic_on_fixed_backend_pads_with_slack_accounting() {
+        // PJRT stays fixed-batch under the dynamic policy: the flush is
+        // padded to the artifact batch with zeroed rows, accounted as
+        // slack.
+        let mut server = Server::with_manifest(
+            &test_manifest(),
+            "stub_encoder",
+            test_params(),
+            ServeConfig::dynamic(B, 1),
+        )
+        .unwrap();
+        let mut backend = StubBackend::new();
+        let (report, responses) = serve_all(&mut server, &mut backend, &[1, 2, 3]);
+        assert_eq!(report.n_batches, 1);
+        assert_eq!(report.slack_rows, 1, "3 of 4 artifact rows are live");
+        assert_eq!(responses.len(), 3);
+        let pad = backend.calls[0][1].f32s();
+        assert!(pad[3 * T..].iter().all(|v| *v == 0.0), "slack pad mask zero");
+    }
+
+    #[test]
+    fn dynamic_overcap_on_fixed_backend_clamps_to_artifact_batch() {
+        // A dynamic max_batch beyond the artifact batch must not abort
+        // the run on a fixed-shape backend — each flush is capped at
+        // the artifact batch and the surplus rides into the next one.
+        let mut server = Server::with_manifest(
+            &test_manifest(),
+            "stub_encoder",
+            test_params(),
+            ServeConfig::dynamic(B + 5, 1),
+        )
+        .unwrap();
+        let mut backend = StubBackend::new();
+        let ids: Vec<u64> = (1..=6).collect();
+        let (report, responses) = serve_all(&mut server, &mut backend, &ids);
+        assert_eq!(report.n_requests, 6);
+        assert_eq!(report.n_batches, 2, "6 queued at artifact batch 4 -> 4 + 2");
+        assert_eq!(report.slack_rows, 2);
+        assert_eq!(responses.len(), 6);
+        for r in &responses {
+            assert_eq!(r.tokens, expected_tokens(r.id), "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn batching_window_measured_from_first_arrival() {
+        // Bugfix regression (ISSUE 5): the seed computed the deadline
+        // before any request existed, so an idle server woke every
+        // `max_wait` and a request arriving late in the window was
+        // flushed almost immediately. The window must start at the
+        // first request's arrival: a second request 30ms later (well
+        // inside the 80ms window, but after the idle stretch exceeded
+        // it) still joins the same batch.
+        let mut server = test_server(Duration::from_millis(80));
+        let mut backend = StubBackend::new();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let producer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(150)); // idle > max_wait
+            req_tx.send(request(1)).unwrap();
+            thread::sleep(Duration::from_millis(30)); // inside the window
+            req_tx.send(request(2)).unwrap();
+        });
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        producer.join().unwrap();
+        assert_eq!(report.n_requests, 2);
+        assert_eq!(
+            report.n_batches, 1,
+            "second arrival lands inside the first request's window"
+        );
+        assert_eq!(resp_rx.try_iter().count(), 2);
     }
 
     #[test]
@@ -780,7 +1339,7 @@ mod tests {
             &test_manifest(),
             "stub_encoder",
             Bundle::default(), // no block0.ff.w1
-            ServeConfig { batch: B, max_wait: Duration::from_millis(1) },
+            ServeConfig::fixed(B, Duration::from_millis(1)),
         )
         .err()
         .expect("construction must fail without params");

@@ -5,9 +5,11 @@
 
 pub mod figures;
 pub mod qos_cache;
+pub mod serving;
 
 pub use figures::*;
 pub use qos_cache::QosCache;
+pub use serving::{measure_serve, serve_report, serve_report_sized};
 
 /// A rendered report: title + lines (also JSON-emittable).
 #[derive(Clone, Debug, Default)]

@@ -195,7 +195,7 @@ mod tests {
     fn native_cache_memoizes_offline_wer() {
         let dims = mini_dims();
         let mut backend =
-            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
                 .unwrap();
         let asr = backend.asr_evaluator("unused", 3).unwrap();
         let mut qos = QosCache::new(backend, asr, None);
@@ -220,7 +220,7 @@ mod tests {
         // FP32 baseline and memoizes it.
         let dims = mini_dims();
         let mut backend =
-            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
                 .unwrap();
         let asr = backend.asr_evaluator("unused", 3).unwrap();
         let (mt, mt_backend) = native_mt_stack(4).unwrap();
@@ -242,7 +242,7 @@ mod tests {
     fn lazy_native_mt_defers_construction_until_bleu() {
         let dims = mini_dims();
         let mut backend =
-            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2)
+            Backend::auto_with("definitely/_no_artifacts_here", "asr_encoder_ref", dims, 5, 2, 1)
                 .unwrap();
         let asr = backend.asr_evaluator("unused", 3).unwrap();
         let mut qos = QosCache::new(backend, asr, None);

@@ -1,0 +1,172 @@
+//! `sasp report serve` — the offline latency/throughput frontier of the
+//! serving runtime.
+//!
+//! Drives synthetic utterance streams through
+//! [`crate::coordinator::serve::Server`] over the 25%-pruned INT8 native
+//! backend and measures the two scaling levers ISSUE 5 opened:
+//!
+//! - **flush policy** — fixed-batch (wait for a full artifact batch,
+//!   pad tails) vs dynamic (flush whatever is queued, exact rows);
+//! - **worker threads** — the native backend sharding each flush's
+//!   utterances across a `std::thread::scope` pool.
+//!
+//! Every point serves the same request stream (same seed, same
+//! inter-arrival gaps), so the frontier isolates the runtime knobs. The
+//! numbers are wall-clock on the current host — the report is a
+//! measurement harness, not a deterministic figure, which is why it is
+//! not part of `sasp report all`.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::serve::{Request, ServeConfig, ServeReport, Server};
+use crate::data::Bundle;
+use crate::infer::{synth_weights, ModelDims, NativeBackend};
+use crate::systolic::Quant;
+use crate::util::rng::Rng;
+
+use super::Report;
+
+/// Drive `n_requests` synthetic utterances (deterministic features and
+/// inter-arrival `gap`) through a fresh 25%-pruned INT8 native backend
+/// for `dims` under `cfg`, returning the serving report.
+pub fn measure_serve(
+    dims: &ModelDims,
+    cfg: ServeConfig,
+    n_requests: usize,
+    gap: Duration,
+) -> Result<ServeReport> {
+    let mut backend = NativeBackend::new(synth_weights(dims, 7), cfg.max_batch)?;
+    backend.prepare(dims.tile, 0.25, Quant::Int8)?;
+    let manifest = backend.manifest().clone();
+    let mut server =
+        Server::with_manifest(&manifest, &manifest.name, Bundle::default(), cfg)?;
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let (t, f) = (dims.seq_len, dims.input_dim);
+    let producer = thread::spawn(move || {
+        let mut rng = Rng::new(11);
+        for id in 0..n_requests as u64 {
+            let feat_len = t / 2 + rng.index(t - t / 2) + 1;
+            let feats: Vec<f32> =
+                (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
+            let _ = req_tx.send(Request::new(id, feats, feat_len.min(t)));
+            if !gap.is_zero() {
+                thread::sleep(gap);
+            }
+        }
+        // Dropping req_tx closes the queue and drains the server.
+    });
+    let report = server.run(&mut backend, req_rx, resp_tx)?;
+    producer.join().unwrap();
+    let served = resp_rx.try_iter().count();
+    ensure!(served == n_requests, "served {served} of {n_requests} requests");
+    Ok(report)
+}
+
+/// The frontier points every serve report measures: the single-threaded
+/// fixed-batch baseline against the dynamic flush at 1/2/4 worker
+/// threads.
+fn frontier_points(fixed_batch: usize, max_batch: usize) -> Vec<(String, ServeConfig)> {
+    let mut points = vec![(
+        format!("fixed   b={fixed_batch} threads=1"),
+        ServeConfig::fixed(fixed_batch, Duration::from_millis(2)),
+    )];
+    for threads in [1usize, 2, 4] {
+        points.push((
+            format!("dynamic b<={max_batch} threads={threads}"),
+            ServeConfig::dynamic(max_batch, threads),
+        ));
+    }
+    points
+}
+
+/// [`serve_report`] with explicit model/load parameters (the render
+/// test uses the mini model and a short stream to stay fast).
+pub fn serve_report_sized(
+    dims: &ModelDims,
+    fixed_batch: usize,
+    max_batch: usize,
+    n_requests: usize,
+    gap: Duration,
+) -> Result<Report> {
+    let mut r = Report::new(
+        "Serve — latency/throughput frontier (native, 25% SASP, INT8)",
+    );
+    r.line(format!(
+        "{n_requests} requests, ~{gap:?} inter-arrival, fixed-policy \
+         window 2ms (dynamic rows have none), seq {} x feat {}",
+        dims.seq_len, dims.input_dim
+    ));
+    r.line(format!(
+        "{:<26} {:>10} {:>10} {:>10} {:>8} {:>7}",
+        "policy", "p50", "p95", "req/s", "fill", "slack"
+    ));
+    for (label, cfg) in frontier_points(fixed_batch, max_batch) {
+        let rep = measure_serve(dims, cfg, n_requests, gap)?;
+        r.line(format!(
+            "{:<26} {:>10} {:>10} {:>10.1} {:>8.2} {:>7}",
+            label,
+            format!("{:.2?}", rep.p50),
+            format!("{:.2?}", rep.p95),
+            rep.throughput_rps,
+            rep.mean_batch_fill,
+            rep.slack_rows
+        ));
+    }
+    Ok(r)
+}
+
+/// The `sasp report serve` entry point: tiny-ASR native backend, 64
+/// requests at a ~300µs inter-arrival gap, fixed batch 4 vs dynamic
+/// flushes of up to 16.
+pub fn serve_report() -> Result<Report> {
+    serve_report_sized(
+        &ModelDims::tiny_asr(),
+        4,
+        16,
+        64,
+        Duration::from_micros(300),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::testutil::mini_dims;
+
+    #[test]
+    fn serve_report_renders_frontier() {
+        let r = serve_report_sized(
+            &mini_dims(),
+            2,
+            8,
+            6,
+            Duration::from_micros(100),
+        )
+        .unwrap();
+        let s = r.render();
+        assert!(s.contains("fixed   b=2 threads=1"), "{s}");
+        assert!(s.contains("dynamic b<=8 threads=4"), "{s}");
+        // Header + load line + 4 frontier points.
+        assert_eq!(r.lines.len(), 2 + 4, "{s}");
+    }
+
+    #[test]
+    fn measure_serve_dynamic_has_no_slack() {
+        let rep = measure_serve(
+            &mini_dims(),
+            ServeConfig::dynamic(8, 2),
+            5,
+            Duration::from_micros(50),
+        )
+        .unwrap();
+        assert_eq!(rep.n_requests, 5);
+        assert_eq!(rep.slack_rows, 0, "any-batch path executes no slack rows");
+        assert!(rep.p95 >= rep.p50);
+    }
+}

@@ -79,6 +79,14 @@ pub struct NativeBackend {
     /// Built once (tile refreshed on re-staging) so the serving hot
     /// path neither reallocates nor reassembles it per batch.
     serve_manifest: Manifest,
+    /// Worker threads [`Self::forward_batch`] shards a batch's
+    /// utterances across (1 = the single-threaded path).
+    threads: usize,
+    /// Per-worker batched runtimes (buffers + per-shard stats), reused
+    /// across calls; `fwd` stays the canonical stats accumulator.
+    shard_fwds: Vec<BatchForward>,
+    /// Per-worker output buffers, concatenated in utterance order.
+    shard_outs: Vec<Vec<f32>>,
 }
 
 impl NativeBackend {
@@ -98,6 +106,9 @@ impl NativeBackend {
             batch,
             per_channel: false,
             serve_manifest,
+            threads: 1,
+            shard_fwds: Vec::new(),
+            shard_outs: Vec::new(),
         })
     }
 
@@ -200,12 +211,99 @@ impl NativeBackend {
         Ok(plan)
     }
 
+    /// Worker threads batched execution shards a batch's utterances
+    /// across (clamped to at least 1). The default is single-threaded;
+    /// the serving loop sets this from the
+    /// [`crate::coordinator::serve::ServeConfig`] `threads` knob.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Contiguous near-equal shard lengths for `batch` utterances over
+    /// at most `threads` workers (the first `batch % workers` shards
+    /// take the extra utterance). Deterministic, so the merged shard
+    /// accounting is too.
+    pub fn shard_sizes(batch: usize, threads: usize) -> Vec<usize> {
+        let workers = threads.max(1).min(batch.max(1));
+        let base = batch / workers;
+        let extra = batch % workers;
+        (0..workers).map(|i| base + usize::from(i < extra)).collect()
+    }
+
     /// Run one padded batch of utterances through the weight-stationary
     /// engine; returns CTC log-probs `[batch, seq, vocab]` flattened.
     pub fn forward_batch(&mut self, feats: &[f32], pad: &[f32], batch: usize) -> Vec<f32> {
         let mut lp = Vec::new();
-        self.fwd.run_feats(&self.model, batch, feats, pad, &mut lp);
+        self.forward_batch_into(feats, pad, batch, &mut lp);
         lp
+    }
+
+    /// [`Self::forward_batch`] into a caller-owned buffer. With more
+    /// than one worker thread configured, the batch's utterances are
+    /// sharded contiguously across a `std::thread::scope` pool
+    /// (mirroring `Explorer::sweep`), one [`BatchForward`] runtime per
+    /// worker, reused across calls. Each utterance's log-probs are
+    /// **bitwise identical** to the single-threaded run — the batched
+    /// forward is bitwise per-utterance-exact for any batch split — and
+    /// the merged statistics charge exactly what each shard executed
+    /// ([`crate::systolic::TileTiming::batched`] at the shard's batch),
+    /// keeping the functional==analytic cross-checks valid under
+    /// sharding.
+    pub fn forward_batch_into(
+        &mut self,
+        feats: &[f32],
+        pad: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) {
+        let shards = Self::shard_sizes(batch, self.threads);
+        if shards.len() <= 1 {
+            self.fwd.run_feats(&self.model, batch, feats, pad, out);
+            return;
+        }
+        let dims = &self.model.dims;
+        let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
+        assert_eq!(feats.len(), batch * t * f, "feats must be batch x seq x input");
+        assert_eq!(pad.len(), batch * t, "pad mask must be batch x seq");
+        if self.shard_fwds.len() < shards.len() {
+            self.shard_fwds.resize_with(shards.len(), BatchForward::new);
+        }
+        if self.shard_outs.len() < shards.len() {
+            self.shard_outs.resize_with(shards.len(), Vec::new);
+        }
+        let model = &self.model;
+        std::thread::scope(|s| {
+            let mut u0 = 0usize;
+            for ((&len, fwd), sout) in shards
+                .iter()
+                .zip(self.shard_fwds.iter_mut())
+                .zip(self.shard_outs.iter_mut())
+            {
+                let sf = &feats[u0 * t * f..(u0 + len) * t * f];
+                let sp = &pad[u0 * t..(u0 + len) * t];
+                // Zero the shard's counters so the post-join merge adds
+                // exactly this call's work.
+                fwd.stats = ForwardStats::default();
+                s.spawn(move || fwd.run_feats(model, len, sf, sp, sout));
+                u0 += len;
+            }
+        });
+        out.clear();
+        out.reserve(batch * t * v);
+        // Concatenate in utterance order and merge each worker's
+        // counters into the canonical accumulator (only the shards this
+        // call used — the pools may be larger from an earlier call).
+        for (sout, fwd) in self.shard_outs[..shards.len()]
+            .iter()
+            .zip(&self.shard_fwds)
+        {
+            out.extend_from_slice(sout);
+            self.fwd.stats.add(&fwd.stats);
+        }
     }
 
     /// The serving manifest this backend satisfies — same contract shape
@@ -402,6 +500,57 @@ impl ServeBackend for NativeBackend {
             self.forward_batch(&feats, &pad, self.batch)
         };
         Ok(Tensor::from_f32(&self.serve_manifest.output_shape, &out))
+    }
+
+    fn any_batch(&self) -> bool {
+        true
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        NativeBackend::set_threads(self, threads);
+    }
+
+    fn execute_rows(&mut self, _artifact: &str, args: &[Tensor], rows: usize) -> Result<Tensor> {
+        // The dynamic-batch contract: the arguments carry exactly
+        // `rows` utterances, validated here against the model dims (the
+        // cached manifest's shapes describe the fixed-batch contract).
+        let dims = self.model.dims;
+        ensure!(rows > 0, "dynamic batch must be non-empty");
+        let t = dims.seq_len;
+        let logits = if dims.token_input {
+            ensure!(args.len() == 1, "token serving takes one 'src' argument");
+            ensure!(
+                args[0].shape == [rows, t] && args[0].dtype == DType::I32,
+                "src shape {:?}/{:?} != [{rows}, {t}] i32",
+                args[0].shape,
+                args[0].dtype
+            );
+            let src = args[0].i32s();
+            let mut logits = Vec::new();
+            self.fwd.run_tokens(&self.model, rows, &src, &mut logits);
+            logits
+        } else {
+            ensure!(args.len() == 2, "ASR serving takes feats + pad_mask");
+            ensure!(
+                args[0].shape == [rows, t, dims.input_dim] && args[0].dtype == DType::F32,
+                "feats shape {:?}/{:?} != [{rows}, {t}, {}] f32",
+                args[0].shape,
+                args[0].dtype,
+                dims.input_dim
+            );
+            ensure!(
+                args[1].shape == [rows, t] && args[1].dtype == DType::F32,
+                "pad_mask shape {:?}/{:?} != [{rows}, {t}] f32",
+                args[1].shape,
+                args[1].dtype
+            );
+            let feats = args[0].f32s();
+            let pad = args[1].f32s();
+            let mut lp = Vec::new();
+            self.forward_batch_into(&feats, &pad, rows, &mut lp);
+            lp
+        };
+        Ok(Tensor::from_f32(&[rows, t, dims.vocab], &logits))
     }
 }
 
@@ -748,5 +897,139 @@ mod tests {
         let mut forced = ForceFp32(&mut be);
         let b = eval.evaluate_with(&mut forced, 8, 0.2, Quant::Int8).unwrap();
         assert_eq!(a.qos, b.qos, "kernel INT8 vs fake-quant FP32 WER");
+    }
+
+    #[test]
+    fn shard_sizes_cover_and_balance() {
+        assert_eq!(NativeBackend::shard_sizes(5, 2), vec![3, 2]);
+        assert_eq!(NativeBackend::shard_sizes(4, 4), vec![1, 1, 1, 1]);
+        assert_eq!(NativeBackend::shard_sizes(2, 4), vec![1, 1], "never empty shards");
+        assert_eq!(NativeBackend::shard_sizes(7, 3), vec![3, 2, 2]);
+        assert_eq!(NativeBackend::shard_sizes(6, 1), vec![6]);
+        assert_eq!(NativeBackend::shard_sizes(1, 8), vec![1]);
+    }
+
+    /// A ragged batch of synthetic features over the mini model.
+    fn ragged(dims: &ModelDims, batch: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let t = dims.seq_len;
+        let feats: Vec<f32> = (0..batch * t * dims.input_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let mut pad = vec![0.0f32; batch * t];
+        for u in 0..batch {
+            let len = 1 + rng.index(t);
+            for p in pad[u * t..u * t + len].iter_mut() {
+                *p = 1.0;
+            }
+        }
+        (feats, pad)
+    }
+
+    #[test]
+    fn prop_sharded_forward_batch_bitwise_equals_single_thread() {
+        // The tentpole exactness contract: sharding a flushed batch
+        // across worker threads must not change a single output bit —
+        // ragged tails, both weight formats, any thread count.
+        crate::util::prop::check(
+            "sharded == single-thread forward_batch",
+            10,
+            |rng: &mut crate::util::rng::Rng| {
+                let dims = mini_dims();
+                let w = crate::infer::synth::synth_weights(&dims, 77);
+                let batch = rng.index(6) + 1;
+                let threads = [2usize, 3, 4, 8][rng.index(4)];
+                let quant = if rng.chance(0.5) { Quant::Fp32 } else { Quant::Int8 };
+                let (feats, pad) = ragged(&dims, batch, 100 + rng.index(1000) as u64);
+                let mut single = NativeBackend::new(w.clone(), batch).unwrap();
+                single.prepare(8, 0.4, quant).unwrap();
+                let a = single.forward_batch(&feats, &pad, batch);
+                let mut sharded = NativeBackend::new(w, batch).unwrap();
+                sharded.prepare(8, 0.4, quant).unwrap();
+                sharded.set_threads(threads);
+                let b = sharded.forward_batch(&feats, &pad, batch);
+                (
+                    a == b,
+                    format!("batch={batch} threads={threads} {quant:?}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn sharded_stats_sum_per_shard_batched_accounting() {
+        // Functional == analytic under sharding: a batch of 5 over 2
+        // workers runs as contiguous shards of 3 + 2, and the merged ff
+        // statistics must charge exactly the analytic batched cost of
+        // each shard, summed.
+        use crate::model::{GemmKind, GemmShape};
+        use crate::sysim::engine::gemm_on_array_batched;
+        use crate::sysim::SimParams;
+        use crate::systolic::ArrayConfig;
+
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 81);
+        let mut be = NativeBackend::new(w, 5).unwrap();
+        let plan = be.prepare(8, 0.5, Quant::Int8).unwrap();
+        be.set_threads(2);
+        assert_eq!(NativeBackend::shard_sizes(5, 2), vec![3, 2]);
+        let t = dims.seq_len;
+        let (feats, pad) = ragged(&dims, 5, 9);
+        be.reset_stats();
+        let lp = be.forward_batch(&feats, &pad, 5);
+        assert_eq!(lp.len(), 5 * t * dims.vocab);
+        let st = *be.stats();
+        assert_eq!(st.utterances, 5);
+
+        let cfg = ArrayConfig::square(8, Quant::Int8);
+        let p = SimParams::default();
+        let (d, f) = (dims.d_model, dims.d_ff);
+        let (mut macs, mut bus, mut cycles) = (0u64, 0u64, 0u64);
+        for i in 0..dims.n_blocks {
+            let shapes = [
+                (GemmShape { m: t, k: d, n: f, kind: GemmKind::FeedForward }, 2 * i),
+                (GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward }, 2 * i + 1),
+            ];
+            for (g, mi) in shapes {
+                for shard in [3usize, 2] {
+                    let c = gemm_on_array_batched(&g, &cfg, &p, Some(&plan.masks[mi]), shard);
+                    macs += c.counts.macs;
+                    bus += c.counts.bus_words;
+                    cycles += c.counts.array_busy_cycles;
+                }
+            }
+        }
+        assert_eq!(st.ff.timing.macs as u64, macs);
+        assert_eq!(st.ff.timing.total_words() as u64, bus);
+        assert_eq!(st.ff.timing.array_cycles as u64, cycles);
+    }
+
+    #[test]
+    fn execute_rows_serves_exact_dynamic_batches() {
+        // The any-batch serving contract: execute_rows runs exactly the
+        // rows it is handed, bitwise equal to forward_batch, and
+        // rejects mis-sized arguments.
+        use crate::data::DType;
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 83);
+        let mut be = NativeBackend::new(w, 4).unwrap();
+        assert!(ServeBackend::any_batch(&be));
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        let (feats, pad) = ragged(&dims, 3, 15);
+        let ft = Tensor::from_f32(&[3, t, f], &feats);
+        let pt = Tensor::from_f32(&[3, t], &pad);
+        let out = be
+            .execute_rows("native_asr_encoder", &[ft.clone(), pt.clone()], 3)
+            .unwrap();
+        assert_eq!(out.shape, vec![3, t, dims.vocab]);
+        assert_eq!(be.stats().utterances, 3, "exactly the queued rows ran");
+        let want = be.forward_batch(&feats, &pad, 3);
+        assert_eq!(out.f32s(), want, "bitwise equal to forward_batch");
+        // Row-count mismatch is rejected.
+        assert!(be.execute_rows("native_asr_encoder", &[ft, pt], 2).is_err());
+        // Wrong dtype is rejected.
+        let bad = Tensor::zeros(&[3, t, f], DType::I32);
+        let pt2 = Tensor::zeros(&[3, t], DType::F32);
+        assert!(be.execute_rows("native_asr_encoder", &[bad, pt2], 3).is_err());
     }
 }

@@ -418,6 +418,19 @@ pub struct ForwardStats {
     pub utterances: usize,
 }
 
+impl ForwardStats {
+    /// Accumulate another run's counters — the shard-merge of the
+    /// thread-parallel serving path (each worker's [`TileStats`] are
+    /// summed after the scope joins, so the merged accounting is
+    /// deterministic regardless of thread completion order).
+    pub fn add(&mut self, o: &ForwardStats) {
+        self.ff.add(&o.ff);
+        self.attn.add(&o.attn);
+        self.other.add(&o.other);
+        self.utterances += o.utterances;
+    }
+}
+
 /// The forward-pass runtime: owns every intermediate buffer, so steady
 /// state (one utterance after another) performs no allocation.
 pub struct Forward {
