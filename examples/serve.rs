@@ -12,6 +12,12 @@
 //! executes exactly the queued utterances) sharded across worker
 //! threads.
 //!
+//! The queue is overload-safe (ISSUE 6): admission is bounded with
+//! deadline-aware shedding, every request carries a deadline, and on the
+//! native path a graceful-degradation ladder steps the operating point
+//! to a cheaper pruning rate under sustained queue pressure, recovering
+//! hysteretically once the backlog drains.
+//!
 //! Run: `cargo run --release --example serve [artifacts] [n_requests] [threads]`.
 
 use std::sync::mpsc;
@@ -20,6 +26,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use sasp::coordinator::resilience::{
+    LadderConfig, OperatingPoint, ResilienceConfig, ShedPolicy,
+};
 use sasp::coordinator::serve::{Backend, Request, ServeBackend, ServeConfig, Server};
 use sasp::systolic::Quant;
 use sasp::util::rng::Rng;
@@ -73,6 +82,20 @@ fn main() -> Result<()> {
         cfg.flush, cfg.max_batch, cfg.threads
     );
     let mut server = Server::with_manifest(&manifest, &artifact, params, cfg)?;
+    // Overload safety: bound the queue at 16x the flush size and shed
+    // the least-viable request first; the native backend additionally
+    // arms the degradation ladder (25% -> 50% -> 75% pruning, INT8) so
+    // sustained pressure trades a little QoS for queue drain speed.
+    let mut res =
+        ResilienceConfig::bounded(16 * server.cfg.max_batch, ShedPolicy::DeadlineAware);
+    if backend.is_native() {
+        res = res.with_ladder(LadderConfig::new(vec![
+            OperatingPoint::new(0.25, Quant::Int8),
+            OperatingPoint::new(0.5, Quant::Int8),
+            OperatingPoint::new(0.75, Quant::Int8),
+        ]));
+    }
+    server.set_resilience(res);
     drive(&mut server, &mut backend, t, f, n_requests)?;
 
     if let Some(nb) = backend.native_mut() {
@@ -108,13 +131,20 @@ fn drive(
     let (req_tx, req_rx) = mpsc::channel::<Request>();
     let (resp_tx, resp_rx) = mpsc::channel();
 
-    // Producer: synthetic utterances, ~2 ms mean inter-arrival.
+    // Producer: synthetic utterances, ~2 ms mean inter-arrival, each
+    // with a generous 250 ms deadline (stamped at creation — the
+    // admission queue sheds or expires whatever cannot make it).
     let producer = thread::spawn(move || {
         let mut rng = Rng::new(42);
         for id in 0..n_requests as u64 {
             let feat_len = rng.index(t - 20) + 20;
             let feats: Vec<f32> = (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
-            let _ = req_tx.send(Request::new(id, feats, feat_len));
+            let _ = req_tx.send(Request::with_deadline(
+                id,
+                feats,
+                feat_len,
+                Duration::from_millis(250),
+            ));
             thread::sleep(Duration::from_micros(500 + rng.index(3000) as u64));
         }
         // Dropping req_tx closes the queue and drains the server.
@@ -135,7 +165,32 @@ fn drive(
         report.throughput_rps,
         report.slack_rows
     );
-    assert_eq!(report.n_requests, n_requests);
+    println!(
+        "overload: {} on-time ({:.1} goodput req/s) | shed {} expired {} failed {} \
+         | retries {} breaker trips {} | ladder down {} up {}",
+        report.on_time,
+        report.goodput_rps,
+        report.shed,
+        report.expired,
+        report.failed,
+        report.retries,
+        report.breaker_trips,
+        report.degrade_steps,
+        report.recover_steps
+    );
+    for o in &report.outcomes {
+        println!(
+            "  outcome {:?}: {} requests, p50 {:?} p95 {:?} p99 {:?}",
+            o.outcome, o.count, o.p50, o.p95, o.p99
+        );
+    }
+    // Every request lands in exactly one outcome bucket; exactly one
+    // response per request either way.
+    assert_eq!(responses.len(), n_requests);
+    assert_eq!(
+        report.n_requests + report.shed + report.expired + report.invalid + report.failed,
+        n_requests
+    );
     println!("serve OK");
     Ok(())
 }

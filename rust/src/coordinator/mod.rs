@@ -3,7 +3,14 @@
 //! exercises the compiled artifact as an edge deployment would.
 
 pub mod explorer;
+pub mod resilience;
 pub mod serve;
 
 pub use explorer::{DesignPoint, Explorer, RateSearch, SweepPoint};
-pub use serve::{Backend, FlushPolicy, ServeBackend, ServeConfig, ServeReport, Server};
+pub use resilience::{
+    AdmissionConfig, BreakerConfig, CircuitBreaker, FaultCounts, FaultInjector, FaultKind,
+    FaultPlan, LadderConfig, OperatingPoint, ResilienceConfig, RetryPolicy, ShedPolicy,
+};
+pub use serve::{
+    Backend, FlushPolicy, Outcome, OutcomeLatency, ServeBackend, ServeConfig, ServeReport, Server,
+};

@@ -1,0 +1,534 @@
+//! Overload- and fault-tolerance primitives for the serving loop:
+//! bounded admission with shedding policies, per-request deadlines,
+//! deterministic fault injection, bounded retry with a circuit breaker,
+//! and the graceful-degradation ladder over pruning/quant operating
+//! points.
+//!
+//! The paper's co-design loop measures a QoS/throughput frontier; this
+//! module is how the serving runtime *moves along it under stress*
+//! instead of falling over: when the queue stays above a watermark or
+//! the backend keeps failing, the native engine re-stages at a cheaper
+//! prepared operating point (higher pruning rate and/or INT8) from a
+//! preconfigured ladder, and recovers hysteretically once pressure
+//! drops. Every degraded step is bitwise identical to a standalone run
+//! at that operating point — re-staging always starts from the master
+//! weights (see [`crate::infer::NativeBackend::prepare`]), so the
+//! ladder adds no new numerics, only scheduling.
+//!
+//! Everything here is deterministic by construction: the
+//! [`FaultInjector`] draws from the crate's seeded xoshiro256** RNG (or
+//! replays an explicit script), and the admission/breaker/ladder state
+//! machines are driven purely by queue contents and flush outcomes, so
+//! a fixed seed + fault schedule reproduces shed/expired/retried/
+//! degraded counts exactly.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::serve::ServeBackend;
+use crate::data::Tensor;
+use crate::systolic::Quant;
+use crate::util::rng::Rng;
+
+/// What a bounded admission queue does with the overflow request when
+/// it is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Shed the incoming request; queued requests keep their slot.
+    RejectNew,
+    /// Shed the oldest queued request and admit the incoming one
+    /// (tail-drop of stale work — the queue always holds the freshest
+    /// requests).
+    DropOldest,
+    /// Shed the candidate (queued or incoming) with the **earliest**
+    /// deadline — the one least likely to complete in time — breaking
+    /// ties by admission order (oldest first). Requests without a
+    /// deadline are infinitely patient and are only shed among
+    /// themselves (oldest first), which degenerates to [`DropOldest`].
+    DeadlineAware,
+}
+
+/// Bounded admission queue configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Largest number of queued (admitted, not yet flushed) requests.
+    /// Capacity 0 sheds every request — the hard-overload drain valve.
+    pub capacity: usize,
+    pub policy: ShedPolicy,
+}
+
+/// Bounded retry with exponential backoff for failed flushes.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Re-executions after the first failed attempt (0 = no retry).
+    pub max_retries: usize,
+    /// Base backoff slept before retry `k` as `backoff * 2^k`.
+    /// [`Duration::ZERO`] (the default) never sleeps — what the
+    /// deterministic scenario tests use.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff: Duration::ZERO }
+    }
+}
+
+/// Circuit-breaker configuration: trip after `trip_after` consecutive
+/// flush failures (each counted after its retries are exhausted); while
+/// open, `open_flushes` flushes fail fast without touching the backend,
+/// then the breaker half-opens and the next flush probes it normally.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    pub trip_after: usize,
+    pub open_flushes: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { trip_after: 3, open_flushes: 2 }
+    }
+}
+
+/// Consecutive-failure circuit breaker over flush outcomes.
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    consecutive: usize,
+    open_remaining: usize,
+    /// Cumulative trips since construction.
+    pub trips: usize,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        CircuitBreaker { cfg, consecutive: 0, open_remaining: 0, trips: 0 }
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.open_remaining > 0
+    }
+
+    /// Consume one fail-fast flush of the open window.
+    pub fn fail_fast(&mut self) {
+        self.open_remaining = self.open_remaining.saturating_sub(1);
+    }
+
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+    }
+
+    /// Record one flush failure (after retries). Returns `true` when
+    /// this failure trips the breaker open.
+    pub fn on_failure(&mut self) -> bool {
+        self.consecutive += 1;
+        if self.consecutive >= self.cfg.trip_after {
+            self.consecutive = 0;
+            self.open_remaining = self.cfg.open_flushes;
+            self.trips += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Close immediately — used when a trip is absorbed by a
+    /// degradation-ladder step instead of an open window.
+    pub fn close(&mut self) {
+        self.open_remaining = 0;
+        self.consecutive = 0;
+    }
+}
+
+/// One prepared operating point of the degradation ladder: the
+/// (tile, pruning rate, weight format) configuration
+/// [`crate::infer::NativeBackend::prepare`] re-stages from the master
+/// weights.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// Systolic tile; `None` keeps the currently staged tile.
+    pub tile: Option<usize>,
+    /// Structured pruning rate handed to the global L1 ranking.
+    pub rate: f64,
+    pub quant: Quant,
+}
+
+impl OperatingPoint {
+    pub fn new(rate: f64, quant: Quant) -> Self {
+        OperatingPoint { tile: None, rate, quant }
+    }
+}
+
+/// Graceful-degradation ladder: `points[0]` is the nominal operating
+/// point, later entries are successively cheaper (higher rate / INT8).
+/// The serving loop steps **down** (cheaper) after `patience`
+/// consecutive flushes with queue pressure `>= high_watermark` or when
+/// the circuit breaker trips, and steps **up** (recovers) after
+/// `recover_after` consecutive successful flushes with pressure
+/// `<= low_watermark` — the two watermarks plus the streak lengths are
+/// the hysteresis that keeps it from oscillating.
+#[derive(Clone, Debug)]
+pub struct LadderConfig {
+    pub points: Vec<OperatingPoint>,
+    /// Queue depth (at flush time) at or above which pressure counts
+    /// toward a step down.
+    pub high_watermark: usize,
+    /// Queue depth at or below which calm counts toward a step up.
+    pub low_watermark: usize,
+    /// Consecutive high-pressure flushes before stepping down.
+    pub patience: usize,
+    /// Consecutive calm successful flushes before stepping up.
+    pub recover_after: usize,
+}
+
+impl LadderConfig {
+    /// A ladder over `points` with conservative default hysteresis.
+    pub fn new(points: Vec<OperatingPoint>) -> Self {
+        LadderConfig {
+            points,
+            high_watermark: 8,
+            low_watermark: 1,
+            patience: 2,
+            recover_after: 4,
+        }
+    }
+}
+
+/// The full resilience configuration the serving loop takes; absent
+/// (`Server` default) the loop behaves exactly as before this module
+/// existed.
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    pub admission: AdmissionConfig,
+    pub retry: RetryPolicy,
+    pub breaker: BreakerConfig,
+    pub ladder: Option<LadderConfig>,
+}
+
+impl ResilienceConfig {
+    /// Bounded admission at `capacity` under `policy`, default retry
+    /// and breaker, no ladder.
+    pub fn bounded(capacity: usize, policy: ShedPolicy) -> Self {
+        ResilienceConfig {
+            admission: AdmissionConfig { capacity, policy },
+            retry: RetryPolicy::default(),
+            breaker: BreakerConfig::default(),
+            ladder: None,
+        }
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    pub fn with_breaker(mut self, breaker: BreakerConfig) -> Self {
+        self.breaker = breaker;
+        self
+    }
+
+    pub fn with_ladder(mut self, ladder: LadderConfig) -> Self {
+        self.ladder = Some(ladder);
+        self
+    }
+}
+
+/// One injected fault, drawn per backend call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// No fault: the call reaches the inner backend untouched.
+    None,
+    /// The call fails immediately with an error (a transient backend
+    /// fault the retry policy is meant to absorb).
+    Transient,
+    /// The call sleeps [`FaultInjector::spike`] first, then proceeds —
+    /// a latency spike, not a failure.
+    Spike,
+    /// The call sleeps [`FaultInjector::hang`] and then fails — a hang
+    /// bounded by the caller's patience (modelled as a timeout error).
+    Hang,
+}
+
+/// Where the injector's fault sequence comes from.
+#[derive(Clone, Debug)]
+pub enum FaultPlan {
+    /// Draw per call from the crate's seeded xoshiro256**: one `f64`
+    /// draw per call, faulting `Transient`/`Spike`/`Hang` with the
+    /// given probabilities (cumulative thresholds, so the same seed
+    /// always yields the same fault sequence regardless of which
+    /// probabilities are zero).
+    Seeded { seed: u64, p_transient: f64, p_spike: f64, p_hang: f64 },
+    /// Replay an explicit per-call schedule; calls beyond the end are
+    /// fault-free.
+    Script(Vec<FaultKind>),
+}
+
+/// Cumulative injector accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Backend calls gated (each consumed one draw/script slot).
+    pub calls: usize,
+    pub transient: usize,
+    pub spikes: usize,
+    pub hangs: usize,
+}
+
+/// Deterministic fault-injection wrapper over any [`ServeBackend`]:
+/// every execute-path call first draws a [`FaultKind`] from the plan
+/// and applies it; pass-through calls (`set_threads`,
+/// `set_operating_point`, `any_batch`) are never faulted, so the
+/// degradation ladder stays usable while the data path misbehaves.
+pub struct FaultInjector<B: ServeBackend> {
+    inner: B,
+    plan: FaultPlan,
+    rng: Rng,
+    cursor: usize,
+    /// Sleep applied by [`FaultKind::Spike`] (default zero — the
+    /// deterministic tests keep wall-clock out of the loop).
+    pub spike: Duration,
+    /// Sleep applied by [`FaultKind::Hang`] before the timeout error.
+    pub hang: Duration,
+    counts: FaultCounts,
+}
+
+impl<B: ServeBackend> FaultInjector<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        let seed = match &plan {
+            FaultPlan::Seeded { seed, .. } => *seed,
+            FaultPlan::Script(_) => 0,
+        };
+        FaultInjector {
+            inner,
+            plan,
+            rng: Rng::new(seed),
+            cursor: 0,
+            spike: Duration::ZERO,
+            hang: Duration::ZERO,
+            counts: FaultCounts::default(),
+        }
+    }
+
+    pub fn counts(&self) -> FaultCounts {
+        self.counts
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+
+    fn draw(&mut self) -> FaultKind {
+        self.counts.calls += 1;
+        let kind = match &self.plan {
+            FaultPlan::Script(s) => {
+                let k = s.get(self.cursor).copied().unwrap_or(FaultKind::None);
+                self.cursor += 1;
+                k
+            }
+            FaultPlan::Seeded { p_transient, p_spike, p_hang, .. } => {
+                let u = self.rng.f64();
+                if u < *p_transient {
+                    FaultKind::Transient
+                } else if u < p_transient + p_spike {
+                    FaultKind::Spike
+                } else if u < p_transient + p_spike + p_hang {
+                    FaultKind::Hang
+                } else {
+                    FaultKind::None
+                }
+            }
+        };
+        match kind {
+            FaultKind::None => {}
+            FaultKind::Transient => self.counts.transient += 1,
+            FaultKind::Spike => self.counts.spikes += 1,
+            FaultKind::Hang => self.counts.hangs += 1,
+        }
+        kind
+    }
+
+    /// Draw and apply one fault; `Ok(())` means the call proceeds.
+    fn gate(&mut self) -> Result<()> {
+        match self.draw() {
+            FaultKind::None => Ok(()),
+            FaultKind::Spike => {
+                if !self.spike.is_zero() {
+                    std::thread::sleep(self.spike);
+                }
+                Ok(())
+            }
+            FaultKind::Transient => bail!("injected transient backend fault"),
+            FaultKind::Hang => {
+                if !self.hang.is_zero() {
+                    std::thread::sleep(self.hang);
+                }
+                bail!("injected backend hang (request timed out)")
+            }
+        }
+    }
+}
+
+impl<B: ServeBackend> ServeBackend for FaultInjector<B> {
+    fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor> {
+        self.gate()?;
+        self.inner.execute(artifact, args)
+    }
+
+    fn any_batch(&self) -> bool {
+        self.inner.any_batch()
+    }
+
+    fn execute_rows(&mut self, artifact: &str, args: &[Tensor], rows: usize) -> Result<Tensor> {
+        self.gate()?;
+        self.inner.execute_rows(artifact, args, rows)
+    }
+
+    fn execute_rows_partial(
+        &mut self,
+        artifact: &str,
+        args: &[Tensor],
+        rows: usize,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        self.gate()?;
+        self.inner.execute_rows_partial(artifact, args, rows)
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
+
+    fn set_operating_point(&mut self, point: &OperatingPoint) -> Result<bool> {
+        self.inner.set_operating_point(point)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal inner backend: counts calls, returns a 1-element tensor.
+    struct CountingStub {
+        executed: usize,
+    }
+
+    impl ServeBackend for CountingStub {
+        fn execute(&mut self, _artifact: &str, _args: &[Tensor]) -> Result<Tensor> {
+            self.executed += 1;
+            Ok(Tensor::from_f32(&[1], &[1.0]))
+        }
+    }
+
+    fn call(inj: &mut FaultInjector<CountingStub>) -> Result<Tensor> {
+        inj.execute("x", &[])
+    }
+
+    #[test]
+    fn scripted_plan_replays_exactly() {
+        let plan = FaultPlan::Script(vec![
+            FaultKind::Transient,
+            FaultKind::None,
+            FaultKind::Hang,
+            FaultKind::Spike,
+        ]);
+        let mut inj = FaultInjector::new(CountingStub { executed: 0 }, plan);
+        assert!(call(&mut inj).is_err(), "scripted transient");
+        assert!(call(&mut inj).is_ok());
+        assert!(call(&mut inj).is_err(), "scripted hang");
+        assert!(call(&mut inj).is_ok(), "spike proceeds after the sleep");
+        // Beyond the script: fault-free.
+        assert!(call(&mut inj).is_ok());
+        assert_eq!(
+            inj.counts(),
+            FaultCounts { calls: 5, transient: 1, spikes: 1, hangs: 1 }
+        );
+        assert_eq!(inj.inner().executed, 3, "faulted calls never reach the inner backend");
+    }
+
+    #[test]
+    fn seeded_plan_is_reproducible() {
+        let plan = |seed| FaultPlan::Seeded {
+            seed,
+            p_transient: 0.3,
+            p_spike: 0.1,
+            p_hang: 0.1,
+        };
+        let run = |seed| {
+            let mut inj = FaultInjector::new(CountingStub { executed: 0 }, plan(seed));
+            let oks: Vec<bool> = (0..64).map(|_| call(&mut inj).is_ok()).collect();
+            (oks, inj.counts())
+        };
+        let (a, ca) = run(99);
+        let (b, cb) = run(99);
+        assert_eq!(a, b, "same seed, same fault sequence");
+        assert_eq!(ca, cb);
+        assert!(ca.transient + ca.spikes + ca.hangs > 0, "p=0.5 over 64 calls must fault");
+        let (c, _) = run(100);
+        assert_ne!(a, c, "different seed, different sequence");
+    }
+
+    #[test]
+    fn seeded_zero_probabilities_never_fault() {
+        let mut inj = FaultInjector::new(
+            CountingStub { executed: 0 },
+            FaultPlan::Seeded { seed: 5, p_transient: 0.0, p_spike: 0.0, p_hang: 0.0 },
+        );
+        for _ in 0..32 {
+            assert!(call(&mut inj).is_ok());
+        }
+        assert_eq!(inj.counts().transient, 0);
+        assert_eq!(inj.inner().executed, 32);
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_half_opens() {
+        let mut br = CircuitBreaker::new(BreakerConfig { trip_after: 3, open_flushes: 2 });
+        assert!(!br.on_failure());
+        assert!(!br.on_failure());
+        br.on_success(); // streak resets
+        assert!(!br.on_failure());
+        assert!(!br.on_failure());
+        assert!(br.on_failure(), "third consecutive failure trips");
+        assert_eq!(br.trips, 1);
+        assert!(br.is_open());
+        br.fail_fast();
+        assert!(br.is_open());
+        br.fail_fast();
+        assert!(!br.is_open(), "open window exhausted: half-open");
+        // A fresh trip needs a fresh streak.
+        assert!(!br.on_failure());
+    }
+
+    #[test]
+    fn breaker_close_absorbs_trip() {
+        let mut br = CircuitBreaker::new(BreakerConfig { trip_after: 1, open_flushes: 5 });
+        assert!(br.on_failure());
+        assert!(br.is_open());
+        br.close(); // the ladder stepped down instead
+        assert!(!br.is_open());
+        assert_eq!(br.trips, 1, "the trip still counts");
+    }
+
+    #[test]
+    fn resilience_config_builders() {
+        let r = ResilienceConfig::bounded(4, ShedPolicy::DeadlineAware)
+            .with_retry(RetryPolicy { max_retries: 1, backoff: Duration::from_micros(10) })
+            .with_breaker(BreakerConfig { trip_after: 2, open_flushes: 1 })
+            .with_ladder(LadderConfig::new(vec![
+                OperatingPoint::new(0.25, Quant::Int8),
+                OperatingPoint::new(0.75, Quant::Int8),
+            ]));
+        assert_eq!(r.admission.capacity, 4);
+        assert_eq!(r.admission.policy, ShedPolicy::DeadlineAware);
+        assert_eq!(r.retry.max_retries, 1);
+        assert_eq!(r.breaker.trip_after, 2);
+        assert_eq!(r.ladder.as_ref().unwrap().points.len(), 2);
+    }
+}

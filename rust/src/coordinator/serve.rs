@@ -37,12 +37,14 @@
 //! the [`ServeBackend`] tensor boundary (the contract PJRT needs);
 //! bypassing it for in-process callers is a known follow-on.
 
+use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
+use super::resilience::{CircuitBreaker, OperatingPoint, ResilienceConfig, ShedPolicy};
 use crate::data::{load_bundle, Bundle, DType, Tensor};
 use crate::infer::{synth_testset, synth_weights, ModelDims, NativeBackend};
 use crate::qos::decode::ctc_greedy;
@@ -74,9 +76,33 @@ pub trait ServeBackend {
         self.execute(artifact, args)
     }
 
+    /// [`Self::execute_rows`] with per-row fault containment: returns
+    /// the output plus the indices of rows whose execution failed (a
+    /// contained worker panic). Failed rows carry zeroed output —
+    /// callers must map them to failed responses, never decode them.
+    /// The default delegates to [`Self::execute_rows`] with no
+    /// containment (any failure fails the whole call).
+    fn execute_rows_partial(
+        &mut self,
+        artifact: &str,
+        args: &[Tensor],
+        rows: usize,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        Ok((self.execute_rows(artifact, args, rows)?, Vec::new()))
+    }
+
     /// Hint: shard batched execution across `threads` worker threads.
     /// Backends without a thread pool ignore it.
     fn set_threads(&mut self, _threads: usize) {}
+
+    /// Switch to a prepared operating point of the degradation ladder.
+    /// Returns `Ok(true)` when the backend re-staged itself at `point`
+    /// (the native engine), `Ok(false)` when it cannot switch (PJRT
+    /// artifacts are compiled for one configuration; stubs) — the
+    /// serving loop then leaves the ladder inert rather than erroring.
+    fn set_operating_point(&mut self, _point: &OperatingPoint) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 impl ServeBackend for Engine {
@@ -258,9 +284,34 @@ impl ServeBackend for Backend {
         }
     }
 
+    fn execute_rows_partial(
+        &mut self,
+        artifact: &str,
+        args: &[Tensor],
+        rows: usize,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        match self {
+            Backend::Pjrt { .. } => anyhow::bail!(
+                "PJRT backend is fixed-batch; pad to the artifact batch and use execute()"
+            ),
+            Backend::Native(nb) => {
+                ServeBackend::execute_rows_partial(nb.as_mut(), artifact, args, rows)
+            }
+        }
+    }
+
     fn set_threads(&mut self, threads: usize) {
         if let Backend::Native(nb) = self {
             nb.set_threads(threads);
+        }
+    }
+
+    fn set_operating_point(&mut self, point: &OperatingPoint) -> Result<bool> {
+        match self {
+            // A PJRT artifact is compiled at one configuration — the
+            // ladder has nothing to switch.
+            Backend::Pjrt { .. } => Ok(false),
+            Backend::Native(nb) => ServeBackend::set_operating_point(nb.as_mut(), point),
         }
     }
 }
@@ -361,13 +412,52 @@ pub struct Request {
     /// so time spent queued in the channel while a flush executes —
     /// the very mechanism of dynamic batching — counts.
     pub arrived: Instant,
+    /// Completion deadline, stamped at creation
+    /// ([`Request::with_deadline`]). A request past its deadline is
+    /// expired before execution — it never reaches the backend — and
+    /// an on-time completion is what goodput counts. `None` = the
+    /// request is infinitely patient.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
-    /// Build a request stamped with the current instant.
+    /// Build a request stamped with the current instant, no deadline.
     pub fn new(id: u64, feats: Vec<f32>, feat_len: usize) -> Request {
-        Request { id, feats, feat_len, arrived: Instant::now() }
+        Request { id, feats, feat_len, arrived: Instant::now(), deadline: None }
     }
+
+    /// [`Request::new`] with a completion deadline `ttl` from now.
+    /// `Duration::ZERO` is born expired — what the deterministic
+    /// expiry tests use.
+    pub fn with_deadline(id: u64, feats: Vec<f32>, feat_len: usize, ttl: Duration) -> Request {
+        let now = Instant::now();
+        Request { id, feats, feat_len, arrived: now, deadline: Some(now + ttl) }
+    }
+
+    /// Whether the deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// How a request left the system. Every request gets exactly one
+/// response, whatever its fate — the overload contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Outcome {
+    /// Served: `tokens` holds the decoded hypothesis.
+    Ok,
+    /// Shed by the bounded admission queue (never executed).
+    Shed,
+    /// Deadline passed before execution (never reached the backend).
+    Expired,
+    /// Rejected at admission: the request violates the manifest
+    /// contract (`feat_len` beyond the model sequence length, or a
+    /// `feats` buffer whose length disagrees with the manifest shape).
+    Invalid,
+    /// Execution failed after retries (or the circuit breaker was
+    /// open, or the request's rows were lost to a contained worker
+    /// panic).
+    Failed,
 }
 
 /// One response.
@@ -376,21 +466,59 @@ pub struct Response {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub latency: Duration,
+    pub outcome: Outcome,
+}
+
+/// Nearest-rank latency percentiles of one outcome class.
+#[derive(Clone, Debug)]
+pub struct OutcomeLatency {
+    pub outcome: Outcome,
+    pub count: usize,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
 }
 
 /// Latency/throughput summary of a serving run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ServeReport {
+    /// Requests served successfully ([`Outcome::Ok`]).
     pub n_requests: usize,
+    /// Flushes that reached the backend (including failed attempts;
+    /// fail-fast breaker flushes never do and are not counted).
     pub n_batches: usize,
     /// Nearest-rank latency percentiles over the served requests.
     pub p50: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub mean_batch_fill: f64,
     pub throughput_rps: f64,
     /// Zeroed padding rows executed on fixed-shape backends (slack
     /// work the any-batch path avoids entirely).
     pub slack_rows: usize,
+    /// Requests shed by the bounded admission queue.
+    pub shed: usize,
+    /// Requests expired before execution.
+    pub expired: usize,
+    /// Requests rejected at admission as contract-invalid.
+    pub invalid: usize,
+    /// Requests whose execution failed after retries.
+    pub failed: usize,
+    /// Flush re-executions performed by the retry policy.
+    pub retries: usize,
+    /// Circuit-breaker trips.
+    pub breaker_trips: usize,
+    /// Degradation-ladder steps taken toward cheaper operating points.
+    pub degrade_steps: usize,
+    /// Hysteretic recovery steps back toward the nominal point.
+    pub recover_steps: usize,
+    /// Served responses that completed before their deadline
+    /// (deadline-free requests count as on time).
+    pub on_time: usize,
+    /// On-time completions per second — the overload figure of merit.
+    pub goodput_rps: f64,
+    /// Per-outcome latency percentiles (only outcomes that occurred).
+    pub outcomes: Vec<OutcomeLatency>,
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample list: the
@@ -404,11 +532,141 @@ fn percentile(sorted: &[Duration], p: usize) -> Duration {
     sorted[rank - 1]
 }
 
+/// One admitted request plus its admission sequence number — the
+/// deterministic tie-breaker for deadline-aware shedding.
+struct Queued {
+    req: Request,
+    seq: u64,
+}
+
+/// Whether `a` should be shed before `b` under
+/// [`ShedPolicy::DeadlineAware`]: earliest deadline first, admission
+/// order on ties; deadline-free requests are infinitely patient.
+fn sheds_before(a: &Queued, b: &Queued) -> bool {
+    match (a.req.deadline, b.req.deadline) {
+        (Some(x), Some(y)) => (x, a.seq) < (y, b.seq),
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        (None, None) => a.seq < b.seq,
+    }
+}
+
+/// Response accounting shared by every exit path: each request gets
+/// exactly one response, its latency filed under its outcome.
+struct Tally {
+    tx: mpsc::Sender<Response>,
+    /// Latency samples indexed by [`Tally::slot`].
+    lats: [Vec<Duration>; 5],
+    on_time: usize,
+}
+
+impl Tally {
+    fn new(tx: mpsc::Sender<Response>) -> Tally {
+        Tally {
+            tx,
+            lats: [Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+            on_time: 0,
+        }
+    }
+
+    fn slot(outcome: Outcome) -> usize {
+        match outcome {
+            Outcome::Ok => 0,
+            Outcome::Shed => 1,
+            Outcome::Expired => 2,
+            Outcome::Invalid => 3,
+            Outcome::Failed => 4,
+        }
+    }
+
+    /// Build + account + send a response for a request that never
+    /// produced tokens (shed/expired/invalid/failed paths).
+    fn finish(&mut self, req: &Request, outcome: Outcome) {
+        let resp = Response {
+            id: req.id,
+            tokens: Vec::new(),
+            latency: req.arrived.elapsed(),
+            outcome,
+        };
+        self.record(req, resp);
+    }
+
+    /// Account + send an already-built response.
+    fn record(&mut self, req: &Request, resp: Response) {
+        if resp.outcome == Outcome::Ok && !req.expired(Instant::now()) {
+            self.on_time += 1;
+        }
+        self.lats[Self::slot(resp.outcome)].push(resp.latency);
+        let _ = self.tx.send(resp);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn report(
+        mut self,
+        fills: &[usize],
+        slack_rows: usize,
+        retries: usize,
+        breaker_trips: usize,
+        degrade_steps: usize,
+        recover_steps: usize,
+        total_secs: f64,
+    ) -> ServeReport {
+        for l in &mut self.lats {
+            l.sort_unstable();
+        }
+        const ORDER: [Outcome; 5] = [
+            Outcome::Ok,
+            Outcome::Shed,
+            Outcome::Expired,
+            Outcome::Invalid,
+            Outcome::Failed,
+        ];
+        let outcomes: Vec<OutcomeLatency> = ORDER
+            .iter()
+            .zip(&self.lats)
+            .filter(|(_, l)| !l.is_empty())
+            .map(|(&outcome, l)| OutcomeLatency {
+                outcome,
+                count: l.len(),
+                p50: percentile(l, 50),
+                p95: percentile(l, 95),
+                p99: percentile(l, 99),
+            })
+            .collect();
+        let ok = &self.lats[0];
+        let total = total_secs.max(1e-9);
+        ServeReport {
+            n_requests: ok.len(),
+            n_batches: fills.len(),
+            p50: percentile(ok, 50),
+            p95: percentile(ok, 95),
+            p99: percentile(ok, 99),
+            mean_batch_fill: fills.iter().sum::<usize>() as f64 / fills.len().max(1) as f64,
+            throughput_rps: ok.len() as f64 / total,
+            slack_rows,
+            shed: self.lats[1].len(),
+            expired: self.lats[2].len(),
+            invalid: self.lats[3].len(),
+            failed: self.lats[4].len(),
+            retries,
+            breaker_trips,
+            degrade_steps,
+            recover_steps,
+            on_time: self.on_time,
+            goodput_rps: self.on_time as f64 / total,
+            outcomes,
+        }
+    }
+}
+
 /// Single-threaded synchronous server core: batching logic + execution.
 /// (The `serve` example wraps it with a producer thread; keeping the core
 /// synchronous makes it deterministic and unit-testable.)
 pub struct Server {
     pub cfg: ServeConfig,
+    /// Overload/fault behavior; `None` keeps the pre-resilience
+    /// contract (unbounded queue, no retry, backend errors abort).
+    resilience: Option<ResilienceConfig>,
     artifact: String,
     /// Prebuilt fixed-shape positional arguments (the artifact batch);
     /// only the `feats`/`pad_mask` slots are rewritten (in place) per
@@ -497,6 +755,7 @@ impl Server {
         }
         Ok(Server {
             cfg,
+            resilience: None,
             artifact: artifact.to_string(),
             args,
             dyn_args: vec![
@@ -513,6 +772,78 @@ impl Server {
         })
     }
 
+    /// Enable overload/fault resilience: bounded admission with load
+    /// shedding, bounded retry, a circuit breaker, and (optionally) the
+    /// graceful-degradation ladder.
+    pub fn set_resilience(&mut self, res: ResilienceConfig) {
+        self.resilience = Some(res);
+    }
+
+    /// Validate + admit one incoming request, shedding per policy when
+    /// the bounded queue is full. Invalid requests (feat_len beyond the
+    /// manifest sequence length, or a feats payload whose length
+    /// disagrees with the manifest shape) get an error response here
+    /// instead of panicking inside the batch kernels.
+    fn admit(
+        &self,
+        req: Request,
+        pending: &mut VecDeque<Queued>,
+        seq: &mut u64,
+        tally: &mut Tally,
+    ) {
+        if req.feat_len > self.seq_len || req.feats.len() != self.seq_len * self.feat_dim {
+            tally.finish(&req, Outcome::Invalid);
+            return;
+        }
+        let q = Queued { req, seq: *seq };
+        *seq += 1;
+        let Some(adm) = self.resilience.as_ref().map(|r| r.admission) else {
+            pending.push_back(q);
+            return;
+        };
+        if pending.len() < adm.capacity {
+            pending.push_back(q);
+            return;
+        }
+        match adm.policy {
+            ShedPolicy::RejectNew => tally.finish(&q.req, Outcome::Shed),
+            ShedPolicy::DropOldest => {
+                if let Some(old) = pending.pop_front() {
+                    tally.finish(&old.req, Outcome::Shed);
+                    pending.push_back(q);
+                } else {
+                    // Capacity 0: nothing queued to drop — shed the
+                    // incoming request itself.
+                    tally.finish(&q.req, Outcome::Shed);
+                }
+            }
+            ShedPolicy::DeadlineAware => {
+                // Shed the candidate least likely to finish on time:
+                // earliest deadline first, admission order on ties;
+                // deadline-free requests are infinitely patient. The
+                // incoming request is a candidate too.
+                let mut victim = pending.len(); // == len() means the incoming one
+                for i in 0..pending.len() {
+                    let cur = if victim == pending.len() {
+                        &q
+                    } else {
+                        &pending[victim]
+                    };
+                    if sheds_before(&pending[i], cur) {
+                        victim = i;
+                    }
+                }
+                if victim == pending.len() {
+                    tally.finish(&q.req, Outcome::Shed);
+                } else {
+                    let old = pending.remove(victim).expect("victim index in bounds");
+                    tally.finish(&old.req, Outcome::Shed);
+                    pending.push_back(q);
+                }
+            }
+        }
+    }
+
     /// Drain a request channel until it closes, serving batches.
     pub fn run(
         &mut self,
@@ -521,6 +852,31 @@ impl Server {
         tx: mpsc::Sender<Response>,
     ) -> Result<ServeReport> {
         backend.set_threads(self.cfg.threads);
+        let res = self.resilience.clone();
+        // Ladder state. Always restart at the nominal point so a reused
+        // server (benches re-run the same pre-queued load) reproduces
+        // the same trajectory, and so "ladder on, never pressured" is
+        // bitwise-identical to "ladder off".
+        let mut ladder_step = 0usize;
+        let mut ladder_live = false;
+        let mut high_streak = 0usize;
+        let mut low_streak = 0usize;
+        if let Some(l) = res.as_ref().and_then(|r| r.ladder.as_ref()) {
+            ensure!(
+                !l.points.is_empty(),
+                "degradation ladder needs at least one operating point"
+            );
+            ensure!(
+                l.low_watermark <= l.high_watermark,
+                "ladder watermarks inverted: low {} > high {}",
+                l.low_watermark,
+                l.high_watermark
+            );
+            // A backend that cannot switch operating points (fixed
+            // PJRT artifact, plain stub) leaves the ladder inert.
+            ladder_live = backend.set_operating_point(&l.points[0])?;
+        }
+        let mut breaker = res.as_ref().map(|r| CircuitBreaker::new(r.breaker));
         // One flush never exceeds what the backend can execute: a
         // fixed-shape backend is capped at the artifact batch even when
         // a dynamic `max_batch` asks for more (the surplus simply rides
@@ -530,19 +886,25 @@ impl Server {
         } else {
             self.cfg.max_batch.min(self.model_batch)
         };
-        let mut latencies: Vec<Duration> = Vec::new();
+        let mut tally = Tally::new(tx);
         let mut fills: Vec<usize> = Vec::new();
         let t0 = Instant::now();
-        let mut n_requests = 0usize;
-        let mut pending: Vec<Request> = Vec::new();
+        let mut pending: VecDeque<Queued> = VecDeque::new();
+        let mut seq = 0u64;
         let mut slack_rows = 0usize;
+        let mut retries = 0usize;
+        let mut degrade_steps = 0usize;
+        let mut recover_steps = 0usize;
         let mut open = true;
         while open || !pending.is_empty() {
             // Idle: block until the first request arrives — no
-            // `max_wait` wake-ups while the queue is empty.
+            // `max_wait` wake-ups while the queue is empty. Shedding
+            // still happens here: with capacity 0 the request admitted
+            // from the blocking recv is itself shed and the loop blocks
+            // again.
             if open && pending.is_empty() {
                 match rx.recv() {
-                    Ok(r) => pending.push(r),
+                    Ok(r) => self.admit(r, &mut pending, &mut seq, &mut tally),
                     Err(_) => {
                         open = false;
                         continue;
@@ -554,13 +916,13 @@ impl Server {
                     // The batching window runs from the first queued
                     // request's arrival, so a request that lands after
                     // an idle stretch still gets its full window.
-                    if let Some(first) = pending.first() {
-                        let deadline = first.arrived + self.cfg.max_wait;
+                    if let Some(first) = pending.front() {
+                        let deadline = first.req.arrived + self.cfg.max_wait;
                         while open && pending.len() < cap {
                             let timeout =
                                 deadline.saturating_duration_since(Instant::now());
                             match rx.recv_timeout(timeout) {
-                                Ok(r) => pending.push(r),
+                                Ok(r) => self.admit(r, &mut pending, &mut seq, &mut tally),
                                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                                     open = false;
@@ -572,9 +934,13 @@ impl Server {
                 FlushPolicy::Dynamic => {
                     // Work-conserving: take everything already queued
                     // (batches grow while the previous flush executes).
-                    while open && pending.len() < cap {
+                    // With bounded admission the queue bounds itself, so
+                    // the channel is drained fully and overflow is shed
+                    // *now* rather than left invisible in the channel;
+                    // without it the legacy drain stops at one flush.
+                    while open && (res.is_some() || pending.len() < cap) {
                         match rx.try_recv() {
-                            Ok(r) => pending.push(r),
+                            Ok(r) => self.admit(r, &mut pending, &mut seq, &mut tally),
                             Err(mpsc::TryRecvError::Empty) => break,
                             Err(mpsc::TryRecvError::Disconnected) => {
                                 open = false;
@@ -583,32 +949,133 @@ impl Server {
                     }
                 }
             }
+            // Pre-execution expiry: a request past its deadline never
+            // reaches the backend.
+            let now = Instant::now();
+            let mut i = 0;
+            while i < pending.len() {
+                if pending[i].req.expired(now) {
+                    let q = pending.remove(i).expect("index in bounds");
+                    tally.finish(&q.req, Outcome::Expired);
+                } else {
+                    i += 1;
+                }
+            }
             if pending.is_empty() {
                 continue;
             }
-            let take = pending.len().min(cap);
-            let batch: Vec<Request> = pending.drain(..take).collect();
+            // Queue pressure for the ladder: backlog depth at flush
+            // time, before this flush's requests are taken.
+            let backlog = pending.len();
+            let take = backlog.min(cap);
+            let batch: Vec<Request> = pending.drain(..take).map(|q| q.req).collect();
+
+            // Fail fast while the breaker is open: the flush never
+            // reaches the backend (and is not counted as a batch).
+            if breaker.as_ref().is_some_and(|b| b.is_open()) {
+                breaker.as_mut().expect("breaker checked above").fail_fast();
+                for req in &batch {
+                    tally.finish(req, Outcome::Failed);
+                }
+                continue;
+            }
+
+            // Execute, with bounded retry + exponential backoff.
+            let mut flush_result = self.run_batch(backend, &batch);
+            if let Some(r) = res.as_ref() {
+                let mut attempt = 0usize;
+                while flush_result.is_err() && attempt < r.retry.max_retries {
+                    let delay = r.retry.backoff * (1u32 << attempt.min(16));
+                    if !delay.is_zero() {
+                        std::thread::sleep(delay);
+                    }
+                    attempt += 1;
+                    retries += 1;
+                    flush_result = self.run_batch(backend, &batch);
+                }
+            }
             fills.push(batch.len());
-            let (responses, slack) = self.run_batch(backend, &batch)?;
-            slack_rows += slack;
-            for r in responses {
-                latencies.push(r.latency);
-                n_requests += 1;
-                let _ = tx.send(r);
+            match flush_result {
+                Ok((responses, slack)) => {
+                    slack_rows += slack;
+                    if let Some(b) = breaker.as_mut() {
+                        b.on_success();
+                    }
+                    for (req, resp) in batch.iter().zip(responses) {
+                        tally.record(req, resp);
+                    }
+                }
+                Err(e) => {
+                    let Some(r) = res.as_ref() else {
+                        // Legacy contract: without a resilience config a
+                        // backend error aborts the run.
+                        return Err(e);
+                    };
+                    let tripped = breaker
+                        .as_mut()
+                        .expect("resilience implies a breaker")
+                        .on_failure();
+                    if tripped {
+                        // A ladder step down absorbs the trip — the
+                        // cheaper operating point *is* the remedy, so
+                        // the breaker closes immediately. With no step
+                        // left it stays open for its fail-fast window.
+                        if let Some(l) = r.ladder.as_ref() {
+                            if ladder_live && ladder_step + 1 < l.points.len() {
+                                ladder_step += 1;
+                                ladder_live =
+                                    backend.set_operating_point(&l.points[ladder_step])?;
+                                degrade_steps += 1;
+                                high_streak = 0;
+                                breaker.as_mut().expect("breaker exists").close();
+                            }
+                        }
+                    }
+                    for req in &batch {
+                        tally.finish(req, Outcome::Failed);
+                    }
+                }
+            }
+            // Hysteretic pressure ladder: sustained backlog above the
+            // high watermark steps down to a cheaper operating point;
+            // sustained calm below the low watermark steps back up.
+            if let Some(l) = res.as_ref().and_then(|r| r.ladder.as_ref()) {
+                if ladder_live {
+                    if backlog >= l.high_watermark {
+                        high_streak += 1;
+                        low_streak = 0;
+                    } else if backlog <= l.low_watermark {
+                        low_streak += 1;
+                        high_streak = 0;
+                    } else {
+                        high_streak = 0;
+                        low_streak = 0;
+                    }
+                    if high_streak >= l.patience && ladder_step + 1 < l.points.len() {
+                        ladder_step += 1;
+                        ladder_live = backend.set_operating_point(&l.points[ladder_step])?;
+                        degrade_steps += 1;
+                        high_streak = 0;
+                    } else if low_streak >= l.recover_after && ladder_step > 0 {
+                        ladder_step -= 1;
+                        ladder_live = backend.set_operating_point(&l.points[ladder_step])?;
+                        recover_steps += 1;
+                        low_streak = 0;
+                    }
+                }
             }
         }
-        latencies.sort_unstable();
         let total = t0.elapsed().as_secs_f64();
-        Ok(ServeReport {
-            n_requests,
-            n_batches: fills.len(),
-            p50: percentile(&latencies, 50),
-            p95: percentile(&latencies, 95),
-            mean_batch_fill: fills.iter().sum::<usize>() as f64
-                / fills.len().max(1) as f64,
-            throughput_rps: n_requests as f64 / total.max(1e-9),
+        let breaker_trips = breaker.map_or(0, |b| b.trips);
+        Ok(tally.report(
+            &fills,
             slack_rows,
-        })
+            retries,
+            breaker_trips,
+            degrade_steps,
+            recover_steps,
+            total,
+        ))
     }
 
     /// Execute one batch and return the responses plus the number of
@@ -630,10 +1097,10 @@ impl Server {
         assert!(n > 0 && n <= self.cfg.max_batch);
         let (t, f) = (self.seq_len, self.feat_dim);
         for req in batch {
-            // Strict: a wrong-length request must not silently leave
-            // stale frames from the previous batch in its row (the
-            // argument tensors are reused across batches).
-            assert_eq!(
+            // Guaranteed by admission validation (which turns a
+            // violation into an `Invalid` response); a failure here
+            // means the admission check regressed.
+            debug_assert_eq!(
                 req.feats.len(),
                 t * f,
                 "request {} feats length != seq_len x feat_dim",
@@ -641,7 +1108,7 @@ impl Server {
             );
         }
 
-        let (out, slack) = if backend.any_batch() {
+        let (out, slack, failed_rows) = if backend.any_batch() {
             {
                 let feats = &mut self.dyn_args[0];
                 feats.shape = vec![n, t, f];
@@ -655,7 +1122,9 @@ impl Server {
                 pad.data.resize(n * t * 4, 0);
                 write_pad_rows(pad, batch, t);
             }
-            (backend.execute_rows(&self.artifact, &self.dyn_args, n)?, 0)
+            let (out, failed) =
+                backend.execute_rows_partial(&self.artifact, &self.dyn_args, n)?;
+            (out, 0, failed)
         } else {
             let b = self.model_batch;
             ensure!(
@@ -677,12 +1146,23 @@ impl Server {
                 pad.data.fill(0);
                 write_pad_rows(pad, batch, t);
             }
-            (backend.execute(&self.artifact, &self.args)?, b - n)
+            (backend.execute(&self.artifact, &self.args)?, b - n, Vec::new())
         };
 
         let lp = out.f32s();
         let mut responses = Vec::with_capacity(n);
         for (i, req) in batch.iter().enumerate() {
+            if failed_rows.contains(&i) {
+                // Contained worker fault: this row's output is
+                // zero-fill for alignment — never decode it.
+                responses.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    latency: req.arrived.elapsed(),
+                    outcome: Outcome::Failed,
+                });
+                continue;
+            }
             let tokens = ctc_greedy(
                 &lp[i * t * self.vocab..(i + 1) * t * self.vocab],
                 req.feat_len.min(t),
@@ -693,6 +1173,7 @@ impl Server {
                 id: req.id,
                 tokens,
                 latency: req.arrived.elapsed(),
+                outcome: Outcome::Ok,
             });
         }
         Ok((responses, slack))
@@ -868,11 +1349,21 @@ mod tests {
             n_batches: 2,
             p50: Duration::from_millis(3),
             p95: Duration::from_millis(9),
+            p99: Duration::from_millis(11),
             mean_batch_fill: 5.0,
             throughput_rps: 100.0,
             slack_rows: 0,
+            ..Default::default()
         };
         assert!(r.p95 >= r.p50);
+        assert!(r.p99 >= r.p95);
+        // The resilience counters default to a clean run.
+        assert_eq!(
+            (r.shed, r.expired, r.invalid, r.failed, r.retries),
+            (0, 0, 0, 0, 0)
+        );
+        assert_eq!((r.breaker_trips, r.degrade_steps, r.recover_steps), (0, 0, 0));
+        assert!(r.outcomes.is_empty());
     }
 
     #[test]
@@ -1344,5 +1835,572 @@ mod tests {
         .err()
         .expect("construction must fail without params");
         assert!(format!("{err:?}").contains("block0.ff.w1"));
+    }
+
+    // ---- overload & fault tolerance (ISSUE 6) ----
+
+    use crate::coordinator::resilience::{
+        BreakerConfig, FaultCounts, FaultInjector, FaultKind, FaultPlan, LadderConfig,
+        RetryPolicy,
+    };
+
+    fn any_stub() -> AnyBatchStub {
+        AnyBatchStub { rows_seen: Vec::new() }
+    }
+
+    #[test]
+    fn invalid_requests_get_error_responses_not_panics() {
+        // Satellite regression: a request whose feat_len exceeds the
+        // manifest sequence length, or whose feats payload disagrees
+        // with the manifest shape, must yield an `Invalid` response at
+        // admission instead of panicking inside the batch kernels —
+        // with or without a resilience config.
+        let mut server = dynamic_server(8, 1);
+        let mut backend = any_stub();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let mut long = request(1);
+        long.feat_len = T + 1;
+        req_tx.send(long).unwrap();
+        req_tx
+            .send(Request::new(2, vec![0.0; T * F - 1], T))
+            .unwrap();
+        req_tx.send(request(3)).unwrap();
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.invalid, 2);
+        assert_eq!(report.n_requests, 1);
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 3, "every request gets exactly one response");
+        for r in &responses {
+            if r.id == 3 {
+                assert_eq!(r.outcome, Outcome::Ok);
+                assert_eq!(r.tokens, expected_tokens(3));
+            } else {
+                assert_eq!(r.outcome, Outcome::Invalid, "request {}", r.id);
+                assert!(r.tokens.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_zero_sheds_everything_including_idle_recv() {
+        let mut server = dynamic_server(4, 1);
+        server.set_resilience(ResilienceConfig::bounded(0, ShedPolicy::RejectNew));
+        let mut backend = any_stub();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in 0..5u64 {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        // The first request is admitted from the idle-blocked recv()
+        // path, the rest from the channel drain — all shed, nothing
+        // ever reaches the backend.
+        assert_eq!(report.shed, 5);
+        assert_eq!(report.n_requests, 0);
+        assert_eq!(report.n_batches, 0);
+        assert!(backend.rows_seen.is_empty());
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 5);
+        assert!(responses.iter().all(|r| r.outcome == Outcome::Shed));
+
+        // DropOldest at capacity 0 has nothing queued to drop: the
+        // incoming request itself is shed, not a panic on pop_front.
+        server.set_resilience(ResilienceConfig::bounded(0, ShedPolicy::DropOldest));
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        req_tx.send(request(9)).unwrap();
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.shed, 1);
+        assert_eq!(resp_rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn capacity_one_reject_new_keeps_first_drop_oldest_keeps_last() {
+        let ids: Vec<u64> = (1..=6).collect();
+        let run_policy = |policy: ShedPolicy| {
+            let mut server = dynamic_server(1, 1);
+            server.set_resilience(ResilienceConfig::bounded(1, policy));
+            let mut backend = any_stub();
+            let (req_tx, req_rx) = mpsc::channel::<Request>();
+            let (resp_tx, resp_rx) = mpsc::channel();
+            for &id in &ids {
+                req_tx.send(request(id)).unwrap();
+            }
+            drop(req_tx);
+            let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+            let served: Vec<u64> = resp_rx
+                .try_iter()
+                .filter(|r| r.outcome == Outcome::Ok)
+                .map(|r| r.id)
+                .collect();
+            (report, served)
+        };
+        let (report, served) = run_policy(ShedPolicy::RejectNew);
+        assert_eq!((report.n_requests, report.shed), (1, 5));
+        assert_eq!(served, vec![1], "the first admitted request keeps its slot");
+        let (report, served) = run_policy(ShedPolicy::DropOldest);
+        assert_eq!((report.n_requests, report.shed), (1, 5));
+        assert_eq!(served, vec![6], "the freshest request survives");
+    }
+
+    #[test]
+    fn deadline_aware_sheds_earliest_deadline_breaking_ties_by_admission() {
+        let mut server = dynamic_server(1, 1);
+        server.set_resilience(ResilienceConfig::bounded(1, ShedPolicy::DeadlineAware));
+        let mut backend = any_stub();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let nearer = Instant::now() + Duration::from_secs(300);
+        let far = Instant::now() + Duration::from_secs(600);
+        // r1 and r2 share an identical deadline (a tie): admission
+        // order decides, so r1 is shed first, then r2 loses to r3's
+        // later deadline.
+        let mut r1 = request(1);
+        r1.deadline = Some(nearer);
+        let mut r2 = request(2);
+        r2.deadline = Some(nearer);
+        let mut r3 = request(3);
+        r3.deadline = Some(far);
+        req_tx.send(r1).unwrap();
+        req_tx.send(r2).unwrap();
+        req_tx.send(r3).unwrap();
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!((report.n_requests, report.shed), (1, 2));
+        let mut shed_ids: Vec<u64> = Vec::new();
+        let mut ok_ids: Vec<u64> = Vec::new();
+        for r in resp_rx.try_iter() {
+            match r.outcome {
+                Outcome::Shed => shed_ids.push(r.id),
+                Outcome::Ok => ok_ids.push(r.id),
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert_eq!(shed_ids, vec![1, 2], "tie broken by admission order");
+        assert_eq!(ok_ids, vec![3]);
+
+        // A deadline-free request is infinitely patient: the incoming
+        // deadline-bearing request is the one shed.
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let patient = request(4); // no deadline
+        let mut hurried = request(5);
+        hurried.deadline = Some(Instant::now() + Duration::from_secs(300));
+        req_tx.send(patient).unwrap();
+        req_tx.send(hurried).unwrap();
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!((report.n_requests, report.shed), (1, 1));
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert!(responses
+            .iter()
+            .any(|r| r.id == 5 && r.outcome == Outcome::Shed));
+        assert!(responses
+            .iter()
+            .any(|r| r.id == 4 && r.outcome == Outcome::Ok));
+    }
+
+    #[test]
+    fn fully_expired_queue_executes_zero_rows() {
+        // A flush whose every request is already past its deadline must
+        // execute nothing — expiry runs before the backend is touched,
+        // with or without a resilience config.
+        let mut server = dynamic_server(8, 1);
+        let mut backend = any_stub();
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in 0..3u64 {
+            let mut feats = vec![0.0f32; T * F];
+            feats[0] = 1.0;
+            req_tx
+                .send(Request::with_deadline(id, feats, T, Duration::ZERO))
+                .unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.expired, 3);
+        assert_eq!(report.n_requests, 0);
+        assert_eq!(report.n_batches, 0, "no batch reaches the backend");
+        assert!(backend.rows_seen.is_empty());
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 3);
+        assert!(responses
+            .iter()
+            .all(|r| r.outcome == Outcome::Expired && r.tokens.is_empty()));
+        assert_eq!(report.on_time, 0);
+        assert_eq!(report.goodput_rps, 0.0);
+    }
+
+    #[test]
+    fn scripted_faults_exhaust_retries_trip_breaker_and_fail_fast() {
+        let mut server = dynamic_server(1, 1);
+        server.set_resilience(
+            ResilienceConfig::bounded(16, ShedPolicy::RejectNew)
+                .with_retry(RetryPolicy { max_retries: 1, backoff: Duration::ZERO })
+                .with_breaker(BreakerConfig { trip_after: 2, open_flushes: 1 }),
+        );
+        // Flush 1: fault + fault on retry -> Failed (streak 1).
+        // Flush 2: fault + fault -> Failed (streak 2 -> trip, open 1).
+        // Flush 3: breaker open -> fail fast, backend untouched.
+        // Flush 4: half-open probe succeeds (script exhausted).
+        let script = FaultPlan::Script(vec![
+            FaultKind::Transient,
+            FaultKind::Transient,
+            FaultKind::Transient,
+            FaultKind::Transient,
+        ]);
+        let mut backend = FaultInjector::new(any_stub(), script);
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in 0..4u64 {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.failed, 3);
+        assert_eq!(report.n_requests, 1);
+        assert_eq!(report.retries, 2);
+        assert_eq!(report.breaker_trips, 1);
+        assert_eq!(
+            report.n_batches, 3,
+            "the fail-fast flush never reaches the backend"
+        );
+        assert_eq!(
+            backend.counts(),
+            FaultCounts { calls: 5, transient: 4, spikes: 0, hangs: 0 }
+        );
+        assert_eq!(backend.inner().rows_seen, vec![1], "only the final flush executed");
+        let oks: Vec<u64> = resp_rx
+            .try_iter()
+            .filter(|r| r.outcome == Outcome::Ok)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(oks, vec![3]);
+    }
+
+    /// Any-batch stub that accepts operating-point switches and records
+    /// them — what the ladder sees on a switch-capable backend.
+    struct LadderStub {
+        inner: AnyBatchStub,
+        points_set: Vec<OperatingPoint>,
+    }
+
+    impl ServeBackend for LadderStub {
+        fn execute(&mut self, artifact: &str, args: &[Tensor]) -> Result<Tensor> {
+            self.inner.execute(artifact, args)
+        }
+
+        fn any_batch(&self) -> bool {
+            true
+        }
+
+        fn execute_rows(
+            &mut self,
+            artifact: &str,
+            args: &[Tensor],
+            rows: usize,
+        ) -> Result<Tensor> {
+            self.inner.execute_rows(artifact, args, rows)
+        }
+
+        fn set_operating_point(&mut self, point: &OperatingPoint) -> Result<bool> {
+            self.points_set.push(*point);
+            Ok(true)
+        }
+    }
+
+    #[test]
+    fn ladder_degrades_under_pressure_and_recovers_hysteretically() {
+        let nominal = OperatingPoint::new(0.25, Quant::Int8);
+        let degraded = OperatingPoint::new(0.75, Quant::Int8);
+        let mut ladder = LadderConfig::new(vec![nominal, degraded]);
+        ladder.high_watermark = 2;
+        ladder.low_watermark = 1;
+        ladder.patience = 2;
+        ladder.recover_after = 1;
+        let mut server = dynamic_server(1, 1);
+        server.set_resilience(
+            ResilienceConfig::bounded(16, ShedPolicy::RejectNew).with_ladder(ladder),
+        );
+        let mut backend = LadderStub { inner: any_stub(), points_set: Vec::new() };
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in 0..8u64 {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        // Backlogs at flush time run 8,7,6,...,1: pressure >= 2 for the
+        // first seven flushes (step down on the second — patience 2),
+        // the last sees backlog 1 <= low watermark and steps back up
+        // (recover_after 1).
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 8);
+        assert_eq!(report.degrade_steps, 1);
+        assert_eq!(report.recover_steps, 1);
+        assert_eq!(backend.points_set, vec![nominal, degraded, nominal]);
+        assert_eq!(resp_rx.try_iter().count(), 8);
+    }
+
+    #[test]
+    fn breaker_trip_steps_down_ladder_and_keeps_serving() {
+        let nominal = OperatingPoint::new(0.25, Quant::Int8);
+        let degraded = OperatingPoint::new(0.75, Quant::Int8);
+        let mut ladder = LadderConfig::new(vec![nominal, degraded]);
+        ladder.high_watermark = 100; // pressure never degrades here
+        ladder.low_watermark = 0;
+        ladder.recover_after = 100;
+        let mut server = dynamic_server(1, 1);
+        server.set_resilience(
+            ResilienceConfig::bounded(16, ShedPolicy::RejectNew)
+                .with_retry(RetryPolicy { max_retries: 0, backoff: Duration::ZERO })
+                .with_breaker(BreakerConfig { trip_after: 1, open_flushes: 4 })
+                .with_ladder(ladder),
+        );
+        let script = FaultPlan::Script(vec![FaultKind::Transient]);
+        let mut backend =
+            FaultInjector::new(LadderStub { inner: any_stub(), points_set: Vec::new() }, script);
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in 0..3u64 {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        // Flush 1 faults and trips the one-strike breaker — absorbed by
+        // a ladder step down, so flushes 2 and 3 execute immediately
+        // instead of failing fast through a 4-flush open window.
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.n_requests, 2);
+        assert_eq!(report.breaker_trips, 1);
+        assert_eq!(report.degrade_steps, 1);
+        assert_eq!(backend.inner().points_set, vec![nominal, degraded]);
+        assert_eq!(backend.inner().inner.rows_seen, vec![1, 1]);
+        assert_eq!(resp_rx.try_iter().count(), 3);
+    }
+
+    #[test]
+    fn seeded_fault_injection_smoke_pinned_counts() {
+        // The verify.sh smoke: one fixed seed, pinned outcome counts.
+        // Seed 2024 at p_transient=0.4 yields the 15-draw fault pattern
+        // F.FF.FFF.F...F. over 8 single-request flushes with 2 retries:
+        // flush 3 exhausts its retries (three consecutive faults), every
+        // other flush recovers.
+        let mut server = dynamic_server(1, 1);
+        server.set_resilience(
+            ResilienceConfig::bounded(16, ShedPolicy::RejectNew)
+                .with_retry(RetryPolicy { max_retries: 2, backoff: Duration::ZERO })
+                .with_breaker(BreakerConfig { trip_after: 100, open_flushes: 1 }),
+        );
+        let plan = FaultPlan::Seeded {
+            seed: 2024,
+            p_transient: 0.4,
+            p_spike: 0.0,
+            p_hang: 0.0,
+        };
+        let mut backend = FaultInjector::new(any_stub(), plan);
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for id in 0..8u64 {
+            req_tx.send(request(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 7);
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.retries, 7);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.breaker_trips, 0);
+        assert_eq!(report.degrade_steps, 0);
+        assert_eq!(report.n_batches, 8);
+        assert_eq!(report.on_time, 7, "no deadlines: every completion is on time");
+        assert_eq!(
+            backend.counts(),
+            FaultCounts { calls: 15, transient: 8, spikes: 0, hangs: 0 }
+        );
+        // Per-outcome latency buckets cover exactly the outcomes seen.
+        let ok = report
+            .outcomes
+            .iter()
+            .find(|o| o.outcome == Outcome::Ok)
+            .expect("ok bucket");
+        assert_eq!(ok.count, 7);
+        assert!(ok.p99 >= ok.p50);
+        let failed = report
+            .outcomes
+            .iter()
+            .find(|o| o.outcome == Outcome::Failed)
+            .expect("failed bucket");
+        assert_eq!(failed.count, 1);
+        assert_eq!(report.outcomes.len(), 2);
+        assert_eq!(resp_rx.try_iter().count(), 8);
+    }
+
+    #[test]
+    fn degraded_steps_bitwise_match_standalone_operating_points() {
+        // The ladder's core guarantee: serving at a degraded point is
+        // bitwise identical to a standalone run prepared at that point —
+        // re-staging always starts from the master weights, so the
+        // ladder adds no new numerics, only scheduling.
+        let dims = crate::infer::testutil::mini_dims();
+        let points = [
+            OperatingPoint::new(0.0, Quant::Fp32),
+            OperatingPoint::new(0.5, Quant::Int8),
+        ];
+        crate::util::prop::check("serve: degraded step bitwise identity", 3, |rng| {
+            let mut backend = Backend::auto_with(
+                "definitely/_no_artifacts_here",
+                "asr_encoder_ref",
+                dims,
+                5,
+                2,
+                1,
+            )
+            .unwrap();
+            let (manifest, params, artifact) = backend.serve_parts("unused").unwrap();
+            let (t, f) = (dims.seq_len, dims.input_dim);
+            let vocab = dims.vocab;
+            let blank = manifest.model.ctc_blank as i32;
+            let feats: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..t * f).map(|_| rng.f32() - 0.5).collect())
+                .collect();
+            let mut ladder = LadderConfig::new(points.to_vec());
+            ladder.high_watermark = 1; // degrade after the first flush
+            ladder.low_watermark = 0;
+            ladder.patience = 1;
+            ladder.recover_after = 100;
+            let mut server = Server::with_manifest(
+                &manifest,
+                &artifact,
+                params,
+                ServeConfig::dynamic(1, 1),
+            )
+            .unwrap();
+            server.set_resilience(
+                ResilienceConfig::bounded(16, ShedPolicy::RejectNew).with_ladder(ladder),
+            );
+            let (req_tx, req_rx) = mpsc::channel::<Request>();
+            let (resp_tx, resp_rx) = mpsc::channel();
+            for (id, fts) in feats.iter().enumerate() {
+                req_tx.send(Request::new(id as u64, fts.clone(), t)).unwrap();
+            }
+            drop(req_tx);
+            let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+            if report.degrade_steps != 1 {
+                return (
+                    false,
+                    format!("expected 1 degrade step, got {}", report.degrade_steps),
+                );
+            }
+            let mut responses: Vec<Response> = resp_rx.try_iter().collect();
+            responses.sort_by_key(|r| r.id);
+            // Flush 1 ran at points[0]; flushes 2..4 at points[1]
+            // (backlog 4 >= high watermark 1 with patience 1).
+            for (i, resp) in responses.iter().enumerate() {
+                let point = if i == 0 { points[0] } else { points[1] };
+                let mut standalone = Backend::auto_with(
+                    "definitely/_no_artifacts_here",
+                    "asr_encoder_ref",
+                    dims,
+                    5,
+                    2,
+                    1,
+                )
+                .unwrap();
+                let nb = standalone.native_mut().unwrap();
+                nb.prepare(dims.tile, point.rate, point.quant).unwrap();
+                let pad = vec![1.0f32; t];
+                let lp = nb.forward_batch(&feats[i], &pad, 1);
+                let want = ctc_greedy(&lp[..t * vocab], t, vocab, blank);
+                if resp.tokens != want {
+                    return (
+                        false,
+                        format!(
+                            "request {i} tokens {:?} != standalone {:?} at {point:?}",
+                            resp.tokens, want
+                        ),
+                    );
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn batcher_survives_worker_panic() {
+        // Satellite regression: a panic inside one sharded
+        // forward_batch worker used to propagate through
+        // std::thread::scope and kill the whole server. It must now
+        // fail only that shard's requests and keep serving.
+        let dims = crate::infer::testutil::mini_dims();
+        let mut backend = Backend::auto_with(
+            "definitely/_no_artifacts_here",
+            "asr_encoder_ref",
+            dims,
+            5,
+            4,
+            2,
+        )
+        .unwrap();
+        const MARKER: f32 = 1234.5;
+        backend.native_mut().unwrap().set_panic_marker(Some(MARKER));
+        let (manifest, params, artifact) = backend.serve_parts("unused").unwrap();
+        let mut server =
+            Server::with_manifest(&manifest, &artifact, params, ServeConfig::dynamic(2, 2))
+                .unwrap();
+        let (t, f) = (dims.seq_len, dims.input_dim);
+        let clean = |id: u64| {
+            let feats: Vec<f32> = (0..t * f)
+                .map(|i| ((id as usize + i) % 5) as f32 * 0.1)
+                .collect();
+            Request::new(id, feats, t)
+        };
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        // Flush 1 = {poison, clean 1} across two single-row shards;
+        // flush 2 = {clean 2, clean 3} must serve normally afterwards.
+        let mut poison = clean(0);
+        poison.feats[0] = MARKER;
+        req_tx.send(poison).unwrap();
+        for id in 1..4u64 {
+            req_tx.send(clean(id)).unwrap();
+        }
+        drop(req_tx);
+        let report = server.run(&mut backend, req_rx, resp_tx).unwrap();
+        assert_eq!(report.failed, 1, "only the poisoned request fails");
+        assert_eq!(report.n_requests, 3);
+        assert_eq!(report.n_batches, 2);
+        let mut responses: Vec<Response> = resp_rx.try_iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses[0].outcome, Outcome::Failed);
+        assert!(responses[0].tokens.is_empty());
+        // The surviving shard's output is bitwise-clean: identical to a
+        // standalone single-threaded run of the same utterance.
+        let mut reference = Backend::auto_with(
+            "definitely/_no_artifacts_here",
+            "asr_encoder_ref",
+            dims,
+            5,
+            4,
+            1,
+        )
+        .unwrap();
+        let nb = reference.native_mut().unwrap();
+        let pad = vec![1.0f32; t];
+        for id in 1..4u64 {
+            let lp = nb.forward_batch(&clean(id).feats, &pad, 1);
+            let want = ctc_greedy(
+                &lp[..t * dims.vocab],
+                t,
+                dims.vocab,
+                manifest.model.ctc_blank as i32,
+            );
+            assert_eq!(responses[id as usize].outcome, Outcome::Ok);
+            assert_eq!(responses[id as usize].tokens, want, "request {id}");
+        }
     }
 }

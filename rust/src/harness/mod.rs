@@ -9,7 +9,10 @@ pub mod serving;
 
 pub use figures::*;
 pub use qos_cache::QosCache;
-pub use serving::{measure_serve, serve_report, serve_report_sized};
+pub use serving::{
+    measure_overload, measure_serve, overload_report, overload_report_sized, serve_report,
+    serve_report_sized,
+};
 
 /// A rendered report: title + lines (also JSON-emittable).
 #[derive(Clone, Debug, Default)]

@@ -22,6 +22,9 @@ use std::time::Duration;
 
 use anyhow::{ensure, Result};
 
+use crate::coordinator::resilience::{
+    LadderConfig, OperatingPoint, ResilienceConfig, ShedPolicy,
+};
 use crate::coordinator::serve::{Request, ServeConfig, ServeReport, Server};
 use crate::data::Bundle;
 use crate::infer::{synth_weights, ModelDims, NativeBackend};
@@ -134,6 +137,140 @@ pub fn serve_report() -> Result<Report> {
     )
 }
 
+/// Drive `n_requests` deadline-stamped utterances through the bounded
+/// admission queue at inter-arrival `gap`, optionally with the
+/// graceful-degradation ladder armed, and return the overload report.
+/// Same stream seed and feature generator as [`measure_serve`], so the
+/// overload sweep isolates the resilience knobs.
+pub fn measure_overload(
+    dims: &ModelDims,
+    n_requests: usize,
+    gap: Duration,
+    ttl: Duration,
+    capacity: usize,
+    policy: ShedPolicy,
+    ladder: bool,
+) -> Result<ServeReport> {
+    let max_batch = 4usize;
+    let mut backend = NativeBackend::new(synth_weights(dims, 7), max_batch)?;
+    backend.prepare(dims.tile, 0.25, Quant::Int8)?;
+    let manifest = backend.manifest().clone();
+    let cfg = ServeConfig::dynamic(max_batch, 1);
+    let mut server =
+        Server::with_manifest(&manifest, &manifest.name, Bundle::default(), cfg)?;
+    let mut res = ResilienceConfig::bounded(capacity, policy);
+    if ladder {
+        // Nominal point first; the pressure ladder climbs the pruning
+        // rate along the frontier the QoS harness measures.
+        res = res.with_ladder(LadderConfig::new(vec![
+            OperatingPoint::new(0.25, Quant::Int8),
+            OperatingPoint::new(0.5, Quant::Int8),
+            OperatingPoint::new(0.75, Quant::Int8),
+        ]));
+    }
+    server.set_resilience(res);
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let (t, f) = (dims.seq_len, dims.input_dim);
+    let producer = thread::spawn(move || {
+        let mut rng = Rng::new(11);
+        for id in 0..n_requests as u64 {
+            let feat_len = t / 2 + rng.index(t - t / 2) + 1;
+            let feats: Vec<f32> =
+                (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
+            let _ = req_tx.send(Request::with_deadline(id, feats, feat_len.min(t), ttl));
+            if !gap.is_zero() {
+                thread::sleep(gap);
+            }
+        }
+    });
+    let report = server.run(&mut backend, req_rx, resp_tx)?;
+    producer.join().unwrap();
+    let answered = resp_rx.try_iter().count();
+    ensure!(
+        answered == n_requests,
+        "every request gets exactly one response: {answered} of {n_requests}"
+    );
+    Ok(report)
+}
+
+/// [`overload_report`] with explicit load parameters (the render test
+/// uses the mini model and a short stream to stay fast). Sweeps arrival
+/// rate x shed policy x ladder on/off over a bounded queue.
+pub fn overload_report_sized(
+    dims: &ModelDims,
+    n_requests: usize,
+    gaps: &[(&str, Duration)],
+    ttl: Duration,
+    capacity: usize,
+) -> Result<Report> {
+    let mut r = Report::new(
+        "Overload — goodput under bounded admission (native, 25% SASP, INT8)",
+    );
+    r.line(format!(
+        "{n_requests} requests per point, queue capacity {capacity}, deadline \
+         {ttl:?}, dynamic flush b<=4, ladder 0.25 -> 0.50 -> 0.75 INT8",
+    ));
+    r.line(format!(
+        "{:<34} {:>4} {:>5} {:>5} {:>5} {:>8} {:>10} {:>10} {:>5}",
+        "scenario", "ok", "shed", "exp", "fail", "good/s", "p50", "p99", "degr"
+    ));
+    let policies = [
+        ("reject-new", ShedPolicy::RejectNew),
+        ("drop-oldest", ShedPolicy::DropOldest),
+        ("deadline-aware", ShedPolicy::DeadlineAware),
+    ];
+    for (gap_label, gap) in gaps {
+        for (pol_label, policy) in policies {
+            for ladder in [false, true] {
+                let rep =
+                    measure_overload(dims, n_requests, *gap, ttl, capacity, policy, ladder)?;
+                let ok_lat = rep
+                    .outcomes
+                    .iter()
+                    .find(|o| o.outcome == crate::coordinator::serve::Outcome::Ok);
+                let (p50, p99) = ok_lat.map_or(
+                    (Duration::ZERO, Duration::ZERO),
+                    |o| (o.p50, o.p99),
+                );
+                r.line(format!(
+                    "{:<34} {:>4} {:>5} {:>5} {:>5} {:>8.1} {:>10} {:>10} {:>5}",
+                    format!(
+                        "{gap_label} {pol_label}{}",
+                        if ladder { " +ladder" } else { "" }
+                    ),
+                    rep.n_requests,
+                    rep.shed,
+                    rep.expired,
+                    rep.failed,
+                    rep.goodput_rps,
+                    format!("{p50:.2?}"),
+                    format!("{p99:.2?}"),
+                    rep.degrade_steps,
+                ));
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// The `sasp report overload` entry point: tiny-ASR native backend, 96
+/// deadline-stamped requests per point, a 2x-overload arrival rate
+/// against a moderate one, queue capacity 8.
+pub fn overload_report() -> Result<Report> {
+    overload_report_sized(
+        &ModelDims::tiny_asr(),
+        96,
+        &[
+            ("overload 100us", Duration::from_micros(100)),
+            ("moderate 400us", Duration::from_micros(400)),
+        ],
+        Duration::from_millis(10),
+        8,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +291,45 @@ mod tests {
         assert!(s.contains("dynamic b<=8 threads=4"), "{s}");
         // Header + load line + 4 frontier points.
         assert_eq!(r.lines.len(), 2 + 4, "{s}");
+    }
+
+    #[test]
+    fn overload_report_renders_sweep() {
+        let r = overload_report_sized(
+            &mini_dims(),
+            6,
+            &[("burst 50us", Duration::from_micros(50))],
+            Duration::from_millis(50),
+            4,
+        )
+        .unwrap();
+        let s = r.render();
+        assert!(s.contains("burst 50us reject-new"), "{s}");
+        assert!(s.contains("burst 50us deadline-aware +ladder"), "{s}");
+        // Header + load line + 3 policies x ladder off/on.
+        assert_eq!(r.lines.len(), 2 + 6, "{s}");
+    }
+
+    #[test]
+    fn measure_overload_answers_every_request() {
+        // Generous deadline + capacity: nothing sheds, and the ladder
+        // path still accounts for all requests.
+        let rep = measure_overload(
+            &mini_dims(),
+            5,
+            Duration::from_micros(50),
+            Duration::from_secs(60),
+            16,
+            ShedPolicy::DeadlineAware,
+            true,
+        )
+        .unwrap();
+        assert_eq!(
+            rep.n_requests + rep.shed + rep.expired + rep.invalid + rep.failed,
+            5,
+            "every request lands in exactly one outcome bucket"
+        );
+        assert!(rep.goodput_rps >= 0.0);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::coordinator::resilience::OperatingPoint;
 use crate::coordinator::serve::ServeBackend;
 use crate::data::{Bundle, DType, Tensor};
 use crate::pruning::{global_prune, tile_l1_norms, PrunePlan, TileNorms};
@@ -87,6 +88,27 @@ pub struct NativeBackend {
     shard_fwds: Vec<BatchForward>,
     /// Per-worker output buffers, concatenated in utterance order.
     shard_outs: Vec<Vec<f32>>,
+    /// Deterministic fault hook for the containment tests: a worker
+    /// panics when any of its utterances' first feature element equals
+    /// this marker. `None` (the default) never fires.
+    panic_marker: Option<f32>,
+}
+
+/// Deterministic panicking stub: blow up the calling worker when any
+/// utterance in `feats` starts with the armed marker value.
+fn panic_if_marked(feats: &[f32], marker: Option<f32>, t: usize, f: usize) {
+    if let Some(m) = marker {
+        let stride = t * f;
+        if stride == 0 {
+            return;
+        }
+        for u in 0..feats.len() / stride {
+            assert!(
+                feats[u * stride] != m,
+                "injected worker panic (marker {m})"
+            );
+        }
+    }
 }
 
 impl NativeBackend {
@@ -109,7 +131,15 @@ impl NativeBackend {
             threads: 1,
             shard_fwds: Vec::new(),
             shard_outs: Vec::new(),
+            panic_marker: None,
         })
+    }
+
+    /// Arm the deterministic worker-panic hook: any utterance whose
+    /// first feature element equals `marker` panics its worker thread —
+    /// how the fault-containment tests blow up exactly one shard.
+    pub fn set_panic_marker(&mut self, marker: Option<f32>) {
+        self.panic_marker = marker;
     }
 
     /// Stage a full MT model: token-input encoder + autoregressive
@@ -260,15 +290,55 @@ impl NativeBackend {
         batch: usize,
         out: &mut Vec<f32>,
     ) {
-        let shards = Self::shard_sizes(batch, self.threads);
-        if shards.len() <= 1 {
-            self.fwd.run_feats(&self.model, batch, feats, pad, out);
-            return;
-        }
+        let failed = self.forward_batch_contained(feats, pad, batch, out);
+        assert!(
+            failed.is_empty(),
+            "forward_batch worker panicked for utterances {failed:?}"
+        );
+    }
+
+    /// [`Self::forward_batch_into`] with per-shard fault containment: a
+    /// panic inside one worker (or the single-threaded runtime) fails
+    /// only that shard's utterances — their output rows are zero-filled
+    /// for alignment and their indices returned — instead of unwinding
+    /// through the serving loop and killing the server. A panicked
+    /// shard's runtime is replaced fresh (its buffers may be
+    /// mid-mutation) and its statistics are not merged: a failed flush
+    /// charges nothing.
+    pub fn forward_batch_contained(
+        &mut self,
+        feats: &[f32],
+        pad: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Vec<usize> {
         let dims = &self.model.dims;
         let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
         assert_eq!(feats.len(), batch * t * f, "feats must be batch x seq x input");
         assert_eq!(pad.len(), batch * t, "pad mask must be batch x seq");
+        let marker = self.panic_marker;
+        let shards = Self::shard_sizes(batch, self.threads);
+        if shards.len() <= 1 {
+            // Single runtime: catch the unwind and restore the
+            // cumulative counters into a fresh runtime.
+            let saved = self.fwd.stats;
+            let model = &self.model;
+            let fwd = &mut self.fwd;
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                panic_if_marked(feats, marker, t, f);
+                fwd.run_feats(model, batch, feats, pad, out);
+            }));
+            return match run {
+                Ok(()) => Vec::new(),
+                Err(_) => {
+                    self.fwd = BatchForward::new();
+                    self.fwd.stats = saved;
+                    out.clear();
+                    out.resize(batch * t * v, 0.0);
+                    (0..batch).collect()
+                }
+            };
+        }
         if self.shard_fwds.len() < shards.len() {
             self.shard_fwds.resize_with(shards.len(), BatchForward::new);
         }
@@ -276,8 +346,10 @@ impl NativeBackend {
             self.shard_outs.resize_with(shards.len(), Vec::new);
         }
         let model = &self.model;
+        let mut panicked = vec![false; shards.len()];
         std::thread::scope(|s| {
             let mut u0 = 0usize;
+            let mut handles = Vec::with_capacity(shards.len());
             for ((&len, fwd), sout) in shards
                 .iter()
                 .zip(self.shard_fwds.iter_mut())
@@ -288,8 +360,17 @@ impl NativeBackend {
                 // Zero the shard's counters so the post-join merge adds
                 // exactly this call's work.
                 fwd.stats = ForwardStats::default();
-                s.spawn(move || fwd.run_feats(model, len, sf, sp, sout));
+                handles.push(s.spawn(move || {
+                    panic_if_marked(sf, marker, t, f);
+                    fwd.run_feats(model, len, sf, sp, sout);
+                }));
                 u0 += len;
+            }
+            // Join inside the scope: a worker panic becomes an `Err`
+            // here instead of resuming its unwind at scope exit (only
+            // unjoined handles propagate).
+            for (h, flag) in handles.into_iter().zip(panicked.iter_mut()) {
+                *flag = h.join().is_err();
             }
         });
         out.clear();
@@ -297,13 +378,20 @@ impl NativeBackend {
         // Concatenate in utterance order and merge each worker's
         // counters into the canonical accumulator (only the shards this
         // call used — the pools may be larger from an earlier call).
-        for (sout, fwd) in self.shard_outs[..shards.len()]
-            .iter()
-            .zip(&self.shard_fwds)
-        {
-            out.extend_from_slice(sout);
-            self.fwd.stats.add(&fwd.stats);
+        let mut failed = Vec::new();
+        let mut u0 = 0usize;
+        for (i, &len) in shards.iter().enumerate() {
+            if panicked[i] {
+                out.resize(out.len() + len * t * v, 0.0);
+                failed.extend(u0..u0 + len);
+                self.shard_fwds[i] = BatchForward::new();
+            } else {
+                out.extend_from_slice(&self.shard_outs[i]);
+                self.fwd.stats.add(&self.shard_fwds[i].stats);
+            }
+            u0 += len;
         }
+        failed
     }
 
     /// The serving manifest this backend satisfies — same contract shape
@@ -551,6 +639,51 @@ impl ServeBackend for NativeBackend {
             lp
         };
         Ok(Tensor::from_f32(&[rows, t, dims.vocab], &logits))
+    }
+
+    fn execute_rows_partial(
+        &mut self,
+        artifact: &str,
+        args: &[Tensor],
+        rows: usize,
+    ) -> Result<(Tensor, Vec<usize>)> {
+        let dims = self.model.dims;
+        if dims.token_input {
+            // The token path runs on the single canonical runtime; no
+            // shard-level containment to report.
+            return Ok((self.execute_rows(artifact, args, rows)?, Vec::new()));
+        }
+        ensure!(rows > 0, "dynamic batch must be non-empty");
+        let t = dims.seq_len;
+        ensure!(args.len() == 2, "ASR serving takes feats + pad_mask");
+        ensure!(
+            args[0].shape == [rows, t, dims.input_dim] && args[0].dtype == DType::F32,
+            "feats shape {:?}/{:?} != [{rows}, {t}, {}] f32",
+            args[0].shape,
+            args[0].dtype,
+            dims.input_dim
+        );
+        ensure!(
+            args[1].shape == [rows, t] && args[1].dtype == DType::F32,
+            "pad_mask shape {:?}/{:?} != [{rows}, {t}] f32",
+            args[1].shape,
+            args[1].dtype
+        );
+        let feats = args[0].f32s();
+        let pad = args[1].f32s();
+        let mut lp = Vec::new();
+        let failed = self.forward_batch_contained(&feats, &pad, rows, &mut lp);
+        Ok((Tensor::from_f32(&[rows, t, dims.vocab], &lp), failed))
+    }
+
+    fn set_operating_point(&mut self, point: &OperatingPoint) -> Result<bool> {
+        // Re-stage from the master weights: `prepare` is deterministic,
+        // so landing on an operating point here is bitwise-identical to
+        // constructing a fresh backend at it (the degradation ladder's
+        // correctness contract).
+        let tile = point.tile.unwrap_or(self.model.tile);
+        self.prepare(tile, point.rate, point.quant)?;
+        Ok(true)
     }
 }
 
@@ -1031,5 +1164,93 @@ mod tests {
         let bad = Tensor::zeros(&[3, t, f], DType::I32);
         let pt2 = Tensor::zeros(&[3, t], DType::F32);
         assert!(be.execute_rows("native_asr_encoder", &[bad, pt2], 3).is_err());
+    }
+
+    #[test]
+    fn contained_worker_panic_fails_only_its_shard() {
+        // Satellite: one worker blowing up must not kill the batcher —
+        // its shard's utterances fail (zero-filled rows), the surviving
+        // shard's outputs stay bitwise intact, and the backend keeps
+        // serving afterwards.
+        const MARKER: f32 = 55.5;
+        let dims = mini_dims();
+        let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
+        let mut be = NativeBackend::new(synth_weights(&dims, 91), 4).unwrap();
+        be.set_threads(2);
+        be.set_panic_marker(Some(MARKER));
+        let (mut feats, pad) = ragged(&dims, 4, 17);
+        // Poison utterance 0: with shards [2, 2], the first worker dies
+        // and takes utterances 0 and 1 with it.
+        feats[0] = MARKER;
+        assert_eq!(NativeBackend::shard_sizes(4, 2), vec![2, 2]);
+        be.reset_stats();
+        let mut out = Vec::new();
+        let failed = be.forward_batch_contained(&feats, &pad, 4, &mut out);
+        assert_eq!(failed, vec![0, 1], "exactly the poisoned shard fails");
+        assert_eq!(out.len(), 4 * t * v, "output stays batch-aligned");
+        assert!(out[..2 * t * v].iter().all(|&x| x == 0.0), "failed rows zeroed");
+        assert_eq!(be.stats().utterances, 2, "failed shard charges nothing");
+
+        // The surviving shard is bitwise what a clean run produces.
+        let mut reference = NativeBackend::new(synth_weights(&dims, 91), 4).unwrap();
+        let want = reference.forward_batch(&feats[2 * t * f..], &pad[2 * t..], 2);
+        assert_eq!(&out[2 * t * v..], &want[..], "surviving shard bitwise intact");
+
+        // And the backend still serves a clean batch afterwards.
+        let (clean, cpad) = ragged(&dims, 4, 18);
+        let failed = be.forward_batch_contained(&clean, &cpad, 4, &mut out);
+        assert!(failed.is_empty(), "clean flush after containment: {failed:?}");
+        assert_eq!(be.stats().utterances, 6);
+    }
+
+    #[test]
+    fn single_thread_panic_contained_and_stats_preserved() {
+        // The single-runtime path catches the unwind too, and a failed
+        // flush leaves the cumulative counters exactly as they were.
+        const MARKER: f32 = 7.25;
+        let dims = mini_dims();
+        let (t, v) = (dims.seq_len, dims.vocab);
+        let mut be = NativeBackend::new(synth_weights(&dims, 93), 2).unwrap();
+        be.set_panic_marker(Some(MARKER));
+        let (clean, cpad) = ragged(&dims, 2, 19);
+        be.reset_stats();
+        be.forward_batch(&clean, &cpad, 2);
+        let before = *be.stats();
+        assert_eq!(before.utterances, 2);
+
+        let (mut feats, pad) = ragged(&dims, 2, 20);
+        feats[0] = MARKER;
+        let mut out = Vec::new();
+        let failed = be.forward_batch_contained(&feats, &pad, 2, &mut out);
+        assert_eq!(failed, vec![0, 1], "single runtime fails the whole flush");
+        assert_eq!(out.len(), 2 * t * v);
+        assert!(out.iter().all(|&x| x == 0.0));
+        assert_eq!(*be.stats(), before, "failed flush charges nothing");
+
+        // Still serving.
+        let failed = be.forward_batch_contained(&clean, &cpad, 2, &mut out);
+        assert!(failed.is_empty());
+        assert_eq!(be.stats().utterances, 4);
+    }
+
+    #[test]
+    fn set_operating_point_restages_like_prepare() {
+        // The ladder contract: stepping the live backend to an
+        // operating point is bitwise what prepare() at that point gives.
+        use crate::coordinator::resilience::OperatingPoint;
+        let dims = mini_dims();
+        let (feats, pad) = ragged(&dims, 2, 21);
+        let mut stepped = NativeBackend::new(synth_weights(&dims, 95), 2).unwrap();
+        let restaged =
+            ServeBackend::set_operating_point(&mut stepped, &OperatingPoint::new(0.5, Quant::Int8))
+                .unwrap();
+        assert!(restaged, "native backend supports the ladder");
+        let mut direct = NativeBackend::new(synth_weights(&dims, 95), 2).unwrap();
+        direct.prepare(dims.tile, 0.5, Quant::Int8).unwrap();
+        assert_eq!(
+            stepped.forward_batch(&feats, &pad, 2),
+            direct.forward_batch(&feats, &pad, 2),
+            "ladder step bitwise equals standalone prepare"
+        );
     }
 }

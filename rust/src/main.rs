@@ -3,10 +3,12 @@
 //! ```text
 //! sasp report <id>        regenerate a paper table/figure
 //!        ids: table1 table2 table3 fig6 fig7 fig8 fig9 fig10 fig11
-//!             mt headline serve all
+//!             mt headline serve overload all
 //!        (serve measures the serving runtime's latency/throughput
 //!         frontier — fixed vs dynamic batching, 1/2/4 worker threads —
-//!         offline on the native backend; wall-clock, so not in `all`)
+//!         offline on the native backend; overload measures goodput
+//!         under bounded admission, deadlines, and the degradation
+//!         ladder; both wall-clock, so not in `all`)
 //! sasp sweep              full design-space sweep (timing only)
 //! sasp qos <tile> <rate> <fp32|int8>
 //!                         evaluate one QoS point (PJRT when artifacts
@@ -92,6 +94,7 @@ fn cmd_report(cli: &Cli) -> Result<()> {
         "fig6" => return Ok(print!("{}", harness::fig6().render())),
         "fig8" => return Ok(print!("{}", harness::fig8().render())),
         "serve" => return Ok(print!("{}", harness::serve_report()?.render())),
+        "overload" => return Ok(print!("{}", harness::overload_report()?.render())),
         _ => {}
     }
     let mut qos = qos_stack(&cfg)?;

@@ -133,6 +133,24 @@ impl Bench {
         stats
     }
 
+    /// Record an externally measured value as a one-iteration case —
+    /// for metrics a timed closure cannot express (e.g. a serving run's
+    /// internal p99 latency). Prints and lands in the JSON report like
+    /// any other case, so `scripts/verify.sh` can guard on it.
+    pub fn record(&self, name: &str, value: Duration) -> Stats {
+        let stats = Stats {
+            name: name.to_string(),
+            iters: 1,
+            median: value,
+            p95: value,
+            mean: value,
+            min: value,
+        };
+        println!("{}", stats.report());
+        self.record_json(&stats);
+        stats
+    }
+
     /// Append `stats` to the JSON report (no-op when `json_path` is
     /// unset). The file is rewritten after each case as: everything a
     /// *previous* writer left there (minus entries this runner is
@@ -237,6 +255,27 @@ mod tests {
         let arr = Json::parse(&text).unwrap().as_arr().unwrap().to_vec();
         assert!(arr.iter().any(|c| c.get("name").as_str() == Some("earlier-binary-case")));
         assert!(arr.iter().any(|c| c.get("name").as_str() == Some("merge-case")));
+    }
+
+    #[test]
+    fn record_emits_one_iteration_case() {
+        let path = std::env::temp_dir().join(format!(
+            "bench_hotpath_record_{}.json",
+            std::process::id()
+        ));
+        let mut b = tiny();
+        b.json_path = Some(path.clone());
+        let s = b.record("external-p99", Duration::from_micros(123));
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.median, Duration::from_micros(123));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let arr = Json::parse(&text).unwrap().as_arr().unwrap().to_vec();
+        let case = arr
+            .iter()
+            .find(|c| c.get("name").as_str() == Some("external-p99"))
+            .expect("recorded");
+        assert_eq!(case.get("median_ns").as_f64().unwrap(), 123_000.0);
     }
 
     #[test]
