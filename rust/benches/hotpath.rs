@@ -346,6 +346,64 @@ fn main() {
         );
     }
 
+    // Telemetry overhead on the serving hot path: the same fixed-batch
+    // case as the baseline above, first with no recording session (every
+    // instrumentation site costs its single-branch gate), then under a
+    // live session that records spans/metrics and drains the trace each
+    // iteration. scripts/verify.sh guards both against the baseline:
+    // telemetry off <= 1.02x, telemetry on <= 1.10x.
+    {
+        use sasp::coordinator::serve::{Request, ServeConfig, Server};
+        use sasp::telemetry::Telemetry;
+        use std::sync::mpsc;
+        use std::time::Duration;
+
+        let sdims = ModelDims::tiny_asr();
+        let n_req = 16usize;
+        let sfeats: Vec<f32> = (0..sdims.seq_len * sdims.input_dim)
+            .map(|_| rng.normal() as f32 * 0.5)
+            .collect();
+        let telemetry_case = |label: &str, record: bool| {
+            let cfg = ServeConfig::fixed(4, Duration::from_millis(1));
+            let mut nb =
+                NativeBackend::new(synth_weights(&sdims, 7), cfg.max_batch).expect("backend");
+            nb.prepare(sdims.tile, 0.25, Quant::Int8).expect("prepare");
+            let manifest = nb.manifest().clone();
+            let mut server = Server::with_manifest(
+                &manifest,
+                &manifest.name,
+                sasp::data::Bundle::default(),
+                cfg,
+            )
+            .expect("server");
+            b.run(label, || {
+                let session =
+                    if record { Telemetry::start() } else { Telemetry::noop() };
+                let (req_tx, req_rx) = mpsc::channel::<Request>();
+                let (resp_tx, resp_rx) = mpsc::channel();
+                for id in 0..n_req as u64 {
+                    req_tx
+                        .send(Request::new(id, sfeats.clone(), sdims.seq_len))
+                        .unwrap();
+                }
+                drop(req_tx);
+                let report = server.run(&mut nb, req_rx, resp_tx).unwrap();
+                assert_eq!(resp_rx.try_iter().count(), n_req);
+                let trace = session.finish();
+                assert!(!record || !trace.events.is_empty());
+                report.n_batches + trace.events.len()
+            });
+        };
+        telemetry_case(
+            "serve: 16 utts int8 25% pruned, fixed batch 4, telemetry off",
+            false,
+        );
+        telemetry_case(
+            "serve: 16 utts int8 25% pruned, fixed batch 4, telemetry on",
+            true,
+        );
+    }
+
     // Overload resilience: 32 utterances pre-queued against dynamic
     // flushes of 4 — an 8-deep standing backlog (2x the steady-state
     // capacity of the 16-utt case above). The degradation-ladder run

@@ -158,6 +158,37 @@ impl OperatingPoint {
     pub fn new(rate: f64, quant: Quant) -> Self {
         OperatingPoint { tile: None, rate, quant }
     }
+
+    /// Short human-readable label (`"rate=0.25 int8"`) — the state
+    /// name used by [`StateTransition`] records and telemetry events.
+    pub fn label(&self) -> String {
+        let q = match self.quant {
+            Quant::Fp32 => "fp32",
+            Quant::Int8 => "int8",
+        };
+        match self.tile {
+            Some(t) => format!("tile={t} rate={} {q}", self.rate),
+            None => format!("rate={} {q}", self.rate),
+        }
+    }
+}
+
+/// One chronological breaker/ladder state change observed by the
+/// serving loop — the per-run audit trail that the end-of-run counters
+/// (`breaker_trips`, `degrade_steps`, ...) summarize away. Collected in
+/// flush order on [`crate::coordinator::serve::ServeReport`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StateTransition {
+    /// Time since the serving run started.
+    pub at: Duration,
+    /// State left (`"closed"`/`"open"` for the breaker, an
+    /// [`OperatingPoint::label`] for the ladder).
+    pub from: String,
+    /// State entered.
+    pub to: String,
+    /// What forced the change (`"consecutive-failures"`, `"pressure"`,
+    /// `"ladder-absorb"`, `"recovery"`, ...).
+    pub trigger: String,
 }
 
 /// Graceful-degradation ladder: `points[0]` is the nominal operating

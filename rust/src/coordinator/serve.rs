@@ -44,13 +44,34 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
-use super::resilience::{CircuitBreaker, OperatingPoint, ResilienceConfig, ShedPolicy};
+use super::resilience::{
+    CircuitBreaker, OperatingPoint, ResilienceConfig, ShedPolicy, StateTransition,
+};
 use crate::data::{load_bundle, Bundle, DType, Tensor};
 use crate::infer::{synth_testset, synth_weights, ModelDims, NativeBackend};
 use crate::qos::decode::ctc_greedy;
 use crate::qos::{AsrEvaluator, EvalMeta, PjrtState, QosBackend};
 use crate::runtime::{Engine, Manifest};
 use crate::systolic::Quant;
+use crate::telemetry::{self, LazyCounter, LazyGauge, LazyHistogram};
+
+// Serving metrics (see EXPERIMENTS.md §Observability for the full
+// catalog). All updates are gated on `telemetry::active()` at the call
+// site, so an idle registry costs one relaxed load per event.
+static M_ADMITTED: LazyCounter = LazyCounter::new("serve_admitted_total");
+static M_OK: LazyCounter = LazyCounter::new("serve_ok_total");
+static M_SHED: LazyCounter = LazyCounter::new("serve_shed_total");
+static M_EXPIRED: LazyCounter = LazyCounter::new("serve_expired_total");
+static M_INVALID: LazyCounter = LazyCounter::new("serve_invalid_total");
+static M_FAILED: LazyCounter = LazyCounter::new("serve_failed_total");
+static M_RETRIES: LazyCounter = LazyCounter::new("serve_retries_total");
+static M_FLUSHES: LazyCounter = LazyCounter::new("serve_flushes_total");
+static M_BREAKER_TRIPS: LazyCounter = LazyCounter::new("serve_breaker_trips_total");
+static M_DEGRADE: LazyCounter = LazyCounter::new("serve_ladder_degrade_total");
+static M_RECOVER: LazyCounter = LazyCounter::new("serve_ladder_recover_total");
+static M_QUEUE_DEPTH: LazyGauge = LazyGauge::new("serve_queue_depth");
+static M_OK_LATENCY: LazyHistogram = LazyHistogram::new("serve_ok_latency_us");
+static M_BATCH_FILL: LazyHistogram = LazyHistogram::new("serve_batch_fill");
 
 /// The execution surface the server needs. Production uses the PJRT
 /// [`Engine`] or the native engine ([`crate::infer::NativeBackend`],
@@ -460,6 +481,20 @@ pub enum Outcome {
     Failed,
 }
 
+impl Outcome {
+    /// Stable lowercase label — used by telemetry attributes and the
+    /// report tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Shed => "shed",
+            Outcome::Expired => "expired",
+            Outcome::Invalid => "invalid",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
 /// One response.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -477,6 +512,7 @@ pub struct OutcomeLatency {
     pub p50: Duration,
     pub p95: Duration,
     pub p99: Duration,
+    pub p999: Duration,
 }
 
 /// Latency/throughput summary of a serving run.
@@ -491,6 +527,10 @@ pub struct ServeReport {
     pub p50: Duration,
     pub p95: Duration,
     pub p99: Duration,
+    /// Tail of the tail: the 99.9th percentile (nearest rank). With
+    /// fewer than 1000 served requests this collapses toward the max —
+    /// the honest nearest-rank answer, not an interpolation.
+    pub p999: Duration,
     pub mean_batch_fill: f64,
     pub throughput_rps: f64,
     /// Zeroed padding rows executed on fixed-shape backends (slack
@@ -519,16 +559,28 @@ pub struct ServeReport {
     pub goodput_rps: f64,
     /// Per-outcome latency percentiles (only outcomes that occurred).
     pub outcomes: Vec<OutcomeLatency>,
+    /// Chronological breaker/ladder state transitions: each records
+    /// when (offset from run start), from which state, to which state,
+    /// and what triggered the move. Recorded unconditionally (no
+    /// telemetry session required) — the overload reports and the
+    /// hysteresis tests read it.
+    pub transitions: Vec<StateTransition>,
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample list: the
 /// smallest element with at least `p`% of the samples at or below it
 /// (rank `ceil(p·n/100)`, 1-based). Empty input reports zero.
 fn percentile(sorted: &[Duration], p: usize) -> Duration {
+    permille(sorted, p * 10)
+}
+
+/// [`percentile`] at per-mille resolution — p99.9 is `permille(l, 999)`
+/// (rank `ceil(pm·n/1000)`, 1-based). Empty input reports zero.
+fn permille(sorted: &[Duration], pm: usize) -> Duration {
     if sorted.is_empty() {
         return Duration::default();
     }
-    let rank = (p * sorted.len()).div_ceil(100).clamp(1, sorted.len());
+    let rank = (pm * sorted.len()).div_ceil(1000).clamp(1, sorted.len());
     sorted[rank - 1]
 }
 
@@ -537,6 +589,12 @@ fn percentile(sorted: &[Duration], p: usize) -> Duration {
 struct Queued {
     req: Request,
     seq: u64,
+    /// Telemetry span covering the request's time in the admission
+    /// queue. Detached (non-LIFO: queue spans end in drain order, not
+    /// reverse admission order); ends when the `Queued` drops — at
+    /// flush take, shed, or expiry. Inert when no session is recording.
+    #[allow(dead_code)]
+    span: telemetry::Span,
 }
 
 /// Whether `a` should be shed before `b` under
@@ -596,6 +654,25 @@ impl Tally {
         if resp.outcome == Outcome::Ok && !req.expired(Instant::now()) {
             self.on_time += 1;
         }
+        if telemetry::active() {
+            match resp.outcome {
+                Outcome::Ok => {
+                    M_OK.get().inc();
+                    M_OK_LATENCY.get().observe(resp.latency.as_micros() as u64);
+                }
+                Outcome::Shed => M_SHED.get().inc(),
+                Outcome::Expired => M_EXPIRED.get().inc(),
+                Outcome::Invalid => M_INVALID.get().inc(),
+                Outcome::Failed => M_FAILED.get().inc(),
+            }
+            telemetry::instant(
+                "request.respond",
+                vec![
+                    ("req_id", resp.id.into()),
+                    ("outcome", resp.outcome.name().into()),
+                ],
+            );
+        }
         self.lats[Self::slot(resp.outcome)].push(resp.latency);
         let _ = self.tx.send(resp);
     }
@@ -609,6 +686,7 @@ impl Tally {
         breaker_trips: usize,
         degrade_steps: usize,
         recover_steps: usize,
+        transitions: Vec<StateTransition>,
         total_secs: f64,
     ) -> ServeReport {
         for l in &mut self.lats {
@@ -631,6 +709,7 @@ impl Tally {
                 p50: percentile(l, 50),
                 p95: percentile(l, 95),
                 p99: percentile(l, 99),
+                p999: permille(l, 999),
             })
             .collect();
         let ok = &self.lats[0];
@@ -641,6 +720,7 @@ impl Tally {
             p50: percentile(ok, 50),
             p95: percentile(ok, 95),
             p99: percentile(ok, 99),
+            p999: permille(ok, 999),
             mean_batch_fill: fills.iter().sum::<usize>() as f64 / fills.len().max(1) as f64,
             throughput_rps: ok.len() as f64 / total,
             slack_rows,
@@ -655,6 +735,7 @@ impl Tally {
             on_time: self.on_time,
             goodput_rps: self.on_time as f64 / total,
             outcomes,
+            transitions,
         }
     }
 }
@@ -795,7 +876,15 @@ impl Server {
             tally.finish(&req, Outcome::Invalid);
             return;
         }
-        let q = Queued { req, seq: *seq };
+        // The queue span starts at validation and ends when the Queued
+        // drops — shed decisions below end it immediately, which is the
+        // honest queue residency of a shed request.
+        let mut span = telemetry::Span::detached("request.queue", telemetry::current_span());
+        if span.is_live() {
+            M_ADMITTED.get().inc();
+            span.attr("req_id", req.id);
+        }
+        let q = Queued { req, seq: *seq, span };
         *seq += 1;
         let Some(adm) = self.resilience.as_ref().map(|r| r.admission) else {
             pending.push_back(q);
@@ -895,6 +984,11 @@ impl Server {
         let mut retries = 0usize;
         let mut degrade_steps = 0usize;
         let mut recover_steps = 0usize;
+        let mut transitions: Vec<StateTransition> = Vec::new();
+        // Root span of the run: every coordinator-thread span below
+        // parents under it via the thread-local stack; inert (one
+        // relaxed load) when no telemetry session is recording.
+        let run_span = telemetry::Span::begin("serve.run");
         let mut open = true;
         while open || !pending.is_empty() {
             // Idle: block until the first request arrives — no
@@ -911,6 +1005,10 @@ impl Server {
                     }
                 }
             }
+            // The batching window: everything between "work exists" and
+            // "the flush is cut". Queue spans opened by `admit` inside
+            // the window parent under it.
+            let mut wspan = telemetry::Span::begin("serve.batch_window");
             match self.cfg.flush {
                 FlushPolicy::Fixed => {
                     // The batching window runs from the first queued
@@ -949,6 +1047,10 @@ impl Server {
                     }
                 }
             }
+            if wspan.is_live() {
+                wspan.attr("queued", pending.len());
+            }
+            drop(wspan);
             // Pre-execution expiry: a request past its deadline never
             // reaches the backend.
             let now = Instant::now();
@@ -967,20 +1069,36 @@ impl Server {
             // Queue pressure for the ladder: backlog depth at flush
             // time, before this flush's requests are taken.
             let backlog = pending.len();
+            if telemetry::active() {
+                M_QUEUE_DEPTH.get().set(backlog as i64);
+            }
             let take = backlog.min(cap);
+            // Dropping each Queued here ends its queue span.
             let batch: Vec<Request> = pending.drain(..take).map(|q| q.req).collect();
 
             // Fail fast while the breaker is open: the flush never
             // reaches the backend (and is not counted as a batch).
             if breaker.as_ref().is_some_and(|b| b.is_open()) {
                 breaker.as_mut().expect("breaker checked above").fail_fast();
+                if telemetry::active() {
+                    telemetry::instant(
+                        "resilience.fail_fast",
+                        vec![("rows", batch.len().into())],
+                    );
+                }
                 for req in &batch {
                     tally.finish(req, Outcome::Failed);
                 }
                 continue;
             }
 
-            // Execute, with bounded retry + exponential backoff.
+            // Execute, with bounded retry + exponential backoff. The
+            // flush span covers every attempt; each re-execution emits
+            // a `resilience.retry` instant.
+            let mut fspan = telemetry::Span::begin("serve.flush");
+            if fspan.is_live() {
+                fspan.attr("rows", batch.len());
+            }
             let mut flush_result = self.run_batch(backend, &batch);
             if let Some(r) = res.as_ref() {
                 let mut attempt = 0usize;
@@ -991,9 +1109,22 @@ impl Server {
                     }
                     attempt += 1;
                     retries += 1;
+                    if telemetry::active() {
+                        M_RETRIES.get().inc();
+                        telemetry::instant(
+                            "resilience.retry",
+                            vec![("attempt", attempt.into())],
+                        );
+                    }
                     flush_result = self.run_batch(backend, &batch);
                 }
             }
+            if fspan.is_live() {
+                fspan.attr("ok", u64::from(flush_result.is_ok()));
+                M_FLUSHES.get().inc();
+                M_BATCH_FILL.get().observe(batch.len() as u64);
+            }
+            drop(fspan);
             fills.push(batch.len());
             match flush_result {
                 Ok((responses, slack)) => {
@@ -1016,18 +1147,52 @@ impl Server {
                         .expect("resilience implies a breaker")
                         .on_failure();
                     if tripped {
+                        transitions.push(StateTransition {
+                            at: t0.elapsed(),
+                            from: "closed".to_string(),
+                            to: "open".to_string(),
+                            trigger: "consecutive-failures".to_string(),
+                        });
+                        if telemetry::active() {
+                            M_BREAKER_TRIPS.get().inc();
+                            telemetry::instant(
+                                "resilience.breaker",
+                                vec![("state", "open".into())],
+                            );
+                        }
                         // A ladder step down absorbs the trip — the
                         // cheaper operating point *is* the remedy, so
                         // the breaker closes immediately. With no step
                         // left it stays open for its fail-fast window.
                         if let Some(l) = r.ladder.as_ref() {
                             if ladder_live && ladder_step + 1 < l.points.len() {
+                                let from = l.points[ladder_step].label();
                                 ladder_step += 1;
                                 ladder_live =
                                     backend.set_operating_point(&l.points[ladder_step])?;
                                 degrade_steps += 1;
                                 high_streak = 0;
+                                let to = l.points[ladder_step].label();
+                                if telemetry::active() {
+                                    M_DEGRADE.get().inc();
+                                    telemetry::instant(
+                                        "resilience.ladder",
+                                        vec![("step", "degrade".into()), ("point", to.as_str().into())],
+                                    );
+                                }
+                                transitions.push(StateTransition {
+                                    at: t0.elapsed(),
+                                    from,
+                                    to,
+                                    trigger: "breaker-trip".to_string(),
+                                });
                                 breaker.as_mut().expect("breaker exists").close();
+                                transitions.push(StateTransition {
+                                    at: t0.elapsed(),
+                                    from: "open".to_string(),
+                                    to: "closed".to_string(),
+                                    trigger: "ladder-absorb".to_string(),
+                                });
                             }
                         }
                     }
@@ -1052,19 +1217,50 @@ impl Server {
                         low_streak = 0;
                     }
                     if high_streak >= l.patience && ladder_step + 1 < l.points.len() {
+                        let from = l.points[ladder_step].label();
                         ladder_step += 1;
                         ladder_live = backend.set_operating_point(&l.points[ladder_step])?;
                         degrade_steps += 1;
                         high_streak = 0;
+                        let to = l.points[ladder_step].label();
+                        if telemetry::active() {
+                            M_DEGRADE.get().inc();
+                            telemetry::instant(
+                                "resilience.ladder",
+                                vec![("step", "degrade".into()), ("point", to.as_str().into())],
+                            );
+                        }
+                        transitions.push(StateTransition {
+                            at: t0.elapsed(),
+                            from,
+                            to,
+                            trigger: "pressure".to_string(),
+                        });
                     } else if low_streak >= l.recover_after && ladder_step > 0 {
+                        let from = l.points[ladder_step].label();
                         ladder_step -= 1;
                         ladder_live = backend.set_operating_point(&l.points[ladder_step])?;
                         recover_steps += 1;
                         low_streak = 0;
+                        let to = l.points[ladder_step].label();
+                        if telemetry::active() {
+                            M_RECOVER.get().inc();
+                            telemetry::instant(
+                                "resilience.ladder",
+                                vec![("step", "recover".into()), ("point", to.as_str().into())],
+                            );
+                        }
+                        transitions.push(StateTransition {
+                            at: t0.elapsed(),
+                            from,
+                            to,
+                            trigger: "recovery".to_string(),
+                        });
                     }
                 }
             }
         }
+        drop(run_span);
         let total = t0.elapsed().as_secs_f64();
         let breaker_trips = breaker.map_or(0, |b| b.trips);
         Ok(tally.report(
@@ -1074,6 +1270,7 @@ impl Server {
             breaker_trips,
             degrade_steps,
             recover_steps,
+            transitions,
             total,
         ))
     }
@@ -1108,6 +1305,12 @@ impl Server {
             );
         }
 
+        // Covers argument assembly + backend execution (the gemm/shard
+        // spans emitted inside the native backend parent under it).
+        let mut espan = telemetry::Span::begin("serve.execute");
+        if espan.is_live() {
+            espan.attr("rows", n);
+        }
         let (out, slack, failed_rows) = if backend.any_batch() {
             {
                 let feats = &mut self.dyn_args[0];
@@ -1148,6 +1351,10 @@ impl Server {
             }
             (backend.execute(&self.artifact, &self.args)?, b - n, Vec::new())
         };
+        if espan.is_live() {
+            espan.attr("slack_rows", slack);
+        }
+        drop(espan);
 
         let lp = out.f32s();
         let mut responses = Vec::with_capacity(n);
@@ -1163,12 +1370,17 @@ impl Server {
                 });
                 continue;
             }
+            let mut dspan = telemetry::Span::begin("request.decode");
+            if dspan.is_live() {
+                dspan.attr("req_id", req.id);
+            }
             let tokens = ctc_greedy(
                 &lp[i * t * self.vocab..(i + 1) * t * self.vocab],
                 req.feat_len.min(t),
                 self.vocab,
                 self.blank,
             );
+            drop(dspan);
             responses.push(Response {
                 id: req.id,
                 tokens,
@@ -1364,6 +1576,9 @@ mod tests {
         );
         assert_eq!((r.breaker_trips, r.degrade_steps, r.recover_steps), (0, 0, 0));
         assert!(r.outcomes.is_empty());
+        // p999 defaults to zero and the transition log starts empty.
+        assert_eq!(r.p999, Duration::default());
+        assert!(r.transitions.is_empty());
     }
 
     #[test]
@@ -1385,6 +1600,18 @@ mod tests {
         assert_eq!(percentile(&twenty, 50), ms(10));
         assert_eq!(percentile(&twenty, 95), ms(19));
         assert_eq!(percentile(&twenty, 100), ms(20));
+        // p99.9 at per-mille resolution: below 1000 samples the nearest
+        // rank is the max (rank ceil(999*20/1000) = 20); empty and
+        // single-sample inputs behave like the percent variants.
+        assert_eq!(permille(&[], 999), Duration::default());
+        assert_eq!(permille(&[ms(7)], 999), ms(7));
+        assert_eq!(permille(&twenty, 999), ms(20));
+        // At n = 2000 the 99.9th leaves the max behind: rank
+        // ceil(999*2000/1000) = 1998.
+        let many: Vec<Duration> = (1..=2000).map(ms).collect();
+        assert_eq!(permille(&many, 999), ms(1998));
+        // The percent path delegates: percentile(p) == permille(10p).
+        assert_eq!(percentile(&twenty, 95), permille(&twenty, 950));
     }
 
     #[test]
@@ -2143,6 +2370,25 @@ mod tests {
         assert_eq!(report.recover_steps, 1);
         assert_eq!(backend.points_set, vec![nominal, degraded, nominal]);
         assert_eq!(resp_rx.try_iter().count(), 8);
+        // The transition log tells the same story, in order: one
+        // pressure degrade, one hysteretic recovery, timestamps
+        // non-decreasing.
+        let t: Vec<(&str, &str, &str)> = report
+            .transitions
+            .iter()
+            .map(|s| (s.from.as_str(), s.to.as_str(), s.trigger.as_str()))
+            .collect();
+        assert_eq!(
+            t,
+            vec![
+                ("rate=0.25 int8", "rate=0.75 int8", "pressure"),
+                ("rate=0.75 int8", "rate=0.25 int8", "recovery"),
+            ]
+        );
+        assert!(report
+            .transitions
+            .windows(2)
+            .all(|w| w[0].at <= w[1].at));
     }
 
     #[test]
@@ -2180,6 +2426,26 @@ mod tests {
         assert_eq!(backend.inner().points_set, vec![nominal, degraded]);
         assert_eq!(backend.inner().inner.rows_seen, vec![1, 1]);
         assert_eq!(resp_rx.try_iter().count(), 3);
+        // Transition log: the trip opens the breaker, the ladder step
+        // absorbs it, and the absorb closes the breaker — in that
+        // order, chronologically.
+        let t: Vec<(&str, &str, &str)> = report
+            .transitions
+            .iter()
+            .map(|s| (s.from.as_str(), s.to.as_str(), s.trigger.as_str()))
+            .collect();
+        assert_eq!(
+            t,
+            vec![
+                ("closed", "open", "consecutive-failures"),
+                ("rate=0.25 int8", "rate=0.75 int8", "breaker-trip"),
+                ("open", "closed", "ladder-absorb"),
+            ]
+        );
+        assert!(report
+            .transitions
+            .windows(2)
+            .all(|w| w[0].at <= w[1].at));
     }
 
     #[test]

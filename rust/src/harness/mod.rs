@@ -6,6 +6,7 @@
 pub mod figures;
 pub mod qos_cache;
 pub mod serving;
+pub mod trace;
 
 pub use figures::*;
 pub use qos_cache::QosCache;
@@ -13,6 +14,7 @@ pub use serving::{
     measure_overload, measure_serve, overload_report, overload_report_sized, serve_report,
     serve_report_sized,
 };
+pub use trace::{measure_trace, trace_report, trace_report_sized};
 
 /// A rendered report: title + lines (also JSON-emittable).
 #[derive(Clone, Debug, Default)]

@@ -106,16 +106,17 @@ pub fn serve_report_sized(
         dims.seq_len, dims.input_dim
     ));
     r.line(format!(
-        "{:<26} {:>10} {:>10} {:>10} {:>8} {:>7}",
-        "policy", "p50", "p95", "req/s", "fill", "slack"
+        "{:<26} {:>10} {:>10} {:>10} {:>10} {:>8} {:>7}",
+        "policy", "p50", "p95", "p99.9", "req/s", "fill", "slack"
     ));
     for (label, cfg) in frontier_points(fixed_batch, max_batch) {
         let rep = measure_serve(dims, cfg, n_requests, gap)?;
         r.line(format!(
-            "{:<26} {:>10} {:>10} {:>10.1} {:>8.2} {:>7}",
+            "{:<26} {:>10} {:>10} {:>10} {:>10.1} {:>8.2} {:>7}",
             label,
             format!("{:.2?}", rep.p50),
             format!("{:.2?}", rep.p95),
+            format!("{:.2?}", rep.p999),
             rep.throughput_rps,
             rep.mean_batch_fill,
             rep.slack_rows
@@ -213,8 +214,8 @@ pub fn overload_report_sized(
          {ttl:?}, dynamic flush b<=4, ladder 0.25 -> 0.50 -> 0.75 INT8",
     ));
     r.line(format!(
-        "{:<34} {:>4} {:>5} {:>5} {:>5} {:>8} {:>10} {:>10} {:>5}",
-        "scenario", "ok", "shed", "exp", "fail", "good/s", "p50", "p99", "degr"
+        "{:<34} {:>4} {:>5} {:>5} {:>5} {:>8} {:>10} {:>10} {:>10} {:>5}",
+        "scenario", "ok", "shed", "exp", "fail", "good/s", "p50", "p99", "p99.9", "degr"
     ));
     let policies = [
         ("reject-new", ShedPolicy::RejectNew),
@@ -230,12 +231,12 @@ pub fn overload_report_sized(
                     .outcomes
                     .iter()
                     .find(|o| o.outcome == crate::coordinator::serve::Outcome::Ok);
-                let (p50, p99) = ok_lat.map_or(
-                    (Duration::ZERO, Duration::ZERO),
-                    |o| (o.p50, o.p99),
+                let (p50, p99, p999) = ok_lat.map_or(
+                    (Duration::ZERO, Duration::ZERO, Duration::ZERO),
+                    |o| (o.p50, o.p99, o.p999),
                 );
                 r.line(format!(
-                    "{:<34} {:>4} {:>5} {:>5} {:>5} {:>8.1} {:>10} {:>10} {:>5}",
+                    "{:<34} {:>4} {:>5} {:>5} {:>5} {:>8.1} {:>10} {:>10} {:>10} {:>5}",
                     format!(
                         "{gap_label} {pol_label}{}",
                         if ladder { " +ladder" } else { "" }
@@ -247,6 +248,7 @@ pub fn overload_report_sized(
                     rep.goodput_rps,
                     format!("{p50:.2?}"),
                     format!("{p99:.2?}"),
+                    format!("{p999:.2?}"),
                     rep.degrade_steps,
                 ));
             }

@@ -1,0 +1,223 @@
+//! `sasp report trace` — replay a serving run under a recording
+//! telemetry session and export the request-lifecycle Chrome trace
+//! plus a metrics snapshot.
+//!
+//! The run pre-queues a deterministic synthetic utterance stream (same
+//! seed and feature generator as [`super::serving::measure_serve`]) and
+//! serves it with the dynamic flush policy over the 25%-pruned INT8
+//! native backend, so the exported trace shows the full lifecycle —
+//! `serve.run` → `serve.batch_window` → `request.queue` → `serve.flush`
+//! → `serve.execute` → `shard.forward` → per-GEMM kernel spans →
+//! `request.decode` → `request.respond` — with every GEMM span carrying
+//! its live/skipped-tile and array-cycle accounting. Load the JSON in
+//! Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::serve::{Request, ServeConfig, ServeReport, Server};
+use crate::data::Bundle;
+use crate::infer::{synth_weights, ModelDims, NativeBackend};
+use crate::systolic::Quant;
+use crate::telemetry::{write_chrome_trace, EventKind, Telemetry, Trace};
+use crate::util::rng::Rng;
+
+use super::Report;
+
+/// Serve `n_requests` pre-queued synthetic utterances (deterministic
+/// features, no inter-arrival gap — the trace is about structure, not
+/// wall-clock load) through a fresh 25%-pruned INT8 native backend
+/// under a recording telemetry session; return the serving report and
+/// everything the session captured.
+pub fn measure_trace(
+    dims: &ModelDims,
+    cfg: ServeConfig,
+    n_requests: usize,
+) -> Result<(ServeReport, Trace)> {
+    let mut backend = NativeBackend::new(synth_weights(dims, 7), cfg.max_batch)?;
+    backend.prepare(dims.tile, 0.25, Quant::Int8)?;
+    let manifest = backend.manifest().clone();
+    let mut server =
+        Server::with_manifest(&manifest, &manifest.name, Bundle::default(), cfg)?;
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let (t, f) = (dims.seq_len, dims.input_dim);
+    let mut rng = Rng::new(11);
+    for id in 0..n_requests as u64 {
+        let feat_len = t / 2 + rng.index(t - t / 2) + 1;
+        let feats: Vec<f32> = (0..t * f).map(|_| rng.normal() as f32 * 0.5).collect();
+        req_tx
+            .send(Request::new(id, feats, feat_len.min(t)))
+            .expect("receiver is live");
+    }
+    drop(req_tx);
+
+    let session = Telemetry::start();
+    let run = server.run(&mut backend, req_rx, resp_tx);
+    let trace = session.finish();
+    let report = run?;
+    let answered = resp_rx.try_iter().count();
+    ensure!(
+        answered == n_requests,
+        "every request gets exactly one response: {answered} of {n_requests}"
+    );
+    Ok((report, trace))
+}
+
+/// [`trace_report`] with explicit model/load parameters (the render
+/// test uses the mini model and a short stream to stay fast). When
+/// `trace_out`/`metrics_out` are given, the Chrome trace JSON and the
+/// Prometheus-style metrics text are written there.
+pub fn trace_report_sized(
+    dims: &ModelDims,
+    n_requests: usize,
+    trace_out: Option<&Path>,
+    metrics_out: Option<&Path>,
+) -> Result<Report> {
+    let cfg = ServeConfig::dynamic(4, 2);
+    let (rep, trace) = measure_trace(dims, cfg, n_requests)?;
+
+    let mut r = Report::new("Trace — request-lifecycle telemetry (native, 25% SASP, INT8)");
+    r.line(format!(
+        "{n_requests} requests pre-queued, dynamic flush b<=4, 2 worker threads, \
+         seq {} x feat {}; {} ok at p50 {:.2?} / p99.9 {:.2?}",
+        dims.seq_len, dims.input_dim, rep.n_requests, rep.p50, rep.p999
+    ));
+    let spans = trace
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Span)
+        .count();
+    r.line(format!(
+        "{} events recorded ({} spans, {} instants)",
+        trace.events.len(),
+        spans,
+        trace.events.len() - spans
+    ));
+    let mut by_name: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for e in &trace.events {
+        *by_name.entry(e.name).or_default() += 1;
+    }
+    r.line(format!("{:<24} {:>6}", "event", "count"));
+    for (name, count) in &by_name {
+        r.line(format!("{name:<24} {count:>6}"));
+    }
+    let m = &trace.metrics;
+    r.line(format!(
+        "metrics: admitted={} ok={} flushes={} ok_latency_count={}",
+        m.counters.get("serve_admitted_total").copied().unwrap_or(0),
+        m.counters.get("serve_ok_total").copied().unwrap_or(0),
+        m.counters.get("serve_flushes_total").copied().unwrap_or(0),
+        m.histograms
+            .get("serve_ok_latency_us")
+            .map_or(0, |h| h.count),
+    ));
+
+    if let Some(path) = trace_out {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        write_chrome_trace(&trace.events, std::io::BufWriter::new(file))
+            .with_context(|| format!("write {}", path.display()))?;
+        r.line(format!(
+            "chrome trace -> {} (load in Perfetto / chrome://tracing)",
+            path.display()
+        ));
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, m.render_prometheus())
+            .with_context(|| format!("write {}", path.display()))?;
+        r.line(format!("metrics -> {}", path.display()));
+    }
+    Ok(r)
+}
+
+/// The `sasp report trace` entry point: tiny-ASR native backend, 16
+/// pre-queued requests, dynamic flushes of up to 4 across 2 worker
+/// threads.
+pub fn trace_report(trace_out: Option<&Path>, metrics_out: Option<&Path>) -> Result<Report> {
+    trace_report_sized(&ModelDims::tiny_asr(), 16, trace_out, metrics_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::testutil::mini_dims;
+    use crate::util::json::Json;
+
+    #[test]
+    fn trace_report_emits_parseable_chrome_trace_with_lifecycle_spans() {
+        let n = 5usize;
+        let (rep, trace) =
+            measure_trace(&mini_dims(), ServeConfig::dynamic(4, 2), n).unwrap();
+        assert_eq!(rep.n_requests, n);
+
+        // Every lifecycle stage appears; the per-request stages appear
+        // once per served request.
+        for stage in ["request.queue", "request.decode", "request.respond"] {
+            assert_eq!(trace.named(stage).count(), n, "{stage}");
+        }
+        for stage in ["serve.run", "serve.batch_window", "serve.flush", "serve.execute"] {
+            assert!(trace.named(stage).count() >= 1, "{stage}");
+        }
+        assert!(trace.named("shard.forward").count() >= 1);
+        // The INT8-prepared backend emits int8 kernel spans carrying
+        // tile accounting.
+        let gemms: Vec<_> = trace.named("gemm.batched_int8").collect();
+        assert!(!gemms.is_empty());
+        assert!(gemms
+            .iter()
+            .all(|e| e.attrs.iter().any(|(k, _)| *k == "tiles_live")));
+        // Kernel spans parent under a shard.forward span.
+        let shard_ids: Vec<u64> = trace.named("shard.forward").map(|e| e.id).collect();
+        assert!(gemms.iter().all(|e| shard_ids.contains(&e.parent)));
+
+        // The metrics snapshot agrees with the serving report.
+        assert_eq!(trace.metrics.counters["serve_admitted_total"], n as u64);
+        assert_eq!(trace.metrics.counters["serve_ok_total"], n as u64);
+        assert_eq!(trace.metrics.histograms["serve_ok_latency_us"].count, n as u64);
+
+        // The Chrome export round-trips through the crate's own JSON
+        // parser and carries every recorded event.
+        let bytes = write_chrome_trace(&trace.events, Vec::new()).unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), trace.events.len());
+        let queue_spans = events
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("request.queue"))
+            .count();
+        assert_eq!(queue_spans, n);
+        assert!(events.iter().all(|e| {
+            let ph = e.get("ph").as_str().unwrap();
+            ph == "X" || ph == "i"
+        }));
+    }
+
+    #[test]
+    fn trace_report_renders_and_writes_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "sasp_trace_report_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("trace.json");
+        let metrics_path = dir.join("metrics.prom");
+        let r = trace_report_sized(&mini_dims(), 4, Some(&trace_path), Some(&metrics_path))
+            .unwrap();
+        let s = r.render();
+        assert!(s.contains("events recorded"), "{s}");
+        assert!(s.contains("request.decode"), "{s}");
+        assert!(s.contains("chrome trace ->"), "{s}");
+
+        let text = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let prom = std::fs::read_to_string(&metrics_path).unwrap();
+        assert!(prom.contains("serve_ok_total 4"), "{prom}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

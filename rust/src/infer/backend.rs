@@ -26,6 +26,7 @@ use crate::qos::QosBackend;
 use crate::runtime::{manifest::ModelMeta, ArgSpec, Manifest};
 use crate::sysim::TileMask;
 use crate::systolic::Quant;
+use crate::telemetry;
 
 use super::batch::BatchForward;
 use super::decoder::{DecodeStats, DecoderForward, DecoderWeights, PreparedDecoder};
@@ -321,6 +322,11 @@ impl NativeBackend {
         if shards.len() <= 1 {
             // Single runtime: catch the unwind and restore the
             // cumulative counters into a fresh runtime.
+            let mut span = telemetry::Span::begin("shard.forward");
+            if span.is_live() {
+                span.attr("shard", 0usize);
+                span.attr("rows", batch);
+            }
             let saved = self.fwd.stats;
             let model = &self.model;
             let fwd = &mut self.fwd;
@@ -329,8 +335,16 @@ impl NativeBackend {
                 fwd.run_feats(model, batch, feats, pad, out);
             }));
             return match run {
-                Ok(()) => Vec::new(),
+                Ok(()) => {
+                    if span.is_live() {
+                        // The runtime accumulates across calls; charge
+                        // the span with this call's delta only.
+                        self.fwd.stats.total().minus(&saved.total()).annotate(&mut span);
+                    }
+                    Vec::new()
+                }
                 Err(_) => {
+                    span.attr("panicked", 1u64);
                     self.fwd = BatchForward::new();
                     self.fwd.stats = saved;
                     out.clear();
@@ -347,13 +361,15 @@ impl NativeBackend {
         }
         let model = &self.model;
         let mut panicked = vec![false; shards.len()];
+        let parent = telemetry::current_span();
         std::thread::scope(|s| {
             let mut u0 = 0usize;
             let mut handles = Vec::with_capacity(shards.len());
-            for ((&len, fwd), sout) in shards
+            for (i, ((&len, fwd), sout)) in shards
                 .iter()
                 .zip(self.shard_fwds.iter_mut())
                 .zip(self.shard_outs.iter_mut())
+                .enumerate()
             {
                 let sf = &feats[u0 * t * f..(u0 + len) * t * f];
                 let sp = &pad[u0 * t..(u0 + len) * t];
@@ -361,8 +377,20 @@ impl NativeBackend {
                 // exactly this call's work.
                 fwd.stats = ForwardStats::default();
                 handles.push(s.spawn(move || {
+                    // Worker-thread root span, parented to the flush
+                    // span on the serving thread.
+                    let mut span = telemetry::Span::begin_with_parent("shard.forward", parent);
+                    if span.is_live() {
+                        span.attr("shard", i);
+                        span.attr("rows", len);
+                    }
                     panic_if_marked(sf, marker, t, f);
                     fwd.run_feats(model, len, sf, sp, sout);
+                    if span.is_live() {
+                        // Zeroed above, so the cumulative counters are
+                        // exactly this shard's work.
+                        fwd.stats.total().annotate(&mut span);
+                    }
                 }));
                 u0 += len;
             }

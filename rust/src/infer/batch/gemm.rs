@@ -24,6 +24,7 @@
 
 use crate::sysim::TileMask;
 use crate::systolic::{ArrayConfig, Quant, TileTiming};
+use crate::telemetry;
 
 use super::super::gemm::{check_grid, Linear, QuantizedLinear, TileStats};
 
@@ -152,7 +153,8 @@ pub fn gemm_batched_f32(
     wtile: &mut Vec<f32>,
 ) -> TileStats {
     assert_eq!(w.len(), k * n, "w must be k x n");
-    gemm_batched_tiled(
+    let mut span = telemetry::Span::begin("gemm.batched_f32");
+    let stats = gemm_batched_tiled(
         x,
         batch,
         m,
@@ -169,7 +171,13 @@ pub fn gemm_batched_f32(
                 dst[kk * tn..kk * tn + tn].copy_from_slice(&w[row..row + tn]);
             }
         },
-    )
+    );
+    if span.is_live() {
+        span.attr("batch", batch);
+        span.attr("m", m);
+        stats.annotate(&mut span);
+    }
+    stats
 }
 
 /// Batched INT8 GEMM: the identical schedule and streaming loop, with
@@ -185,7 +193,8 @@ pub fn gemm_batched_int8(
     y: &mut Vec<f32>,
     wtile: &mut Vec<f32>,
 ) -> TileStats {
-    gemm_batched_tiled(
+    let mut span = telemetry::Span::begin("gemm.batched_int8");
+    let stats = gemm_batched_tiled(
         x,
         batch,
         m,
@@ -197,7 +206,13 @@ pub fn gemm_batched_int8(
         y,
         wtile,
         |dst, k0, tk, n0, tn| w.dequant_tile(dst, k0, tk, n0, tn),
-    )
+    );
+    if span.is_live() {
+        span.attr("batch", batch);
+        span.attr("m", m);
+        stats.annotate(&mut span);
+    }
+    stats
 }
 
 impl Linear {

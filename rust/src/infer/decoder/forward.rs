@@ -22,6 +22,8 @@
 //! [`crate::sysim::engine::gemm_on_array_decode`] exactly (asserted in
 //! the tests below).
 
+use crate::telemetry;
+
 use super::super::gemm::{gemm_f32, TileStats};
 use super::super::ops;
 use super::PreparedDecoder;
@@ -50,6 +52,18 @@ pub struct DecodeStats {
     pub steps: usize,
     /// Utterances started since the last reset.
     pub utterances: usize,
+}
+
+impl DecodeStats {
+    /// Sum of all GEMM-scope counters (ff + attn + cross-K/V + head) —
+    /// the aggregate telemetry spans attach to one decode step.
+    pub fn total(&self) -> TileStats {
+        let mut t = self.ff;
+        t.add(&self.attn);
+        t.add(&self.cross_kv);
+        t.add(&self.other);
+        t
+    }
 }
 
 /// One query row attending over `n_keys` K/V rows (multi-head, no
@@ -183,11 +197,17 @@ impl DecoderForward {
         assert_eq!(memory.len(), src_len * d, "memory must be src_len x d");
         self.reset_caches(m.blocks.len());
         self.src_len = src_len;
+        let mut span = telemetry::Span::begin("decode.cross_kv");
+        let before = if span.is_live() { self.stats.cross_kv } else { TileStats::default() };
         for (i, blk) in m.blocks.iter().enumerate() {
             let stk = blk.xk.gemm(memory, src_len, None, m.tile, &mut self.cross_k[i]);
             let stv = blk.xv.gemm(memory, src_len, None, m.tile, &mut self.cross_v[i]);
             self.stats.cross_kv.add(&stk);
             self.stats.cross_kv.add(&stv);
+        }
+        if span.is_live() {
+            span.attr("src_len", src_len);
+            self.stats.cross_kv.minus(&before).annotate(&mut span);
         }
         self.stats.utterances += 1;
     }
@@ -221,6 +241,8 @@ impl DecoderForward {
     /// [`Self::pos`] and produce the next-token logits (`vocab`,
     /// unnormalized) in `logits`.
     pub fn step(&mut self, m: &PreparedDecoder, token: i32, logits: &mut Vec<f32>) {
+        let mut span = telemetry::Span::begin("decode.step");
+        let before = if span.is_live() { self.stats.total() } else { TileStats::default() };
         let dims = &m.dims;
         let (d, v) = (dims.d_model, dims.vocab);
         let p = self.pos;
@@ -285,12 +307,22 @@ impl DecoderForward {
             self.hn.clear();
             self.hn.extend_from_slice(&self.h);
             ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
+            let mut ff_span = telemetry::Span::begin("gemm.decode_ff");
             let s1 = blk.w1.gemm(&self.hn, 1, Some(&blk.mask1), m.tile, &mut self.mid);
             self.stats.ff.add(&s1);
             ops::add_bias(&mut self.mid, &blk.b1);
             ops::relu(&mut self.mid);
             let s2 = blk.w2.gemm(&self.mid, 1, Some(&blk.mask2), m.tile, &mut self.tmp);
             self.stats.ff.add(&s2);
+            if ff_span.is_live() {
+                // The SASP-pruned GEMV pair, with its masked-tile
+                // accounting (the per-GEMM sparsity evidence).
+                ff_span.attr("block", i);
+                let mut ff = s1;
+                ff.add(&s2);
+                ff.annotate(&mut ff_span);
+            }
+            drop(ff_span);
             ops::add_bias(&mut self.tmp, &blk.b2);
             ops::residual_add(&mut self.h, &self.tmp);
         }
@@ -303,6 +335,10 @@ impl DecoderForward {
         ops::add_bias(logits, &m.head_b);
         self.pos += 1;
         self.stats.steps += 1;
+        if span.is_live() {
+            span.attr("pos", p);
+            self.stats.total().minus(&before).annotate(&mut span);
+        }
     }
 
     /// Greedy autoregressive generation over a started utterance:

@@ -419,6 +419,15 @@ pub struct ForwardStats {
 }
 
 impl ForwardStats {
+    /// Sum of all GEMM-scope counters (ff + attn + other) — the
+    /// aggregate telemetry spans attach to one instrumented forward.
+    pub fn total(&self) -> TileStats {
+        let mut t = self.ff;
+        t.add(&self.attn);
+        t.add(&self.other);
+        t
+    }
+
     /// Accumulate another run's counters — the shard-merge of the
     /// thread-parallel serving path (each worker's [`TileStats`] are
     /// summed after the scope joins, so the merged accounting is

@@ -49,6 +49,36 @@ impl TileStats {
         let n = self.tiles_live + self.tiles_skipped;
         self.tiles_skipped as f64 / n.max(1) as f64
     }
+
+    /// Difference `self - earlier`: the accounting attributable to one
+    /// instrumented region when stats accumulate across calls (the
+    /// telemetry spans' per-step/per-shard deltas).
+    pub fn minus(&self, earlier: &TileStats) -> TileStats {
+        TileStats {
+            tiles_live: self.tiles_live - earlier.tiles_live,
+            tiles_skipped: self.tiles_skipped - earlier.tiles_skipped,
+            timing: TileTiming {
+                prog_words: self.timing.prog_words - earlier.timing.prog_words,
+                in_words: self.timing.in_words - earlier.timing.in_words,
+                out_words: self.timing.out_words - earlier.timing.out_words,
+                stream_insts: self.timing.stream_insts - earlier.timing.stream_insts,
+                array_cycles: self.timing.array_cycles - earlier.timing.array_cycles,
+                macs: self.timing.macs - earlier.timing.macs,
+            },
+        }
+    }
+
+    /// Attach the tile counts and [`TileTiming`] cost to a telemetry
+    /// span (no-op on an inert span).
+    pub fn annotate(&self, span: &mut crate::telemetry::Span) {
+        if !span.is_live() {
+            return;
+        }
+        span.attr("tiles_live", self.tiles_live);
+        span.attr("tiles_skipped", self.tiles_skipped);
+        span.attr("macs", self.timing.macs);
+        span.attr("array_cycles", self.timing.array_cycles);
+    }
 }
 
 pub(crate) fn check_grid(

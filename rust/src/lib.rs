@@ -44,6 +44,7 @@ pub mod quant;
 pub mod runtime;
 pub mod sysim;
 pub mod systolic;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result type.

@@ -3,12 +3,15 @@
 //! ```text
 //! sasp report <id>        regenerate a paper table/figure
 //!        ids: table1 table2 table3 fig6 fig7 fig8 fig9 fig10 fig11
-//!             mt headline serve overload all
+//!             mt headline serve overload trace all
 //!        (serve measures the serving runtime's latency/throughput
 //!         frontier — fixed vs dynamic batching, 1/2/4 worker threads —
 //!         offline on the native backend; overload measures goodput
 //!         under bounded admission, deadlines, and the degradation
-//!         ladder; both wall-clock, so not in `all`)
+//!         ladder; trace replays a serve run under a recording
+//!         telemetry session and writes a Perfetto-loadable Chrome
+//!         trace (default trace.json, override with --out) plus the
+//!         metrics snapshot; all three wall-clock, so not in `all`)
 //! sasp sweep              full design-space sweep (timing only)
 //! sasp qos <tile> <rate> <fp32|int8>
 //!                         evaluate one QoS point (PJRT when artifacts
@@ -16,7 +19,11 @@
 //! sasp info               platform + artifact inventory
 //! ```
 //!
-//! Flags: `--artifacts <dir>` (default `artifacts`), `--config <json>`.
+//! Flags: `--artifacts <dir>` (default `artifacts`), `--config <json>`,
+//! `--out <path>` (trace JSON destination for `report trace`),
+//! `--metrics-out <path>` (write the telemetry metrics snapshot as
+//! Prometheus-style text; on `report serve`/`report overload` this
+//! records the whole sweep under one telemetry session).
 
 use anyhow::{bail, Context, Result};
 
@@ -32,12 +39,16 @@ struct Cli {
     args: Vec<String>,
     artifacts: String,
     config: Option<String>,
+    out: Option<String>,
+    metrics_out: Option<String>,
 }
 
 fn parse_cli() -> Result<Cli> {
     let mut argv = std::env::args().skip(1).collect::<Vec<_>>();
     let mut artifacts = "artifacts".to_string();
     let mut config = None;
+    let mut out = None;
+    let mut metrics_out = None;
     let mut rest = Vec::new();
     let mut i = 0;
     while i < argv.len() {
@@ -49,6 +60,15 @@ fn parse_cli() -> Result<Cli> {
             "--config" => {
                 i += 1;
                 config = Some(argv.get(i).context("--config needs a value")?.clone());
+            }
+            "--out" => {
+                i += 1;
+                out = Some(argv.get(i).context("--out needs a value")?.clone());
+            }
+            "--metrics-out" => {
+                i += 1;
+                metrics_out =
+                    Some(argv.get(i).context("--metrics-out needs a value")?.clone());
             }
             _ => rest.push(argv[i].clone()),
         }
@@ -63,6 +83,8 @@ fn parse_cli() -> Result<Cli> {
         args: argv[1..].to_vec(),
         artifacts,
         config,
+        out,
+        metrics_out,
     })
 }
 
@@ -84,6 +106,25 @@ fn qos_stack(cfg: &ExperimentConfig) -> Result<QosCache> {
     Ok(qos)
 }
 
+/// Run a report generator, optionally under a recording telemetry
+/// session whose metrics snapshot lands in `--metrics-out`.
+fn render_with_metrics(
+    cli: &Cli,
+    f: impl FnOnce() -> Result<sasp::harness::Report>,
+) -> Result<String> {
+    let Some(path) = &cli.metrics_out else {
+        return Ok(f()?.render());
+    };
+    let session = sasp::telemetry::Telemetry::start();
+    let report = f();
+    let trace = session.finish();
+    let report = report?;
+    std::fs::write(path, trace.metrics.render_prometheus())
+        .with_context(|| format!("write {path}"))?;
+    eprintln!("metrics -> {path}");
+    Ok(report.render())
+}
+
 fn cmd_report(cli: &Cli) -> Result<()> {
     let cfg = load_config(cli)?;
     let id = cli.args.first().map(String::as_str).unwrap_or("all");
@@ -93,8 +134,24 @@ fn cmd_report(cli: &Cli) -> Result<()> {
         "table2" => return Ok(print!("{}", harness::table2().render())),
         "fig6" => return Ok(print!("{}", harness::fig6().render())),
         "fig8" => return Ok(print!("{}", harness::fig8().render())),
-        "serve" => return Ok(print!("{}", harness::serve_report()?.render())),
-        "overload" => return Ok(print!("{}", harness::overload_report()?.render())),
+        "serve" => {
+            let out = render_with_metrics(cli, harness::serve_report)?;
+            return Ok(print!("{out}"));
+        }
+        "overload" => {
+            let out = render_with_metrics(cli, harness::overload_report)?;
+            return Ok(print!("{out}"));
+        }
+        "trace" => {
+            // `trace` runs its own telemetry session and always writes
+            // the Chrome trace (default trace.json).
+            let trace_out = cli.out.clone().unwrap_or_else(|| "trace.json".to_string());
+            let report = harness::trace_report(
+                Some(std::path::Path::new(&trace_out)),
+                cli.metrics_out.as_deref().map(std::path::Path::new),
+            )?;
+            return Ok(print!("{}", report.render()));
+        }
         _ => {}
     }
     let mut qos = qos_stack(&cfg)?;

@@ -1,0 +1,124 @@
+//! Chrome trace-event JSON export.
+//!
+//! Writes the drained [`SpanEvent`]s as a Chrome/Perfetto trace — the
+//! JSON object form (`{"traceEvents": [...]}`) with complete (`"X"`)
+//! events for spans and instant (`"i"`) events for point marks, all
+//! timestamps in microseconds since the trace epoch. Load the file at
+//! <https://ui.perfetto.dev> or `chrome://tracing`.
+//!
+//! Emission streams through [`JsonWriter`], so a million-event trace
+//! costs one pass and constant memory, never a buffered document.
+
+use std::io::{self, Write};
+
+use super::spans::{AttrVal, EventKind, SpanEvent};
+use crate::util::json::JsonWriter;
+
+/// Stream `events` as Chrome trace-event JSON into `w`.
+pub fn write_chrome_trace<W: Write>(events: &[SpanEvent], w: W) -> io::Result<W> {
+    let mut jw = JsonWriter::new(w);
+    jw.begin_obj()?;
+    jw.key("displayTimeUnit")?;
+    jw.str_val("ms")?;
+    jw.key("traceEvents")?;
+    jw.begin_arr()?;
+    for ev in events {
+        jw.begin_obj()?;
+        jw.key("name")?;
+        jw.str_val(ev.name)?;
+        jw.key("cat")?;
+        jw.str_val("sasp")?;
+        jw.key("ph")?;
+        jw.str_val(match ev.kind {
+            EventKind::Span => "X",
+            EventKind::Instant => "i",
+        })?;
+        jw.key("ts")?;
+        jw.u64_val(ev.start_us)?;
+        match ev.kind {
+            EventKind::Span => {
+                jw.key("dur")?;
+                jw.u64_val(ev.dur_us)?;
+            }
+            EventKind::Instant => {
+                // Instant scope: thread.
+                jw.key("s")?;
+                jw.str_val("t")?;
+            }
+        }
+        jw.key("pid")?;
+        jw.u64_val(1)?;
+        jw.key("tid")?;
+        jw.u64_val(ev.tid)?;
+        jw.key("args")?;
+        jw.begin_obj()?;
+        if ev.id != 0 {
+            jw.key("span_id")?;
+            jw.u64_val(ev.id)?;
+        }
+        if ev.parent != 0 {
+            jw.key("parent_id")?;
+            jw.u64_val(ev.parent)?;
+        }
+        for (k, v) in &ev.attrs {
+            jw.key(k)?;
+            match v {
+                AttrVal::U(u) => jw.u64_val(*u)?,
+                AttrVal::F(f) => jw.num_val(*f)?,
+                AttrVal::S(s) => jw.str_val(s)?,
+            }
+        }
+        jw.end()?; // args
+        jw.end()?; // event
+    }
+    jw.end()?; // traceEvents
+    jw.end()?; // root
+    jw.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn ev(name: &'static str, kind: EventKind, id: u64, parent: u64) -> SpanEvent {
+        SpanEvent {
+            name,
+            kind,
+            id,
+            parent,
+            tid: 3,
+            start_us: 10,
+            dur_us: if kind == EventKind::Span { 5 } else { 0 },
+            attrs: vec![("rows", AttrVal::U(4)), ("policy", AttrVal::S("fixed".into()))],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_json_parse() {
+        let events = vec![
+            ev("serve.flush", EventKind::Span, 7, 0),
+            ev("resilience.ladder", EventKind::Instant, 0, 7),
+        ];
+        let bytes = write_chrome_trace(&events, Vec::new()).unwrap();
+        let v = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        let te = v.get("traceEvents").as_arr().unwrap();
+        assert_eq!(te.len(), 2);
+
+        let span = &te[0];
+        assert_eq!(span.get("ph").as_str(), Some("X"));
+        assert_eq!(span.get("name").as_str(), Some("serve.flush"));
+        assert_eq!(span.get("ts").as_i64(), Some(10));
+        assert_eq!(span.get("dur").as_i64(), Some(5));
+        assert_eq!(span.get("tid").as_i64(), Some(3));
+        assert_eq!(span.get("args").get("span_id").as_i64(), Some(7));
+        assert_eq!(span.get("args").get("rows").as_i64(), Some(4));
+        assert_eq!(span.get("args").get("policy").as_str(), Some("fixed"));
+
+        let inst = &te[1];
+        assert_eq!(inst.get("ph").as_str(), Some("i"));
+        assert_eq!(inst.get("s").as_str(), Some("t"));
+        assert_eq!(inst.get("args").get("parent_id").as_i64(), Some(7));
+        assert_eq!(inst.get("dur"), &Json::Null, "instants carry no duration");
+    }
+}

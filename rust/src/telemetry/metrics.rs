@@ -1,0 +1,627 @@
+//! Process-global metrics: named counters, gauges, and log-linear
+//! histograms.
+//!
+//! Hot-path writes are lock-free: every counter/histogram is sharded
+//! into [`NSHARDS`] cache-line-padded atomic cells, each thread writes
+//! (relaxed) to the shard picked by its stable thread index, and a
+//! scrape merges the shards by summing — the registry mutex is only
+//! taken when a [`LazyCounter`]-style handle first resolves its name,
+//! never per update. Like the span layer, updates are gated by
+//! [`crate::telemetry::spans::active`] *at the instrumentation site*
+//! (one branch covers a whole block of updates), so the raw
+//! [`Counter::add`]/[`Histogram::observe`] primitives here are ungated
+//! and directly unit-testable.
+//!
+//! Histograms use log-linear buckets: values 0..4 are exact, and every
+//! octave above is split into 4 linear sub-buckets, giving ~6%..25%
+//! relative resolution over the full `u64` range in 252 buckets.
+//! Reconstructed quantiles therefore bracket the exact nearest-rank
+//! quantile within one bucket (property-tested below).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+use crate::util::json::Json;
+
+/// Write shards per metric; threads stripe across them by a stable
+/// per-thread index, so concurrent writers rarely share a cache line.
+pub const NSHARDS: usize = 8;
+
+/// Linear sub-buckets per octave (4 = 2 bits).
+const SUB: u64 = 4;
+const SUB_BITS: u64 = 2;
+
+/// Total log-linear buckets covering all of `u64`.
+pub const NBUCKETS: usize = SUB as usize + (64 - SUB_BITS as usize) * SUB as usize;
+
+static NEXT_SHARD: AtomicU64 = AtomicU64::new(0);
+
+/// Stable per-thread shard index in `0..NSHARDS`.
+fn shard_index() -> usize {
+    thread_local! {
+        static IX: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    IX.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            v
+        } else {
+            let v = (NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize) % NSHARDS;
+            c.set(v);
+            v
+        }
+    })
+}
+
+/// One cache line per shard cell so concurrent writers don't false-share.
+#[repr(align(64))]
+#[derive(Default)]
+struct PadCell(AtomicU64);
+
+/// Monotone counter, sharded per thread and summed on scrape.
+#[derive(Default)]
+pub struct Counter {
+    shards: [PadCell; NSHARDS],
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.shards[shard_index()].0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+
+    fn reset(&self) {
+        for s in &self.shards {
+            s.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Last-write-wins signed gauge (queue depth, ladder step). A gauge has
+/// one logical writer at a time, so it is a single atomic, not sharded.
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.set(0);
+    }
+}
+
+/// Bucket index of a sample value.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let exp = 63 - u64::from(v.leading_zeros());
+    let group = (exp - SUB_BITS) as usize;
+    let offset = ((v >> (exp - SUB_BITS)) - SUB) as usize;
+    SUB as usize + group * SUB as usize + offset
+}
+
+/// Inclusive `[lo, hi]` value range of a bucket.
+pub fn bucket_bounds(ix: usize) -> (u64, u64) {
+    if ix < SUB as usize {
+        return (ix as u64, ix as u64);
+    }
+    let group = (ix - SUB as usize) / SUB as usize;
+    let offset = ((ix - SUB as usize) % SUB as usize) as u64;
+    let lo = (SUB + offset) << group;
+    let hi = if group == 64 - SUB_BITS as usize - 1 && offset == SUB - 1 {
+        u64::MAX
+    } else {
+        ((SUB + offset + 1) << group) - 1
+    };
+    (lo, hi)
+}
+
+struct HistShard {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> HistShard {
+        HistShard {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Log-linear-bucket histogram of `u64` samples (we record latencies as
+/// microseconds), sharded per thread like [`Counter`].
+pub struct Histogram {
+    shards: Vec<HistShard>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { shards: (0..NSHARDS).map(|_| HistShard::new()).collect() }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        let s = &self.shards[shard_index()];
+        s.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge the shards into one snapshot.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = vec![0u64; NBUCKETS];
+        let (mut count, mut sum) = (0u64, 0u64);
+        for s in &self.shards {
+            for (acc, b) in counts.iter_mut().zip(&s.buckets) {
+                *acc += b.load(Ordering::Relaxed);
+            }
+            count += s.count.load(Ordering::Relaxed);
+            sum = sum.wrapping_add(s.sum.load(Ordering::Relaxed));
+        }
+        HistogramSnapshot { counts, count, sum }
+    }
+
+    fn reset(&self) {
+        for s in &self.shards {
+            for b in &s.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+            s.count.store(0, Ordering::Relaxed);
+            s.sum.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Shard-merged histogram state at scrape time.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts, indexed like [`bucket_index`].
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Inclusive `[lo, hi]` bucket range bracketing the exact
+    /// nearest-rank `permille/1000` quantile of the recorded samples
+    /// (the exact quantile lies inside the returned bucket, so the
+    /// bracket is tight to one bucket width). `(0, 0)` when empty.
+    pub fn quantile_bounds(&self, permille: u64) -> (u64, u64) {
+        if self.count == 0 {
+            return (0, 0);
+        }
+        let rank = (permille * self.count).div_ceil(1000).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (ix, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_bounds(ix);
+            }
+        }
+        bucket_bounds(NBUCKETS - 1)
+    }
+}
+
+enum AnyMetric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+/// Name → metric registry. Resolution takes the mutex; the resolved
+/// `&'static` handles it hands out never do.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<&'static str, AnyMetric>>,
+}
+
+fn lock<'a>(
+    m: &'a Mutex<BTreeMap<&'static str, AnyMetric>>,
+) -> MutexGuard<'a, BTreeMap<&'static str, AnyMetric>> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Registry {
+    /// Resolve (registering on first use) the counter named `name`.
+    /// Panics if the name is already registered as another kind.
+    pub fn counter(&self, name: &'static str) -> &'static Counter {
+        let mut m = lock(&self.metrics);
+        let entry = m
+            .entry(name)
+            .or_insert_with(|| AnyMetric::Counter(Box::leak(Box::new(Counter::new()))));
+        match entry {
+            AnyMetric::Counter(c) => *c,
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &'static str) -> &'static Gauge {
+        let mut m = lock(&self.metrics);
+        let entry =
+            m.entry(name).or_insert_with(|| AnyMetric::Gauge(Box::leak(Box::new(Gauge::new()))));
+        match entry {
+            AnyMetric::Gauge(g) => *g,
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &'static str) -> &'static Histogram {
+        let mut m = lock(&self.metrics);
+        let entry = m
+            .entry(name)
+            .or_insert_with(|| AnyMetric::Histogram(Box::leak(Box::new(Histogram::new()))));
+        match entry {
+            AnyMetric::Histogram(h) => *h,
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    /// Merge every registered metric's shards into one snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = lock(&self.metrics);
+        let mut snap = MetricsSnapshot::default();
+        for (name, metric) in m.iter() {
+            match metric {
+                AnyMetric::Counter(c) => {
+                    snap.counters.insert(name.to_string(), c.value());
+                }
+                AnyMetric::Gauge(g) => {
+                    snap.gauges.insert(name.to_string(), g.value());
+                }
+                AnyMetric::Histogram(h) => {
+                    snap.histograms.insert(name.to_string(), h.snapshot());
+                }
+            }
+        }
+        snap
+    }
+
+    /// Zero every registered metric (session start).
+    pub(crate) fn reset(&self) {
+        let m = lock(&self.metrics);
+        for metric in m.values() {
+            match metric {
+                AnyMetric::Counter(c) => c.reset(),
+                AnyMetric::Gauge(g) => g.reset(),
+                AnyMetric::Histogram(h) => h.reset(),
+            }
+        }
+    }
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+/// A named counter handle usable as a `static`: the registry is
+/// consulted once, then updates are lock-free forever.
+pub struct LazyCounter {
+    name: &'static str,
+    cell: OnceLock<&'static Counter>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    pub fn get(&self) -> &'static Counter {
+        self.cell.get_or_init(|| registry().counter(self.name))
+    }
+}
+
+/// [`LazyCounter`]'s gauge counterpart.
+pub struct LazyGauge {
+    name: &'static str,
+    cell: OnceLock<&'static Gauge>,
+}
+
+impl LazyGauge {
+    pub const fn new(name: &'static str) -> LazyGauge {
+        LazyGauge { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    pub fn get(&self) -> &'static Gauge {
+        self.cell.get_or_init(|| registry().gauge(self.name))
+    }
+}
+
+/// [`LazyCounter`]'s histogram counterpart.
+pub struct LazyHistogram {
+    name: &'static str,
+    cell: OnceLock<&'static Histogram>,
+}
+
+impl LazyHistogram {
+    pub const fn new(name: &'static str) -> LazyHistogram {
+        LazyHistogram { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    pub fn get(&self) -> &'static Histogram {
+        self.cell.get_or_init(|| registry().histogram(self.name))
+    }
+}
+
+/// Everything the registry knew at scrape time, in deterministic
+/// (name-sorted) order.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Prometheus text exposition. Histogram buckets are emitted
+    /// sparsely (only buckets that hold samples) with cumulative
+    /// counts and inclusive upper bounds as `le` labels, plus the
+    /// conventional `+Inf`/`_sum`/`_count` series.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cum = 0u64;
+            for (ix, &c) in h.counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let (_, hi) = bucket_bounds(ix);
+                let _ = writeln!(out, "{name}_bucket{{le=\"{hi}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(out, "{name}_sum {}", h.sum);
+            let _ = writeln!(out, "{name}_count {}", h.count);
+        }
+        out
+    }
+
+    /// JSON form (counters/gauges as numbers, histograms as sparse
+    /// `[lo, hi, count]` bucket triples).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, v) in &self.counters {
+            counters.insert(name.clone(), Json::num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, v) in &self.gauges {
+            gauges.insert(name.clone(), Json::num(*v as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in &self.histograms {
+            let buckets: Vec<Json> = h
+                .counts
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(ix, &c)| {
+                    let (lo, hi) = bucket_bounds(ix);
+                    Json::Arr(vec![
+                        Json::num(lo as f64),
+                        Json::num(hi as f64),
+                        Json::num(c as f64),
+                    ])
+                })
+                .collect();
+            let mut o = BTreeMap::new();
+            o.insert("count".to_string(), Json::num(h.count as f64));
+            o.insert("sum".to_string(), Json::num(h.sum as f64));
+            o.insert("buckets".to_string(), Json::Arr(buckets));
+            hists.insert(name.clone(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn bucket_index_and_bounds_agree_over_the_full_range() {
+        // Exact low buckets, contiguity, and containment at the seams.
+        for v in 0..64u64 {
+            let ix = bucket_index(v);
+            let (lo, hi) = bucket_bounds(ix);
+            assert!(lo <= v && v <= hi, "v={v} ix={ix} lo={lo} hi={hi}");
+        }
+        for ix in 0..NBUCKETS - 1 {
+            let (_, hi) = bucket_bounds(ix);
+            let (lo_next, _) = bucket_bounds(ix + 1);
+            assert_eq!(hi + 1, lo_next, "buckets must tile contiguously at ix={ix}");
+        }
+        assert_eq!(bucket_bounds(NBUCKETS - 1).1, u64::MAX);
+        assert_eq!(bucket_index(u64::MAX), NBUCKETS - 1);
+        // Powers of two start fresh octave groups.
+        for shift in SUB_BITS..63 {
+            let v = 1u64 << shift;
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && v <= hi);
+            assert_eq!(lo, v, "an octave boundary starts its bucket");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_exact_nearest_rank() {
+        prop::check("histogram_quantiles_bracket_exact_nearest_rank", 64, |rng| {
+            let n = 1 + rng.index(400);
+            let h = Histogram::new();
+            let mut samples: Vec<u64> = (0..n)
+                .map(|_| {
+                    // Spread samples across many octaves so the test
+                    // exercises both exact and log-linear buckets.
+                    let shift = rng.index(48) as u32;
+                    (rng.f64() * (1u64 << shift) as f64) as u64
+                })
+                .collect();
+            for &s in &samples {
+                h.observe(s);
+            }
+            samples.sort_unstable();
+            let snap = h.snapshot();
+            for pm in [1u64, 100, 500, 900, 950, 990, 999, 1000] {
+                let rank = (pm * n as u64).div_ceil(1000).clamp(1, n as u64) as usize;
+                let exact = samples[rank - 1];
+                let (lo, hi) = snap.quantile_bounds(pm);
+                if !(lo <= exact && exact <= hi) {
+                    return (
+                        false,
+                        format!("pm={pm} exact={exact} outside bracket [{lo}, {hi}] (n={n})"),
+                    );
+                }
+            }
+            (true, format!("n={n} bracketed"))
+        });
+    }
+
+    #[test]
+    fn histogram_shard_merge_equals_single_thread() {
+        prop::check("histogram_shard_merge_equals_single_thread", 8, |rng| {
+            let n = 64 + rng.index(256);
+            let samples: Vec<u64> = (0..n)
+                .map(|_| {
+                    let shift = rng.index(40) as u32;
+                    (rng.f64() * (1u64 << shift) as f64) as u64
+                })
+                .collect();
+            let single = Histogram::new();
+            for &s in &samples {
+                single.observe(s);
+            }
+            let sharded = Histogram::new();
+            std::thread::scope(|scope| {
+                for chunk in samples.chunks(n.div_ceil(4)) {
+                    let h = &sharded;
+                    scope.spawn(move || {
+                        for &s in chunk {
+                            h.observe(s);
+                        }
+                    });
+                }
+            });
+            let (a, b) = (single.snapshot(), sharded.snapshot());
+            if a != b {
+                return (
+                    false,
+                    format!(
+                        "shard-merged snapshot differs: single count={} sum={}, \
+                         sharded count={} sum={}",
+                        a.count, a.sum, b.count, b.sum
+                    ),
+                );
+            }
+            (true, format!("n={n} identical"))
+        });
+    }
+
+    #[test]
+    fn counters_merge_across_threads() {
+        let c = Counter::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = &c;
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 4000);
+        let g = Gauge::new();
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.value(), 4);
+    }
+
+    #[test]
+    fn registry_resolves_each_name_once_and_snapshots_deterministically() {
+        let r = Registry::default();
+        let a = r.counter("t_requests_total");
+        let b = r.counter("t_requests_total");
+        assert!(std::ptr::eq(a, b), "same name resolves to the same counter");
+        a.add(3);
+        r.gauge("t_queue_depth").set(2);
+        r.histogram("t_latency_us").observe(5);
+        r.histogram("t_latency_us").observe(900);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters["t_requests_total"], 3);
+        assert_eq!(snap.gauges["t_queue_depth"], 2);
+        assert_eq!(snap.histograms["t_latency_us"].count, 2);
+        assert_eq!(snap.histograms["t_latency_us"].sum, 905);
+
+        let text = snap.render_prometheus();
+        assert!(text.contains("# TYPE t_requests_total counter"));
+        assert!(text.contains("t_requests_total 3"));
+        assert!(text.contains("t_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("t_latency_us_sum 905"));
+        assert_eq!(text, snap.render_prometheus(), "exposition is deterministic");
+
+        let json = snap.to_json();
+        let parsed = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(parsed.get("counters").get("t_requests_total").as_i64(), Some(3));
+        let hist = parsed.get("histograms").get("t_latency_us");
+        assert_eq!(hist.get("count").as_i64(), Some(2));
+        assert_eq!(hist.get("buckets").as_arr().map(|b| b.len()), Some(2));
+    }
+}

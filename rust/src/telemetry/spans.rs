@@ -1,0 +1,429 @@
+//! Lightweight span events for the serving stack.
+//!
+//! A span is a named begin/end interval with an id, an explicit parent
+//! id, and a small set of typed attributes; an instant is a point
+//! event. Events are recorded into per-thread buffers that spill
+//! wholesale into one global sink under a mutex — the hot path is a
+//! `Vec::push`, and the lock is taken once per [`SPILL`] events (and
+//! once at thread exit), never per event.
+//!
+//! Recording is globally opt-in: while [`active`] is `false` (the
+//! default, and what [`crate::telemetry::Telemetry::noop`] leaves in
+//! place) every instrumentation site costs exactly one relaxed atomic
+//! load and an early return — no clock read, no allocation, no buffer
+//! touch. [`crate::telemetry::Telemetry::start`] flips the flag on and
+//! [`crate::telemetry::Telemetry::finish`] drains the events.
+//!
+//! Parenting: [`Span::begin`] nests under the innermost live span on
+//! the *current thread* (a thread-local stack, so scoped guards must
+//! drop LIFO — every call site here is a lexical scope). Cross-thread
+//! and non-LIFO lifetimes use explicit parents: [`Span::begin_with_parent`]
+//! for a worker-thread root under a captured [`current_span`], and
+//! [`Span::detached`] for spans whose lifetime interleaves arbitrarily
+//! (per-request queue spans held inside the pending queue).
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Per-thread events buffered before one locked spill into the sink.
+const SPILL: usize = 8192;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+
+/// Is telemetry recording globally enabled? One relaxed load — this is
+/// the branch every disabled instrumentation site pays.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+pub(crate) fn set_active(on: bool) {
+    if on {
+        // Pin the epoch before the first event so timestamps are
+        // monotone from the first session of the process.
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ACTIVE.store(on, Ordering::SeqCst);
+}
+
+/// Microseconds since the process-wide trace epoch.
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Small per-thread integer id, stable for the thread's lifetime.
+fn tid() -> u64 {
+    thread_local! {
+        static TID: Cell<u64> = const { Cell::new(0) };
+    }
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+            v
+        }
+    })
+}
+
+/// One typed span/instant attribute value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttrVal {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl From<u64> for AttrVal {
+    fn from(v: u64) -> Self {
+        AttrVal::U(v)
+    }
+}
+
+impl From<usize> for AttrVal {
+    fn from(v: usize) -> Self {
+        AttrVal::U(v as u64)
+    }
+}
+
+impl From<f64> for AttrVal {
+    fn from(v: f64) -> Self {
+        AttrVal::F(v)
+    }
+}
+
+impl From<&str> for AttrVal {
+    fn from(v: &str) -> Self {
+        AttrVal::S(v.to_string())
+    }
+}
+
+impl From<String> for AttrVal {
+    fn from(v: String) -> Self {
+        AttrVal::S(v)
+    }
+}
+
+/// Interval vs point event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+/// One recorded event, as drained by
+/// [`crate::telemetry::Telemetry::finish`] and written by the Chrome
+/// trace exporter.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub kind: EventKind,
+    /// Span id (0 for instants).
+    pub id: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Small per-thread integer id (not the OS tid).
+    pub tid: u64,
+    /// Microseconds since the trace epoch.
+    pub start_us: u64,
+    /// Interval length in microseconds (0 for instants).
+    pub dur_us: u64,
+    pub attrs: Vec<(&'static str, AttrVal)>,
+}
+
+struct LocalBuf {
+    events: Vec<SpanEvent>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        // Worker threads flush whatever they buffered when they exit,
+        // so scoped shards never lose events.
+        if !self.events.is_empty() {
+            lock_sink().append(&mut self.events);
+        }
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<LocalBuf> = RefCell::new(LocalBuf { events: Vec::new() });
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn lock_sink() -> MutexGuard<'static, Vec<SpanEvent>> {
+    SINK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn record(ev: SpanEvent) {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        b.events.push(ev);
+        if b.events.len() >= SPILL {
+            let mut events = std::mem::take(&mut b.events);
+            lock_sink().append(&mut events);
+        }
+    });
+}
+
+/// Innermost live [`Span::begin`] span on this thread (0 = none) — the
+/// parent to hand to worker threads via [`Span::begin_with_parent`].
+pub fn current_span() -> u64 {
+    STACK.with(|s| s.borrow().last().copied().unwrap_or(0))
+}
+
+/// Record a point event under the current thread's innermost span.
+/// Costs one branch when telemetry is off.
+#[inline]
+pub fn instant(name: &'static str, attrs: Vec<(&'static str, AttrVal)>) {
+    if !active() {
+        return;
+    }
+    record(SpanEvent {
+        name,
+        kind: EventKind::Instant,
+        id: 0,
+        parent: current_span(),
+        tid: tid(),
+        start_us: now_us(),
+        dur_us: 0,
+        attrs,
+    });
+}
+
+/// RAII interval span. Inert (one branch at construction, nothing at
+/// drop) while telemetry is off; otherwise records one [`SpanEvent`]
+/// when dropped.
+#[derive(Debug)]
+pub struct Span {
+    live: bool,
+    on_stack: bool,
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    start_us: u64,
+    attrs: Vec<(&'static str, AttrVal)>,
+}
+
+impl Span {
+    /// Begin a span nested under the current thread's innermost span.
+    /// Must be dropped LIFO with respect to other `begin` spans on the
+    /// same thread (i.e. used as a lexical scope guard).
+    #[inline]
+    pub fn begin(name: &'static str) -> Span {
+        if !active() {
+            return Span::inert(name);
+        }
+        Span::begin_live(name, current_span(), true)
+    }
+
+    /// Begin a scoped span under an explicit parent id — the root span
+    /// of a worker thread, parented to the spawner's [`current_span`].
+    #[inline]
+    pub fn begin_with_parent(name: &'static str, parent: u64) -> Span {
+        if !active() {
+            return Span::inert(name);
+        }
+        Span::begin_live(name, parent, true)
+    }
+
+    /// Begin a span that does not participate in the thread's scope
+    /// stack — for lifetimes that end in arbitrary order (one queue
+    /// span per pending request).
+    #[inline]
+    pub fn detached(name: &'static str, parent: u64) -> Span {
+        if !active() {
+            return Span::inert(name);
+        }
+        Span::begin_live(name, parent, false)
+    }
+
+    fn inert(name: &'static str) -> Span {
+        Span {
+            live: false,
+            on_stack: false,
+            name,
+            id: 0,
+            parent: 0,
+            start_us: 0,
+            attrs: Vec::new(),
+        }
+    }
+
+    fn begin_live(name: &'static str, parent: u64, on_stack: bool) -> Span {
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        if on_stack {
+            STACK.with(|s| s.borrow_mut().push(id));
+        }
+        Span {
+            live: true,
+            on_stack,
+            name,
+            id,
+            parent,
+            start_us: now_us(),
+            attrs: Vec::new(),
+        }
+    }
+
+    /// Attach an attribute (no-op on an inert span).
+    #[inline]
+    pub fn attr(&mut self, key: &'static str, val: impl Into<AttrVal>) {
+        if self.live {
+            self.attrs.push((key, val.into()));
+        }
+    }
+
+    /// The span id (0 when inert) — handed to children on other threads.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Is this span actually recording?
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        if self.on_stack {
+            STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                if s.last() == Some(&self.id) {
+                    s.pop();
+                } else {
+                    // Out-of-order drop of a scoped span: degrade
+                    // gracefully rather than corrupting the stack.
+                    s.retain(|&x| x != self.id);
+                }
+            });
+        }
+        let end = now_us();
+        record(SpanEvent {
+            name: self.name,
+            kind: EventKind::Span,
+            id: self.id,
+            parent: self.parent,
+            tid: tid(),
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            attrs: std::mem::take(&mut self.attrs),
+        });
+    }
+}
+
+/// Discard everything buffered so far (session start). Only the calling
+/// thread's local buffer and the shared sink are cleared; other threads
+/// that outlive a session flush into the *next* drain.
+pub(crate) fn clear() {
+    BUF.with(|b| b.borrow_mut().events.clear());
+    lock_sink().clear();
+}
+
+/// Flush this thread's buffer and drain the sink (session end).
+pub(crate) fn take_events() -> Vec<SpanEvent> {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.events.is_empty() {
+            let mut events = std::mem::take(&mut b.events);
+            lock_sink().append(&mut events);
+        }
+    });
+    std::mem::take(&mut *lock_sink())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Telemetry;
+
+    #[test]
+    fn inert_spans_record_nothing() {
+        // No session: spans and instants must be free and eventless.
+        let before = current_span();
+        {
+            let mut s = Span::begin("t.noop");
+            assert!(!s.is_live());
+            assert_eq!(s.id(), 0);
+            s.attr("k", 1u64);
+            instant("t.noop_instant", vec![]);
+        }
+        assert_eq!(current_span(), before);
+    }
+
+    #[test]
+    fn session_records_nested_spans_with_parent_ids() {
+        let t = Telemetry::start();
+        let (outer_id, inner_id);
+        {
+            let outer = Span::begin("t.outer");
+            outer_id = outer.id();
+            assert_eq!(current_span(), outer_id);
+            {
+                let mut inner = Span::begin("t.inner");
+                inner_id = inner.id();
+                inner.attr("answer", 42u64);
+                instant("t.mark", vec![("x", AttrVal::from(7u64))]);
+            }
+            assert_eq!(current_span(), outer_id);
+        }
+        let trace = t.finish();
+        assert!(!active(), "finish() disables recording");
+        // Drop order: inner, instant recorded at instant time, outer.
+        let inner = trace.events.iter().find(|e| e.name == "t.inner").unwrap();
+        let outer = trace.events.iter().find(|e| e.name == "t.outer").unwrap();
+        let mark = trace.events.iter().find(|e| e.name == "t.mark").unwrap();
+        assert_eq!(inner.id, inner_id);
+        assert_eq!(inner.parent, outer_id);
+        assert_eq!(outer.parent, 0);
+        assert_eq!(mark.kind, EventKind::Instant);
+        assert_eq!(mark.parent, inner_id);
+        assert_eq!(mark.attrs, vec![("x", AttrVal::U(7))]);
+        assert_eq!(inner.attrs, vec![("answer", AttrVal::U(42))]);
+        assert!(outer.dur_us >= inner.dur_us);
+        assert!(outer.start_us <= inner.start_us);
+    }
+
+    #[test]
+    fn worker_thread_events_flush_on_thread_exit() {
+        let t = Telemetry::start();
+        let parent = {
+            let root = Span::begin("t.root");
+            let root_id = root.id();
+            std::thread::scope(|s| {
+                s.spawn(move || {
+                    let _w = Span::begin_with_parent("t.worker", root_id);
+                });
+            });
+            root_id
+        };
+        let trace = t.finish();
+        let worker = trace.events.iter().find(|e| e.name == "t.worker").unwrap();
+        let root = trace.events.iter().find(|e| e.name == "t.root").unwrap();
+        assert_eq!(worker.parent, parent);
+        assert_ne!(worker.tid, root.tid, "worker recorded under its own tid");
+    }
+
+    #[test]
+    fn detached_spans_interleave_without_stack_corruption() {
+        let t = Telemetry::start();
+        let a = Span::detached("t.a", 0);
+        let b = Span::detached("t.b", 0);
+        assert_eq!(current_span(), 0, "detached spans stay off the stack");
+        drop(a); // non-LIFO on purpose
+        drop(b);
+        let trace = t.finish();
+        assert_eq!(trace.events.len(), 2);
+    }
+}

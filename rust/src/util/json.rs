@@ -3,9 +3,16 @@
 //! Supports the full JSON data model minus exotic number forms; good
 //! enough for artifact manifests, config files, and report output. The
 //! parser is recursive-descent over bytes with proper string escapes.
+//!
+//! [`Json`] values buffer whole documents; [`JsonWriter`] is the
+//! incremental counterpart — it streams nested objects/arrays to any
+//! [`io::Write`] in constant memory, which is what the telemetry trace
+//! exporter uses to emit million-event Chrome traces without building
+//! the document in RAM.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
 /// A JSON value. Objects use `BTreeMap` so emission is deterministic.
 #[derive(Clone, Debug, PartialEq)]
@@ -134,7 +141,7 @@ impl fmt::Display for Json {
     }
 }
 
-fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+fn write_escaped<W: fmt::Write>(f: &mut W, s: &str) -> fmt::Result {
     write!(f, "\"")?;
     for c in s.chars() {
         match c {
@@ -159,6 +166,158 @@ pub struct JsonError {
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+/// Where the writer is inside a container, for comma/colon placement.
+#[derive(Clone, Copy)]
+enum Ctx {
+    /// Inside an array; `first` until the first element is written.
+    Arr { first: bool },
+    /// Inside an object; `pending` between a key and its value.
+    Obj { first: bool, pending: bool },
+}
+
+/// Incremental JSON emitter: streams nested objects/arrays straight to
+/// an [`io::Write`] in constant memory (one small scratch buffer),
+/// producing exactly the compact form [`Json`]'s `Display` emits — so
+/// anything written here parses back via [`Json::parse`].
+///
+/// Protocol errors (a value where a key is required, `end` with
+/// nothing open, `finish` with containers still open) are programmer
+/// errors and panic; I/O errors are returned.
+pub struct JsonWriter<W: io::Write> {
+    w: W,
+    stack: Vec<Ctx>,
+    scratch: String,
+}
+
+impl<W: io::Write> JsonWriter<W> {
+    pub fn new(w: W) -> JsonWriter<W> {
+        JsonWriter { w, stack: Vec::new(), scratch: String::new() }
+    }
+
+    /// Comma bookkeeping before a value (or container) is emitted.
+    fn before_value(&mut self) -> io::Result<()> {
+        match self.stack.last_mut() {
+            None => Ok(()),
+            Some(Ctx::Arr { first }) => {
+                let sep = !*first;
+                *first = false;
+                if sep {
+                    self.w.write_all(b",")?;
+                }
+                Ok(())
+            }
+            Some(Ctx::Obj { pending, .. }) => {
+                assert!(*pending, "JsonWriter: object value written without a key");
+                *pending = false;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"{")?;
+        self.stack.push(Ctx::Obj { first: true, pending: false });
+        Ok(())
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"[")?;
+        self.stack.push(Ctx::Arr { first: true });
+        Ok(())
+    }
+
+    /// Write the key of the next object member.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        match self.stack.last_mut() {
+            Some(Ctx::Obj { first, pending }) => {
+                assert!(!*pending, "JsonWriter: two keys in a row");
+                let sep = !*first;
+                *first = false;
+                *pending = true;
+                if sep {
+                    self.w.write_all(b",")?;
+                }
+            }
+            _ => panic!("JsonWriter: key() outside an object"),
+        }
+        self.scratch.clear();
+        let _ = write_escaped(&mut self.scratch, k);
+        self.scratch.push(':');
+        self.w.write_all(self.scratch.as_bytes())
+    }
+
+    pub fn str_val(&mut self, s: &str) -> io::Result<()> {
+        self.before_value()?;
+        self.scratch.clear();
+        let _ = write_escaped(&mut self.scratch, s);
+        self.w.write_all(self.scratch.as_bytes())
+    }
+
+    /// Emit a number in the same form as [`Json`]'s `Display` (integer
+    /// form when exact), so round-trips through [`Json::parse`] are
+    /// value-identical.
+    pub fn num_val(&mut self, n: f64) -> io::Result<()> {
+        use fmt::Write;
+        self.before_value()?;
+        self.scratch.clear();
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            let _ = write!(self.scratch, "{}", n as i64);
+        } else {
+            let _ = write!(self.scratch, "{n}");
+        }
+        self.w.write_all(self.scratch.as_bytes())
+    }
+
+    pub fn u64_val(&mut self, n: u64) -> io::Result<()> {
+        use fmt::Write;
+        self.before_value()?;
+        self.scratch.clear();
+        let _ = write!(self.scratch, "{n}");
+        self.w.write_all(self.scratch.as_bytes())
+    }
+
+    pub fn bool_val(&mut self, b: bool) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn null_val(&mut self) -> io::Result<()> {
+        self.before_value()?;
+        self.w.write_all(b"null")
+    }
+
+    /// Embed an already-built [`Json`] value (compact `Display` form).
+    pub fn value(&mut self, v: &Json) -> io::Result<()> {
+        use fmt::Write;
+        self.before_value()?;
+        self.scratch.clear();
+        let _ = write!(self.scratch, "{v}");
+        self.w.write_all(self.scratch.as_bytes())
+    }
+
+    /// Close the innermost open object or array.
+    pub fn end(&mut self) -> io::Result<()> {
+        match self.stack.pop() {
+            Some(Ctx::Arr { .. }) => self.w.write_all(b"]"),
+            Some(Ctx::Obj { pending, .. }) => {
+                assert!(!pending, "JsonWriter: object closed after a key with no value");
+                self.w.write_all(b"}")
+            }
+            None => panic!("JsonWriter: end() with nothing open"),
+        }
+    }
+
+    /// Flush and return the underlying writer. Panics if containers
+    /// are still open (the document would be truncated).
+    pub fn finish(mut self) -> io::Result<W> {
+        assert!(self.stack.is_empty(), "JsonWriter: finish() with open containers");
+        self.w.flush()?;
+        Ok(self.w)
     }
 }
 
@@ -411,5 +570,78 @@ mod tests {
             .collect();
         assert_eq!(shape, vec![16, 96, 40]);
         assert_eq!(v.get("model").get("tile").as_i64(), Some(8));
+    }
+
+    #[test]
+    fn json_writer_output_parses_back() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.key("name").unwrap();
+        w.str_val("tr\"ace\n").unwrap();
+        w.key("events").unwrap();
+        w.begin_arr().unwrap();
+        for i in 0..3u64 {
+            w.begin_obj().unwrap();
+            w.key("ts").unwrap();
+            w.u64_val(i * 1000).unwrap();
+            w.key("dur").unwrap();
+            w.num_val(i as f64 + 0.5).unwrap();
+            w.key("ok").unwrap();
+            w.bool_val(i % 2 == 0).unwrap();
+            w.key("parent").unwrap();
+            w.null_val().unwrap();
+            w.end().unwrap();
+        }
+        w.end().unwrap();
+        w.key("meta").unwrap();
+        w.value(&Json::obj(vec![("unit", Json::str("us"))])).unwrap();
+        w.end().unwrap();
+        let bytes = w.finish().unwrap();
+        let v = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("tr\"ace\n"));
+        let events = v.get("events").as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[1].get("ts").as_i64(), Some(1000));
+        assert_eq!(events[1].get("dur").as_f64(), Some(1.5));
+        assert_eq!(events[1].get("ok"), &Json::Bool(false));
+        assert_eq!(events[2].get("parent"), &Json::Null);
+        assert_eq!(v.get("meta").get("unit").as_str(), Some("us"));
+    }
+
+    #[test]
+    fn json_writer_matches_display_emission() {
+        // The streaming writer and the buffered Display emitter must
+        // agree byte-for-byte on the same document.
+        let doc = Json::obj(vec![
+            ("a", Json::Arr(vec![Json::num(1.0), Json::num(2.5), Json::str("x")])),
+            ("b", Json::Bool(true)),
+        ]);
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        w.key("a").unwrap();
+        w.begin_arr().unwrap();
+        w.num_val(1.0).unwrap();
+        w.num_val(2.5).unwrap();
+        w.str_val("x").unwrap();
+        w.end().unwrap();
+        w.key("b").unwrap();
+        w.bool_val(true).unwrap();
+        w.end().unwrap();
+        let bytes = w.finish().unwrap();
+        assert_eq!(std::str::from_utf8(&bytes).unwrap(), doc.to_string());
+    }
+
+    #[test]
+    fn json_writer_root_scalar_and_empty_containers() {
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_arr().unwrap();
+        w.begin_obj().unwrap();
+        w.end().unwrap();
+        w.begin_arr().unwrap();
+        w.end().unwrap();
+        w.end().unwrap();
+        let bytes = w.finish().unwrap();
+        assert_eq!(std::str::from_utf8(&bytes).unwrap(), "[{},[]]");
+        assert!(Json::parse("[{},[]]").is_ok());
     }
 }

@@ -30,12 +30,21 @@
 #        pre-queued utts, dynamic batch 4) must keep its internal
 #        Ok-latency p99 <= 0.8x the no-ladder run's (the ISSUE-6
 #        graceful-degradation win)
+#      - telemetry overhead on the serving hot path: with the
+#        instrumentation compiled in but no recording session, the
+#        fixed-batch serve case must stay <= 1.02x the uninstrumented
+#        baseline (each site is one relaxed atomic load); with a live
+#        recording session it must stay <= 1.10x (spans, metrics, and
+#        per-iteration trace drain included)
 # 5. the tail-batch stats regression (native serving must cost a tail
 #    flush of 1 exactly one utterance — no slack work) re-run by name so
 #    a regression fails loudly even if the tier-1 filter changes
 # 6. the seeded fault-injection smoke (fixed seed, pinned retry/shed/
 #    degrade counts) and the worker-panic containment regression, re-run
 #    by name for the same reason
+# 7. the telemetry histogram shard-merge property test (merged
+#    multi-thread recording == single-thread recording), re-run by name
+#    for the same reason
 #
 # Usage: scripts/verify.sh [--no-bench]
 
@@ -68,6 +77,10 @@ echo "== overload regressions: seeded fault smoke + worker-panic containment =="
 (cd rust && cargo test -q seeded_fault_injection_smoke_pinned_counts)
 (cd rust && cargo test -q batcher_survives_worker_panic)
 (cd rust && cargo test -q contained_worker_panic_fails_only_its_shard)
+
+echo
+echo "== telemetry regression: histogram shard-merge property =="
+(cd rust && cargo test -q histogram_shard_merge_equals_single_thread)
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "verify OK (bench smoke skipped)"
@@ -118,6 +131,8 @@ d8c = median("infer: mt decode 32 steps int8, kv-cache")
 d8r = median("infer: mt decode 32 steps int8, full-prefix recompute")
 sv1 = median("serve: 16 utts int8 25% pruned, fixed batch 4, 1 thread")
 sv4 = median("serve: 16 utts int8 25% pruned, dynamic batch<=16, 4 threads")
+toff = median("serve: 16 utts int8 25% pruned, fixed batch 4, telemetry off")
+ton = median("serve: 16 utts int8 25% pruned, fixed batch 4, telemetry on")
 ov0 = median("serve: 32 utts pre-queued overload, no ladder, p99")
 ovl = median("serve: 32 utts pre-queued overload, degradation ladder, p99")
 
@@ -175,6 +190,19 @@ if sv4 > sv1 * serve_slack:
         f"dynamic 4-thread serving ({sv4/1e6:.2f} ms) vs fixed-batch "
         f"single-thread ({sv1/1e6:.2f} ms) over 16 utts "
         f"(required <= {serve_slack}x at {os.cpu_count() or 1} cores)")
+# Telemetry overhead on the identical fixed-batch serve workload: with
+# no recording session every instrumentation site costs one relaxed
+# atomic load, so the run must stay within 2% of the uninstrumented
+# baseline; a live recording session (spans + metrics + per-iteration
+# trace drain) gets 10%.
+if toff > sv1 * 1.02:
+    failures.append(
+        f"telemetry-off serving ({toff/1e6:.2f} ms) > 1.02x the "
+        f"uninstrumented baseline ({sv1/1e6:.2f} ms)")
+if ton > sv1 * 1.10:
+    failures.append(
+        f"telemetry-on serving ({ton/1e6:.2f} ms) > 1.10x the "
+        f"uninstrumented baseline ({sv1/1e6:.2f} ms)")
 # Graceful degradation under 2x overload: stepping the backend from 25%
 # to 90% pruning after the first flush drains the 32-deep backlog much
 # faster, so the queue-wait-dominated Ok-latency p99 must drop to at
@@ -204,6 +232,8 @@ print(f"mt decode int8 recompute:     {d8r/1e6:.2f} ms median")
 print(f"  .. kv-cache:                {d8c/1e6:.2f} ms median")
 print(f"serve 16 utts fixed b4 1t:    {sv1/1e6:.2f} ms median")
 print(f"  .. dynamic b<=16 4t:        {sv4/1e6:.2f} ms median")
+print(f"  .. telemetry off:           {toff/1e6:.2f} ms median")
+print(f"  .. telemetry on:            {ton/1e6:.2f} ms median")
 print(f"overload 32 utts p99:         {ov0/1e6:.2f} ms no ladder")
 print(f"  .. degradation ladder:      {ovl/1e6:.2f} ms")
 for f in failures:
