@@ -7,6 +7,7 @@ pub mod figures;
 pub mod qos_cache;
 pub mod serving;
 pub mod trace;
+pub mod util;
 
 pub use figures::*;
 pub use qos_cache::QosCache;
@@ -15,6 +16,7 @@ pub use serving::{
     serve_report_sized,
 };
 pub use trace::{measure_trace, trace_report, trace_report_sized};
+pub use util::{measure_util, util_frontier, util_report, util_report_sized};
 
 /// A rendered report: title + lines (also JSON-emittable).
 #[derive(Clone, Debug, Default)]

@@ -92,11 +92,17 @@ pub fn trace_report_sized(
         .iter()
         .filter(|e| e.kind == EventKind::Span)
         .count();
+    let counters = trace
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Counter)
+        .count();
     r.line(format!(
-        "{} events recorded ({} spans, {} instants)",
+        "{} events recorded ({} spans, {} instants, {} counter samples)",
         trace.events.len(),
         spans,
-        trace.events.len() - spans
+        trace.events.len() - spans - counters,
+        counters
     ));
     let mut by_name: BTreeMap<&'static str, usize> = BTreeMap::new();
     for e in &trace.events {
@@ -194,8 +200,14 @@ mod tests {
         assert_eq!(queue_spans, n);
         assert!(events.iter().all(|e| {
             let ph = e.get("ph").as_str().unwrap();
-            ph == "X" || ph == "i"
+            ph == "X" || ph == "i" || ph == "C"
         }));
+        // The serve run samples the array-utilization counter track
+        // (one sample per instrumented GEMM).
+        assert!(
+            trace.named("array_utilization").count() >= gemms.len(),
+            "utilization counter track sampled per GEMM"
+        );
     }
 
     #[test]

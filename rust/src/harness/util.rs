@@ -1,0 +1,423 @@
+//! `sasp report util` — accelerator-level utilization and roofline
+//! report, fully offline.
+//!
+//! Runs a batched encode workload on the 25%-pruned INT8 native backend
+//! under a recording telemetry session, then reads back the per-layer
+//! attribution counters ([`crate::infer::layers`]) and renders:
+//!
+//! - the **per-layer utilization table** — MACs, bus words, array
+//!   cycles, the PE-occupancy split (active / fill-drain bubble /
+//!   reprogramming stall / pruning-skipped), utilization, and the
+//!   [`crate::hwmodel::EnergyModel`] energy charge per layer;
+//! - the **roofline classification** — arithmetic intensity (MACs per
+//!   bus word) against the array ridge point (`tile²` MACs/word: the
+//!   array peaks at `n_pes` MACs/cycle on a one-word-per-cycle bus),
+//!   labelling each layer compute- or bandwidth-bound;
+//! - the **utilization x pruning-rate x array-shape frontier** — an
+//!   analytic sweep ([`crate::sysim::engine::gemm_on_array_batched`])
+//!   over tile sizes and pruning rates of the same model.
+//!
+//! The recorded counters are cross-checked **exactly** against the
+//! analytic engine for the feed-forward GEMMs (the instrumented kernels
+//! and the system simulator charge identical [`crate::systolic::TileTiming`]
+//! schedules), and the per-layer totals must sum to the backend's own
+//! [`crate::infer::ForwardStats`] — functional == analytic, enforced at
+//! report time.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::infer::layers::{self, Layer};
+use crate::infer::{synth_weights, ForwardStats, ModelDims, NativeBackend};
+use crate::model::{GemmKind, GemmShape};
+use crate::pruning::global_prune;
+use crate::sysim::engine::{gemm_on_array_batched, GemmCost};
+use crate::sysim::SimParams;
+use crate::systolic::{ArrayConfig, Occupancy, Quant};
+use crate::telemetry::{Telemetry, Trace};
+use crate::util::rng::Rng;
+
+use super::Report;
+
+/// One layer's recorded attribution, read back from the metrics
+/// snapshot a session scraped.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerUtil {
+    pub layer: Layer,
+    pub macs: u64,
+    pub bus_words: u64,
+    pub array_cycles: u64,
+    pub energy_pj: u64,
+    pub occ: Occupancy,
+}
+
+impl LayerUtil {
+    /// Arithmetic intensity in MACs per bus word (programming +
+    /// streaming traffic).
+    pub fn intensity(&self) -> f64 {
+        self.macs as f64 / (self.bus_words.max(1)) as f64
+    }
+
+    /// Compute-bound iff the layer's intensity reaches the array ridge
+    /// point (`n_pes` MACs per word).
+    pub fn compute_bound(&self, n_pes: usize) -> bool {
+        self.intensity() >= n_pes as f64
+    }
+}
+
+impl LayerUtil {
+    /// Zeroed accumulator for a concrete layer.
+    fn empty(layer: Layer) -> Self {
+        LayerUtil {
+            layer,
+            macs: 0,
+            bus_words: 0,
+            array_cycles: 0,
+            energy_pj: 0,
+            occ: Occupancy::default(),
+        }
+    }
+}
+
+/// Read one layer's attribution counters out of a scraped snapshot.
+fn read_layer(trace: &Trace, layer: Layer) -> LayerUtil {
+    let c = |family: &str| {
+        trace
+            .metrics
+            .counters
+            .get(&layer.metric(family))
+            .copied()
+            .unwrap_or(0)
+    };
+    LayerUtil {
+        layer,
+        macs: c("sasp_layer_macs_total"),
+        bus_words: c("sasp_layer_bus_words_total"),
+        array_cycles: c("sasp_layer_array_cycles_total"),
+        energy_pj: c("sasp_layer_energy_pj_total"),
+        occ: Occupancy {
+            active_pe_cycles: c("sasp_layer_active_pe_cycles_total") as usize,
+            bubble_pe_cycles: c("sasp_layer_bubble_pe_cycles_total") as usize,
+            stall_pe_cycles: c("sasp_layer_stall_pe_cycles_total") as usize,
+            skipped_pe_cycles: c("sasp_layer_skipped_pe_cycles_total") as usize,
+        },
+    }
+}
+
+/// Run `n_batches` deterministic full-length batches through a fresh
+/// `rate`-pruned INT8 native backend under a recording session; return
+/// the backend's cumulative statistics, the achieved pruning masks'
+/// plan, and everything the session captured.
+pub fn measure_util(
+    dims: &ModelDims,
+    rate: f64,
+    batch: usize,
+    n_batches: usize,
+) -> Result<(ForwardStats, crate::pruning::PrunePlan, Trace)> {
+    let mut backend = NativeBackend::new(synth_weights(dims, 7), batch)?;
+    let plan = backend.prepare(dims.tile, rate, Quant::Int8)?;
+    backend.reset_stats();
+
+    let (t, f) = (dims.seq_len, dims.input_dim);
+    let mut rng = Rng::new(13);
+    let pad = vec![1.0f32; batch * t];
+    let session = Telemetry::start();
+    for _ in 0..n_batches {
+        let feats: Vec<f32> =
+            (0..batch * t * f).map(|_| rng.normal() as f32 * 0.5).collect();
+        let _ = backend.forward_batch(&feats, &pad, batch);
+    }
+    let trace = session.finish();
+    Ok((*backend.stats(), plan, trace))
+}
+
+/// The analytic batched cost of the encoder's feed-forward GEMMs under
+/// `masks`, summed over blocks — what the instrumented kernels must have
+/// charged for one flush of `batch` utterances.
+fn analytic_ff(dims: &ModelDims, masks: &[crate::sysim::TileMask], batch: usize) -> GemmCost {
+    let cfg = ArrayConfig::square(dims.tile, Quant::Int8);
+    let p = SimParams::default();
+    let (t, d, f) = (dims.seq_len, dims.d_model, dims.d_ff);
+    let mut total = GemmCost::default();
+    for i in 0..dims.n_blocks {
+        let g1 = GemmShape { m: t, k: d, n: f, kind: GemmKind::FeedForward };
+        let g2 = GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward };
+        total.add(&gemm_on_array_batched(&g1, &cfg, &p, Some(&masks[2 * i]), batch));
+        total.add(&gemm_on_array_batched(&g2, &cfg, &p, Some(&masks[2 * i + 1]), batch));
+    }
+    total
+}
+
+/// One point of the utilization frontier: an analytic whole-encoder
+/// sweep (per-block QKV/O projections dense + both feed-forward GEMMs
+/// under the global plan at this tile/rate).
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierPoint {
+    pub tile: usize,
+    pub rate: f64,
+    pub achieved_rate: f64,
+    pub cycles: f64,
+    pub occ: Occupancy,
+}
+
+impl FrontierPoint {
+    /// Share of the work the pruning masks skipped outright.
+    pub fn skipped_share(&self) -> f64 {
+        let o = &self.occ;
+        let total =
+            o.active_pe_cycles + o.bubble_pe_cycles + o.stall_pe_cycles + o.skipped_pe_cycles;
+        if total == 0 {
+            return 0.0;
+        }
+        o.skipped_pe_cycles as f64 / total as f64
+    }
+}
+
+/// Analytic utilization x pruning-rate x array-shape sweep over the
+/// encoder's weight GEMMs (the frontier the co-design trades along:
+/// bigger arrays lower the bubble share but raise the skipped-work
+/// granularity).
+pub fn util_frontier(
+    dims: &ModelDims,
+    tiles: &[usize],
+    rates: &[f64],
+    batch: usize,
+) -> Result<Vec<FrontierPoint>> {
+    let w = synth_weights(dims, 7);
+    let p = SimParams::default();
+    let (t, d, f) = (dims.seq_len, dims.d_model, dims.d_ff);
+    let mut out = Vec::with_capacity(tiles.len() * rates.len());
+    for &tile in tiles {
+        let norms = crate::infer::backend::ff_norms(&w, tile)?;
+        let cfg = ArrayConfig::square(tile, Quant::Int8);
+        for &rate in rates {
+            let plan = global_prune(&norms, rate);
+            let mut total = GemmCost::default();
+            for i in 0..dims.n_blocks {
+                let proj = GemmShape { m: t, k: d, n: d, kind: GemmKind::AttnProj };
+                for _ in 0..4 {
+                    total.add(&gemm_on_array_batched(&proj, &cfg, &p, None, batch));
+                }
+                let g1 = GemmShape { m: t, k: d, n: f, kind: GemmKind::FeedForward };
+                let g2 = GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward };
+                total.add(&gemm_on_array_batched(
+                    &g1, &cfg, &p, Some(&plan.masks[2 * i]), batch,
+                ));
+                total.add(&gemm_on_array_batched(
+                    &g2, &cfg, &p, Some(&plan.masks[2 * i + 1]), batch,
+                ));
+            }
+            out.push(FrontierPoint {
+                tile,
+                rate,
+                achieved_rate: plan.achieved_rate,
+                cycles: total.cycles,
+                occ: total.occ,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// [`util_report`] with explicit model/load/sweep parameters (the
+/// render test uses the mini model to stay fast). When `metrics_out` is
+/// given, the session's Prometheus-style snapshot is written there.
+pub fn util_report_sized(
+    dims: &ModelDims,
+    rate: f64,
+    batch: usize,
+    n_batches: usize,
+    tiles: &[usize],
+    rates: &[f64],
+    metrics_out: Option<&Path>,
+) -> Result<Report> {
+    let (stats, plan, trace) = measure_util(dims, rate, batch, n_batches)?;
+    let per_layer: Vec<LayerUtil> = layers::ALL
+        .iter()
+        .map(|&l| read_layer(&trace, l))
+        .filter(|u| u.macs > 0 || u.occ.skipped_pe_cycles > 0)
+        .collect();
+
+    // -- functional == analytic cross-checks --------------------------------
+    // The feed-forward layers' recorded counters must equal the analytic
+    // engine's batched charges for the same masks, exactly.
+    let want = {
+        let per_flush = analytic_ff(dims, &plan.masks, batch);
+        let mut total = GemmCost::default();
+        for _ in 0..n_batches {
+            total.add(&per_flush);
+        }
+        total
+    };
+    let got = per_layer
+        .iter()
+        .filter(|u| matches!(u.layer, Layer::Ff1 | Layer::Ff2))
+        .fold(LayerUtil::empty(Layer::Ff1), |mut a, u| {
+            a.macs += u.macs;
+            a.bus_words += u.bus_words;
+            a.array_cycles += u.array_cycles;
+            a.occ.add(&u.occ);
+            a
+        });
+    ensure!(
+        got.macs == want.counts.macs
+            && got.bus_words == want.counts.bus_words
+            && got.array_cycles == want.counts.array_busy_cycles
+            && got.occ == want.occ,
+        "recorded ff attribution must equal the analytic batched charges: \
+         got {got:?}, want macs={} bus={} cycles={} occ={:?}",
+        want.counts.macs,
+        want.counts.bus_words,
+        want.counts.array_busy_cycles,
+        want.occ
+    );
+    // And the per-layer totals must account for every MAC the backend
+    // itself charged — nothing double-counted, nothing missed.
+    let recorded: u64 = per_layer.iter().map(|u| u.macs).sum();
+    let charged =
+        (stats.ff.timing.macs + stats.attn.timing.macs + stats.other.timing.macs) as u64;
+    ensure!(
+        recorded == charged,
+        "per-layer MACs must sum to the backend's ForwardStats: {recorded} != {charged}"
+    );
+
+    // -- render -------------------------------------------------------------
+    let n_pes = dims.tile * dims.tile;
+    let mut r = Report::new("Util — PE utilization, attribution and roofline (native, INT8)");
+    r.line(format!(
+        "{}x{} array, {:.0}% SASP (achieved {:.1}%), {} flushes x batch {}, seq {}",
+        dims.tile,
+        dims.tile,
+        rate * 100.0,
+        plan.achieved_rate * 100.0,
+        n_batches,
+        batch,
+        dims.seq_len
+    ));
+    r.line(format!(
+        "ridge point: {n_pes} MACs/word (array peak {n_pes} MACs/cycle, 1 word/cycle bus)"
+    ));
+    r.line(format!(
+        "{:<9} {:>12} {:>10} {:>10} {:>6} {:>7} {:>7} {:>12} {:>7} {}",
+        "layer", "macs", "bus_words", "cycles", "util%", "stall%", "skip%", "energy_pJ", "AI", "bound"
+    ));
+    for u in &per_layer {
+        let busy = u.occ.busy_pe_cycles();
+        let full = busy + u.occ.stall_pe_cycles + u.occ.skipped_pe_cycles;
+        r.line(format!(
+            "{:<9} {:>12} {:>10} {:>10} {:>6.1} {:>7.1} {:>7.1} {:>12} {:>7.1} {}",
+            u.layer.label(),
+            u.macs,
+            u.bus_words,
+            u.array_cycles,
+            u.occ.utilization() * 100.0,
+            u.occ.stall_pe_cycles as f64 / full.max(1) as f64 * 100.0,
+            u.occ.skipped_pe_cycles as f64 / full.max(1) as f64 * 100.0,
+            u.energy_pj,
+            u.intensity(),
+            if u.compute_bound(n_pes) { "compute" } else { "bandwidth" }
+        ));
+    }
+    r.line("cross-check: recorded ff attribution == analytic batched charges (exact)".to_string());
+
+    r.line(String::new());
+    r.line("frontier — utilization x pruning rate x array shape (analytic encoder sweep)".to_string());
+    r.line(format!(
+        "{:<5} {:>6} {:>10} {:>6} {:>6} {:>8}",
+        "tile", "rate%", "cycles", "util%", "skip%", "speedup"
+    ));
+    let frontier = util_frontier(dims, tiles, rates, batch)?;
+    for pt in &frontier {
+        let dense = frontier
+            .iter()
+            .find(|d| d.tile == pt.tile && d.rate == 0.0)
+            .map_or(pt.cycles, |d| d.cycles);
+        r.line(format!(
+            "{:<5} {:>6.0} {:>10.0} {:>6.1} {:>6.1} {:>8.2}",
+            pt.tile,
+            pt.rate * 100.0,
+            pt.cycles,
+            pt.occ.utilization() * 100.0,
+            pt.skipped_share() * 100.0,
+            dense / pt.cycles
+        ));
+    }
+
+    if let Some(path) = metrics_out {
+        std::fs::write(path, trace.metrics.render_prometheus())
+            .with_context(|| format!("write {}", path.display()))?;
+        r.line(format!("metrics -> {}", path.display()));
+    }
+    Ok(r)
+}
+
+/// The `sasp report util` entry point: tiny-ASR model, 25% pruning,
+/// three flushes of batch 4, frontier over 4/8/16-wide arrays at
+/// 0/25/50/75% rates.
+pub fn util_report(metrics_out: Option<&Path>) -> Result<Report> {
+    util_report_sized(
+        &ModelDims::tiny_asr(),
+        0.25,
+        4,
+        3,
+        &[4, 8, 16],
+        &[0.0, 0.25, 0.5, 0.75],
+        metrics_out,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::testutil::mini_dims;
+
+    #[test]
+    fn util_report_cross_checks_and_renders() {
+        let dir = std::env::temp_dir()
+            .join(format!("sasp_util_report_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics_path = dir.join("util.prom");
+        // util_report_sized ensure!()s functional == analytic internally;
+        // unwrap is the cross-check.
+        let r = util_report_sized(
+            &mini_dims(),
+            0.5,
+            3,
+            2,
+            &[4, 8],
+            &[0.0, 0.5],
+            Some(&metrics_path),
+        )
+        .unwrap();
+        let s = r.render();
+        assert!(s.contains("ff1"), "{s}");
+        assert!(s.contains("ff2"), "{s}");
+        assert!(s.contains("qkv"), "{s}");
+        assert!(s.contains("ridge point"), "{s}");
+        assert!(s.contains("frontier"), "{s}");
+        assert!(s.contains("bandwidth") || s.contains("compute"), "{s}");
+
+        let prom = std::fs::read_to_string(&metrics_path).unwrap();
+        assert!(
+            prom.contains("sasp_layer_macs_total{layer=\"ff1\"}"),
+            "{prom}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frontier_pruning_always_helps_at_fixed_tile() {
+        let pts = util_frontier(&mini_dims(), &[8], &[0.0, 0.25, 0.5], 2).unwrap();
+        assert_eq!(pts.len(), 3);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].cycles <= w[0].cycles,
+                "more pruning must not cost more cycles: {w:?}"
+            );
+            assert!(w[1].skipped_share() >= w[0].skipped_share(), "{w:?}");
+        }
+        // Dense execution skips nothing.
+        assert_eq!(pts[0].occ.skipped_pe_cycles, 0);
+    }
+}

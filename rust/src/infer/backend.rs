@@ -476,6 +476,12 @@ impl NativeBackend {
                 .gemm_batched(&memory, batch, t, None, dec.tile, &mut cv[i], &mut wtile);
             self.dec_fwd.stats.cross_kv.add(&sk);
             self.dec_fwd.stats.cross_kv.add(&sv);
+            crate::infer::layers::record(
+                crate::infer::Layer::CrossKv, &sk, dec.tile, dec.quant,
+            );
+            crate::infer::layers::record(
+                crate::infer::Layer::CrossKv, &sv, dec.tile, dec.quant,
+            );
         }
 
         // Per-utterance greedy decode over the shared precompute.

@@ -16,7 +16,10 @@
 //! Buffers are owned and reused, so steady-state serving performs no
 //! allocation beyond growth to the largest batch seen.
 
+use crate::systolic::Quant;
+
 use super::super::encoder::{ForwardStats, PreparedModel};
+use super::super::layers::{self, Layer};
 use super::super::ops;
 use super::gemm::gemm_batched_f32;
 
@@ -98,6 +101,8 @@ impl BatchForward {
             &mut self.wtile,
         );
         self.stats.other.add(&st);
+        // The projection runs in FP32 regardless of the kernel format.
+        layers::record(Layer::InProj, &st, m.tile, Quant::Fp32);
         self.encode(m, batch, pad);
         self.head(m, batch, out, true);
         self.stats.utterances += batch;
@@ -222,6 +227,9 @@ impl BatchForward {
             self.stats.attn.add(&sq);
             self.stats.attn.add(&sk);
             self.stats.attn.add(&sv);
+            layers::record(Layer::Qkv, &sq, m.tile, m.quant);
+            layers::record(Layer::Qkv, &sk, m.tile, m.quant);
+            layers::record(Layer::Qkv, &sv, m.tile, m.quant);
             // The dynamic score/context GEMMs are per-utterance by
             // construction (activation x activation within one
             // utterance; software FP32, never pruned).
@@ -258,6 +266,7 @@ impl BatchForward {
                 .wo
                 .gemm_batched(&self.ctx, batch, t, None, m.tile, &mut self.tmp, &mut self.wtile);
             self.stats.attn.add(&so);
+            layers::record(Layer::AttnOut, &so, m.tile, m.quant);
             ops::residual_add(&mut self.h, &self.tmp);
 
             // --- pre-LN SASP feed-forward --------------------------------
@@ -274,6 +283,7 @@ impl BatchForward {
                 &mut self.wtile,
             );
             self.stats.ff.add(&s1);
+            layers::record(Layer::Ff1, &s1, m.tile, m.quant);
             ops::add_bias(&mut self.mid, &blk.b1);
             ops::relu(&mut self.mid);
             let s2 = blk.w2.gemm_batched(
@@ -286,6 +296,7 @@ impl BatchForward {
                 &mut self.wtile,
             );
             self.stats.ff.add(&s2);
+            layers::record(Layer::Ff2, &s2, m.tile, m.quant);
             ops::add_bias(&mut self.tmp, &blk.b2);
             ops::residual_add(&mut self.h, &self.tmp);
         }
@@ -311,6 +322,7 @@ impl BatchForward {
             &mut self.wtile,
         );
         self.stats.other.add(&st);
+        layers::record(Layer::Head, &st, m.tile, Quant::Fp32);
         ops::add_bias(out, &m.head_b);
         if log_probs {
             ops::log_softmax_rows(out, v);

@@ -113,7 +113,9 @@ fn gemm_batched_tiled(
     if rows == 0 {
         return stats;
     }
-    let per_tile = TileTiming::batched(&ArrayConfig::square(tile, quant), m, batch);
+    let cfg = ArrayConfig::square(tile, quant);
+    let per_tile = TileTiming::batched(&cfg, m, batch);
+    let per_skip = TileTiming::skipped_pass(&cfg, m, batch);
     for j in 0..nt {
         let n0 = j * tile;
         let tn = (n0 + tile).min(n) - n0;
@@ -121,6 +123,7 @@ fn gemm_batched_tiled(
             if let Some(ms) = mask {
                 if !ms.is_live(i, j) {
                     stats.tiles_skipped += 1;
+                    stats.timing.add(&per_skip);
                     continue;
                 }
             }
@@ -362,6 +365,10 @@ mod tests {
                 want.add(&TileTiming::reuse(&cfg, m));
             }
         }
+        // Dead tiles contribute only their avoided-work occupancy.
+        for _ in 0..mask.n_tiles() - mask.live_count() {
+            want.add(&TileTiming::skipped_pass(&cfg, m, batch));
+        }
         assert_eq!(stats.timing, want);
         assert_eq!(stats.tiles_live, mask.live_count());
     }
@@ -402,6 +409,10 @@ mod tests {
                 cost.counts.array_busy_cycles,
                 stats.timing.array_cycles as u64,
                 "{quant:?}"
+            );
+            assert_eq!(
+                cost.occ, stats.timing.occ,
+                "{quant:?}: analytic occupancy must match the functional schedule"
             );
         }
     }

@@ -22,9 +22,11 @@
 //! [`crate::sysim::engine::gemm_on_array_decode`] exactly (asserted in
 //! the tests below).
 
+use crate::systolic::Quant;
 use crate::telemetry;
 
 use super::super::gemm::{gemm_f32, TileStats};
+use super::super::layers::{self, Layer};
 use super::super::ops;
 use super::PreparedDecoder;
 
@@ -204,6 +206,8 @@ impl DecoderForward {
             let stv = blk.xv.gemm(memory, src_len, None, m.tile, &mut self.cross_v[i]);
             self.stats.cross_kv.add(&stk);
             self.stats.cross_kv.add(&stv);
+            layers::record(Layer::CrossKv, &stk, m.tile, m.quant);
+            layers::record(Layer::CrossKv, &stv, m.tile, m.quant);
         }
         if span.is_live() {
             span.attr("src_len", src_len);
@@ -269,6 +273,9 @@ impl DecoderForward {
             self.stats.attn.add(&sq);
             self.stats.attn.add(&sk);
             self.stats.attn.add(&sv);
+            layers::record(Layer::DecAttn, &sq, m.tile, m.quant);
+            layers::record(Layer::DecAttn, &sk, m.tile, m.quant);
+            layers::record(Layer::DecAttn, &sv, m.tile, m.quant);
             attend_row(
                 &self.q,
                 &self.self_k[i],
@@ -281,6 +288,7 @@ impl DecoderForward {
             );
             let so = blk.so.gemm(&self.ctx, 1, None, m.tile, &mut self.tmp);
             self.stats.attn.add(&so);
+            layers::record(Layer::DecAttn, &so, m.tile, m.quant);
             ops::residual_add(&mut self.h, &self.tmp);
 
             // --- encoder-decoder cross-attention (K/V reused) ---------
@@ -289,6 +297,7 @@ impl DecoderForward {
             ops::layer_norm(&mut self.hn, d, &blk.lnx_g, &blk.lnx_b);
             let xq = blk.xq.gemm(&self.hn, 1, None, m.tile, &mut self.q);
             self.stats.attn.add(&xq);
+            layers::record(Layer::DecAttn, &xq, m.tile, m.quant);
             attend_row(
                 &self.q,
                 &self.cross_k[i],
@@ -301,6 +310,7 @@ impl DecoderForward {
             );
             let xo = blk.xo.gemm(&self.ctx, 1, None, m.tile, &mut self.tmp);
             self.stats.attn.add(&xo);
+            layers::record(Layer::DecAttn, &xo, m.tile, m.quant);
             ops::residual_add(&mut self.h, &self.tmp);
 
             // --- pre-LN SASP feed-forward -----------------------------
@@ -310,10 +320,12 @@ impl DecoderForward {
             let mut ff_span = telemetry::Span::begin("gemm.decode_ff");
             let s1 = blk.w1.gemm(&self.hn, 1, Some(&blk.mask1), m.tile, &mut self.mid);
             self.stats.ff.add(&s1);
+            layers::record(Layer::DecFf, &s1, m.tile, m.quant);
             ops::add_bias(&mut self.mid, &blk.b1);
             ops::relu(&mut self.mid);
             let s2 = blk.w2.gemm(&self.mid, 1, Some(&blk.mask2), m.tile, &mut self.tmp);
             self.stats.ff.add(&s2);
+            layers::record(Layer::DecFf, &s2, m.tile, m.quant);
             if ff_span.is_live() {
                 // The SASP-pruned GEMV pair, with its masked-tile
                 // accounting (the per-GEMM sparsity evidence).
@@ -332,6 +344,7 @@ impl DecoderForward {
         ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
         let st = gemm_f32(&self.hn, &m.head_w, 1, d, v, None, m.tile, logits);
         self.stats.other.add(&st);
+        layers::record(Layer::Head, &st, m.tile, Quant::Fp32);
         ops::add_bias(logits, &m.head_b);
         self.pos += 1;
         self.stats.steps += 1;

@@ -21,6 +21,7 @@ use crate::sysim::TileMask;
 use crate::systolic::Quant;
 
 use super::gemm::{gemm_f32, Linear, TileStats};
+use super::layers::{self, Layer};
 use super::ops;
 
 /// Shape hyper-parameters of one encoder model — the rust mirror of
@@ -508,6 +509,8 @@ impl Forward {
             &mut self.h,
         );
         self.stats.other.add(&st);
+        // The projection runs in FP32 regardless of the kernel format.
+        layers::record(Layer::InProj, &st, m.tile, Quant::Fp32);
         self.encode(m, pad);
         self.head(m, out, true);
         self.stats.utterances += 1;
@@ -609,6 +612,9 @@ impl Forward {
             self.stats.attn.add(&sq);
             self.stats.attn.add(&sk);
             self.stats.attn.add(&sv);
+            layers::record(Layer::Qkv, &sq, m.tile, m.quant);
+            layers::record(Layer::Qkv, &sk, m.tile, m.quant);
+            layers::record(Layer::Qkv, &sv, m.tile, m.quant);
             for head in 0..h_heads {
                 let c0 = head * hd;
                 // Dynamic score GEMM (activation x activation — software
@@ -637,6 +643,7 @@ impl Forward {
             }
             let so = blk.wo.gemm(&self.ctx, t, None, m.tile, &mut self.tmp);
             self.stats.attn.add(&so);
+            layers::record(Layer::AttnOut, &so, m.tile, m.quant);
             ops::residual_add(&mut self.h, &self.tmp);
 
             // --- pre-LN SASP feed-forward --------------------------------
@@ -645,10 +652,12 @@ impl Forward {
             ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
             let s1 = blk.w1.gemm(&self.hn, t, Some(&blk.mask1), m.tile, &mut self.mid);
             self.stats.ff.add(&s1);
+            layers::record(Layer::Ff1, &s1, m.tile, m.quant);
             ops::add_bias(&mut self.mid, &blk.b1);
             ops::relu(&mut self.mid);
             let s2 = blk.w2.gemm(&self.mid, t, Some(&blk.mask2), m.tile, &mut self.tmp);
             self.stats.ff.add(&s2);
+            layers::record(Layer::Ff2, &s2, m.tile, m.quant);
             ops::add_bias(&mut self.tmp, &blk.b2);
             ops::residual_add(&mut self.h, &self.tmp);
         }
@@ -663,6 +672,7 @@ impl Forward {
         ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
         let st = gemm_f32(&self.hn, &m.head_w, t, d, v, None, m.tile, out);
         self.stats.other.add(&st);
+        layers::record(Layer::Head, &st, m.tile, Quant::Fp32);
         ops::add_bias(out, &m.head_b);
         if log_probs {
             ops::log_softmax_rows(out, v);

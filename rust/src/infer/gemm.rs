@@ -64,12 +64,22 @@ impl TileStats {
                 stream_insts: self.timing.stream_insts - earlier.timing.stream_insts,
                 array_cycles: self.timing.array_cycles - earlier.timing.array_cycles,
                 macs: self.timing.macs - earlier.timing.macs,
+                occ: crate::systolic::Occupancy {
+                    active_pe_cycles: self.timing.occ.active_pe_cycles
+                        - earlier.timing.occ.active_pe_cycles,
+                    bubble_pe_cycles: self.timing.occ.bubble_pe_cycles
+                        - earlier.timing.occ.bubble_pe_cycles,
+                    stall_pe_cycles: self.timing.occ.stall_pe_cycles
+                        - earlier.timing.occ.stall_pe_cycles,
+                    skipped_pe_cycles: self.timing.occ.skipped_pe_cycles
+                        - earlier.timing.occ.skipped_pe_cycles,
+                },
             },
         }
     }
 
-    /// Attach the tile counts and [`TileTiming`] cost to a telemetry
-    /// span (no-op on an inert span).
+    /// Attach the tile counts, [`TileTiming`] cost, and occupancy split
+    /// to a telemetry span (no-op on an inert span).
     pub fn annotate(&self, span: &mut crate::telemetry::Span) {
         if !span.is_live() {
             return;
@@ -78,6 +88,10 @@ impl TileStats {
         span.attr("tiles_skipped", self.tiles_skipped);
         span.attr("macs", self.timing.macs);
         span.attr("array_cycles", self.timing.array_cycles);
+        span.attr("active_pe_cycles", self.timing.occ.active_pe_cycles);
+        span.attr("bubble_pe_cycles", self.timing.occ.bubble_pe_cycles);
+        span.attr("stall_pe_cycles", self.timing.occ.stall_pe_cycles);
+        span.attr("skipped_pe_cycles", self.timing.occ.skipped_pe_cycles);
     }
 }
 
@@ -121,7 +135,9 @@ fn gemm_tiled(
     if m == 0 {
         return stats;
     }
-    let per_tile = TileTiming::live(&ArrayConfig::square(tile, quant), m);
+    let cfg = ArrayConfig::square(tile, quant);
+    let per_tile = TileTiming::live(&cfg, m);
+    let per_skip = TileTiming::skipped_pass(&cfg, m, 1);
     for j in 0..nt {
         let n0 = j * tile;
         let n_hi = (n0 + tile).min(n);
@@ -129,6 +145,7 @@ fn gemm_tiled(
             if let Some(ms) = mask {
                 if !ms.is_live(i, j) {
                     stats.tiles_skipped += 1;
+                    stats.timing.add(&per_skip);
                     continue;
                 }
             }

@@ -1,0 +1,280 @@
+//! Per-layer GEMM attribution — labels every array-executed (and
+//! software-executed) GEMM call site of the native engine and
+//! accumulates its cost into the process-global metrics registry.
+//!
+//! Each [`record`] call charges one GEMM's [`TileStats`] to the
+//! `layer`-labeled counter family:
+//!
+//! - `sasp_layer_macs_total{layer="..."}` — MAC operations executed.
+//! - `sasp_layer_array_cycles_total{...}` — array-busy cycles.
+//! - `sasp_layer_bus_words_total{...}` — 32-bit bus words moved
+//!   (weights + activations, [`TileTiming::total_words`]).
+//! - `sasp_layer_energy_pj_total{...}` — picojoules charged at the
+//!   [`EnergyModel::default`] rates (MACs at the array's per-MAC energy
+//!   for this tile/quant configuration, bus words at the per-word bus
+//!   energy) — the same model `sysim` uses, so per-layer energy sums
+//!   reconcile with the system simulator's totals.
+//! - `sasp_layer_{active,bubble,stall,skipped}_pe_cycles_total{...}` —
+//!   the [`Occupancy`] breakdown: steady-state work, fill/drain
+//!   bubbles, reprogramming stalls, and pruning-skipped savings.
+//!
+//! Every call also samples the `array_utilization` Chrome counter track
+//! ([`crate::telemetry::counter`]), so a Perfetto-loaded serve trace
+//! shows the array's occupancy mix evolving GEMM by GEMM over the run.
+//!
+//! Like every instrumentation site in [`crate::telemetry`], the whole
+//! record is behind the one relaxed-atomic [`telemetry::active`] branch:
+//! with no recording session the serving hot path pays a single load.
+//!
+//! [`TileTiming::total_words`]: crate::systolic::TileTiming::total_words
+//! [`Occupancy`]: crate::systolic::Occupancy
+//! [`EnergyModel::default`]: crate::hwmodel::EnergyModel
+
+use crate::hwmodel::EnergyModel;
+use crate::systolic::{ArrayConfig, Quant};
+use crate::telemetry::{self, LazyCounter};
+
+use super::gemm::TileStats;
+
+/// The GEMM roles of the native engine's forward passes, encoder and
+/// decoder side. Attention projections carry one label per projection
+/// group; the SASP feed-forward pair is split so pruning savings are
+/// attributable per GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    /// Input projection / token embedding (software FP32).
+    InProj,
+    /// Encoder q/k/v projections.
+    Qkv,
+    /// Encoder attention output projection.
+    AttnOut,
+    /// Encoder feed-forward expand (`w1`, SASP-pruned).
+    Ff1,
+    /// Encoder feed-forward contract (`w2`, SASP-pruned).
+    Ff2,
+    /// Decoder cross-attention K/V precompute (per-utterance reuse).
+    CrossKv,
+    /// Decoder self/cross attention projections (`m = 1` GEMVs).
+    DecAttn,
+    /// Decoder feed-forward pair (SASP-pruned GEMVs).
+    DecFf,
+    /// Vocabulary head (software FP32).
+    Head,
+}
+
+/// Every layer, in [`Layer`] discriminant order (report iteration).
+pub const ALL: [Layer; 9] = [
+    Layer::InProj,
+    Layer::Qkv,
+    Layer::AttnOut,
+    Layer::Ff1,
+    Layer::Ff2,
+    Layer::CrossKv,
+    Layer::DecAttn,
+    Layer::DecFf,
+    Layer::Head,
+];
+
+impl Layer {
+    /// The `layer` label value used in the metric names.
+    pub fn label(self) -> &'static str {
+        match self {
+            Layer::InProj => "in_proj",
+            Layer::Qkv => "qkv",
+            Layer::AttnOut => "attn_out",
+            Layer::Ff1 => "ff1",
+            Layer::Ff2 => "ff2",
+            Layer::CrossKv => "cross_kv",
+            Layer::DecAttn => "dec_attn",
+            Layer::DecFf => "dec_ff",
+            Layer::Head => "head",
+        }
+    }
+
+    /// The full metric name for `family` (one of the
+    /// `sasp_layer_*_total` families) at this layer's label — what the
+    /// series is keyed by in a [`crate::telemetry::MetricsSnapshot`].
+    pub fn metric(self, family: &str) -> String {
+        format!("{family}{{layer=\"{}\"}}", self.label())
+    }
+}
+
+/// One layer's counter handles (resolved lazily, lock-free after).
+struct LayerCounters {
+    macs: LazyCounter,
+    array_cycles: LazyCounter,
+    bus_words: LazyCounter,
+    energy_pj: LazyCounter,
+    active: LazyCounter,
+    bubble: LazyCounter,
+    stall: LazyCounter,
+    skipped: LazyCounter,
+}
+
+macro_rules! layer_counters {
+    ($label:literal) => {
+        LayerCounters {
+            macs: LazyCounter::new(concat!(
+                "sasp_layer_macs_total{layer=\"", $label, "\"}"
+            )),
+            array_cycles: LazyCounter::new(concat!(
+                "sasp_layer_array_cycles_total{layer=\"", $label, "\"}"
+            )),
+            bus_words: LazyCounter::new(concat!(
+                "sasp_layer_bus_words_total{layer=\"", $label, "\"}"
+            )),
+            energy_pj: LazyCounter::new(concat!(
+                "sasp_layer_energy_pj_total{layer=\"", $label, "\"}"
+            )),
+            active: LazyCounter::new(concat!(
+                "sasp_layer_active_pe_cycles_total{layer=\"", $label, "\"}"
+            )),
+            bubble: LazyCounter::new(concat!(
+                "sasp_layer_bubble_pe_cycles_total{layer=\"", $label, "\"}"
+            )),
+            stall: LazyCounter::new(concat!(
+                "sasp_layer_stall_pe_cycles_total{layer=\"", $label, "\"}"
+            )),
+            skipped: LazyCounter::new(concat!(
+                "sasp_layer_skipped_pe_cycles_total{layer=\"", $label, "\"}"
+            )),
+        }
+    };
+}
+
+/// Indexed like [`ALL`] / the [`Layer`] discriminants.
+static COUNTERS: [LayerCounters; 9] = [
+    layer_counters!("in_proj"),
+    layer_counters!("qkv"),
+    layer_counters!("attn_out"),
+    layer_counters!("ff1"),
+    layer_counters!("ff2"),
+    layer_counters!("cross_kv"),
+    layer_counters!("dec_attn"),
+    layer_counters!("dec_ff"),
+    layer_counters!("head"),
+];
+
+/// Energy one GEMM's schedule costs at the default [`EnergyModel`], in
+/// picojoules: MACs at the array's per-MAC energy for this (tile,
+/// quant) configuration plus bus words at the per-word bus energy.
+pub fn energy_pj(stats: &TileStats, tile: usize, quant: Quant) -> f64 {
+    let em = EnergyModel::default();
+    let cfg = ArrayConfig::square(tile, quant);
+    stats.timing.macs as f64 * em.mac_energy_j(&cfg) * 1e12
+        + stats.timing.total_words() as f64 * em.bus_word_j * 1e12
+}
+
+/// Attribute one executed GEMM to `layer`: charge its MACs, array
+/// cycles, bus words, energy, and occupancy breakdown to the labeled
+/// counters, and sample the `array_utilization` counter track. `tile`
+/// and `quant` are the configuration the GEMM ran at (they set the
+/// per-MAC energy). A single branch when no session is recording.
+#[inline]
+pub fn record(layer: Layer, stats: &TileStats, tile: usize, quant: Quant) {
+    if !telemetry::active() {
+        return;
+    }
+    let c = &COUNTERS[layer as usize];
+    let t = &stats.timing;
+    c.macs.get().add(t.macs as u64);
+    c.array_cycles.get().add(t.array_cycles as u64);
+    c.bus_words.get().add(t.total_words() as u64);
+    c.energy_pj.get().add(energy_pj(stats, tile, quant).round() as u64);
+    c.active.get().add(t.occ.active_pe_cycles as u64);
+    c.bubble.get().add(t.occ.bubble_pe_cycles as u64);
+    c.stall.get().add(t.occ.stall_pe_cycles as u64);
+    c.skipped.get().add(t.occ.skipped_pe_cycles as u64);
+    telemetry::counter(
+        "array_utilization",
+        vec![
+            ("active", t.occ.active_pe_cycles.into()),
+            ("bubble", t.occ.bubble_pe_cycles.into()),
+            ("stall", t.occ.stall_pe_cycles.into()),
+            ("skipped", t.occ.skipped_pe_cycles.into()),
+            ("layer", layer.label().into()),
+        ],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::TileTiming;
+    use crate::telemetry::Telemetry;
+
+    fn stats_of(tile: usize, quant: Quant, m: usize) -> TileStats {
+        let cfg = ArrayConfig::square(tile, quant);
+        let mut s = TileStats::default();
+        s.tiles_live = 1;
+        s.timing.add(&TileTiming::live(&cfg, m));
+        s.tiles_skipped = 1;
+        s.timing.add(&TileTiming::skipped_pass(&cfg, m, 1));
+        s
+    }
+
+    #[test]
+    fn record_accumulates_labeled_counters_and_samples_track() {
+        let (tile, quant, m) = (8usize, Quant::Int8, 24usize);
+        let s = stats_of(tile, quant, m);
+        let session = Telemetry::start();
+        record(Layer::Ff1, &s, tile, quant);
+        record(Layer::Ff1, &s, tile, quant);
+        record(Layer::Qkv, &s, tile, quant);
+        let trace = session.finish();
+
+        let c = &trace.metrics.counters;
+        let t = &s.timing;
+        assert_eq!(c[&Layer::Ff1.metric("sasp_layer_macs_total")], 2 * t.macs as u64);
+        assert_eq!(
+            c[&Layer::Ff1.metric("sasp_layer_bus_words_total")],
+            2 * t.total_words() as u64
+        );
+        assert_eq!(
+            c[&Layer::Ff1.metric("sasp_layer_active_pe_cycles_total")],
+            2 * t.occ.active_pe_cycles as u64
+        );
+        assert_eq!(
+            c[&Layer::Ff1.metric("sasp_layer_skipped_pe_cycles_total")],
+            2 * t.occ.skipped_pe_cycles as u64
+        );
+        assert_eq!(c[&Layer::Qkv.metric("sasp_layer_macs_total")], t.macs as u64);
+        let pj = c[&Layer::Qkv.metric("sasp_layer_energy_pj_total")];
+        assert_eq!(pj, energy_pj(&s, tile, quant).round() as u64);
+        assert!(pj > 0, "a live pass costs energy");
+        // One counter-track sample per record call.
+        assert_eq!(trace.named("array_utilization").count(), 3);
+    }
+
+    #[test]
+    fn record_is_inert_without_a_session() {
+        let s = stats_of(8, Quant::Fp32, 8);
+        record(Layer::Head, &s, 8, Quant::Fp32);
+        // A later session starts from zero — the gated call charged
+        // nothing.
+        let session = Telemetry::start();
+        let trace = session.finish();
+        assert_eq!(
+            trace
+                .metrics
+                .counters
+                .get(&Layer::Head.metric("sasp_layer_macs_total"))
+                .copied()
+                .unwrap_or(0),
+            0
+        );
+        assert_eq!(trace.named("array_utilization").count(), 0);
+    }
+
+    #[test]
+    fn labels_are_unique_and_stable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for l in ALL {
+            assert!(seen.insert(l.label()), "duplicate label {:?}", l.label());
+        }
+        assert_eq!(
+            Layer::Ff1.metric("sasp_layer_macs_total"),
+            "sasp_layer_macs_total{layer=\"ff1\"}"
+        );
+    }
+}

@@ -39,6 +39,11 @@
 //!   serves as both a [`crate::coordinator::serve::ServeBackend`] and a
 //!   [`crate::qos::QosBackend`], making `qos/eval`, `coordinator/serve`,
 //!   and the `asr_pipeline`/`serve` examples fully offline.
+//! - [`layers`] — per-layer GEMM attribution: every call site in
+//!   [`encoder`]/[`batch`]/[`decoder`] is labeled ([`Layer`]) and its
+//!   MACs, array cycles, bus words, energy, and PE-occupancy breakdown
+//!   accumulate into the [`crate::telemetry::metrics`] registry, with
+//!   an `array_utilization` Chrome counter track sampled per GEMM.
 //! - [`synth`] — deterministic synthetic weights + a self-labeled test
 //!   set (references = the dense FP32 model's own greedy decode), so QoS
 //!   degradation curves are measurable without trained artifacts.
@@ -48,6 +53,7 @@ pub mod batch;
 pub mod decoder;
 pub mod encoder;
 pub mod gemm;
+pub mod layers;
 pub mod ops;
 pub mod synth;
 
@@ -56,6 +62,7 @@ pub use batch::BatchForward;
 pub use decoder::{DecodeStats, DecoderDims, DecoderForward, DecoderWeights, PreparedDecoder};
 pub use encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
 pub use gemm::{Linear, QuantizedLinear, TileStats};
+pub use layers::Layer;
 pub use synth::{synth_decoder_weights, synth_mt_testset, synth_testset, synth_weights};
 
 /// Shared fixtures for this module's test suites.

@@ -3,7 +3,7 @@
 //! ```text
 //! sasp report <id>        regenerate a paper table/figure
 //!        ids: table1 table2 table3 fig6 fig7 fig8 fig9 fig10 fig11
-//!             mt headline serve overload trace all
+//!             mt headline serve overload trace util all
 //!        (serve measures the serving runtime's latency/throughput
 //!         frontier — fixed vs dynamic batching, 1/2/4 worker threads —
 //!         offline on the native backend; overload measures goodput
@@ -11,7 +11,11 @@
 //!         ladder; trace replays a serve run under a recording
 //!         telemetry session and writes a Perfetto-loadable Chrome
 //!         trace (default trace.json, override with --out) plus the
-//!         metrics snapshot; all three wall-clock, so not in `all`)
+//!         metrics snapshot; util records a batched encode run and
+//!         reports per-layer PE utilization, cycle/energy attribution,
+//!         roofline classification, and the utilization x pruning x
+//!         array-shape frontier, cross-checked against the analytic
+//!         engine; these are wall-clock, so not in `all`)
 //! sasp sweep              full design-space sweep (timing only)
 //! sasp qos <tile> <rate> <fp32|int8>
 //!                         evaluate one QoS point (PJRT when artifacts
@@ -148,6 +152,15 @@ fn cmd_report(cli: &Cli) -> Result<()> {
             let trace_out = cli.out.clone().unwrap_or_else(|| "trace.json".to_string());
             let report = harness::trace_report(
                 Some(std::path::Path::new(&trace_out)),
+                cli.metrics_out.as_deref().map(std::path::Path::new),
+            )?;
+            return Ok(print!("{}", report.render()));
+        }
+        "util" => {
+            // `util` runs its own telemetry session (the report *is*
+            // the scraped snapshot) and cross-checks the recorded
+            // attribution against the analytic engine.
+            let report = harness::util_report(
                 cli.metrics_out.as_deref().map(std::path::Path::new),
             )?;
             return Ok(print!("{}", report.render()));

@@ -21,7 +21,7 @@
 
 use crate::hwmodel::SysCounts;
 use crate::model::{GemmKind, GemmShape};
-use crate::systolic::{ArrayConfig, Quant, TileTiming};
+use crate::systolic::{ArrayConfig, Occupancy, Quant, TileTiming};
 
 use super::params::SimParams;
 
@@ -62,12 +62,16 @@ pub struct GemmCost {
     /// streaming, so this is the wall-clock contribution.
     pub cycles: f64,
     pub counts: SysCounts,
+    /// PE-cycle occupancy breakdown over the array's execution, identical
+    /// to the per-tile [`TileTiming`] charges of the functional kernels.
+    pub occ: Occupancy,
 }
 
 impl GemmCost {
     pub fn add(&mut self, o: &GemmCost) {
         self.cycles += o.cycles;
         self.counts.add(&o.counts);
+        self.occ.add(&o.occ);
     }
 }
 
@@ -156,6 +160,17 @@ pub fn gemm_on_array_batched(
     let stream_words = live * (per_tile.in_words + per_tile.out_words);
     let cycles = issue + stalls;
 
+    // Occupancy: live tiles contribute their batched per-tile breakdown;
+    // each pruned tile records the `batch * m * t * t` PE-cycles of work
+    // it avoided (== [`TileTiming::skipped_pass`]).
+    let dead = n_tiles - live;
+    let occ = Occupancy {
+        active_pe_cycles: live * per_tile.occ.active_pe_cycles,
+        bubble_pe_cycles: live * per_tile.occ.bubble_pe_cycles,
+        stall_pe_cycles: live * per_tile.occ.stall_pe_cycles,
+        skipped_pe_cycles: dead * batch * g.m * t * t,
+    };
+
     let counts = SysCounts {
         core_cycles: cycles as u64,
         array_busy_cycles: (live * per_tile.array_cycles) as u64,
@@ -167,7 +182,7 @@ pub fn gemm_on_array_batched(
         l2_hits: (in_lines + out_lines) as u64 + weight_lines as u64,
         dram_accesses: weight_lines as u64,
     };
-    GemmCost { cycles, counts }
+    GemmCost { cycles, counts, occ }
 }
 
 /// Autoregressive decode-step scheduling: the same weight GEMM executed
@@ -214,7 +229,8 @@ pub fn gemm_on_cpu(g: &GemmShape, p: &SimParams) -> GemmCost {
         l2_hits: weight_lines as u64,
         dram_accesses: weight_lines as u64,
     };
-    GemmCost { cycles, counts }
+    // No array involved: zero occupancy on every axis.
+    GemmCost { cycles, counts, occ: Occupancy::default() }
 }
 
 /// Non-GEMM software ops over `elems` elements (LayerNorm, softmax,
@@ -229,6 +245,7 @@ pub fn non_gemm_cost(elems: u64, p: &SimParams) -> GemmCost {
             l1d_hits: elems,
             ..Default::default()
         },
+        occ: Occupancy::default(),
     }
 }
 
@@ -273,6 +290,39 @@ mod tests {
             let batched = gemm_on_array_batched(&g, &c, &p, Some(&mask), 1);
             assert_eq!(single.cycles, batched.cycles, "{quant:?}");
             assert_eq!(single.counts, batched.counts, "{quant:?}");
+            assert_eq!(single.occ, batched.occ, "{quant:?}");
+        }
+    }
+
+    #[test]
+    fn occupancy_conserves_array_cycles_and_skips() {
+        // active + bubble must exactly tile the array-busy time across all
+        // PEs, and skipped must equal the MAC-work of pruned tiles.
+        let g = ff(96, 64, 256);
+        let p = SimParams::default();
+        let b = 3usize;
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let c = cfg(8, quant);
+            let mut mask = TileMask::full(8, 32);
+            for (i, l) in mask.live.iter_mut().enumerate() {
+                *l = i % 3 != 0;
+            }
+            let dead = mask.n_tiles() - mask.live_count();
+            let cost = gemm_on_array_batched(&g, &c, &p, Some(&mask), b);
+            let occ = cost.occ;
+            assert_eq!(
+                (occ.active_pe_cycles + occ.bubble_pe_cycles) as u64,
+                cost.counts.array_busy_cycles * c.n_pes() as u64,
+                "{quant:?}: active+bubble must tile array-busy time"
+            );
+            // One PE-cycle per MAC in the weight-stationary dataflow.
+            assert_eq!(occ.active_pe_cycles as u64, cost.counts.macs, "{quant:?}");
+            assert_eq!(
+                occ.skipped_pe_cycles,
+                dead * b * g.m * 64,
+                "{quant:?}: skipped == avoided MAC-work of pruned tiles"
+            );
+            assert!(occ.utilization() > 0.0 && occ.utilization() < 1.0);
         }
     }
 

@@ -56,6 +56,10 @@ pub struct SystolicArray {
     pub last_compute_cycles: usize,
     /// 32-bit bus words consumed by the last `program_weights` call.
     pub last_program_words: usize,
+    /// PE-cycles spent inside the active anti-diagonal band during the
+    /// last `compute` call — the simulated ground truth for the
+    /// closed-form [`super::Occupancy`] active count.
+    pub last_active_pe_cycles: usize,
 }
 
 impl SystolicArray {
@@ -75,6 +79,7 @@ impl SystolicArray {
             psum_nxt: vec![0.0; n],
             last_compute_cycles: 0,
             last_program_words: 0,
+            last_active_pe_cycles: 0,
         }
     }
 
@@ -137,7 +142,7 @@ impl SystolicArray {
         }
 
         let scale = self.scale;
-        match self.cfg.quant {
+        let active = match self.cfg.quant {
             Quant::Fp32 => {
                 let w = &self.w_fp32;
                 wavefront(
@@ -153,7 +158,7 @@ impl SystolicArray {
                     out,
                     |x_in, i| ftz_mul(x_in, w[i]),
                     |v| v,
-                );
+                )
             }
             Quant::Int8 => {
                 let w = &self.w_int8;
@@ -170,21 +175,24 @@ impl SystolicArray {
                     out,
                     |x_in, i| hybrid_mul(x_in, w[i]),
                     |v| v * scale,
-                );
+                )
             }
-        }
+        };
 
         self.x_cur = x_cur;
         self.x_nxt = x_nxt;
         self.psum_cur = psum_cur;
         self.psum_nxt = psum_nxt;
         self.last_compute_cycles = total_cycles;
+        self.last_active_pe_cycles = active;
     }
 }
 
 /// The shared cycle loop, monomorphized per weight format. `mul` is the
 /// PE multiplier `(x_in, pe_index) -> product`; `dequant` is the output
-/// readout transform (identity for FP32, `* scale` for INT8).
+/// readout transform (identity for FP32, `* scale` for INT8). Returns
+/// the number of PE-cycles spent inside the active band — the simulated
+/// occupancy the closed-form model is cross-checked against.
 #[allow(clippy::too_many_arguments)]
 fn wavefront(
     x: &[f32],
@@ -199,7 +207,8 @@ fn wavefront(
     out: &mut [f32],
     mul: impl Fn(f32, usize) -> f32,
     dequant: impl Fn(f32) -> f32,
-) {
+) -> usize {
+    let mut active_pe_cycles = 0usize;
     for t in 0..total_cycles {
         // Active anti-diagonal band: lo <= r+c <= hi.
         let lo = (t + 1).saturating_sub(m);
@@ -210,6 +219,7 @@ fn wavefront(
         for r in r_first..r_last {
             let c_first = lo.saturating_sub(r);
             let c_last = cols.min(hi + 1 - r); // exclusive; r <= hi here
+            active_pe_cycles += c_last.saturating_sub(c_first);
             let base = r * cols;
             for c in c_first..c_last {
                 let i = base + c;
@@ -238,6 +248,7 @@ fn wavefront(
         std::mem::swap(x_cur, x_nxt);
         std::mem::swap(psum_cur, psum_nxt);
     }
+    active_pe_cycles
 }
 
 #[cfg(test)]
@@ -471,6 +482,37 @@ mod tests {
             fresh.program_weights(&w, 1.0);
             assert_eq!(got, fresh.compute(&x, 3));
         }
+    }
+
+    #[test]
+    fn active_pe_cycles_count_band_membership() {
+        // The wavefront's running count must equal the brute-force
+        // census: PE (r,c) is active at cycle t iff t-m+1 <= r+c <= t,
+        // i.e. exactly m cycles per PE — m*rows*cols in total.
+        check("active PE count == band census", 24, |rng: &mut Rng| {
+            let (m, r, c) = (rng.index(9) + 1, rng.index(6) + 1, rng.index(6) + 1);
+            let cfg = ArrayConfig { rows: r, cols: c, quant: Quant::Fp32 };
+            let mut arr = SystolicArray::new(cfg);
+            arr.program_weights(&vec![1.0; r * c], 1.0);
+            let _ = arr.compute(&vec![1.0; m * r], m);
+            let mut census = 0usize;
+            for t in 0..m + r + c - 2 {
+                for rr in 0..r {
+                    for cc in 0..c {
+                        let d = rr + cc;
+                        if d <= t && t < d + m {
+                            census += 1;
+                        }
+                    }
+                }
+            }
+            let ok = arr.last_active_pe_cycles == census
+                && census == m * r * c;
+            (ok, format!(
+                "m={m} r={r} c={c} sim={} census={census}",
+                arr.last_active_pe_cycles
+            ))
+        });
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod timing;
 pub use array::SystolicArray;
 pub use pe::{Pe, PeWeight};
 pub use scheduler::{ScheduleStats, TileScheduler};
-pub use timing::TileTiming;
+pub use timing::{Occupancy, TileTiming};
 
 /// Weight data format of the array instance (paper: FP32_FP32 vs
 /// FP32_INT8; activations are always FP32).

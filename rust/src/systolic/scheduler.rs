@@ -37,6 +37,10 @@ pub struct ScheduleStats {
     pub array_cycles: usize,
     /// 32-bit bus words spent programming weights.
     pub program_words: usize,
+    /// Active-PE-cycles summed over live tiles, as counted by the
+    /// per-cycle wavefront simulation — the ground truth for
+    /// `timing.occ.active_pe_cycles`.
+    pub sim_active_pe_cycles: usize,
     /// Closed-form cost of the same schedule (must agree with the
     /// per-cycle counts — asserted in tests, used by callers to
     /// cross-check the analytic layer).
@@ -118,6 +122,7 @@ impl TileScheduler {
                 if let Some(ms) = mask {
                     if !ms.is_live(i, j) {
                         stats.tiles_skipped += 1;
+                        stats.timing.add(&TileTiming::skipped_pass(&cfg, m, 1));
                         continue;
                     }
                 }
@@ -144,6 +149,7 @@ impl TileScheduler {
 
                 self.array.compute_into(&self.xt, m, &mut self.yt);
                 stats.array_cycles += self.array.last_compute_cycles;
+                stats.sim_active_pe_cycles += self.array.last_active_pe_cycles;
 
                 // Accumulate the partial outputs (PE-adder semantics).
                 for mm in 0..m {
@@ -306,6 +312,40 @@ mod tests {
             assert_eq!(stats.timing.macs, live * per_tile.macs, "{quant:?}");
             assert_eq!(stats.timing.array_cycles, stats.array_cycles, "{quant:?}");
         }
+    }
+
+    #[test]
+    fn occupancy_matches_wavefront_on_random_masks() {
+        // The tentpole cross-check at GEMM scope: the closed-form
+        // occupancy split must agree exactly with the per-cycle
+        // wavefront simulation on random shapes x masks x array sizes,
+        // and the skipped savings must be exactly the dead tiles'
+        // steady-state work.
+        check("analytic occupancy == wavefront", 24, |rng: &mut Rng| {
+            let t = [2usize, 3, 4, 8][rng.index(4)];
+            let m = rng.index(12) + 1;
+            let k = rng.index(3 * t) + 1;
+            let n = rng.index(3 * t) + 1;
+            let quant = if rng.chance(0.5) { Quant::Fp32 } else { Quant::Int8 };
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let mask = random_mask(rng, k.div_ceil(t), n.div_ceil(t), 0.4);
+            let cfg = ArrayConfig::square(t, quant);
+            let mut sched = TileScheduler::new(cfg);
+            let (_, stats) = sched.gemm(&x, &w, m, k, n, Some(&mask), 0.05);
+            let occ = stats.timing.occ;
+            let dead = mask.n_tiles() - mask.live_count();
+            let n_pes = cfg.n_pes();
+            let ok = occ.active_pe_cycles == stats.sim_active_pe_cycles
+                && occ.active_pe_cycles + occ.bubble_pe_cycles
+                    == stats.array_cycles * n_pes
+                && occ.stall_pe_cycles == stats.program_words * n_pes
+                && occ.skipped_pe_cycles == dead * m * n_pes;
+            (ok, format!(
+                "t={t} m={m} k={k} n={n} {quant:?} sim={} occ={occ:?}",
+                stats.sim_active_pe_cycles
+            ))
+        });
     }
 
     #[test]

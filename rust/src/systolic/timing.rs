@@ -18,6 +18,60 @@
 
 use super::ArrayConfig;
 
+/// Active-PE-cycle occupancy of a tile pass: where the `R*C` PEs spend
+/// (or save) their cycles while the closed-form schedule runs.
+///
+/// - **active**: PE-cycles doing steady-state MAC work. Each input
+///   element visits each PE of its row exactly once, so a live pass is
+///   `M*R*C` — one PE-cycle per MAC (validated against the wavefront
+///   simulation, which counts the PEs inside the active anti-diagonal
+///   band cycle by cycle).
+/// - **bubble**: fill/drain PE-cycles — the array is busy
+///   (`M + R + C - 2` cycles, all `R*C` PEs powered) but the wavefront
+///   hasn't reached / has already left a PE: `(R + C - 2) * R * C`.
+/// - **stall**: PE-cycles idled while the tile's weights reprogram over
+///   the bus (`prog_words * R * C` at one word per cycle).
+/// - **skipped**: the steady-state PE-cycles a pruned tile *would* have
+///   cost — the SASP saving, counted so utilization reports can show
+///   where the skipped work landed.
+///
+/// Invariant: `active + bubble == array_cycles * R * C` for any pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Occupancy {
+    /// PE-cycles of steady-state MAC work.
+    pub active_pe_cycles: usize,
+    /// Fill/drain PE-cycles (busy but no useful work at that PE).
+    pub bubble_pe_cycles: usize,
+    /// PE-cycles idled behind weight reprogramming.
+    pub stall_pe_cycles: usize,
+    /// PE-cycles of work avoided by pruning-skipped tiles.
+    pub skipped_pe_cycles: usize,
+}
+
+impl Occupancy {
+    /// Accumulate another pass's occupancy.
+    pub fn add(&mut self, o: &Occupancy) {
+        self.active_pe_cycles += o.active_pe_cycles;
+        self.bubble_pe_cycles += o.bubble_pe_cycles;
+        self.stall_pe_cycles += o.stall_pe_cycles;
+        self.skipped_pe_cycles += o.skipped_pe_cycles;
+    }
+
+    /// PE-cycles the array is powered while busy (active + bubbles).
+    pub fn busy_pe_cycles(&self) -> usize {
+        self.active_pe_cycles + self.bubble_pe_cycles
+    }
+
+    /// Fraction of busy PE-cycles doing useful work (0 when never busy).
+    pub fn utilization(&self) -> f64 {
+        let busy = self.busy_pe_cycles();
+        if busy == 0 {
+            return 0.0;
+        }
+        self.active_pe_cycles as f64 / busy as f64
+    }
+}
+
 /// Cost of one tile pass.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TileTiming {
@@ -33,19 +87,28 @@ pub struct TileTiming {
     pub array_cycles: usize,
     /// MAC operations performed.
     pub macs: usize,
+    /// Where the PE-cycles of this pass went (or were saved).
+    pub occ: Occupancy,
 }
 
 impl TileTiming {
     /// Cost of programming + computing one live tile.
     pub fn live(cfg: &ArrayConfig, m: usize) -> TileTiming {
         let (r, c) = (cfg.rows, cfg.cols);
+        let prog_words = (r * c).div_ceil(cfg.quant.weights_per_word());
         TileTiming {
-            prog_words: (r * c).div_ceil(cfg.quant.weights_per_word()),
+            prog_words,
             in_words: m * r,
             out_words: m * c,
             stream_insts: m * r.max(c),
             array_cycles: m + r + c - 2,
             macs: m * r * c,
+            occ: Occupancy {
+                active_pe_cycles: m * r * c,
+                bubble_pe_cycles: (r + c - 2) * r * c,
+                stall_pe_cycles: prog_words * r * c,
+                skipped_pe_cycles: 0,
+            },
         }
     }
 
@@ -55,11 +118,28 @@ impl TileTiming {
         TileTiming::default()
     }
 
+    /// Occupancy-only record of a pruned tile pass: the steady-state
+    /// PE-cycles the skip avoided (`batch * m * R * C` — what
+    /// [`Self::live`]/[`Self::batched`] would have charged as active
+    /// work). Every cost field stays zero: a skipped tile moves no
+    /// words and holds the array for no cycles; this only makes the
+    /// saving visible to utilization reports.
+    pub fn skipped_pass(cfg: &ArrayConfig, m: usize, batch: usize) -> TileTiming {
+        TileTiming {
+            occ: Occupancy {
+                skipped_pe_cycles: batch * m * cfg.rows * cfg.cols,
+                ..Occupancy::default()
+            },
+            ..TileTiming::default()
+        }
+    }
+
     /// Reuse of an already-programmed tile for another input block (the
     /// weight-stationary win when M is split across batches).
     pub fn reuse(cfg: &ArrayConfig, m: usize) -> TileTiming {
         let mut t = TileTiming::live(cfg, m);
         t.prog_words = 0;
+        t.occ.stall_pe_cycles = 0;
         t
     }
 
@@ -79,6 +159,14 @@ impl TileTiming {
             stream_insts: batch * live.stream_insts,
             array_cycles: batch * live.array_cycles,
             macs: batch * live.macs,
+            occ: Occupancy {
+                // Streaming repeats per block; the reprogramming stall
+                // is paid once, like the programming itself.
+                active_pe_cycles: batch * live.occ.active_pe_cycles,
+                bubble_pe_cycles: batch * live.occ.bubble_pe_cycles,
+                stall_pe_cycles: live.occ.stall_pe_cycles,
+                skipped_pe_cycles: 0,
+            },
         }
     }
 
@@ -90,6 +178,7 @@ impl TileTiming {
         self.stream_insts += other.stream_insts;
         self.array_cycles += other.array_cycles;
         self.macs += other.macs;
+        self.occ.add(&other.occ);
     }
 
     /// Total 32-bit bus words moved (weights + activations).
@@ -195,6 +284,61 @@ mod tests {
              format!("m={m} r={r} c={c} sim={} form={}",
                      arr.last_compute_cycles, t.array_cycles))
         });
+    }
+
+    #[test]
+    fn analytic_occupancy_matches_wavefront_active_pe_cycles() {
+        // The occupancy==wavefront cross-check at single-tile scope: the
+        // closed-form active/bubble split must equal the per-cycle
+        // simulation's count of PEs inside the active anti-diagonal
+        // band, exactly, on random shapes x array sizes x quant modes.
+        check("occupancy == wavefront active PEs", 48, |rng| {
+            let r = rng.index(7) + 1;
+            let c = rng.index(7) + 1;
+            let m = rng.index(10) + 1;
+            let quant = if rng.chance(0.5) { Quant::Fp32 } else { Quant::Int8 };
+            let cfg = ArrayConfig { rows: r, cols: c, quant };
+            let mut arr = SystolicArray::new(cfg);
+            arr.program_weights(&vec![1.0; r * c], 1.0);
+            let _ = arr.compute(&vec![1.0; m * r], m);
+            let t = TileTiming::live(&cfg, m);
+            let n_pes = r * c;
+            let ok = arr.last_active_pe_cycles == t.occ.active_pe_cycles
+                && t.occ.active_pe_cycles + t.occ.bubble_pe_cycles
+                    == t.array_cycles * n_pes
+                && t.occ.stall_pe_cycles == t.prog_words * n_pes
+                && t.occ.skipped_pe_cycles == 0;
+            (ok, format!(
+                "m={m} r={r} c={c} {quant:?} sim_active={} analytic={:?}",
+                arr.last_active_pe_cycles, t.occ
+            ))
+        });
+    }
+
+    #[test]
+    fn occupancy_constructors_are_consistent() {
+        let cfg = ArrayConfig::square(8, Quant::Int8);
+        let m = 24;
+        let live = TileTiming::live(&cfg, m);
+        assert_eq!(live.occ.active_pe_cycles, m * 64);
+        assert_eq!(live.occ.bubble_pe_cycles, 14 * 64);
+        assert_eq!(live.occ.stall_pe_cycles, live.prog_words * 64);
+        // Reuse drops the reprogramming stall along with the words.
+        let reuse = TileTiming::reuse(&cfg, m);
+        assert_eq!(reuse.occ.stall_pe_cycles, 0);
+        assert_eq!(reuse.occ.active_pe_cycles, live.occ.active_pe_cycles);
+        // A skipped pass saves exactly the steady-state work and costs
+        // nothing else.
+        let skip = TileTiming::skipped_pass(&cfg, m, 3);
+        assert_eq!(skip.occ.skipped_pe_cycles, 3 * m * 64);
+        assert_eq!(skip.total_words(), 0);
+        assert_eq!(skip.array_cycles, 0);
+        assert_eq!(skip.macs, 0);
+        // Utilization of the busy window: active / (active + bubble).
+        let u = live.occ.utilization();
+        assert!((u - m as f64 / (m + 14) as f64).abs() < 1e-12);
+        assert_eq!(Occupancy::default().utilization(), 0.0);
+        assert_eq!(live.occ.busy_pe_cycles(), live.array_cycles * 64);
     }
 
     #[test]

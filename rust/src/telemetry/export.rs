@@ -32,6 +32,7 @@ pub fn write_chrome_trace<W: Write>(events: &[SpanEvent], w: W) -> io::Result<W>
         jw.str_val(match ev.kind {
             EventKind::Span => "X",
             EventKind::Instant => "i",
+            EventKind::Counter => "C",
         })?;
         jw.key("ts")?;
         jw.u64_val(ev.start_us)?;
@@ -45,6 +46,8 @@ pub fn write_chrome_trace<W: Write>(events: &[SpanEvent], w: W) -> io::Result<W>
                 jw.key("s")?;
                 jw.str_val("t")?;
             }
+            // Counter samples carry only ts + args (the series values).
+            EventKind::Counter => {}
         }
         jw.key("pid")?;
         jw.u64_val(1)?;
@@ -120,5 +123,31 @@ mod tests {
         assert_eq!(inst.get("s").as_str(), Some("t"));
         assert_eq!(inst.get("args").get("parent_id").as_i64(), Some(7));
         assert_eq!(inst.get("dur"), &Json::Null, "instants carry no duration");
+    }
+
+    #[test]
+    fn counter_events_export_as_c_phase_tracks() {
+        let events = vec![SpanEvent {
+            name: "array_utilization",
+            kind: EventKind::Counter,
+            id: 0,
+            parent: 0,
+            tid: 2,
+            start_us: 42,
+            dur_us: 0,
+            attrs: vec![
+                ("active", AttrVal::U(640)),
+                ("bubble", AttrVal::U(96)),
+            ],
+        }];
+        let bytes = write_chrome_trace(&events, Vec::new()).unwrap();
+        let v = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        let c = &v.get("traceEvents").as_arr().unwrap()[0];
+        assert_eq!(c.get("ph").as_str(), Some("C"));
+        assert_eq!(c.get("ts").as_i64(), Some(42));
+        assert_eq!(c.get("args").get("active").as_i64(), Some(640));
+        assert_eq!(c.get("args").get("bubble").as_i64(), Some(96));
+        assert_eq!(c.get("dur"), &Json::Null, "counters carry no duration");
+        assert_eq!(c.get("s"), &Json::Null, "counters carry no instant scope");
     }
 }

@@ -400,18 +400,39 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// Prometheus text exposition. Histogram buckets are emitted
+    /// Prometheus text exposition, deterministic and family-grouped:
+    /// series are emitted in sorted full-name order (the `BTreeMap`
+    /// sorts name + label set together), and each **family** (the name
+    /// up to the first `{`) gets exactly one `# TYPE` line with all of
+    /// its labeled series beneath — labeled families like
+    /// `sasp_layer_macs_total{layer="..."}` render as one valid block,
+    /// not one TYPE line per series. Histogram buckets are emitted
     /// sparsely (only buckets that hold samples) with cumulative
     /// counts and inclusive upper bounds as `le` labels, plus the
     /// conventional `+Inf`/`_sum`/`_count` series.
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write;
-        let mut out = String::new();
-        for (name, v) in &self.counters {
-            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+        fn family(name: &str) -> &str {
+            name.split('{').next().unwrap_or(name)
         }
+        let mut out = String::new();
+        let mut last_family = "";
+        for (name, v) in &self.counters {
+            let fam = family(name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} counter");
+                last_family = fam;
+            }
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let mut last_family = "";
         for (name, v) in &self.gauges {
-            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+            let fam = family(name);
+            if fam != last_family {
+                let _ = writeln!(out, "# TYPE {fam} gauge");
+                last_family = fam;
+            }
+            let _ = writeln!(out, "{name} {v}");
         }
         for (name, h) in &self.histograms {
             let _ = writeln!(out, "# TYPE {name} histogram");
@@ -623,5 +644,50 @@ mod tests {
         let hist = parsed.get("histograms").get("t_latency_us");
         assert_eq!(hist.get("count").as_i64(), Some(2));
         assert_eq!(hist.get("buckets").as_arr().map(|b| b.len()), Some(2));
+    }
+
+    #[test]
+    fn exposition_groups_labeled_series_under_one_type_line_in_sorted_order() {
+        // Labeled series of one family must share a single `# TYPE`
+        // line (one TYPE per series is invalid exposition), and both
+        // families and label sets come out in sorted, pinned order —
+        // registration order is deliberately scrambled.
+        let r = Registry::default();
+        r.counter("z_last_total").inc();
+        r.counter("t_layer_macs_total{layer=\"qkv\"}").add(2);
+        r.counter("t_layer_macs_total{layer=\"ff1\"}").add(1);
+        r.counter("a_first_total").add(7);
+        r.gauge("t_depth{shard=\"1\"}").set(4);
+        r.gauge("t_depth{shard=\"0\"}").set(3);
+        let text = r.snapshot().render_prometheus();
+
+        let counter_lines: Vec<&str> = text
+            .lines()
+            .take_while(|l| !l.contains("gauge"))
+            .collect();
+        assert_eq!(
+            counter_lines,
+            vec![
+                "# TYPE a_first_total counter",
+                "a_first_total 7",
+                "# TYPE t_layer_macs_total counter",
+                "t_layer_macs_total{layer=\"ff1\"} 1",
+                "t_layer_macs_total{layer=\"qkv\"} 2",
+                "# TYPE z_last_total counter",
+                "z_last_total 1",
+            ],
+            "family-grouped, name-and-label sorted:\n{text}"
+        );
+        assert_eq!(
+            text.matches("# TYPE t_layer_macs_total counter").count(),
+            1,
+            "one TYPE line per family:\n{text}"
+        );
+        let gauge_block = &text[text.find("# TYPE t_depth gauge").unwrap()..];
+        assert!(gauge_block.starts_with(
+            "# TYPE t_depth gauge\nt_depth{shard=\"0\"} 3\nt_depth{shard=\"1\"} 4\n"
+        ));
+        // Determinism: a second scrape renders byte-identically.
+        assert_eq!(text, r.snapshot().render_prometheus());
     }
 }

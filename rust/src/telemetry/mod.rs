@@ -41,7 +41,7 @@ pub use metrics::{
     Counter, Gauge, Histogram, HistogramSnapshot, LazyCounter, LazyGauge, LazyHistogram,
     MetricsSnapshot,
 };
-pub use spans::{active, current_span, instant, AttrVal, EventKind, Span, SpanEvent};
+pub use spans::{active, counter, current_span, instant, AttrVal, EventKind, Span, SpanEvent};
 
 /// Sessions are process-exclusive: concurrent `start()`s (parallel
 /// tests, nested reports) serialize here instead of stealing each

@@ -112,11 +112,14 @@ impl From<String> for AttrVal {
     }
 }
 
-/// Interval vs point event.
+/// Interval vs point vs counter-sample event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
     Span,
     Instant,
+    /// A sampled counter track (Chrome `ph: "C"`): each attribute is one
+    /// series of the track, plotted over time by Perfetto.
+    Counter,
 }
 
 /// One recorded event, as drained by
@@ -191,6 +194,26 @@ pub fn instant(name: &'static str, attrs: Vec<(&'static str, AttrVal)>) {
         kind: EventKind::Instant,
         id: 0,
         parent: current_span(),
+        tid: tid(),
+        start_us: now_us(),
+        dur_us: 0,
+        attrs,
+    });
+}
+
+/// Record one sample on a named counter track. Each attribute becomes a
+/// series of the track; Perfetto renders the samples as a stacked graph
+/// over the trace timeline. Costs one branch when telemetry is off.
+#[inline]
+pub fn counter(name: &'static str, attrs: Vec<(&'static str, AttrVal)>) {
+    if !active() {
+        return;
+    }
+    record(SpanEvent {
+        name,
+        kind: EventKind::Counter,
+        id: 0,
+        parent: 0,
         tid: tid(),
         start_us: now_us(),
         dur_us: 0,

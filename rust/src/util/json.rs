@@ -632,6 +632,57 @@ mod tests {
     }
 
     #[test]
+    fn string_escaping_covers_quotes_backslashes_controls_and_non_ascii() {
+        // Every string class the trace exporter can emit (span names,
+        // attribute values, file paths) must escape to valid JSON and
+        // round-trip through the crate's own parser unchanged.
+        let cases: &[(&str, &str)] = &[
+            ("quote\"inside", r#""quote\"inside""#),
+            (r"back\slash", r#""back\\slash""#),
+            ("C:\\path\\to\"file\"", r#""C:\\path\\to\"file\"""#),
+            ("line\nfeed", r#""line\nfeed""#),
+            ("tab\there", r#""tab\there""#),
+            ("cr\rhere", r#""cr\rhere""#),
+            ("nul\u{0}byte", r#""nul\u0000byte""#),
+            ("bell\u{7}esc\u{1b}", r#""bell\u0007esc\u001b""#),
+            // Non-ASCII passes through raw (UTF-8, not \u-escaped).
+            ("naïve — 日本語 🚀", "\"naïve — 日本語 🚀\""),
+            ("", r#""""#),
+        ];
+        for (raw, want) in cases {
+            // Via the streaming writer, as a value and as a key.
+            let mut w = JsonWriter::new(Vec::new());
+            w.begin_obj().unwrap();
+            w.key(raw).unwrap();
+            w.str_val(raw).unwrap();
+            w.end().unwrap();
+            let bytes = w.finish().unwrap();
+            let text = String::from_utf8(bytes).unwrap();
+            assert_eq!(text, format!("{{{want}:{want}}}"), "emission for {raw:?}");
+            let v = Json::parse(&text).unwrap();
+            assert_eq!(v.get(raw).as_str(), Some(*raw), "round-trip for {raw:?}");
+            // And via the buffered Display emitter — byte-identical.
+            assert_eq!(Json::str(*raw).to_string(), *want);
+        }
+    }
+
+    #[test]
+    fn every_control_char_round_trips() {
+        // All 32 C0 controls in one string: the writer must produce
+        // parseable JSON (short escapes where they exist, \u00xx
+        // otherwise) that parses back to the identical string.
+        let raw: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let mut w = JsonWriter::new(Vec::new());
+        w.str_val(&raw).unwrap();
+        let text = String::from_utf8(w.finish().unwrap()).unwrap();
+        assert!(
+            text.bytes().all(|b| (0x20..0x80).contains(&b)),
+            "controls must be escaped to printable ASCII: {text:?}"
+        );
+        assert_eq!(Json::parse(&text).unwrap(), Json::Str(raw));
+    }
+
+    #[test]
     fn json_writer_root_scalar_and_empty_containers() {
         let mut w = JsonWriter::new(Vec::new());
         w.begin_arr().unwrap();

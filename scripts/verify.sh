@@ -45,6 +45,16 @@
 # 7. the telemetry histogram shard-merge property test (merged
 #    multi-thread recording == single-thread recording), re-run by name
 #    for the same reason
+# 8. the occupancy cross-check property test (analytic per-tile
+#    occupancy accounting == wavefront-simulated active-PE census on
+#    random masks) and the utilization-report functional==analytic
+#    cross-check, re-run by name for the same reason
+# 9. a bench-regression gate against the committed BENCH_hotpath.json:
+#    when a baseline is present before the bench run, every case's fresh
+#    median must stay within BENCH_REGRESSION_TOLERANCE (default 1.5x —
+#    short budgets are noisy) of the committed median; with no committed
+#    baseline the gate skips gracefully and this run's report becomes
+#    the first baseline to commit
 #
 # Usage: scripts/verify.sh [--no-bench]
 
@@ -82,6 +92,11 @@ echo
 echo "== telemetry regression: histogram shard-merge property =="
 (cd rust && cargo test -q histogram_shard_merge_equals_single_thread)
 
+echo
+echo "== observability regressions: occupancy cross-checks =="
+(cd rust && cargo test -q occupancy_matches_wavefront_on_random_masks)
+(cd rust && cargo test -q util_report_cross_checks_and_renders)
+
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "verify OK (bench smoke skipped)"
     exit 0
@@ -92,6 +107,13 @@ echo "== perf smoke: benches/hotpath.rs (short budget) =="
 export BENCH_MEASURE_MS="${BENCH_MEASURE_MS:-150}"
 export BENCH_WARMUP_MS="${BENCH_WARMUP_MS:-30}"
 export BENCH_HOTPATH_JSON="$ROOT/BENCH_hotpath.json"
+# Snapshot the committed baseline (if any) before the fresh run
+# overwrites it — the regression gate below compares against it.
+BENCH_BASELINE=""
+if [[ -s "$BENCH_HOTPATH_JSON" ]]; then
+    BENCH_BASELINE="$(mktemp)"
+    cp "$BENCH_HOTPATH_JSON" "$BENCH_BASELINE"
+fi
 rm -f "$BENCH_HOTPATH_JSON"
 (cd rust && cargo bench --bench hotpath)
 
@@ -244,6 +266,46 @@ EOF
 else
     echo "python3 not found; skipping relative perf guards"
 fi
+
+echo
+echo "== bench-regression gate: fresh medians vs committed baseline =="
+if [[ -z "$BENCH_BASELINE" ]]; then
+    echo "no committed BENCH_hotpath.json baseline; gate skipped" \
+         "(commit $BENCH_HOTPATH_JSON to arm it)"
+elif command -v python3 >/dev/null 2>&1; then
+    python3 - "$BENCH_BASELINE" "$BENCH_HOTPATH_JSON" \
+        "${BENCH_REGRESSION_TOLERANCE:-1.5}" <<'EOF'
+import json, sys
+
+base = {c["name"]: c["median_ns"] for c in json.load(open(sys.argv[1]))}
+cur = {c["name"]: c["median_ns"] for c in json.load(open(sys.argv[2]))}
+tol = float(sys.argv[3])
+
+failures = []
+compared = 0
+for name in sorted(base):
+    if name not in cur:
+        print(f"note: baseline case no longer benched: {name!r}")
+        continue
+    compared += 1
+    if cur[name] > base[name] * tol:
+        failures.append(
+            f"{name}: {cur[name]/1e6:.2f} ms vs baseline "
+            f"{base[name]/1e6:.2f} ms (> {tol}x)")
+for name in sorted(set(cur) - set(base)):
+    print(f"note: new bench case (no baseline): {name!r}")
+
+print(f"{compared} cases within {tol}x of the committed baseline"
+      if not failures else f"{len(failures)} of {compared} cases regressed:")
+for f in failures:
+    print("FAIL:", f, file=sys.stderr)
+if failures:
+    sys.exit(1)
+EOF
+else
+    echo "python3 not found; bench-regression gate skipped"
+fi
+[[ -n "$BENCH_BASELINE" ]] && rm -f "$BENCH_BASELINE"
 
 echo
 echo "verify OK — perf report: $BENCH_HOTPATH_JSON"
