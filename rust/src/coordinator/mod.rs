@@ -12,5 +12,6 @@ pub use resilience::{
     FaultPlan, LadderConfig, OperatingPoint, ResilienceConfig, RetryPolicy, ShedPolicy,
 };
 pub use serve::{
-    Backend, FlushPolicy, Outcome, OutcomeLatency, ServeBackend, ServeConfig, ServeReport, Server,
+    Backend, DecodeReport, DecodeServer, FlushPolicy, MtRequest, Outcome, OutcomeLatency,
+    ServeBackend, ServeConfig, ServeReport, Server,
 };

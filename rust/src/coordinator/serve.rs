@@ -25,6 +25,15 @@
 //! starts at the first request's arrival, so late arrivals get their
 //! full window.
 //!
+//! Autoregressive MT gets its own serving loop: [`DecodeServer`]
+//! schedules at *iteration level* (the LLM-server technique — Orca-style
+//! continuous batching) rather than request level. Up to `max_slots`
+//! in-flight translations advance one token per step in lockstep on
+//! shared weight-stationary panels ([`crate::infer::ContinuousDecoder`]);
+//! finished slots retire between steps and are refilled from a bounded,
+//! deadline-aware admission queue, so short utterances never wait for
+//! long ones and the panels stay as full as the offered load allows.
+//!
 //! Implemented over std threads/channels (no tokio in the vendor set);
 //! the PJRT client is kept on the worker thread, requests cross via mpsc.
 //!
@@ -37,7 +46,7 @@
 //! the [`ServeBackend`] tensor boundary (the contract PJRT needs);
 //! bypassing it for in-process callers is a known follow-on.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -45,10 +54,11 @@ use std::time::{Duration, Instant};
 use anyhow::{ensure, Context, Result};
 
 use super::resilience::{
-    CircuitBreaker, OperatingPoint, ResilienceConfig, ShedPolicy, StateTransition,
+    AdmissionConfig, CircuitBreaker, OperatingPoint, ResilienceConfig, ShedPolicy,
+    StateTransition,
 };
 use crate::data::{load_bundle, Bundle, DType, Tensor};
-use crate::infer::{synth_testset, synth_weights, ModelDims, NativeBackend};
+use crate::infer::{synth_testset, synth_weights, ContinuousDecoder, ModelDims, NativeBackend};
 use crate::qos::decode::ctc_greedy;
 use crate::qos::{AsrEvaluator, EvalMeta, PjrtState, QosBackend};
 use crate::runtime::{Engine, Manifest};
@@ -601,11 +611,18 @@ struct Queued {
 /// [`ShedPolicy::DeadlineAware`]: earliest deadline first, admission
 /// order on ties; deadline-free requests are infinitely patient.
 fn sheds_before(a: &Queued, b: &Queued) -> bool {
-    match (a.req.deadline, b.req.deadline) {
-        (Some(x), Some(y)) => (x, a.seq) < (y, b.seq),
+    edf_before(a.req.deadline, a.seq, b.req.deadline, b.seq)
+}
+
+/// The deadline/admission-order comparison behind [`sheds_before`],
+/// shared by the encoder queue ([`Queued`]) and the continuous-decode
+/// queue ([`QueuedMt`]).
+fn edf_before(ad: Option<Instant>, aseq: u64, bd: Option<Instant>, bseq: u64) -> bool {
+    match (ad, bd) {
+        (Some(x), Some(y)) => (x, aseq) < (y, bseq),
         (Some(_), None) => true,
         (None, Some(_)) => false,
-        (None, None) => a.seq < b.seq,
+        (None, None) => aseq < bseq,
     }
 }
 
@@ -651,7 +668,24 @@ impl Tally {
 
     /// Account + send an already-built response.
     fn record(&mut self, req: &Request, resp: Response) {
-        if resp.outcome == Outcome::Ok && !req.expired(Instant::now()) {
+        self.respond(req.deadline, resp);
+    }
+
+    /// [`Tally::finish`] for the continuous-decode MT queue.
+    fn finish_mt(&mut self, req: &MtRequest, outcome: Outcome) {
+        let resp = Response {
+            id: req.id,
+            tokens: Vec::new(),
+            latency: req.arrived.elapsed(),
+            outcome,
+        };
+        self.respond(req.deadline, resp);
+    }
+
+    /// The outcome-agnostic core: account + send, with on-time goodput
+    /// judged against the request's `deadline` at response time.
+    fn respond(&mut self, deadline: Option<Instant>, resp: Response) {
+        if resp.outcome == Outcome::Ok && !deadline.is_some_and(|d| Instant::now() >= d) {
             self.on_time += 1;
         }
         if telemetry::active() {
@@ -1421,6 +1455,313 @@ fn write_f32s(t: &mut Tensor, offset: usize, vals: &[f32]) {
     let dst = &mut t.data[start..start + vals.len() * 4];
     for (chunk, v) in dst.chunks_exact_mut(4).zip(vals) {
         chunk.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// One MT translation request: a token-id source utterance, padded to
+/// the model sequence length. The decode-side twin of [`Request`] —
+/// same arrival stamping, same optional completion deadline.
+pub struct MtRequest {
+    pub id: u64,
+    /// Source token ids, exactly `seq_len` of them (the valid prefix is
+    /// `src_len`; the tail is padding the encoder masks out).
+    pub src: Vec<i32>,
+    pub src_len: usize,
+    /// When the request entered the system; latency is measured from
+    /// here, so queue residency counts.
+    pub arrived: Instant,
+    /// Completion deadline; `None` = infinitely patient (see
+    /// [`Request::deadline`]).
+    pub deadline: Option<Instant>,
+}
+
+impl MtRequest {
+    /// Build a request stamped with the current instant, no deadline.
+    pub fn new(id: u64, src: Vec<i32>, src_len: usize) -> MtRequest {
+        MtRequest { id, src, src_len, arrived: Instant::now(), deadline: None }
+    }
+
+    /// [`MtRequest::new`] with a completion deadline `ttl` from now.
+    pub fn with_deadline(id: u64, src: Vec<i32>, src_len: usize, ttl: Duration) -> MtRequest {
+        let now = Instant::now();
+        MtRequest { id, src, src_len, arrived: now, deadline: Some(now + ttl) }
+    }
+
+    /// Whether the deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// One admitted MT request plus its admission sequence number — the
+/// [`Queued`] twin for the continuous-decode queue. The sequence number
+/// doubles as the decode-slot id (unique even when caller ids collide).
+struct QueuedMt {
+    req: MtRequest,
+    seq: u64,
+    /// Queue-residency span; ends when the `QueuedMt` drops — at slot
+    /// join, shed, or expiry.
+    #[allow(dead_code)]
+    span: telemetry::Span,
+}
+
+/// Latency/throughput summary of a continuous-decode serving run.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeReport {
+    /// Requests served successfully ([`Outcome::Ok`]).
+    pub n_requests: usize,
+    /// Lockstep panel steps executed (== `schedule.len()`).
+    pub n_steps: usize,
+    /// Nearest-rank latency percentiles over the served requests.
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub p999: Duration,
+    /// Mean live slots per step — the panel-fill figure of merit: at
+    /// 1.0 the continuous scheduler degenerates to sequential decode,
+    /// at `max_slots` every step ran a full weight-stationary panel.
+    pub mean_slot_fill: f64,
+    /// Served requests per second of run wall time.
+    pub throughput_rps: f64,
+    /// Generated tokens per second of run wall time.
+    pub tokens_per_sec: f64,
+    /// Requests shed by the bounded admission queue.
+    pub shed: usize,
+    /// Requests expired before reaching a decode slot.
+    pub expired: usize,
+    /// Requests rejected at admission as contract-invalid.
+    pub invalid: usize,
+    /// Served responses that completed before their deadline.
+    pub on_time: usize,
+    /// On-time completions per second.
+    pub goodput_rps: f64,
+    /// Per-step live-slot counts, in step order — the exact input
+    /// [`crate::sysim::engine::gemm_on_array_decode_batched`] needs to
+    /// reproduce the run's decode charges analytically.
+    pub schedule: Vec<usize>,
+}
+
+/// Continuous iteration-level batched decoding server — the
+/// LLM-server-style scheduler over the native MT backend. Where
+/// [`Server`] batches whole encoder forwards into flushes, this batches
+/// individual *decode steps*: up to `max_slots` in-flight translations
+/// advance one token per iteration in lockstep, their per-token GEMVs
+/// packed into shared `[k, d]` weight-stationary panels
+/// ([`crate::infer::ContinuousDecoder`]). A slot that emits EOS or hits
+/// `max_len` retires *between* steps and is refilled from the admission
+/// queue immediately — joins and leaves never disturb in-flight slots,
+/// so every output is bitwise identical to a dedicated per-utterance
+/// greedy decode.
+///
+/// Admission mirrors the encoder path: requests are validated (token
+/// buffer shape, `src_len` bounds) and optionally bounded by an
+/// [`AdmissionConfig`] with the PR-6 shed policies; queued requests
+/// past their deadline are expired before they ever reach a slot.
+/// The admission capacity bounds the *waiting* queue only — in-flight
+/// slots are capacity the scheduler already granted.
+pub struct DecodeServer {
+    /// Maximum concurrently-decoding utterances (the panel width).
+    max_slots: usize,
+    /// Bounded admission; `None` = unbounded FIFO queue.
+    admission: Option<AdmissionConfig>,
+}
+
+impl DecodeServer {
+    pub fn new(max_slots: usize) -> DecodeServer {
+        DecodeServer { max_slots, admission: None }
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    /// Bound the admission queue (capacity + shed policy).
+    pub fn set_admission(&mut self, adm: AdmissionConfig) {
+        self.admission = Some(adm);
+    }
+
+    /// Validate + admit one incoming request, shedding per policy when
+    /// the bounded queue is full — the [`Server::admit`] logic over the
+    /// MT request shape.
+    fn admit(
+        &self,
+        req: MtRequest,
+        seq_len: usize,
+        pending: &mut VecDeque<QueuedMt>,
+        seq: &mut u64,
+        tally: &mut Tally,
+    ) {
+        if req.src.len() != seq_len || req.src_len == 0 || req.src_len > seq_len {
+            tally.finish_mt(&req, Outcome::Invalid);
+            return;
+        }
+        let mut span = telemetry::Span::detached("request.queue", telemetry::current_span());
+        if span.is_live() {
+            M_ADMITTED.get().inc();
+            span.attr("req_id", req.id);
+        }
+        let q = QueuedMt { req, seq: *seq, span };
+        *seq += 1;
+        let Some(adm) = self.admission else {
+            pending.push_back(q);
+            return;
+        };
+        if pending.len() < adm.capacity {
+            pending.push_back(q);
+            return;
+        }
+        match adm.policy {
+            ShedPolicy::RejectNew => tally.finish_mt(&q.req, Outcome::Shed),
+            ShedPolicy::DropOldest => {
+                if let Some(old) = pending.pop_front() {
+                    tally.finish_mt(&old.req, Outcome::Shed);
+                    pending.push_back(q);
+                } else {
+                    tally.finish_mt(&q.req, Outcome::Shed);
+                }
+            }
+            ShedPolicy::DeadlineAware => {
+                let mut victim = pending.len(); // == len() means the incoming one
+                for i in 0..pending.len() {
+                    let cur = if victim == pending.len() {
+                        &q
+                    } else {
+                        &pending[victim]
+                    };
+                    if edf_before(pending[i].req.deadline, pending[i].seq, cur.req.deadline, cur.seq)
+                    {
+                        victim = i;
+                    }
+                }
+                if victim == pending.len() {
+                    tally.finish_mt(&q.req, Outcome::Shed);
+                } else {
+                    let old = pending.remove(victim).expect("victim index in bounds");
+                    tally.finish_mt(&old.req, Outcome::Shed);
+                    pending.push_back(q);
+                }
+            }
+        }
+    }
+
+    /// Drain an MT request channel until it closes, decoding up to
+    /// `max_slots` utterances in lockstep. Each iteration: drain
+    /// arrivals into the (optionally bounded) queue, expire stale
+    /// requests, refill free slots from the queue front — the batched
+    /// encode + cross-K/V precompute runs once per join wave,
+    /// weight-stationary across the joiners — then advance every live
+    /// slot one token. Retired slots respond immediately and their
+    /// capacity is re-granted the very next iteration.
+    pub fn run(
+        &mut self,
+        backend: &mut NativeBackend,
+        rx: mpsc::Receiver<MtRequest>,
+        tx: mpsc::Sender<Response>,
+    ) -> Result<DecodeReport> {
+        ensure!(self.max_slots > 0, "need at least one decode slot");
+        ensure!(
+            backend.dims().token_input,
+            "continuous decode serving needs an MT (token-input) backend"
+        );
+        let seq_len = backend.dims().seq_len;
+        let mut cd = ContinuousDecoder::new(self.max_slots);
+        let mut tally = Tally::new(tx);
+        let mut pending: VecDeque<QueuedMt> = VecDeque::new();
+        // In-flight requests keyed by admission sequence number (the
+        // slot id), so responses carry the caller's id and latency even
+        // when caller ids collide.
+        let mut inflight: HashMap<u64, MtRequest> = HashMap::new();
+        let mut seq = 0u64;
+        let (mut id_buf, mut src_buf, mut len_buf) = (Vec::new(), Vec::new(), Vec::new());
+        let mut tokens_out = 0usize;
+        let run_span = telemetry::Span::begin("serve.decode_run");
+        let t0 = Instant::now();
+        let mut open = true;
+        while open || !pending.is_empty() || cd.live() > 0 {
+            // Idle: block until the first request arrives. While slots
+            // are live the loop never blocks — new arrivals are drained
+            // opportunistically between steps.
+            if open && pending.is_empty() && cd.live() == 0 {
+                match rx.recv() {
+                    Ok(r) => self.admit(r, seq_len, &mut pending, &mut seq, &mut tally),
+                    Err(_) => {
+                        open = false;
+                        continue;
+                    }
+                }
+            }
+            while open {
+                match rx.try_recv() {
+                    Ok(r) => self.admit(r, seq_len, &mut pending, &mut seq, &mut tally),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => open = false,
+                }
+            }
+            if telemetry::active() {
+                M_QUEUE_DEPTH.get().set(pending.len() as i64);
+            }
+            // Refill free slots from the queue front, expiring stale
+            // requests on the way — they never reach the backend.
+            // Dropping each QueuedMt here ends its queue span.
+            id_buf.clear();
+            src_buf.clear();
+            len_buf.clear();
+            let now = Instant::now();
+            while cd.live() + id_buf.len() < self.max_slots && !pending.is_empty() {
+                let q = pending.pop_front().expect("queue checked non-empty");
+                if q.req.expired(now) {
+                    tally.finish_mt(&q.req, Outcome::Expired);
+                    continue;
+                }
+                id_buf.push(q.seq);
+                src_buf.extend_from_slice(&q.req.src);
+                len_buf.push(q.req.src_len);
+                inflight.insert(q.seq, q.req);
+            }
+            if !id_buf.is_empty() {
+                backend.decode_join(&mut cd, &id_buf, &src_buf, &len_buf)?;
+            }
+            if cd.live() == 0 {
+                continue;
+            }
+            for fin in backend.decode_step(&mut cd)? {
+                let req = inflight
+                    .remove(&fin.id)
+                    .expect("finished slot maps to an in-flight request");
+                tokens_out += fin.tokens.len();
+                let resp = Response {
+                    id: req.id,
+                    tokens: fin.tokens,
+                    latency: req.arrived.elapsed(),
+                    outcome: Outcome::Ok,
+                };
+                let deadline = req.deadline;
+                tally.respond(deadline, resp);
+            }
+        }
+        drop(run_span);
+        let total = t0.elapsed().as_secs_f64().max(1e-9);
+        let schedule = cd.step_batches().to_vec();
+        let mut ok = std::mem::take(&mut tally.lats[0]);
+        ok.sort_unstable();
+        Ok(DecodeReport {
+            n_requests: ok.len(),
+            n_steps: schedule.len(),
+            p50: percentile(&ok, 50),
+            p95: percentile(&ok, 95),
+            p99: percentile(&ok, 99),
+            p999: permille(&ok, 999),
+            mean_slot_fill: schedule.iter().sum::<usize>() as f64
+                / schedule.len().max(1) as f64,
+            throughput_rps: ok.len() as f64 / total,
+            tokens_per_sec: tokens_out as f64 / total,
+            shed: tally.lats[Tally::slot(Outcome::Shed)].len(),
+            expired: tally.lats[Tally::slot(Outcome::Expired)].len(),
+            invalid: tally.lats[Tally::slot(Outcome::Invalid)].len(),
+            on_time: tally.on_time,
+            goodput_rps: tally.on_time as f64 / total,
+            schedule,
+        })
     }
 }
 
@@ -2668,5 +3009,209 @@ mod tests {
             assert_eq!(responses[id as usize].outcome, Outcome::Ok);
             assert_eq!(responses[id as usize].tokens, want, "request {id}");
         }
+    }
+
+    // ---- continuous-decode (MT) serving ------------------------------
+
+    /// A pruned+quantized native MT backend over the deterministic
+    /// synthetic mini model — same fixture the infer tests use.
+    fn mt_backend() -> NativeBackend {
+        use crate::infer::decoder::testutil::mini_dec_dims;
+        use crate::infer::synth::synth_decoder_weights;
+        use crate::infer::testutil::mini_dims;
+        let dims = ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        };
+        let enc = synth_weights(&dims, 43);
+        let dec = synth_decoder_weights(&mini_dec_dims(), 43);
+        let mut be = NativeBackend::new_mt(enc, dec, 4).unwrap();
+        be.prepare(8, 0.3, Quant::Int8).unwrap();
+        be
+    }
+
+    /// A deterministic ragged MT batch: `n` utterances of `seq_len`
+    /// tokens each, valid prefixes between half and full length.
+    fn mt_sources(be: &NativeBackend, n: usize, seed: u64) -> (Vec<i32>, Vec<usize>) {
+        let dims = *be.dims();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let t = dims.seq_len;
+        let mut src = vec![0i32; n * t];
+        let mut lens = Vec::with_capacity(n);
+        for u in 0..n {
+            let len = t / 2 + rng.index(t / 2);
+            for tok in src[u * t..u * t + len].iter_mut() {
+                *tok = rng.index(dims.vocab) as i32;
+            }
+            lens.push(len);
+        }
+        (src, lens)
+    }
+
+    fn mt_request(src: &[i32], lens: &[usize], t: usize, u: usize) -> MtRequest {
+        MtRequest::new(u as u64, src[u * t..(u + 1) * t].to_vec(), lens[u])
+    }
+
+    #[test]
+    fn decode_server_matches_sequential_translate_and_reports_panel_fill() {
+        // The serving-loop face of the tentpole contract: continuous
+        // iteration-level scheduling through the bounded-admission
+        // server produces exactly the per-utterance sequential
+        // translations, and the report's schedule shows multi-slot
+        // panels (the batching actually happened).
+        let mut oracle = mt_backend();
+        let (src, lens) = mt_sources(&oracle, 6, 11);
+        let want = oracle.translate(&src, &lens).unwrap();
+        let t = oracle.dims().seq_len;
+
+        let mut be = mt_backend();
+        let (req_tx, req_rx) = mpsc::channel::<MtRequest>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for u in 0..6 {
+            req_tx.send(mt_request(&src, &lens, t, u)).unwrap();
+        }
+        drop(req_tx);
+        let mut server = DecodeServer::new(3);
+        let report = server.run(&mut be, req_rx, resp_tx).unwrap();
+
+        let mut responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 6, "every request gets exactly one response");
+        responses.sort_by_key(|r| r.id);
+        for (u, resp) in responses.iter().enumerate() {
+            assert_eq!(resp.outcome, Outcome::Ok);
+            assert_eq!(resp.tokens, want[u], "utterance {u}");
+        }
+        assert_eq!(report.n_requests, 6);
+        assert_eq!(report.shed + report.expired + report.invalid, 0);
+        assert_eq!(report.n_steps, report.schedule.len());
+        // All six requests were queued before the run started, so the
+        // first step runs a full panel and the mean fill beats the
+        // sequential degenerate case.
+        assert_eq!(report.schedule[0], 3, "first step fills every slot");
+        assert!(report.schedule.iter().all(|&k| (1..=3).contains(&k)));
+        assert!(report.mean_slot_fill > 1.0, "panels actually batched");
+        // The backend's recorded step count is the schedule's sum — the
+        // analytic replay contract.
+        assert_eq!(
+            be.decode_stats().steps,
+            report.schedule.iter().sum::<usize>()
+        );
+        assert_eq!(be.decode_stats().utterances, 6);
+    }
+
+    #[test]
+    fn decode_server_bounded_admission_sheds_and_flags_invalid() {
+        // Capacity-2 RejectNew queue, six valid requests pre-queued plus
+        // one contract-invalid buffer: two serve, four shed, the bad one
+        // is rejected at admission — every request still gets exactly
+        // one response.
+        let mut be = mt_backend();
+        let (src, lens) = mt_sources(&be, 6, 13);
+        let t = be.dims().seq_len;
+        let (req_tx, req_rx) = mpsc::channel::<MtRequest>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        for u in 0..6 {
+            req_tx.send(mt_request(&src, &lens, t, u)).unwrap();
+        }
+        req_tx
+            .send(MtRequest::new(99, vec![1i32; t - 1], 1))
+            .unwrap();
+        drop(req_tx);
+        let mut server = DecodeServer::new(2);
+        server.set_admission(AdmissionConfig {
+            capacity: 2,
+            policy: ShedPolicy::RejectNew,
+        });
+        let report = server.run(&mut be, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 2);
+        assert_eq!(report.shed, 4);
+        assert_eq!(report.invalid, 1);
+        let responses: Vec<Response> = resp_rx.try_iter().collect();
+        assert_eq!(responses.len(), 7);
+        assert_eq!(
+            responses.iter().filter(|r| r.outcome == Outcome::Shed).count(),
+            4
+        );
+        let bad = responses.iter().find(|r| r.id == 99).unwrap();
+        assert_eq!(bad.outcome, Outcome::Invalid);
+        assert!(bad.tokens.is_empty());
+    }
+
+    #[test]
+    fn decode_server_expires_stale_requests_before_they_reach_a_slot() {
+        // A request born past its deadline is expired at refill time —
+        // it never occupies a slot and never reaches the backend; the
+        // patient requests around it decode normally and goodput counts
+        // only on-time completions.
+        let mut be = mt_backend();
+        let (src, lens) = mt_sources(&be, 3, 17);
+        let t = be.dims().seq_len;
+        let (req_tx, req_rx) = mpsc::channel::<MtRequest>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        req_tx.send(mt_request(&src, &lens, t, 0)).unwrap();
+        req_tx
+            .send(MtRequest::with_deadline(
+                1,
+                src[t..2 * t].to_vec(),
+                lens[1],
+                Duration::ZERO,
+            ))
+            .unwrap();
+        req_tx.send(mt_request(&src, &lens, t, 2)).unwrap();
+        drop(req_tx);
+        let mut server = DecodeServer::new(2);
+        let report = server.run(&mut be, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 2);
+        assert_eq!(report.expired, 1);
+        assert_eq!(report.on_time, 2, "deadline-free completions are on time");
+        let mut responses: Vec<Response> = resp_rx.try_iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses[1].outcome, Outcome::Expired);
+        assert!(responses[1].tokens.is_empty());
+        assert_eq!(responses[0].outcome, Outcome::Ok);
+        assert_eq!(responses[2].outcome, Outcome::Ok);
+        assert_eq!(be.decode_stats().utterances, 2, "expired never decoded");
+    }
+
+    #[test]
+    fn decode_server_deadline_aware_sheds_the_tightest_deadline() {
+        // Capacity-1 DeadlineAware queue: with a deadline-free request
+        // queued, an incoming deadlined request is the candidate least
+        // likely to finish and is shed — same EDF semantics as the
+        // encoder queue's `sheds_before`.
+        let mut be = mt_backend();
+        let (src, lens) = mt_sources(&be, 2, 19);
+        let t = be.dims().seq_len;
+        let (req_tx, req_rx) = mpsc::channel::<MtRequest>();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        req_tx.send(mt_request(&src, &lens, t, 0)).unwrap();
+        req_tx
+            .send(MtRequest::with_deadline(
+                1,
+                src[t..2 * t].to_vec(),
+                lens[1],
+                Duration::from_secs(3600),
+            ))
+            .unwrap();
+        drop(req_tx);
+        // One slot, so the loop admits both before the first refill:
+        // request 0 blocks the single queue slot.
+        let mut server = DecodeServer::new(1);
+        server.set_admission(AdmissionConfig {
+            capacity: 1,
+            policy: ShedPolicy::DeadlineAware,
+        });
+        let report = server.run(&mut be, req_rx, resp_tx).unwrap();
+        assert_eq!(report.n_requests, 1);
+        assert_eq!(report.shed, 1);
+        let mut responses: Vec<Response> = resp_rx.try_iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses[0].outcome, Outcome::Ok);
+        assert_eq!(responses[1].outcome, Outcome::Shed);
+        // Sequential schedule: a single slot degenerates to per-
+        // utterance decode, the report says so.
+        assert!(report.schedule.iter().all(|&k| k == 1));
+        assert!((report.mean_slot_fill - 1.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,243 @@
+//! `sasp report decode` — the continuous-batching decode frontier.
+//!
+//! Drives synthetic MT request streams through
+//! [`crate::coordinator::serve::DecodeServer`] over the 25%-pruned INT8
+//! native MT backend and sweeps the two knobs of iteration-level
+//! scheduling:
+//!
+//! - **offered load** — the inter-arrival gap of the request stream
+//!   (burst = everything queued at once vs a paced trickle);
+//! - **panel width** — `max_slots`, the number of in-flight decodes
+//!   advancing in lockstep per step. One slot *is* the sequential
+//!   per-utterance baseline: the same scheduler degenerates to plain
+//!   greedy decode, so every row of the table shares one code path and
+//!   the frontier isolates the batching win.
+//!
+//! Each point reports served-request latency percentiles, request and
+//! token throughput, the mean panel fill (live slots per step — the
+//! occupancy evidence `sasp_decode_batch_occupancy` histograms under
+//! telemetry), and the decode-scope PE utilization derived from the
+//! recorded [`crate::systolic::TileTiming`] charges: batching k GEMV
+//! rows onto one weight-stationary tile pass amortizes the fill/drain
+//! bubble and the reprogramming stall, so MACs per array-cycle PE slot
+//! rise with the fill. Every point serves the same request stream (same
+//! seed, same gaps). The numbers are wall-clock on the current host —
+//! a measurement harness, not a deterministic figure, which is why it
+//! is not part of `sasp report all`.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::serve::{DecodeReport, DecodeServer, MtRequest};
+use crate::infer::{
+    synth_decoder_weights, synth_weights, DecoderDims, ModelDims, NativeBackend,
+};
+use crate::systolic::Quant;
+use crate::util::rng::Rng;
+
+use super::Report;
+
+/// Drive `n_requests` synthetic MT utterances (deterministic token
+/// sources and inter-arrival `gap`) through a fresh 25%-pruned INT8
+/// native MT backend with a `max_slots`-wide [`DecodeServer`].
+/// Returns the serving report plus the run's decode-scope PE
+/// utilization (MACs over array-busy PE slots, `tile x tile` PEs per
+/// cycle, across self/cross-attention, feed-forward, head, and the
+/// cross-K/V precompute).
+pub fn measure_decode(
+    dims: &ModelDims,
+    dec_dims: &DecoderDims,
+    max_slots: usize,
+    n_requests: usize,
+    gap: Duration,
+) -> Result<(DecodeReport, f64)> {
+    ensure!(dims.token_input, "decode frontier needs a token-input model");
+    let mut backend = NativeBackend::new_mt(
+        synth_weights(dims, 7),
+        synth_decoder_weights(dec_dims, 7),
+        max_slots.max(1),
+    )?;
+    backend.prepare(dims.tile, 0.25, Quant::Int8)?;
+    backend.reset_stats();
+
+    let (req_tx, req_rx) = mpsc::channel::<MtRequest>();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let (t, vocab) = (dims.seq_len, dims.vocab);
+    let producer = thread::spawn(move || {
+        let mut rng = Rng::new(11);
+        for id in 0..n_requests as u64 {
+            let len = t / 2 + rng.index(t - t / 2) + 1;
+            let mut src = vec![0i32; t];
+            for tok in src[..len.min(t)].iter_mut() {
+                *tok = rng.index(vocab) as i32;
+            }
+            let _ = req_tx.send(MtRequest::new(id, src, len.min(t)));
+            if !gap.is_zero() {
+                thread::sleep(gap);
+            }
+        }
+        // Dropping req_tx closes the queue and drains the server.
+    });
+    let mut server = DecodeServer::new(max_slots);
+    let report = server.run(&mut backend, req_rx, resp_tx)?;
+    producer.join().unwrap();
+    let answered = resp_rx.try_iter().count();
+    ensure!(
+        answered == n_requests,
+        "answered {answered} of {n_requests} requests"
+    );
+
+    let total = backend.decode_stats().total();
+    let pes = (dims.tile * dims.tile) as f64;
+    let util = total.timing.macs as f64 / (total.timing.array_cycles.max(1) as f64 * pes);
+    Ok((report, util))
+}
+
+/// [`decode_report`] with explicit model/load parameters (the render
+/// test uses the mini model and a short stream to stay fast). Sweeps
+/// offered load x `max_slots`, with the 1-slot row as the sequential
+/// per-utterance baseline of each load.
+pub fn decode_report_sized(
+    dims: &ModelDims,
+    dec_dims: &DecoderDims,
+    slot_counts: &[usize],
+    n_requests: usize,
+    gaps: &[(&str, Duration)],
+) -> Result<Report> {
+    let mut r = Report::new(
+        "Decode — continuous iteration-level batching frontier (native MT, 25% SASP, INT8)",
+    );
+    r.line(format!(
+        "{n_requests} requests per point, src seq {}, target max_len {}; \
+         slots=1 is the sequential per-utterance baseline",
+        dims.seq_len, dec_dims.max_len
+    ));
+    r.line(format!(
+        "{:<24} {:>4} {:>10} {:>10} {:>10} {:>8} {:>8} {:>6} {:>6}",
+        "load / scheduler", "ok", "p50", "p99", "req/s", "tok/s", "fill", "steps", "util%"
+    ));
+    for (gap_label, gap) in gaps {
+        for &slots in slot_counts {
+            let label = if slots == 1 {
+                format!("{gap_label} sequential")
+            } else {
+                format!("{gap_label} continuous x{slots}")
+            };
+            let (rep, util) = measure_decode(dims, dec_dims, slots, n_requests, *gap)?;
+            r.line(format!(
+                "{:<24} {:>4} {:>10} {:>10} {:>10.1} {:>8.0} {:>8.2} {:>6} {:>6.1}",
+                label,
+                rep.n_requests,
+                format!("{:.2?}", rep.p50),
+                format!("{:.2?}", rep.p99),
+                rep.throughput_rps,
+                rep.tokens_per_sec,
+                rep.mean_slot_fill,
+                rep.n_steps,
+                util * 100.0,
+            ));
+        }
+    }
+    Ok(r)
+}
+
+/// The `sasp report decode` entry point: tiny-MT native backend, 24
+/// requests per point, a pre-queued burst against a paced trickle,
+/// panel widths 1 (sequential baseline) / 2 / 4 / 8.
+pub fn decode_report() -> Result<Report> {
+    decode_report_sized(
+        &ModelDims::tiny_mt(),
+        &DecoderDims::tiny_mt(),
+        &[1, 2, 4, 8],
+        24,
+        &[
+            ("burst 0us", Duration::ZERO),
+            ("paced 500us", Duration::from_micros(500)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::decoder::testutil::mini_dec_dims;
+    use crate::infer::testutil::mini_dims;
+
+    fn mini_mt_dims() -> ModelDims {
+        ModelDims {
+            token_input: true,
+            ctc_blank: -1,
+            ..mini_dims()
+        }
+    }
+
+    #[test]
+    fn decode_report_renders_frontier() {
+        let r = decode_report_sized(
+            &mini_mt_dims(),
+            &mini_dec_dims(),
+            &[1, 2],
+            4,
+            &[("burst 0us", Duration::ZERO)],
+        )
+        .unwrap();
+        let s = r.render();
+        assert!(s.contains("burst 0us sequential"), "{s}");
+        assert!(s.contains("burst 0us continuous x2"), "{s}");
+        // Title block: load line + column header + 2 frontier points.
+        assert_eq!(r.lines.len(), 2 + 2, "{s}");
+    }
+
+    #[test]
+    fn measure_decode_answers_all_and_fills_panels() {
+        let (rep, util) = measure_decode(
+            &mini_mt_dims(),
+            &mini_dec_dims(),
+            3,
+            5,
+            Duration::ZERO,
+        )
+        .unwrap();
+        assert_eq!(rep.n_requests, 5);
+        assert_eq!(rep.shed + rep.expired + rep.invalid, 0);
+        // All five requests were queued before the first step, so the
+        // first panel is full and the mean fill beats sequential.
+        assert_eq!(rep.schedule[0], 3);
+        assert!(rep.mean_slot_fill > 1.0);
+        assert!(util > 0.0 && util <= 1.0, "utilization {util} out of range");
+    }
+
+    #[test]
+    fn continuous_fill_beats_sequential_on_a_burst() {
+        // The panel-fill figure of merit: the same pre-queued burst at 4
+        // slots runs strictly fuller panels (and strictly fewer steps)
+        // than the 1-slot sequential degenerate case.
+        let (seq, _) = measure_decode(
+            &mini_mt_dims(),
+            &mini_dec_dims(),
+            1,
+            4,
+            Duration::ZERO,
+        )
+        .unwrap();
+        let (cont, _) = measure_decode(
+            &mini_mt_dims(),
+            &mini_dec_dims(),
+            4,
+            4,
+            Duration::ZERO,
+        )
+        .unwrap();
+        assert!((seq.mean_slot_fill - 1.0).abs() < 1e-12);
+        assert!(cont.mean_slot_fill > 1.0);
+        assert!(cont.n_steps < seq.n_steps, "lockstep panels shorten the run");
+        // Same total work: the step counts weighted by fill agree.
+        assert_eq!(
+            cont.schedule.iter().sum::<usize>(),
+            seq.schedule.iter().sum::<usize>()
+        );
+    }
+}

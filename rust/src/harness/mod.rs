@@ -3,12 +3,14 @@
 //! rows/series the paper plots) and is wired to both the CLI
 //! (`sasp report <id>`) and the bench targets.
 
+pub mod decode;
 pub mod figures;
 pub mod qos_cache;
 pub mod serving;
 pub mod trace;
 pub mod util;
 
+pub use decode::{decode_report, decode_report_sized, measure_decode};
 pub use figures::*;
 pub use qos_cache::QosCache;
 pub use serving::{

@@ -16,6 +16,9 @@
 //! configuration — no bundle-zeroing round trip, masks flow straight
 //! from [`crate::pruning::global_prune`] into the tile-skipping kernels.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use anyhow::{ensure, Result};
 
 use crate::coordinator::resilience::OperatingPoint;
@@ -29,7 +32,9 @@ use crate::systolic::Quant;
 use crate::telemetry;
 
 use super::batch::BatchForward;
-use super::decoder::{DecodeStats, DecoderForward, DecoderWeights, PreparedDecoder};
+use super::decoder::{
+    ContinuousDecoder, DecodeStats, DecoderForward, DecoderWeights, Finished, PreparedDecoder,
+};
 use super::encoder::{EncoderWeights, ForwardStats, ModelDims, PreparedModel};
 
 /// Per-feed-forward-GEMM tile L1 norms of a weight set.
@@ -81,13 +86,14 @@ pub struct NativeBackend {
     /// Built once (tile refreshed on re-staging) so the serving hot
     /// path neither reallocates nor reassembles it per batch.
     serve_manifest: Manifest,
-    /// Worker threads [`Self::forward_batch`] shards a batch's
-    /// utterances across (1 = the single-threaded path).
+    /// Worker threads [`Self::forward_batch`] spreads a batch's
+    /// utterance chunks across (1 = the single-threaded path).
     threads: usize,
-    /// Per-worker batched runtimes (buffers + per-shard stats), reused
-    /// across calls; `fwd` stays the canonical stats accumulator.
+    /// Per-chunk batched runtimes (buffers + per-chunk stats), claimed
+    /// off the work queue and reused across calls; `fwd` stays the
+    /// canonical stats accumulator.
     shard_fwds: Vec<BatchForward>,
-    /// Per-worker output buffers, concatenated in utterance order.
+    /// Per-chunk output buffers, concatenated in utterance order.
     shard_outs: Vec<Vec<f32>>,
     /// Deterministic fault hook for the containment tests: a worker
     /// panics when any of its utterances' first feature element equals
@@ -189,6 +195,11 @@ impl NativeBackend {
         self.per_channel = on;
     }
 
+    /// Whether the next staging uses per-channel INT8 scales.
+    pub fn per_channel(&self) -> bool {
+        self.per_channel
+    }
+
     /// Cumulative schedule statistics since the last reset.
     pub fn stats(&self) -> &ForwardStats {
         &self.fwd.stats
@@ -254,15 +265,27 @@ impl NativeBackend {
         self.threads
     }
 
-    /// Contiguous near-equal shard lengths for `batch` utterances over
-    /// at most `threads` workers (the first `batch % workers` shards
-    /// take the extra utterance). Deterministic, so the merged shard
-    /// accounting is too.
-    pub fn shard_sizes(batch: usize, threads: usize) -> Vec<usize> {
-        let workers = threads.max(1).min(batch.max(1));
-        let base = batch / workers;
-        let extra = batch % workers;
-        (0..workers).map(|i| base + usize::from(i < extra)).collect()
+    /// Contiguous near-equal work-queue chunk lengths for `batch`
+    /// utterances (the first `batch % chunks` chunks take the extra
+    /// utterance). With one worker the whole batch stays a single chunk
+    /// — the canonical single-runtime path, whose batch-level
+    /// [`crate::systolic::TileTiming::batched`] accounting the
+    /// functional==analytic cross-checks pin down. With `threads`
+    /// workers the batch splits into `min(batch, 2 * threads)` chunks
+    /// that workers claim off an atomic cursor (like
+    /// `Explorer::sweep`) — more chunks than workers, so a worker stuck
+    /// on an expensive chunk (long pad tails) is stolen around instead
+    /// of waited on. Deterministic, so the merged chunk accounting is
+    /// too (it depends only on the chunk lengths, never on which worker
+    /// ran a chunk).
+    pub fn chunk_sizes(batch: usize, threads: usize) -> Vec<usize> {
+        if threads <= 1 || batch <= 1 {
+            return vec![batch];
+        }
+        let chunks = batch.min(2 * threads);
+        let base = batch / chunks;
+        let extra = batch % chunks;
+        (0..chunks).map(|i| base + usize::from(i < extra)).collect()
     }
 
     /// Run one padded batch of utterances through the weight-stationary
@@ -274,16 +297,20 @@ impl NativeBackend {
     }
 
     /// [`Self::forward_batch`] into a caller-owned buffer. With more
-    /// than one worker thread configured, the batch's utterances are
-    /// sharded contiguously across a `std::thread::scope` pool
-    /// (mirroring `Explorer::sweep`), one [`BatchForward`] runtime per
-    /// worker, reused across calls. Each utterance's log-probs are
-    /// **bitwise identical** to the single-threaded run — the batched
-    /// forward is bitwise per-utterance-exact for any batch split — and
-    /// the merged statistics charge exactly what each shard executed
-    /// ([`crate::systolic::TileTiming::batched`] at the shard's batch),
-    /// keeping the functional==analytic cross-checks valid under
-    /// sharding.
+    /// than one worker thread configured, the batch's utterances split
+    /// into contiguous chunks ([`Self::chunk_sizes`]) that a
+    /// `std::thread::scope` pool claims off an atomic work cursor
+    /// (mirroring `Explorer::sweep`) — one [`BatchForward`] runtime per
+    /// chunk, reused across calls, so a worker that finishes early
+    /// steals the next chunk instead of idling behind a ragged one.
+    /// Each utterance's log-probs are **bitwise identical** to the
+    /// single-threaded run — the batched forward is bitwise
+    /// per-utterance-exact for any batch split — and the merged
+    /// statistics charge exactly what each chunk executed
+    /// ([`crate::systolic::TileTiming::batched`] at the chunk's batch),
+    /// keeping the functional==analytic cross-checks valid under work
+    /// stealing: the charges depend only on the deterministic chunk
+    /// lengths, never on which worker claimed a chunk.
     pub fn forward_batch_into(
         &mut self,
         feats: &[f32],
@@ -298,14 +325,16 @@ impl NativeBackend {
         );
     }
 
-    /// [`Self::forward_batch_into`] with per-shard fault containment: a
-    /// panic inside one worker (or the single-threaded runtime) fails
-    /// only that shard's utterances — their output rows are zero-filled
+    /// [`Self::forward_batch_into`] with per-chunk fault containment: a
+    /// panic inside one chunk (or the single-threaded runtime) fails
+    /// only that chunk's utterances — their output rows are zero-filled
     /// for alignment and their indices returned — instead of unwinding
-    /// through the serving loop and killing the server. A panicked
-    /// shard's runtime is replaced fresh (its buffers may be
-    /// mid-mutation) and its statistics are not merged: a failed flush
-    /// charges nothing.
+    /// through the serving loop and killing the server. The unwind is
+    /// caught inside the stealing worker's claim loop, so a poisoned
+    /// chunk does not take the worker (or any chunk it would have
+    /// claimed next) down with it. A panicked chunk's runtime is
+    /// replaced fresh (its buffers may be mid-mutation) and its
+    /// statistics are not merged: a failed chunk charges nothing.
     pub fn forward_batch_contained(
         &mut self,
         feats: &[f32],
@@ -318,8 +347,8 @@ impl NativeBackend {
         assert_eq!(feats.len(), batch * t * f, "feats must be batch x seq x input");
         assert_eq!(pad.len(), batch * t, "pad mask must be batch x seq");
         let marker = self.panic_marker;
-        let shards = Self::shard_sizes(batch, self.threads);
-        if shards.len() <= 1 {
+        let chunks = Self::chunk_sizes(batch, self.threads);
+        if chunks.len() <= 1 {
             // Single runtime: catch the unwind and restore the
             // cumulative counters into a fresh runtime.
             let mut span = telemetry::Span::begin("shard.forward");
@@ -353,63 +382,96 @@ impl NativeBackend {
                 }
             };
         }
-        if self.shard_fwds.len() < shards.len() {
-            self.shard_fwds.resize_with(shards.len(), BatchForward::new);
+        let n = chunks.len();
+        if self.shard_fwds.len() < n {
+            self.shard_fwds.resize_with(n, BatchForward::new);
         }
-        if self.shard_outs.len() < shards.len() {
-            self.shard_outs.resize_with(shards.len(), Vec::new);
+        if self.shard_outs.len() < n {
+            self.shard_outs.resize_with(n, Vec::new);
         }
         let model = &self.model;
-        let mut panicked = vec![false; shards.len()];
+        // Chunk start offsets (in utterances), fixed up front — workers
+        // only decide *who* runs a chunk, never *what* it contains.
+        let mut starts = Vec::with_capacity(n);
+        let mut u0 = 0usize;
+        for &len in &chunks {
+            starts.push(u0);
+            u0 += len;
+        }
+        let panicked: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        let cursor = AtomicUsize::new(0);
+        // Per-chunk work slots: each holds the chunk's runtime (counters
+        // zeroed so the post-join merge adds exactly this call's work)
+        // and output buffer. The atomic cursor hands each index to
+        // exactly one worker; the mutex encodes that exclusivity.
+        let slots: Vec<Mutex<(&mut BatchForward, &mut Vec<f32>)>> = self.shard_fwds[..n]
+            .iter_mut()
+            .zip(self.shard_outs[..n].iter_mut())
+            .map(|(fwd, sout)| {
+                fwd.stats = ForwardStats::default();
+                Mutex::new((fwd, sout))
+            })
+            .collect();
+        let workers = self.threads.min(n);
         let parent = telemetry::current_span();
         std::thread::scope(|s| {
-            let mut u0 = 0usize;
-            let mut handles = Vec::with_capacity(shards.len());
-            for (i, ((&len, fwd), sout)) in shards
-                .iter()
-                .zip(self.shard_fwds.iter_mut())
-                .zip(self.shard_outs.iter_mut())
-                .enumerate()
-            {
-                let sf = &feats[u0 * t * f..(u0 + len) * t * f];
-                let sp = &pad[u0 * t..(u0 + len) * t];
-                // Zero the shard's counters so the post-join merge adds
-                // exactly this call's work.
-                fwd.stats = ForwardStats::default();
-                handles.push(s.spawn(move || {
+            for wi in 0..workers {
+                let (slots, chunks, starts) = (&slots, &chunks, &starts);
+                let (panicked, cursor) = (&panicked, &cursor);
+                s.spawn(move || {
                     // Worker-thread root span, parented to the flush
                     // span on the serving thread.
                     let mut span = telemetry::Span::begin_with_parent("shard.forward", parent);
-                    if span.is_live() {
-                        span.attr("shard", i);
-                        span.attr("rows", len);
+                    let mut rows = 0usize;
+                    let mut claimed = 0usize;
+                    let mut done = ForwardStats::default();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= chunks.len() {
+                            break;
+                        }
+                        let (len, c0) = (chunks[i], starts[i]);
+                        let sf = &feats[c0 * t * f..(c0 + len) * t * f];
+                        let sp = &pad[c0 * t..(c0 + len) * t];
+                        let mut slot = slots[i].lock().unwrap();
+                        let (fwd, sout) = &mut *slot;
+                        // Catch the unwind *inside* the claim loop: a
+                        // poisoned chunk must not kill this worker or
+                        // strand the chunks it would have claimed next.
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            panic_if_marked(sf, marker, t, f);
+                            fwd.run_feats(model, len, sf, sp, sout);
+                        }));
+                        match run {
+                            Ok(()) => {
+                                rows += len;
+                                claimed += 1;
+                                done.add(&fwd.stats);
+                            }
+                            Err(_) => panicked[i].store(true, Ordering::Relaxed),
+                        }
                     }
-                    panic_if_marked(sf, marker, t, f);
-                    fwd.run_feats(model, len, sf, sp, sout);
                     if span.is_live() {
-                        // Zeroed above, so the cumulative counters are
-                        // exactly this shard's work.
-                        fwd.stats.total().annotate(&mut span);
+                        span.attr("worker", wi);
+                        span.attr("chunks", claimed);
+                        span.attr("rows", rows);
+                        done.total().annotate(&mut span);
                     }
-                }));
-                u0 += len;
-            }
-            // Join inside the scope: a worker panic becomes an `Err`
-            // here instead of resuming its unwind at scope exit (only
-            // unjoined handles propagate).
-            for (h, flag) in handles.into_iter().zip(panicked.iter_mut()) {
-                *flag = h.join().is_err();
+                });
             }
         });
+        drop(slots);
         out.clear();
         out.reserve(batch * t * v);
-        // Concatenate in utterance order and merge each worker's
-        // counters into the canonical accumulator (only the shards this
-        // call used — the pools may be larger from an earlier call).
+        // Concatenate in utterance order and merge each chunk's counters
+        // into the canonical accumulator — chunk order, not claim order,
+        // so the merged accounting is deterministic (only the chunks
+        // this call used — the pools may be larger from an earlier
+        // call).
         let mut failed = Vec::new();
         let mut u0 = 0usize;
-        for (i, &len) in shards.iter().enumerate() {
-            if panicked[i] {
+        for (i, &len) in chunks.iter().enumerate() {
+            if panicked[i].load(Ordering::Relaxed) {
                 out.resize(out.len() + len * t * v, 0.0);
                 failed.extend(u0..u0 + len);
                 self.shard_fwds[i] = BatchForward::new();
@@ -438,6 +500,42 @@ impl NativeBackend {
     /// each utterance on the KV-cache runtime. Per-utterance outputs are
     /// bitwise identical to the batch-of-one path (tested below).
     pub fn translate(&mut self, src: &[i32], src_len: &[usize]) -> Result<Vec<Vec<i32>>> {
+        let (ck, cv) = self.encode_cross_kv(src, src_len)?;
+        let dims = self.model.dims;
+        let (t, d) = (dims.seq_len, dims.d_model);
+        let dec = self.dec_model.as_ref().expect("checked by encode_cross_kv");
+        let batch = src_len.len();
+
+        // Per-utterance greedy decode over the shared precompute.
+        let mut out = Vec::with_capacity(batch);
+        let mut hyp = Vec::new();
+        for (u, &len) in src_len.iter().enumerate() {
+            let base = u * t * d;
+            self.dec_fwd.start_with(dec, len, |i| {
+                (
+                    &ck[i][base..base + len * d],
+                    &cv[i][base..base + len * d],
+                )
+            });
+            self.dec_fwd.generate_started(dec, &mut hyp);
+            out.push(hyp.clone());
+        }
+        Ok(out)
+    }
+
+    /// Batched encode (real pad masks) plus the batched
+    /// weight-stationary cross-attention K/V precompute: one `[batch *
+    /// seq_len, d]` panel per decoder block, each live tile
+    /// loaded/dequantized once for the whole batch
+    /// ([`crate::systolic::TileTiming::batched`]). Returns the per-block
+    /// K and V panels; the valid `src_len` rows are sliced per
+    /// utterance by the decode paths. Charges the precompute to the
+    /// decode-scope `cross_kv` accounting.
+    fn encode_cross_kv(
+        &mut self,
+        src: &[i32],
+        src_len: &[usize],
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
         let dims = self.model.dims;
         ensure!(dims.token_input, "MT translation on a feature-input model");
         let dec = self
@@ -454,15 +552,12 @@ impl NativeBackend {
                 "utterance {u}: src_len {len} out of 1..={t}"
             );
         }
-        let d = dims.d_model;
 
         // Batched encode (real pad masks) → post-ln_f memory panel.
         let mut memory = Vec::new();
         self.fwd
             .memory_tokens(&self.model, batch, src, src_len, &mut memory);
 
-        // Batched weight-stationary cross-K/V precompute: one panel per
-        // block, each live tile packed once for the whole batch.
         let n_blocks = dec.blocks.len();
         let mut ck: Vec<Vec<f32>> = vec![Vec::new(); n_blocks];
         let mut cv: Vec<Vec<f32>> = vec![Vec::new(); n_blocks];
@@ -483,22 +578,105 @@ impl NativeBackend {
                 crate::infer::Layer::CrossKv, &sv, dec.tile, dec.quant,
             );
         }
+        Ok((ck, cv))
+    }
 
-        // Per-utterance greedy decode over the shared precompute.
-        let mut out = Vec::with_capacity(batch);
-        let mut hyp = Vec::new();
-        for (u, &len) in src_len.iter().enumerate() {
+    /// [`Self::translate`] on the continuous (iteration-level)
+    /// scheduler: same batched encode + cross-K/V precompute, then all
+    /// utterances decode through a `max_slots`-wide
+    /// [`ContinuousDecoder`] with a FIFO refill queue — an EOS'd or
+    /// max-len'd slot retires and the next queued utterance joins
+    /// before the following step, so every step's `[k, d]` GEMV panels
+    /// stay as full as the queue allows. Outputs are **bitwise
+    /// identical** to [`Self::translate`] per utterance (the panel-step
+    /// contract, property-tested in both modules); alongside them the
+    /// per-step slot-count schedule is returned — the panel-fill
+    /// evidence, and the exact input
+    /// [`crate::sysim::engine::gemm_on_array_decode_batched`] needs to
+    /// reproduce the run's decode charges analytically.
+    pub fn translate_continuous(
+        &mut self,
+        src: &[i32],
+        src_len: &[usize],
+        max_slots: usize,
+    ) -> Result<(Vec<Vec<i32>>, Vec<usize>)> {
+        ensure!(max_slots > 0, "need at least one decode slot");
+        let (ck, cv) = self.encode_cross_kv(src, src_len)?;
+        let dims = self.model.dims;
+        let (t, d) = (dims.seq_len, dims.d_model);
+        let dec = self.dec_model.as_ref().expect("checked by encode_cross_kv");
+        let batch = src_len.len();
+
+        let mut cd = ContinuousDecoder::new(max_slots.min(batch));
+        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); batch];
+        let mut next = 0usize;
+        loop {
+            while cd.live() < cd.max_slots() && next < batch {
+                let (u, len) = (next, src_len[next]);
+                let base = u * t * d;
+                cd.admit(dec, u as u64, len, |i| {
+                    (
+                        &ck[i][base..base + len * d],
+                        &cv[i][base..base + len * d],
+                    )
+                });
+                next += 1;
+            }
+            if cd.live() == 0 {
+                break;
+            }
+            for fin in cd.step(dec) {
+                outs[fin.id as usize] = fin.tokens;
+            }
+        }
+        let schedule = cd.step_batches().to_vec();
+        self.dec_fwd.stats.add(&cd.stats);
+        Ok((outs, schedule))
+    }
+
+    /// Join utterances into a live continuous-decode session: batched
+    /// encode + cross-K/V for the joiners (one weight-stationary panel
+    /// per block across all of them — the amortization survives even
+    /// mid-flight joins), then admit each under its caller-chosen id.
+    /// The serving loop calls this between steps as slots free up.
+    pub fn decode_join(
+        &mut self,
+        cd: &mut ContinuousDecoder,
+        ids: &[u64],
+        src: &[i32],
+        src_len: &[usize],
+    ) -> Result<()> {
+        ensure!(ids.len() == src_len.len(), "one id per joining utterance");
+        ensure!(
+            cd.live() + ids.len() <= cd.max_slots(),
+            "{} joiners into {} free slots",
+            ids.len(),
+            cd.max_slots() - cd.live()
+        );
+        let (ck, cv) = self.encode_cross_kv(src, src_len)?;
+        let dims = self.model.dims;
+        let (t, d) = (dims.seq_len, dims.d_model);
+        let dec = self.dec_model.as_ref().expect("checked by encode_cross_kv");
+        for (u, (&id, &len)) in ids.iter().zip(src_len).enumerate() {
             let base = u * t * d;
-            self.dec_fwd.start_with(dec, len, |i| {
+            cd.admit(dec, id, len, |i| {
                 (
                     &ck[i][base..base + len * d],
                     &cv[i][base..base + len * d],
                 )
             });
-            self.dec_fwd.generate_started(dec, &mut hyp);
-            out.push(hyp.clone());
         }
-        Ok(out)
+        Ok(())
+    }
+
+    /// One lockstep panel step of a continuous-decode session; retired
+    /// slots come back so the serving loop can respond and refill.
+    pub fn decode_step(&self, cd: &mut ContinuousDecoder) -> Result<Vec<Finished>> {
+        let dec = self
+            .dec_model
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("backend has no decoder staged"))?;
+        Ok(cd.step(dec))
     }
 }
 
@@ -559,7 +737,12 @@ impl QosBackend for NativeBackend {
         // exactly-zero tiles are skipped).
         let tile = if w.dims.tile_ok(tile) { tile } else { w.dims.tile };
         let masks = recover_masks(&w, tile)?;
-        self.model = PreparedModel::new_with(&w, tile, quant, Some(&masks), self.per_channel)?;
+        // The artifact contract's per-channel flag: a bundle staged with
+        // per-channel scales carries the `quant.per_channel` marker, so
+        // both backends (native here, PJRT python-side) stage the same
+        // quantization scheme without out-of-band configuration.
+        let pc = self.per_channel || params.get("quant.per_channel").is_some();
+        self.model = PreparedModel::new_with(&w, tile, quant, Some(&masks), pc)?;
         if let Some(dec_master) = &self.dec_master {
             let dw = DecoderWeights::from_bundle(dec_master.dims, params)?;
             let dec_masks = dw.recover_masks(tile)?;
@@ -568,7 +751,7 @@ impl QosBackend for NativeBackend {
                 tile,
                 quant,
                 Some(&dec_masks),
-                self.per_channel,
+                pc,
             )?);
         }
         self.serve_manifest.model.tile = tile;
@@ -983,6 +1166,72 @@ mod tests {
     }
 
     #[test]
+    fn continuous_translate_bitwise_equals_sequential_translate() {
+        // Tentpole integration contract at backend scope: the
+        // continuous iteration-level scheduler produces exactly the
+        // sequential per-utterance translations, in both weight
+        // formats, while packing each step's GEMVs into shared panels.
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let mut seq = mini_mt_backend(4);
+            seq.prepare(8, 0.3, quant).unwrap();
+            let (src, lens) = mt_batch(&seq, 6, 5);
+            let want = seq.translate(&src, &lens).unwrap();
+
+            let mut cont = mini_mt_backend(4);
+            cont.prepare(8, 0.3, quant).unwrap();
+            cont.reset_stats();
+            let (got, schedule) = cont.translate_continuous(&src, &lens, 3).unwrap();
+            assert_eq!(got, want, "{quant:?}: continuous == sequential");
+            // The schedule is the decode accounting's ground truth:
+            // its sum is the step count, its entries the panel fills.
+            let ds = cont.decode_stats();
+            assert_eq!(ds.steps, schedule.iter().sum::<usize>(), "{quant:?}");
+            assert_eq!(ds.utterances, 6, "{quant:?}");
+            assert!(schedule[0] == 3, "{quant:?}: starts with a full panel");
+            assert!(schedule.iter().all(|&k| k >= 1 && k <= 3), "{quant:?}");
+            // Cross-K/V precompute ran batched up front, charged once.
+            assert!(ds.cross_kv.timing.prog_words > 0, "{quant:?}");
+        }
+    }
+
+    #[test]
+    fn decode_join_and_step_drive_a_session_like_translate_continuous() {
+        // The serving-loop surface: joining utterances in two waves and
+        // stepping manually produces the same per-utterance outputs as
+        // the one-shot continuous path (and as sequential decode) —
+        // joins between steps do not disturb in-flight slots.
+        let mut be = mini_mt_backend(4);
+        be.prepare(8, 0.3, Quant::Int8).unwrap();
+        let (src, lens) = mt_batch(&be, 4, 7);
+        let want = be.translate(&src, &lens).unwrap();
+
+        let t = be.dims().seq_len;
+        let mut cd = ContinuousDecoder::new(2);
+        let mut got: Vec<Vec<i32>> = vec![Vec::new(); 4];
+        let mut joined = 0usize;
+        while joined < 4 || cd.live() > 0 {
+            let free = cd.max_slots() - cd.live();
+            let take = free.min(4 - joined);
+            if take > 0 {
+                let ids: Vec<u64> = (joined..joined + take).map(|u| u as u64).collect();
+                be.decode_join(
+                    &mut cd,
+                    &ids,
+                    &src[joined * t..(joined + take) * t],
+                    &lens[joined..joined + take],
+                )
+                .unwrap();
+                joined += take;
+            }
+            for fin in be.decode_step(&mut cd).unwrap() {
+                got[fin.id as usize] = fin.tokens;
+            }
+        }
+        assert_eq!(got, want, "join/step session == sequential translate");
+        assert_eq!(cd.stats.utterances, 4);
+    }
+
+    #[test]
     fn mt_prepare_and_configure_agree() {
         // The direct pruning path and the QoS bundle path (zeroed tiles
         // + mask recovery on encoder AND decoder) produce identical
@@ -1067,13 +1316,26 @@ mod tests {
     }
 
     #[test]
-    fn shard_sizes_cover_and_balance() {
-        assert_eq!(NativeBackend::shard_sizes(5, 2), vec![3, 2]);
-        assert_eq!(NativeBackend::shard_sizes(4, 4), vec![1, 1, 1, 1]);
-        assert_eq!(NativeBackend::shard_sizes(2, 4), vec![1, 1], "never empty shards");
-        assert_eq!(NativeBackend::shard_sizes(7, 3), vec![3, 2, 2]);
-        assert_eq!(NativeBackend::shard_sizes(6, 1), vec![6]);
-        assert_eq!(NativeBackend::shard_sizes(1, 8), vec![1]);
+    fn chunk_sizes_cover_and_balance() {
+        // 2x-oversubscribed chunking for the work queue: min(batch,
+        // 2 * threads) contiguous near-equal chunks, a single chunk on
+        // the single-worker path.
+        assert_eq!(NativeBackend::chunk_sizes(5, 2), vec![2, 1, 1, 1]);
+        assert_eq!(NativeBackend::chunk_sizes(4, 4), vec![1, 1, 1, 1]);
+        assert_eq!(NativeBackend::chunk_sizes(2, 4), vec![1, 1], "never empty chunks");
+        assert_eq!(NativeBackend::chunk_sizes(7, 3), vec![2, 1, 1, 1, 1, 1]);
+        assert_eq!(NativeBackend::chunk_sizes(20, 4), vec![3, 3, 3, 3, 2, 2, 2, 2]);
+        assert_eq!(
+            NativeBackend::chunk_sizes(6, 1),
+            vec![6],
+            "one worker keeps the batch-level accounting path"
+        );
+        assert_eq!(NativeBackend::chunk_sizes(1, 8), vec![1]);
+        for (batch, threads) in [(5, 2), (7, 3), (20, 4), (3, 8)] {
+            let chunks = NativeBackend::chunk_sizes(batch, threads);
+            assert_eq!(chunks.iter().sum::<usize>(), batch, "{batch}/{threads} covers");
+            assert!(chunks.iter().all(|&c| c > 0));
+        }
     }
 
     /// A ragged batch of synthetic features over the mini model.
@@ -1095,9 +1357,10 @@ mod tests {
 
     #[test]
     fn prop_sharded_forward_batch_bitwise_equals_single_thread() {
-        // The tentpole exactness contract: sharding a flushed batch
-        // across worker threads must not change a single output bit —
-        // ragged tails, both weight formats, any thread count.
+        // The work-stealing exactness contract: chunking a flushed
+        // batch across an atomic-cursor worker pool must not change a
+        // single output bit — ragged tails, both weight formats, any
+        // thread count, regardless of which worker claims which chunk.
         crate::util::prop::check(
             "sharded == single-thread forward_batch",
             10,
@@ -1125,10 +1388,11 @@ mod tests {
 
     #[test]
     fn sharded_stats_sum_per_shard_batched_accounting() {
-        // Functional == analytic under sharding: a batch of 5 over 2
-        // workers runs as contiguous shards of 3 + 2, and the merged ff
+        // Functional == analytic under work stealing: a batch of 5 over
+        // 2 workers splits into chunks of 2 + 1 + 1 + 1 (claim order
+        // races, chunk composition does not), and the merged ff
         // statistics must charge exactly the analytic batched cost of
-        // each shard, summed.
+        // each chunk, summed.
         use crate::model::{GemmKind, GemmShape};
         use crate::sysim::engine::gemm_on_array_batched;
         use crate::sysim::SimParams;
@@ -1139,7 +1403,7 @@ mod tests {
         let mut be = NativeBackend::new(w, 5).unwrap();
         let plan = be.prepare(8, 0.5, Quant::Int8).unwrap();
         be.set_threads(2);
-        assert_eq!(NativeBackend::shard_sizes(5, 2), vec![3, 2]);
+        assert_eq!(NativeBackend::chunk_sizes(5, 2), vec![2, 1, 1, 1]);
         let t = dims.seq_len;
         let (feats, pad) = ragged(&dims, 5, 9);
         be.reset_stats();
@@ -1158,8 +1422,8 @@ mod tests {
                 (GemmShape { m: t, k: f, n: d, kind: GemmKind::FeedForward }, 2 * i + 1),
             ];
             for (g, mi) in shapes {
-                for shard in [3usize, 2] {
-                    let c = gemm_on_array_batched(&g, &cfg, &p, Some(&plan.masks[mi]), shard);
+                for chunk in [2usize, 1, 1, 1] {
+                    let c = gemm_on_array_batched(&g, &cfg, &p, Some(&plan.masks[mi]), chunk);
                     macs += c.counts.macs;
                     bus += c.counts.bus_words;
                     cycles += c.counts.array_busy_cycles;
@@ -1202,10 +1466,12 @@ mod tests {
 
     #[test]
     fn contained_worker_panic_fails_only_its_shard() {
-        // Satellite: one worker blowing up must not kill the batcher —
-        // its shard's utterances fail (zero-filled rows), the surviving
-        // shard's outputs stay bitwise intact, and the backend keeps
-        // serving afterwards.
+        // Satellite: a poisoned chunk must not kill the batcher OR the
+        // stealing worker that claimed it — the worker catches the
+        // unwind inside its claim loop and keeps draining the queue, so
+        // only the poisoned chunk's utterances fail (zero-filled rows),
+        // every other chunk's output stays bitwise intact, and the
+        // backend keeps serving afterwards.
         const MARKER: f32 = 55.5;
         let dims = mini_dims();
         let (t, f, v) = (dims.seq_len, dims.input_dim, dims.vocab);
@@ -1213,28 +1479,30 @@ mod tests {
         be.set_threads(2);
         be.set_panic_marker(Some(MARKER));
         let (mut feats, pad) = ragged(&dims, 4, 17);
-        // Poison utterance 0: with shards [2, 2], the first worker dies
-        // and takes utterances 0 and 1 with it.
+        // Poison utterance 0: with single-utterance chunks, exactly one
+        // chunk dies; its worker survives to claim later chunks (with 4
+        // chunks over 2 workers the poisoned worker must pick up more
+        // work for the batch to complete).
         feats[0] = MARKER;
-        assert_eq!(NativeBackend::shard_sizes(4, 2), vec![2, 2]);
+        assert_eq!(NativeBackend::chunk_sizes(4, 2), vec![1, 1, 1, 1]);
         be.reset_stats();
         let mut out = Vec::new();
         let failed = be.forward_batch_contained(&feats, &pad, 4, &mut out);
-        assert_eq!(failed, vec![0, 1], "exactly the poisoned shard fails");
+        assert_eq!(failed, vec![0], "exactly the poisoned chunk fails");
         assert_eq!(out.len(), 4 * t * v, "output stays batch-aligned");
-        assert!(out[..2 * t * v].iter().all(|&x| x == 0.0), "failed rows zeroed");
-        assert_eq!(be.stats().utterances, 2, "failed shard charges nothing");
+        assert!(out[..t * v].iter().all(|&x| x == 0.0), "failed rows zeroed");
+        assert_eq!(be.stats().utterances, 3, "failed chunk charges nothing");
 
-        // The surviving shard is bitwise what a clean run produces.
+        // The surviving chunks are bitwise what a clean run produces.
         let mut reference = NativeBackend::new(synth_weights(&dims, 91), 4).unwrap();
-        let want = reference.forward_batch(&feats[2 * t * f..], &pad[2 * t..], 2);
-        assert_eq!(&out[2 * t * v..], &want[..], "surviving shard bitwise intact");
+        let want = reference.forward_batch(&feats[t * f..], &pad[t..], 3);
+        assert_eq!(&out[t * v..], &want[..], "surviving chunks bitwise intact");
 
         // And the backend still serves a clean batch afterwards.
         let (clean, cpad) = ragged(&dims, 4, 18);
         let failed = be.forward_batch_contained(&clean, &cpad, 4, &mut out);
         assert!(failed.is_empty(), "clean flush after containment: {failed:?}");
-        assert_eq!(be.stats().utterances, 6);
+        assert_eq!(be.stats().utterances, 7);
     }
 
     #[test]

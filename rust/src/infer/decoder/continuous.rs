@@ -1,0 +1,626 @@
+//! [`ContinuousDecoder`] — iteration-level (continuous) batched
+//! decoding: the LLM-server-style step scheduler for MT.
+//!
+//! The sequential decode path ([`super::DecoderForward`]) issues one
+//! skinny `[1, d]` GEMV per weight matrix per generated token — exactly
+//! the shape that starves a wide weight-stationary array, because every
+//! live tile is programmed for a single activation row. This scheduler
+//! steps many in-flight decodes **in lockstep**: at each step the `k`
+//! live slots' token rows are gathered into one `[k, d]` panel and every
+//! weight GEMM runs on the batched weight-stationary kernels
+//! ([`crate::infer::batch::gemm`]), so each live tile is programmed once
+//! per step and streamed by all `k` slots ([`crate::systolic::
+//! TileTiming::batched`] at `m = 1`). Slots join and leave **between
+//! steps**: a slot that emits EOS or hits `max_len` retires at the end
+//! of its step and the caller immediately refills the panel from its
+//! admission queue, so the panel stays as full as the queue allows —
+//! the batch composition is different every step, which is why the
+//! analytic counterpart ([`crate::sysim::engine::
+//! gemm_on_array_decode_batched`]) takes the whole per-step slot-count
+//! schedule ([`ContinuousDecoder::step_batches`]).
+//!
+//! **Bitwise contract.** Each slot's generated tokens are bitwise
+//! identical to running [`super::DecoderForward::generate`] on that
+//! utterance alone, regardless of which slots share its panels:
+//!
+//! - every batched weight kernel streams rows through each packed tile
+//!   with the same per-output-element k-ascending accumulation as the
+//!   per-utterance kernels (property-proven row-wise bitwise equality
+//!   in [`crate::infer::batch::gemm`]),
+//! - attention runs per slot through [`super::forward::attend_row`] —
+//!   the *only* attention arithmetic in the decoder — over that slot's
+//!   own KV caches, and
+//! - LayerNorm / bias / ReLU / residual are row-wise.
+//!
+//! So batch composition is invisible to the arithmetic; it only changes
+//! the accounting (tile programming amortized across the live slots).
+//! The contract is property-tested below under random join/leave
+//! schedules on both weight formats.
+
+use crate::systolic::Quant;
+use crate::telemetry::{self, LazyHistogram};
+
+use super::super::batch::gemm::gemm_batched_f32;
+use super::super::gemm::TileStats;
+use super::super::layers::{self, Layer};
+use super::super::ops;
+use super::forward::{attend_row, DecodeStats};
+use super::PreparedDecoder;
+
+/// Panel fill per continuous decode step — how many slots were live
+/// when the step's `[k, d]` GEMV panels ran. `sasp report trace`/`util`
+/// surface it as the decode-side utilization evidence.
+static M_DECODE_OCC: LazyHistogram = LazyHistogram::new("sasp_decode_batch_occupancy");
+
+/// A retired decode: the slot's utterance id and its generated tokens
+/// (BOS/EOS excluded), exactly what [`super::DecoderForward::
+/// generate_started`] would have produced for the same utterance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finished {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// One in-flight decode: its own KV caches (self-attention grown one
+/// row per step, cross-attention fixed at admission) plus the greedy
+/// generation state.
+struct Slot {
+    id: u64,
+    src_len: usize,
+    /// Steps taken == the position the next token row will occupy.
+    pos: usize,
+    /// The token fed at the next step (BOS at admission).
+    tok: i32,
+    out: Vec<i32>,
+    self_k: Vec<Vec<f32>>,
+    self_v: Vec<Vec<f32>>,
+    cross_k: Vec<Vec<f32>>,
+    cross_v: Vec<Vec<f32>>,
+}
+
+/// The continuous-batching decode runtime: owns up to `max_slots`
+/// in-flight decodes and every panel buffer, so steady-state stepping
+/// performs no allocation beyond growth to the fullest panel seen.
+pub struct ContinuousDecoder {
+    max_slots: usize,
+    slots: Vec<Slot>,
+    /// Slot count of every step taken, in order — the analytic model's
+    /// decode schedule ([`crate::sysim::engine::gemm_on_array_decode_batched`]).
+    step_batches: Vec<usize>,
+    pub stats: DecodeStats,
+    // Panel scratch, `[k, ...]` row-major over the live slots.
+    h: Vec<f32>,
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    kv: Vec<f32>,
+    ctx: Vec<f32>,
+    tmp: Vec<f32>,
+    mid: Vec<f32>,
+    logits: Vec<f32>,
+    scores: Vec<f32>,
+    wtile: Vec<f32>,
+}
+
+impl ContinuousDecoder {
+    pub fn new(max_slots: usize) -> Self {
+        assert!(max_slots > 0, "need at least one decode slot");
+        ContinuousDecoder {
+            max_slots,
+            slots: Vec::with_capacity(max_slots),
+            step_batches: Vec::new(),
+            stats: DecodeStats::default(),
+            h: Vec::new(),
+            hn: Vec::new(),
+            q: Vec::new(),
+            kv: Vec::new(),
+            ctx: Vec::new(),
+            tmp: Vec::new(),
+            mid: Vec::new(),
+            logits: Vec::new(),
+            scores: Vec::new(),
+            wtile: Vec::new(),
+        }
+    }
+
+    /// Live (in-flight) slots.
+    pub fn live(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    /// The per-step slot-count schedule executed so far — feed it to
+    /// [`crate::sysim::engine::gemm_on_array_decode_batched`] to
+    /// reproduce this run's per-GEMM charges analytically.
+    pub fn step_batches(&self) -> &[usize] {
+        &self.step_batches
+    }
+
+    /// Admit one utterance into a free slot with **externally
+    /// precomputed** cross-attention K/V (the serving path batches that
+    /// precompute weight-stationary across joiners, exactly like
+    /// [`super::DecoderForward::start_with`]): `kv(i)` returns the
+    /// block-`i` `(K, V)` slices, each `src_len x d_model`. The caller
+    /// owns the precompute's accounting.
+    pub fn admit<'a>(
+        &mut self,
+        m: &PreparedDecoder,
+        id: u64,
+        src_len: usize,
+        kv: impl Fn(usize) -> (&'a [f32], &'a [f32]),
+    ) {
+        assert!(self.slots.len() < self.max_slots, "no free decode slot");
+        assert!(src_len > 0, "empty source");
+        let d = m.dims.d_model;
+        let n_blocks = m.blocks.len();
+        let mut slot = Slot {
+            id,
+            src_len,
+            pos: 0,
+            tok: m.dims.bos,
+            out: Vec::new(),
+            self_k: vec![Vec::new(); n_blocks],
+            self_v: vec![Vec::new(); n_blocks],
+            cross_k: Vec::with_capacity(n_blocks),
+            cross_v: Vec::with_capacity(n_blocks),
+        };
+        for i in 0..n_blocks {
+            let (k, v) = kv(i);
+            assert_eq!(k.len(), src_len * d, "block {i} cross-K shape");
+            assert_eq!(v.len(), src_len * d, "block {i} cross-V shape");
+            slot.cross_k.push(k.to_vec());
+            slot.cross_v.push(v.to_vec());
+        }
+        self.slots.push(slot);
+        self.stats.utterances += 1;
+    }
+
+    /// Advance every live slot by one token in lockstep: one batched
+    /// weight-stationary panel pass per weight GEMM (`batch = live`,
+    /// `m = 1`), per-slot attention over each slot's own caches, then
+    /// greedy argmax per slot. Slots that emit EOS or reach `max_len`
+    /// retire and are returned (in slot order) so the caller can refill
+    /// the panel before the next step.
+    pub fn step(&mut self, m: &PreparedDecoder) -> Vec<Finished> {
+        let k = self.slots.len();
+        assert!(k > 0, "step with no live slots");
+        let mut span = telemetry::Span::begin("decode.continuous_step");
+        let live = telemetry::active();
+        let before = if span.is_live() { self.stats.total() } else { TileStats::default() };
+        if live {
+            M_DECODE_OCC.get().observe(k as u64);
+        }
+        let dims = &m.dims;
+        let (d, v) = (dims.d_model, dims.vocab);
+
+        // Gather the `[k, d]` input panel: per slot, the embedding of
+        // the token it is feeding plus that slot's position row — the
+        // same two row-wise ops the sequential step performs.
+        self.h.clear();
+        self.h.resize(k * d, 0.0);
+        for (si, slot) in self.slots.iter().enumerate() {
+            let p = slot.pos;
+            assert!(p < dims.max_len, "slot {} stepped past max_len", slot.id);
+            let ti = slot.tok as usize;
+            assert!(ti < v, "token {ti} out of vocab {v}");
+            let row = &mut self.h[si * d..(si + 1) * d];
+            row.copy_from_slice(&m.emb[ti * d..(ti + 1) * d]);
+            ops::residual_add(row, &m.pe[p * d..(p + 1) * d]);
+        }
+        self.ctx.clear();
+        self.ctx.resize(k * d, 0.0);
+
+        for (i, blk) in m.blocks.iter().enumerate() {
+            // --- causal masked self-attention over each slot's prefix -
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln1_g, &blk.ln1_b);
+            let sq = blk.sq.gemm_batched(&self.hn, k, 1, None, m.tile, &mut self.q, &mut self.wtile);
+            let sk = blk.sk.gemm_batched(&self.hn, k, 1, None, m.tile, &mut self.kv, &mut self.wtile);
+            for (si, slot) in self.slots.iter_mut().enumerate() {
+                slot.self_k[i].extend_from_slice(&self.kv[si * d..(si + 1) * d]);
+            }
+            let sv = blk.sv.gemm_batched(&self.hn, k, 1, None, m.tile, &mut self.kv, &mut self.wtile);
+            for (si, slot) in self.slots.iter_mut().enumerate() {
+                slot.self_v[i].extend_from_slice(&self.kv[si * d..(si + 1) * d]);
+            }
+            self.stats.attn.add(&sq);
+            self.stats.attn.add(&sk);
+            self.stats.attn.add(&sv);
+            layers::record(Layer::DecAttn, &sq, m.tile, m.quant);
+            layers::record(Layer::DecAttn, &sk, m.tile, m.quant);
+            layers::record(Layer::DecAttn, &sv, m.tile, m.quant);
+            for (si, slot) in self.slots.iter().enumerate() {
+                attend_row(
+                    &self.q[si * d..(si + 1) * d],
+                    &slot.self_k[i],
+                    &slot.self_v[i],
+                    slot.pos + 1,
+                    d,
+                    dims.n_heads,
+                    &mut self.scores,
+                    &mut self.ctx[si * d..(si + 1) * d],
+                );
+            }
+            let so = blk.so.gemm_batched(&self.ctx, k, 1, None, m.tile, &mut self.tmp, &mut self.wtile);
+            self.stats.attn.add(&so);
+            layers::record(Layer::DecAttn, &so, m.tile, m.quant);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- encoder-decoder cross-attention (K/V from admission) -
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.lnx_g, &blk.lnx_b);
+            let xq = blk.xq.gemm_batched(&self.hn, k, 1, None, m.tile, &mut self.q, &mut self.wtile);
+            self.stats.attn.add(&xq);
+            layers::record(Layer::DecAttn, &xq, m.tile, m.quant);
+            for (si, slot) in self.slots.iter().enumerate() {
+                attend_row(
+                    &self.q[si * d..(si + 1) * d],
+                    &slot.cross_k[i],
+                    &slot.cross_v[i],
+                    slot.src_len,
+                    d,
+                    dims.n_heads,
+                    &mut self.scores,
+                    &mut self.ctx[si * d..(si + 1) * d],
+                );
+            }
+            let xo = blk.xo.gemm_batched(&self.ctx, k, 1, None, m.tile, &mut self.tmp, &mut self.wtile);
+            self.stats.attn.add(&xo);
+            layers::record(Layer::DecAttn, &xo, m.tile, m.quant);
+            ops::residual_add(&mut self.h, &self.tmp);
+
+            // --- pre-LN SASP feed-forward -----------------------------
+            self.hn.clear();
+            self.hn.extend_from_slice(&self.h);
+            ops::layer_norm(&mut self.hn, d, &blk.ln2_g, &blk.ln2_b);
+            let mut ff_span = telemetry::Span::begin("gemm.decode_ff");
+            let s1 =
+                blk.w1.gemm_batched(&self.hn, k, 1, Some(&blk.mask1), m.tile, &mut self.mid, &mut self.wtile);
+            self.stats.ff.add(&s1);
+            layers::record(Layer::DecFf, &s1, m.tile, m.quant);
+            ops::add_bias(&mut self.mid, &blk.b1);
+            ops::relu(&mut self.mid);
+            let s2 =
+                blk.w2.gemm_batched(&self.mid, k, 1, Some(&blk.mask2), m.tile, &mut self.tmp, &mut self.wtile);
+            self.stats.ff.add(&s2);
+            layers::record(Layer::DecFf, &s2, m.tile, m.quant);
+            if ff_span.is_live() {
+                ff_span.attr("block", i);
+                ff_span.attr("slots", k);
+                let mut ff = s1;
+                ff.add(&s2);
+                ff.annotate(&mut ff_span);
+            }
+            drop(ff_span);
+            ops::add_bias(&mut self.tmp, &blk.b2);
+            ops::residual_add(&mut self.h, &self.tmp);
+        }
+
+        self.hn.clear();
+        self.hn.extend_from_slice(&self.h);
+        ops::layer_norm(&mut self.hn, d, &m.lnf_g, &m.lnf_b);
+        let st = gemm_batched_f32(
+            &self.hn, &m.head_w, k, 1, d, v, None, m.tile, &mut self.logits, &mut self.wtile,
+        );
+        self.stats.other.add(&st);
+        layers::record(Layer::Head, &st, m.tile, Quant::Fp32);
+        ops::add_bias(&mut self.logits, &m.head_b);
+        self.stats.steps += k;
+        self.step_batches.push(k);
+
+        // Greedy argmax per slot (first-max-wins, the sequential tie
+        // rule), then retire EOS'd and max-len'd slots in slot order.
+        let mut finished = Vec::new();
+        let logits = &self.logits;
+        let (eos, max_len) = (dims.eos, dims.max_len);
+        let mut si = 0usize;
+        self.slots.retain_mut(|slot| {
+            let row = &logits[si * v..(si + 1) * v];
+            si += 1;
+            let mut best = 0usize;
+            for (j, l) in row.iter().enumerate() {
+                if *l > row[best] {
+                    best = j;
+                }
+            }
+            let next = best as i32;
+            slot.pos += 1;
+            if next == eos {
+                finished.push(Finished { id: slot.id, tokens: std::mem::take(&mut slot.out) });
+                return false;
+            }
+            slot.out.push(next);
+            slot.tok = next;
+            if slot.pos == max_len {
+                finished.push(Finished { id: slot.id, tokens: std::mem::take(&mut slot.out) });
+                return false;
+            }
+            true
+        });
+        if span.is_live() {
+            span.attr("slots", k);
+            span.attr("retired", finished.len());
+            self.stats.total().minus(&before).annotate(&mut span);
+        }
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{mini_dec_dims, random_dec_masks};
+    use super::super::{DecoderDims, DecoderForward, PreparedDecoder};
+    use super::*;
+    use crate::infer::synth::synth_decoder_weights;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_memory(rng: &mut Rng, src_len: usize, d: usize) -> Vec<f32> {
+        (0..src_len * d).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    /// Per-utterance, per-block cross K/V precomputed with the same
+    /// kernels the sequential path uses (see
+    /// `start_with_precomputed_kv_matches_start`).
+    fn cross_kv(m: &PreparedDecoder, mems: &[(Vec<f32>, usize)]) -> Vec<Vec<(Vec<f32>, Vec<f32>)>> {
+        mems.iter()
+            .map(|(memory, src_len)| {
+                m.blocks
+                    .iter()
+                    .map(|blk| {
+                        let mut k = Vec::new();
+                        let mut v = Vec::new();
+                        blk.xk.gemm(memory, *src_len, None, m.tile, &mut k);
+                        blk.xv.gemm(memory, *src_len, None, m.tile, &mut v);
+                        (k, v)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Drive a continuous run over `mems` in arrival order with a FIFO
+    /// refill queue — the step loop every caller (backend, server,
+    /// harness) uses. Returns the per-utterance outputs plus the
+    /// decoder for schedule/stats inspection.
+    fn run_continuous(
+        m: &PreparedDecoder,
+        mems: &[(Vec<f32>, usize)],
+        max_slots: usize,
+    ) -> (Vec<Vec<i32>>, ContinuousDecoder) {
+        let kv = cross_kv(m, mems);
+        let mut cd = ContinuousDecoder::new(max_slots);
+        let mut outs: Vec<Option<Vec<i32>>> = vec![None; mems.len()];
+        let mut next = 0usize;
+        loop {
+            while cd.live() < max_slots && next < mems.len() {
+                let u = next;
+                cd.admit(m, u as u64, mems[u].1, |i| {
+                    (kv[u][i].0.as_slice(), kv[u][i].1.as_slice())
+                });
+                next += 1;
+            }
+            if cd.live() == 0 {
+                break;
+            }
+            for f in cd.step(m) {
+                let slot = &mut outs[f.id as usize];
+                assert!(slot.is_none(), "utterance {} retired twice", f.id);
+                *slot = Some(f.tokens);
+            }
+        }
+        (outs.into_iter().map(Option::unwrap).collect(), cd)
+    }
+
+    /// Sequential greedy oracle: one utterance at a time on the
+    /// per-utterance engine.
+    fn sequential(m: &PreparedDecoder, mems: &[(Vec<f32>, usize)]) -> Vec<Vec<i32>> {
+        let mut fwd = DecoderForward::new();
+        let mut outs = Vec::new();
+        for (memory, src_len) in mems {
+            let mut out = Vec::new();
+            fwd.generate(m, memory, *src_len, &mut out);
+            outs.push(out);
+        }
+        outs
+    }
+
+    fn random_mems(rng: &mut Rng, n: usize, d: usize) -> Vec<(Vec<f32>, usize)> {
+        (0..n)
+            .map(|_| {
+                let src_len = rng.index(10) + 2;
+                (random_memory(rng, src_len, d), src_len)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_slot_continuous_run_equals_plain_greedy() {
+        // Lifecycle satellite: with one slot the continuous scheduler
+        // degenerates to sequential greedy decode — same tokens, one
+        // slot per step.
+        let dims = mini_dec_dims();
+        let w = synth_decoder_weights(&dims, 43);
+        let m = PreparedDecoder::new(&w, dims.tile, crate::systolic::Quant::Fp32, None).unwrap();
+        let mut rng = Rng::new(47);
+        let mems = random_mems(&mut rng, 3, dims.d_model);
+        let (got, cd) = run_continuous(&m, &mems, 1);
+        assert_eq!(got, sequential(&m, &mems));
+        assert!(cd.step_batches().iter().all(|&k| k == 1));
+        assert_eq!(cd.stats.utterances, 3);
+        assert_eq!(cd.stats.steps, cd.step_batches().len());
+    }
+
+    #[test]
+    fn eos_at_step_zero_retires_the_whole_panel_and_refills() {
+        // Lifecycle satellite: EOS at step 0 + all slots retiring on
+        // the same step. A head biased hard toward EOS retires every
+        // slot after one step; the queue refills the panel until empty.
+        let dims = mini_dec_dims();
+        let mut w = synth_decoder_weights(&dims, 53);
+        w.head_b[dims.eos as usize] = 1e6;
+        let m = PreparedDecoder::new(&w, dims.tile, crate::systolic::Quant::Fp32, None).unwrap();
+        let mut rng = Rng::new(59);
+        let mems = random_mems(&mut rng, 5, dims.d_model);
+        let (got, cd) = run_continuous(&m, &mems, 2);
+        assert!(got.iter().all(|o| o.is_empty()), "EOS-first: empty outputs");
+        assert_eq!(cd.step_batches(), &[2, 2, 1], "full panels until the queue drains");
+        assert_eq!(cd.stats.utterances, 5);
+        assert_eq!(cd.stats.steps, 5);
+    }
+
+    #[test]
+    fn max_len_hit_with_nonempty_queue_then_queue_drains_mid_decode() {
+        // Lifecycle satellite: max-len retirement while the queue still
+        // holds work, then the drained queue shrinks the panel. A head
+        // biased hard against EOS runs every slot to max_len: utterances
+        // 0+1 share full panels for max_len steps (utterance 2 queued),
+        // then utterance 2 decodes alone.
+        let dims = mini_dec_dims();
+        let mut w = synth_decoder_weights(&dims, 61);
+        w.head_b[dims.eos as usize] = -1e6;
+        let m = PreparedDecoder::new(&w, dims.tile, crate::systolic::Quant::Fp32, None).unwrap();
+        let mut rng = Rng::new(67);
+        let mems = random_mems(&mut rng, 3, dims.d_model);
+        let (got, cd) = run_continuous(&m, &mems, 2);
+        assert!(got.iter().all(|o| o.len() == dims.max_len), "no EOS: max_len outputs");
+        assert_eq!(got, sequential(&m, &mems));
+        let mut want = vec![2usize; dims.max_len];
+        want.extend(vec![1usize; dims.max_len]);
+        assert_eq!(cd.step_batches(), &want[..]);
+    }
+
+    #[test]
+    fn prop_continuous_decode_bitwise_equals_sequential_greedy() {
+        // The tentpole contract: under random join/leave schedules
+        // (random utterance count, slot count, source lengths, masks,
+        // both weight formats), every utterance's continuous output is
+        // bitwise identical to decoding it alone.
+        check("continuous batched decode == sequential greedy", 10, |rng: &mut Rng| {
+            let dims = mini_dec_dims();
+            let quant = if rng.chance(0.5) {
+                crate::systolic::Quant::Fp32
+            } else {
+                crate::systolic::Quant::Int8
+            };
+            let w = synth_decoder_weights(&dims, rng.next_u64());
+            let masks = random_dec_masks(&dims, dims.tile, 0.35, rng.next_u64());
+            let m = PreparedDecoder::new(&w, dims.tile, quant, Some(&masks)).unwrap();
+            let n = rng.index(6) + 1;
+            let max_slots = rng.index(4) + 1;
+            let mems = random_mems(rng, n, dims.d_model);
+            let (got, cd) = run_continuous(&m, &mems, max_slots);
+            let want = sequential(&m, &mems);
+            if got != want {
+                return (false, format!("{quant:?} n={n} slots={max_slots}"));
+            }
+            let steps: usize = cd.step_batches().iter().sum();
+            (
+                cd.stats.steps == steps && cd.stats.utterances == n,
+                format!("schedule sums to steps: {quant:?} n={n} slots={max_slots}"),
+            )
+        });
+    }
+
+    #[test]
+    fn continuous_accounting_matches_analytic_decode_batched() {
+        // Functional x analytic at step AND run scope: the batched
+        // panel charges must equal `gemm_on_array_decode_batched` over
+        // the recorded slot-count schedule, cumulatively after every
+        // step. Uses a vocab that is a multiple of the tile so the
+        // software-f32 head cross-checks exactly too.
+        use crate::model::{GemmKind, GemmShape};
+        use crate::sysim::engine::gemm_on_array_decode_batched;
+        use crate::sysim::SimParams;
+        use crate::systolic::ArrayConfig;
+
+        let dims = DecoderDims {
+            vocab: 16,
+            d_model: 32,
+            n_heads: 4,
+            d_ff: 64,
+            n_blocks: 2,
+            max_len: 6,
+            tile: 8,
+            bos: 1,
+            eos: 2,
+        };
+        let mut w = synth_decoder_weights(&dims, 71);
+        w.head_b[dims.eos as usize] = -1e6; // run every slot to max_len
+        let masks = random_dec_masks(&dims, dims.tile, 0.5, 73);
+        let m =
+            PreparedDecoder::new(&w, dims.tile, crate::systolic::Quant::Int8, Some(&masks)).unwrap();
+        let mut rng = Rng::new(79);
+        let mems = random_mems(&mut rng, 3, dims.d_model);
+        let kv = cross_kv(&m, &mems);
+
+        // Step manually so we can snapshot the cumulative charges after
+        // every step (run scope == the last snapshot).
+        let max_slots = 2usize;
+        let mut cd = ContinuousDecoder::new(max_slots);
+        let mut next = 0usize;
+        let mut snaps = Vec::new();
+        loop {
+            while cd.live() < max_slots && next < mems.len() {
+                let u = next;
+                cd.admit(&m, u as u64, mems[u].1, |i| {
+                    (kv[u][i].0.as_slice(), kv[u][i].1.as_slice())
+                });
+                next += 1;
+            }
+            if cd.live() == 0 {
+                break;
+            }
+            cd.step(&m);
+            snaps.push((cd.stats.ff, cd.stats.attn, cd.stats.other));
+        }
+        let schedule = cd.step_batches().to_vec();
+        assert_eq!(snaps.len(), schedule.len());
+        assert!(schedule.contains(&2) && schedule.contains(&1), "want a ragged schedule");
+        assert_eq!(cd.stats.cross_kv, crate::infer::TileStats::default());
+
+        let cfg = ArrayConfig::square(dims.tile, crate::systolic::Quant::Int8);
+        let cfg_f32 = ArrayConfig::square(dims.tile, crate::systolic::Quant::Fp32);
+        let p = SimParams::default();
+        let (d, f, v) = (dims.d_model, dims.d_ff, dims.vocab);
+        let proj = GemmShape { m: 1, k: d, n: d, kind: GemmKind::AttnProj };
+        let head = GemmShape { m: 1, k: d, n: v, kind: GemmKind::AttnProj };
+        for (s, (ff, attn, other)) in snaps.iter().enumerate() {
+            let sched = &schedule[..=s];
+            let mut ff_want = crate::sysim::engine::GemmCost::default();
+            let mut attn_want = crate::sysim::engine::GemmCost::default();
+            for i in 0..dims.n_blocks {
+                let g1 = GemmShape { m: 1, k: d, n: f, kind: GemmKind::FeedForward };
+                let g2 = GemmShape { m: 1, k: f, n: d, kind: GemmKind::FeedForward };
+                ff_want.add(&gemm_on_array_decode_batched(&g1, &cfg, &p, Some(&masks[2 * i]), sched));
+                ff_want.add(&gemm_on_array_decode_batched(&g2, &cfg, &p, Some(&masks[2 * i + 1]), sched));
+                // sq sk sv so xq xo: six panel projections per block.
+                let cp = gemm_on_array_decode_batched(&proj, &cfg, &p, None, sched);
+                for _ in 0..6 {
+                    attn_want.add(&cp);
+                }
+            }
+            let head_want = gemm_on_array_decode_batched(&head, &cfg_f32, &p, None, sched);
+            assert_eq!(ff.timing.macs as u64, ff_want.counts.macs, "ff macs @ step {s}");
+            assert_eq!(ff.timing.total_words() as u64, ff_want.counts.bus_words, "ff words @ step {s}");
+            assert_eq!(ff.timing.array_cycles as u64, ff_want.counts.array_busy_cycles, "ff cycles @ step {s}");
+            assert_eq!(attn.timing.macs as u64, attn_want.counts.macs, "attn macs @ step {s}");
+            assert_eq!(attn.timing.total_words() as u64, attn_want.counts.bus_words, "attn words @ step {s}");
+            assert_eq!(attn.timing.array_cycles as u64, attn_want.counts.array_busy_cycles, "attn cycles @ step {s}");
+            assert_eq!(other.timing.macs as u64, head_want.counts.macs, "head macs @ step {s}");
+            assert_eq!(other.timing.total_words() as u64, head_want.counts.bus_words, "head words @ step {s}");
+            assert_eq!(other.timing.array_cycles as u64, head_want.counts.array_busy_cycles, "head cycles @ step {s}");
+        }
+        // The skip schedule: each live/dead ff tile once per step,
+        // independent of panel fill.
+        let live: usize = masks.iter().map(crate::sysim::TileMask::live_count).sum();
+        let dead: usize = masks.iter().map(|mk| mk.n_tiles() - mk.live_count()).sum();
+        assert!(live > 0 && dead > 0);
+        assert_eq!(cd.stats.ff.tiles_live, schedule.len() * live);
+        assert_eq!(cd.stats.ff.tiles_skipped, schedule.len() * dead);
+    }
+}

@@ -57,6 +57,18 @@ pub struct DecodeStats {
 }
 
 impl DecodeStats {
+    /// Merge another run's counters (the continuous scheduler keeps its
+    /// own [`DecodeStats`] and folds them into the backend's canonical
+    /// accumulator when a session ends).
+    pub fn add(&mut self, o: &DecodeStats) {
+        self.ff.add(&o.ff);
+        self.attn.add(&o.attn);
+        self.cross_kv.add(&o.cross_kv);
+        self.other.add(&o.other);
+        self.steps += o.steps;
+        self.utterances += o.utterances;
+    }
+
     /// Sum of all GEMM-scope counters (ff + attn + cross-K/V + head) —
     /// the aggregate telemetry spans attach to one decode step.
     pub fn total(&self) -> TileStats {
@@ -70,10 +82,11 @@ impl DecodeStats {
 
 /// One query row attending over `n_keys` K/V rows (multi-head, no
 /// masking — callers pass the causal prefix or the valid source
-/// prefix). The **only** attention arithmetic in this module: the
-/// KV-cache step and the full-prefix recompute both run through here,
-/// which is what makes their agreement bitwise.
-fn attend_row(
+/// prefix). The **only** attention arithmetic in this module *and* in
+/// the continuous scheduler ([`super::continuous`]): the KV-cache step,
+/// the full-prefix recompute, and every continuous panel slot all run
+/// through here, which is what makes their agreement bitwise.
+pub(crate) fn attend_row(
     q: &[f32],
     keys: &[f32],
     vals: &[f32],

@@ -24,9 +24,17 @@
 //!   recompute), greedy BOS→EOS generation, and the per-scope
 //!   [`DecodeStats`] accounting with cross-attention K/V computed once
 //!   per utterance and reused every step.
+//! - [`continuous`] — [`ContinuousDecoder`]: the iteration-level
+//!   (continuous) batched scheduler that steps many in-flight decodes
+//!   in lockstep, batching each step's per-token GEMVs into `[k, d]`
+//!   weight-stationary panels with slot join/leave between steps —
+//!   bitwise identical per utterance to [`DecoderForward`] greedy
+//!   decode, panel-batched in the accounting.
 
+pub mod continuous;
 pub mod forward;
 
+pub use continuous::{ContinuousDecoder, Finished};
 pub use forward::{DecodeStats, DecoderForward};
 
 use anyhow::{ensure, Result};

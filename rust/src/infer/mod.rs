@@ -59,7 +59,10 @@ pub mod synth;
 
 pub use backend::NativeBackend;
 pub use batch::BatchForward;
-pub use decoder::{DecodeStats, DecoderDims, DecoderForward, DecoderWeights, PreparedDecoder};
+pub use decoder::{
+    ContinuousDecoder, DecodeStats, DecoderDims, DecoderForward, DecoderWeights, Finished,
+    PreparedDecoder,
+};
 pub use encoder::{EncoderWeights, Forward, ForwardStats, ModelDims, PreparedModel};
 pub use gemm::{Linear, QuantizedLinear, TileStats};
 pub use layers::Layer;

@@ -3,12 +3,15 @@
 //! ```text
 //! sasp report <id>        regenerate a paper table/figure
 //!        ids: table1 table2 table3 fig6 fig7 fig8 fig9 fig10 fig11
-//!             mt headline serve overload trace util all
+//!             mt headline serve overload decode trace util all
 //!        (serve measures the serving runtime's latency/throughput
 //!         frontier — fixed vs dynamic batching, 1/2/4 worker threads —
 //!         offline on the native backend; overload measures goodput
 //!         under bounded admission, deadlines, and the degradation
-//!         ladder; trace replays a serve run under a recording
+//!         ladder; decode measures the continuous iteration-level
+//!         batched MT decoding frontier — offered load x panel width
+//!         against sequential per-utterance decode, with panel fill and
+//!         decode-scope PE utilization; trace replays a serve run under a recording
 //!         telemetry session and writes a Perfetto-loadable Chrome
 //!         trace (default trace.json, override with --out) plus the
 //!         metrics snapshot; util records a batched encode run and
@@ -26,8 +29,8 @@
 //! Flags: `--artifacts <dir>` (default `artifacts`), `--config <json>`,
 //! `--out <path>` (trace JSON destination for `report trace`),
 //! `--metrics-out <path>` (write the telemetry metrics snapshot as
-//! Prometheus-style text; on `report serve`/`report overload` this
-//! records the whole sweep under one telemetry session).
+//! Prometheus-style text; on `report serve`/`report overload`/`report
+//! decode` this records the whole sweep under one telemetry session).
 
 use anyhow::{bail, Context, Result};
 
@@ -144,6 +147,10 @@ fn cmd_report(cli: &Cli) -> Result<()> {
         }
         "overload" => {
             let out = render_with_metrics(cli, harness::overload_report)?;
+            return Ok(print!("{out}"));
+        }
+        "decode" => {
+            let out = render_with_metrics(cli, harness::decode_report)?;
             return Ok(print!("{out}"));
         }
         "trace" => {

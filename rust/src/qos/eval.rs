@@ -20,7 +20,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::data::{load_bundle, Bundle, Tensor};
 use crate::pruning::{global_prune, tile_l1_norms, PrunePlan, TileNorms};
-use crate::quant::fake_quantize;
+use crate::quant::{fake_quantize, fake_quantize_per_channel};
 use crate::runtime::{tensor_to_literal, Engine, Manifest};
 use crate::systolic::Quant;
 
@@ -191,6 +191,11 @@ struct ModelHarness {
     artifact: String,
     params: Bundle,
     ff_names: Vec<String>,
+    /// Fake-quantize INT8 configurations with per-output-channel scales
+    /// and stamp the bundle with the `quant.per_channel` marker, so any
+    /// backend staging the bundle (native or PJRT) picks the same
+    /// scheme from the artifact contract itself.
+    per_channel: bool,
 }
 
 impl ModelHarness {
@@ -208,7 +213,12 @@ impl ModelHarness {
         for n in &ff_names {
             params.require(n)?;
         }
-        Ok(ModelHarness { artifact: artifact.to_string(), params, ff_names })
+        Ok(ModelHarness {
+            artifact: artifact.to_string(),
+            params,
+            ff_names,
+            per_channel: false,
+        })
     }
 
     /// Prune (at `tile`) + optionally fake-quantize a copy of the params.
@@ -243,7 +253,18 @@ impl ModelHarness {
                 .map(|(n, _)| n.clone())
                 .collect();
             for n in names {
-                fake_quantize(params.get_mut(&n).unwrap());
+                let w = params.get_mut(&n).unwrap();
+                if self.per_channel {
+                    fake_quantize_per_channel(w);
+                } else {
+                    fake_quantize(w);
+                }
+            }
+            if self.per_channel {
+                // The artifact contract's per-channel flag: staging
+                // backends read this marker instead of needing an
+                // out-of-band configuration bit.
+                params.insert("quant.per_channel", Tensor::from_f32(&[1], &[1.0]));
             }
         }
         Ok((params, plan))
@@ -342,6 +363,13 @@ impl AsrEvaluator {
     /// Artifact name the PJRT wrappers execute.
     pub fn artifact(&self) -> &str {
         &self.harness.artifact
+    }
+
+    /// Emit INT8 configurations with per-output-channel scales: the
+    /// prepared bundle is fake-quantized per channel and carries the
+    /// `quant.per_channel` marker for the staging backend.
+    pub fn set_per_channel(&mut self, on: bool) {
+        self.harness.per_channel = on;
     }
 
     /// Evaluate WER at one (tile, rate, quant) configuration on any
@@ -548,6 +576,12 @@ impl MtEvaluator {
 
     pub fn n_sents(&self) -> usize {
         self.refs.len()
+    }
+
+    /// Emit INT8 configurations with per-output-channel scales (see
+    /// [`AsrEvaluator::set_per_channel`]).
+    pub fn set_per_channel(&mut self, on: bool) {
+        self.harness.per_channel = on;
     }
 
     pub fn evaluate_with<B: QosBackend>(
@@ -790,5 +824,68 @@ mod tests {
             .filter(|n| params.get(n).unwrap().f32s().iter().all(|v| *v == 0.0))
             .count();
         assert_eq!(zeroed, 1);
+    }
+
+    #[test]
+    fn per_channel_prepare_stamps_marker_and_backend_stages_it() {
+        // Satellite: the per-channel flag travels inside the artifact
+        // contract. `prepare_params` fake-quantizes per channel and
+        // stamps `quant.per_channel`; a backend that was never told
+        // out-of-band stages per-channel scales off the marker alone.
+        use crate::infer::synth::{synth_testset, synth_weights};
+        use crate::infer::testutil::mini_dims;
+        use crate::infer::NativeBackend;
+
+        let dims = mini_dims();
+        let w = synth_weights(&dims, 71);
+        let ts = synth_testset(&w, 4, 2).unwrap();
+        let meta = EvalMeta {
+            n_blocks: dims.n_blocks,
+            batch: 2,
+            vocab: dims.vocab,
+            blank: dims.ctc_blank,
+            tile_hint: dims.tile,
+        };
+        let mut eval = AsrEvaluator::from_parts("native", w.to_bundle(), &ts, &meta).unwrap();
+
+        let (pt, _) = eval.harness.prepare_params(8, 0.2, Quant::Int8).unwrap();
+        assert!(pt.get("quant.per_channel").is_none(), "per-tensor: no marker");
+        eval.set_per_channel(true);
+        let (pc, _) = eval.harness.prepare_params(8, 0.2, Quant::Int8).unwrap();
+        assert!(pc.get("quant.per_channel").is_some(), "per-channel: marker");
+        let (fp, _) = eval.harness.prepare_params(8, 0.2, Quant::Fp32).unwrap();
+        assert!(fp.get("quant.per_channel").is_none(), "marker only on INT8 bundles");
+        assert_ne!(
+            pt.get("block0.attn.wq").unwrap().f32s(),
+            pc.get("block0.attn.wq").unwrap().f32s(),
+            "per-channel scales quantize onto a different grid"
+        );
+
+        let mut be = NativeBackend::new(w.clone(), 2).unwrap();
+        assert!(!be.per_channel(), "backend never configured out-of-band");
+        let a = eval.evaluate_with(&mut be, 8, 0.2, Quant::Int8).unwrap();
+        assert!(be.model().per_channel, "marker flips the staged scheme");
+        assert!(!be.per_channel(), "sticky flag untouched by the marker");
+        // Kernel-equivalence identity over the marker-staged bundle:
+        // per-channel INT8 kernels == FP32 kernels on the same
+        // per-channel fake-quantized weights, at QoS scope. (A backend
+        // that ignored the marker would re-quantize per tensor and
+        // break the exact roundtrip.)
+        struct ForceFp32<'a>(&'a mut NativeBackend);
+        impl QosBackend for ForceFp32<'_> {
+            fn configure(&mut self, p: &Bundle, tile: usize, _q: Quant) -> Result<()> {
+                self.0.configure(p, tile, Quant::Fp32)
+            }
+            fn run_asr(&mut self, f: &[f32], p: &[f32], b: usize) -> Result<Vec<f32>> {
+                self.0.run_asr(f, p, b)
+            }
+            fn run_mt(&mut self, s: &[i32], b: usize) -> Result<Vec<f32>> {
+                self.0.run_mt(s, b)
+            }
+        }
+        let b = eval
+            .evaluate_with(&mut ForceFp32(&mut be), 8, 0.2, Quant::Int8)
+            .unwrap();
+        assert_eq!(a.qos, b.qos, "marker-staged INT8 == fake-quant FP32 WER");
     }
 }

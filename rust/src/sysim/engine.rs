@@ -212,6 +212,37 @@ pub fn gemm_on_array_decode(
     total
 }
 
+/// Continuous (iteration-level) batched decode scheduling: at step `s`
+/// the scheduler has `schedule[s]` in-flight decodes, so the per-token
+/// `m = 1` GEMVs batch into one weight-stationary `[schedule[s], k]`
+/// panel — each live tile programmed once per step and streamed by
+/// every live slot ([`gemm_on_array_batched`] at `m = 1`). The batch
+/// composition may change every step (slots join and leave between
+/// steps), which is why this takes the whole per-step slot-count
+/// schedule instead of a single `(steps, batch)` pair. An all-ones
+/// schedule degenerates to [`gemm_on_array_decode`]; a zero entry
+/// (empty panel — nothing live that step) charges nothing. This is the
+/// analytic counterpart of the functional continuous decoder's
+/// per-step [`TileTiming::batched`] charges
+/// ([`crate::infer::decoder::continuous`]).
+pub fn gemm_on_array_decode_batched(
+    g: &GemmShape,
+    cfg: &ArrayConfig,
+    p: &SimParams,
+    mask: Option<&TileMask>,
+    schedule: &[usize],
+) -> GemmCost {
+    let g1 = GemmShape { m: 1, ..*g };
+    let mut total = GemmCost::default();
+    for &k in schedule {
+        if k == 0 {
+            continue;
+        }
+        total.add(&gemm_on_array_batched(&g1, cfg, p, mask, k));
+    }
+    total
+}
+
 /// Software-only GEMM on the in-order core (the paper's non-accelerated
 /// baseline for Table 3 / Fig. 11 speedups).
 pub fn gemm_on_cpu(g: &GemmShape, p: &SimParams) -> GemmCost {
@@ -408,6 +439,56 @@ mod tests {
             decode.counts.bus_words - batched.counts.bus_words,
             (steps as u64 - 1) * n_tiles * prog,
             "per-step reprogramming is the decode overhead"
+        );
+    }
+
+    #[test]
+    fn decode_batched_all_ones_schedule_degenerates_to_decode() {
+        // slot count 1 every step == the sequential per-utterance decode
+        // schedule, exactly.
+        let g = ff(96, 64, 256);
+        let p = SimParams::default();
+        for quant in [Quant::Fp32, Quant::Int8] {
+            let c = cfg(8, quant);
+            let mut mask = TileMask::full(8, 32);
+            for (i, l) in mask.live.iter_mut().enumerate() {
+                *l = i % 3 != 0;
+            }
+            let ones = vec![1usize; 17];
+            let cont = gemm_on_array_decode_batched(&g, &c, &p, Some(&mask), &ones);
+            let seq = gemm_on_array_decode(&g, &c, &p, Some(&mask), 17);
+            assert_eq!(cont.counts, seq.counts, "{quant:?}");
+            assert_eq!(cont.cycles, seq.cycles, "{quant:?}");
+        }
+    }
+
+    #[test]
+    fn decode_batched_schedule_sums_per_step_panels() {
+        // Each schedule entry charges exactly one `m = 1` batched panel
+        // at that slot count; zero entries (empty panel) charge nothing.
+        let g = ff(96, 64, 256);
+        let p = SimParams::default();
+        let c = cfg(8, Quant::Int8);
+        let mut mask = TileMask::full(8, 32);
+        for (i, l) in mask.live.iter_mut().enumerate() {
+            *l = i % 4 != 1;
+        }
+        let g1 = GemmShape { m: 1, ..g };
+        let schedule = [4usize, 4, 0, 3, 1, 2];
+        let total = gemm_on_array_decode_batched(&g, &c, &p, Some(&mask), &schedule);
+        let mut want = GemmCost::default();
+        for &k in schedule.iter().filter(|&&k| k > 0) {
+            want.add(&gemm_on_array_batched(&g1, &c, &p, Some(&mask), k));
+        }
+        assert_eq!(total.counts, want.counts);
+        assert_eq!(total.cycles, want.cycles);
+        // The full-panel steps amortize programming: per-slot bus words
+        // at k=4 are strictly below the sequential (k=1) per-slot cost.
+        let full = gemm_on_array_batched(&g1, &c, &p, Some(&mask), 4);
+        let one = gemm_on_array_batched(&g1, &c, &p, Some(&mask), 1);
+        assert!(
+            full.counts.bus_words < 4 * one.counts.bus_words,
+            "batched panel must amortize tile programming"
         );
     }
 

@@ -23,6 +23,11 @@
 #      - the autoregressive MT decoder's KV-cache stepping must beat the
 #        full-prefix recompute loop over 32 generated tokens, on both
 #        the FP32 and INT8 paths (the decode-side caching win)
+#      - continuous iteration-level batched decoding of 8 concurrent
+#        utterances (one [8, d] weight-stationary panel per step) must
+#        finish in <= 0.7x the sequential per-utterance decode's wall
+#        time, on both the FP32 and INT8 paths (the continuous-batching
+#        panel-reuse win)
 #      - dynamic-batch serving sharded over 4 worker threads must beat
 #        the single-threaded fixed-batch serving path on the same 16
 #        queued utterances (the ISSUE-5 runtime scaling levers)
@@ -49,6 +54,11 @@
 #    occupancy accounting == wavefront-simulated active-PE census on
 #    random masks) and the utilization-report functional==analytic
 #    cross-check, re-run by name for the same reason
+# 8b. the bitwise-identity property tests of the two batched execution
+#    paths — continuous iteration-level decode == sequential greedy on
+#    random join/leave schedules, and the work-stealing sharded batch
+#    forward == the single-threaded run on ragged batches — re-run by
+#    name for the same reason
 # 9. a bench-regression gate against the committed BENCH_hotpath.json:
 #    when a baseline is present before the bench run, every case's fresh
 #    median must stay within BENCH_REGRESSION_TOLERANCE (default 1.5x —
@@ -96,6 +106,11 @@ echo
 echo "== observability regressions: occupancy cross-checks =="
 (cd rust && cargo test -q occupancy_matches_wavefront_on_random_masks)
 (cd rust && cargo test -q util_report_cross_checks_and_renders)
+
+echo
+echo "== batching regressions: bitwise-identity properties =="
+(cd rust && cargo test -q prop_continuous_decode_bitwise_equals_sequential_greedy)
+(cd rust && cargo test -q prop_sharded_forward_batch_bitwise_equals_single_thread)
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "verify OK (bench smoke skipped)"
@@ -151,6 +166,10 @@ d32c = median("infer: mt decode 32 steps fp32, kv-cache")
 d32r = median("infer: mt decode 32 steps fp32, full-prefix recompute")
 d8c = median("infer: mt decode 32 steps int8, kv-cache")
 d8r = median("infer: mt decode 32 steps int8, full-prefix recompute")
+c32s = median("infer: mt decode 8 utts fp32, sequential")
+c32c = median("infer: mt decode 8 utts fp32, continuous 8 slots")
+c8s = median("infer: mt decode 8 utts int8, sequential")
+c8c = median("infer: mt decode 8 utts int8, continuous 8 slots")
 sv1 = median("serve: 16 utts int8 25% pruned, fixed batch 4, 1 thread")
 sv4 = median("serve: 16 utts int8 25% pruned, dynamic batch<=16, 4 threads")
 toff = median("serve: 16 utts int8 25% pruned, fixed batch 4, telemetry off")
@@ -199,6 +218,20 @@ for name, cached, recompute in [
             f"{name} ({cached/1e6:.2f} ms) not faster than full-prefix "
             f"recompute ({recompute/1e6:.2f} ms) over 32 steps "
             f"(required <= 0.6x)")
+# Continuous iteration-level batching vs sequential per-utterance
+# decode over the same 8 utterances (identical tokens, shared
+# precomputed cross-K/V): each step packs 8 GEMV rows onto one
+# weight-stationary tile pass, so each live tile is loaded (INT8:
+# dequantized) once per step instead of 8 times.
+for name, continuous, sequential in [
+    ("fp32 continuous decode", c32c, c32s),
+    ("int8 continuous decode", c8c, c8s),
+]:
+    if continuous > sequential * 0.7:
+        failures.append(
+            f"{name} ({continuous/1e6:.2f} ms) not faster than sequential "
+            f"per-utterance decode ({sequential/1e6:.2f} ms) over 8 utts "
+            f"(required <= 0.7x)")
 # Dynamic-batch serving sharded over 4 worker threads vs the
 # single-threaded fixed-batch path on the same 16 queued utterances:
 # thread sharding parallelizes the forward work across cores, so on a
@@ -252,6 +285,10 @@ print(f"mt decode fp32 recompute:     {d32r/1e6:.2f} ms median")
 print(f"  .. kv-cache:                {d32c/1e6:.2f} ms median")
 print(f"mt decode int8 recompute:     {d8r/1e6:.2f} ms median")
 print(f"  .. kv-cache:                {d8c/1e6:.2f} ms median")
+print(f"mt decode 8 utts fp32 seq:    {c32s/1e6:.2f} ms median")
+print(f"  .. continuous 8 slots:      {c32c/1e6:.2f} ms median")
+print(f"mt decode 8 utts int8 seq:    {c8s/1e6:.2f} ms median")
+print(f"  .. continuous 8 slots:      {c8c/1e6:.2f} ms median")
 print(f"serve 16 utts fixed b4 1t:    {sv1/1e6:.2f} ms median")
 print(f"  .. dynamic b<=16 4t:        {sv4/1e6:.2f} ms median")
 print(f"  .. telemetry off:           {toff/1e6:.2f} ms median")
