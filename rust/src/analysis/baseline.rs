@@ -1,0 +1,304 @@
+//! The ratchet baseline: known findings, grandfathered but frozen.
+//!
+//! The baseline file (`rust/lint-baseline.json`) is committed. Each
+//! entry records one tolerated finding keyed by `(rule, file, trimmed
+//! line text)` — deliberately *not* the line number, so findings
+//! survive unrelated edits above them. Matching is multiset-budgeted:
+//! three identical baseline entries tolerate at most three identical
+//! findings.
+//!
+//! The ratchet has teeth in both directions:
+//!
+//! - a finding with no baseline budget is **fresh** → the lint fails;
+//! - a baseline entry with no matching finding is **stale** → the lint
+//!   fails too, so fixed findings must be deleted from the baseline
+//!   (they can never quietly come back).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::rules::Finding;
+
+/// One tolerated finding. `reason` documents *why* it is tolerated —
+/// it is preserved across `--write-baseline` refreshes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub text: String,
+    pub reason: String,
+}
+
+impl BaselineEntry {
+    fn key(&self) -> (String, String, String) {
+        (self.rule.clone(), self.file.clone(), self.text.clone())
+    }
+}
+
+/// The findings a lint run tolerates.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// A lint run split against a baseline.
+#[derive(Debug, Default)]
+pub struct Applied {
+    /// Findings covered by a baseline entry (tolerated).
+    pub grandfathered: Vec<Finding>,
+    /// Findings with no baseline budget (fail the run).
+    pub fresh: Vec<Finding>,
+    /// Baseline entries no finding matched (fail the run — delete them).
+    pub stale: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    /// Load a baseline; a missing file is an empty baseline (the state
+    /// of a fully clean tree).
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Baseline::default())
+            }
+            Err(e) => return Err(anyhow::anyhow!("read {}: {e}", path.display())),
+        };
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let mut entries = Vec::new();
+        for (i, e) in doc.get("entries").as_arr().unwrap_or(&[]).iter().enumerate() {
+            let field = |k: &str| -> Result<String> {
+                e.get(k)
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("{}: entry {i} missing '{k}'", path.display()))
+            };
+            entries.push(BaselineEntry {
+                rule: field("rule")?,
+                file: field("file")?,
+                text: field("text")?,
+                reason: e.get("reason").as_str().unwrap_or("").to_string(),
+            });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Split `findings` into grandfathered / fresh / stale by multiset
+    /// budget on `(rule, file, text)`.
+    pub fn apply(&self, findings: Vec<Finding>) -> Applied {
+        let mut budget: BTreeMap<(String, String, String), usize> = BTreeMap::new();
+        for e in &self.entries {
+            *budget.entry(e.key()).or_default() += 1;
+        }
+        let mut out = Applied::default();
+        for f in findings {
+            let key = (f.rule.to_string(), f.file.clone(), f.text.clone());
+            match budget.get_mut(&key) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    out.grandfathered.push(f);
+                }
+                _ => out.fresh.push(f),
+            }
+        }
+        // Reconstruct the unspent entries, preserving reasons: walk the
+        // original list and claim leftover budget per key.
+        for e in &self.entries {
+            if let Some(n) = budget.get_mut(&e.key()) {
+                if *n > 0 {
+                    *n -= 1;
+                    out.stale.push(e.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Build a refreshed baseline from the current findings, keeping
+    /// the reason of any entry whose key still matches.
+    pub fn refreshed(&self, findings: &[Finding]) -> Baseline {
+        let mut reasons: BTreeMap<(String, String, String), Vec<String>> = BTreeMap::new();
+        for e in &self.entries {
+            reasons.entry(e.key()).or_default().push(e.reason.clone());
+        }
+        let mut entries: Vec<BaselineEntry> = findings
+            .iter()
+            .map(|f| {
+                let key = (f.rule.to_string(), f.file.clone(), f.text.clone());
+                let reason = reasons
+                    .get_mut(&key)
+                    .and_then(|rs| (!rs.is_empty()).then(|| rs.remove(0)))
+                    .unwrap_or_else(|| "TODO: justify or fix".to_string());
+                BaselineEntry {
+                    rule: f.rule.to_string(),
+                    file: f.file.clone(),
+                    text: f.text.clone(),
+                    reason,
+                }
+            })
+            .collect();
+        entries.sort_by(|a, b| {
+            (&a.file, a.rule.as_str(), &a.text).cmp(&(&b.file, b.rule.as_str(), &b.text))
+        });
+        Baseline { entries }
+    }
+
+    /// Serialize: pretty, one compact entry object per line, key order
+    /// fixed (rule, file, text, reason), sorted by (file, rule, text) —
+    /// deterministic so refreshes diff cleanly.
+    pub fn render(&self) -> String {
+        let mut sorted = self.entries.clone();
+        sorted.sort_by(|a, b| {
+            (&a.file, a.rule.as_str(), &a.text).cmp(&(&b.file, b.rule.as_str(), &b.text))
+        });
+        let mut out = String::from("{\n  \"version\": 1,\n  \"entries\": [");
+        for (i, e) in sorted.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n    {{\"rule\":{},\"file\":{},\"text\":{},\"reason\":{}}}",
+                Json::str(e.rule.as_str()),
+                Json::str(e.file.as_str()),
+                Json::str(e.text.as_str()),
+                Json::str(e.reason.as_str()),
+            );
+        }
+        if sorted.is_empty() {
+            out.push_str("]\n}\n");
+        } else {
+            out.push_str("\n  ]\n}\n");
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        fs::write(path, self.render())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: u32, text: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            text: text.to_string(),
+            msg: String::new(),
+        }
+    }
+
+    fn entry(rule: &str, file: &str, text: &str, reason: &str) -> BaselineEntry {
+        BaselineEntry {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            text: text.to_string(),
+            reason: reason.to_string(),
+        }
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sasp-lint-{tag}-{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn lint_baseline_missing_file_is_empty() {
+        let b = Baseline::load(Path::new("/nonexistent/sasp-baseline.json")).unwrap();
+        assert!(b.entries.is_empty());
+    }
+
+    #[test]
+    fn lint_baseline_apply_splits_grandfathered_fresh_stale() {
+        let b = Baseline {
+            entries: vec![
+                entry("serve-path-panic", "coordinator/serve.rs", "v[0]", "bounded"),
+                entry("serve-path-panic", "coordinator/serve.rs", "gone()", "fixed since"),
+            ],
+        };
+        let findings = vec![
+            finding("serve-path-panic", "coordinator/serve.rs", 10, "v[0]"),
+            finding("hot-loop-alloc", "systolic/array.rs", 20, "x.push(1)"),
+        ];
+        let a = b.apply(findings);
+        assert_eq!(a.grandfathered.len(), 1);
+        assert_eq!(a.grandfathered[0].text, "v[0]");
+        assert_eq!(a.fresh.len(), 1);
+        assert_eq!(a.fresh[0].rule, "hot-loop-alloc");
+        assert_eq!(a.stale.len(), 1);
+        assert_eq!(a.stale[0].text, "gone()");
+    }
+
+    #[test]
+    fn lint_baseline_matching_is_multiset_budgeted() {
+        // One entry tolerates one occurrence; a second identical
+        // finding (e.g. the same line duplicated) is fresh.
+        let b = Baseline {
+            entries: vec![entry("serve-path-panic", "f.rs", "v[0]", "r")],
+        };
+        let a = b.apply(vec![
+            finding("serve-path-panic", "f.rs", 1, "v[0]"),
+            finding("serve-path-panic", "f.rs", 9, "v[0]"),
+        ]);
+        assert_eq!(a.grandfathered.len(), 1);
+        assert_eq!(a.fresh.len(), 1);
+        assert!(a.stale.is_empty());
+    }
+
+    #[test]
+    fn lint_baseline_roundtrips_through_disk() {
+        let path = temp_path("roundtrip");
+        let b = Baseline {
+            entries: vec![
+                entry("bitwise-contract-drift", "infer/ops.rs", "let s = x.sum();", "pinned"),
+                entry("serve-path-panic", "coordinator/serve.rs", "q\"uote\\", "escapes"),
+            ],
+        };
+        b.save(&path).unwrap();
+        let loaded = Baseline::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // render() sorts by (file, rule, text); compare as sets.
+        assert_eq!(loaded.entries.len(), 2);
+        assert!(b.entries.iter().all(|e| loaded.entries.contains(e)));
+        // And the serialized form is itself stable.
+        assert_eq!(loaded.render(), b.render());
+    }
+
+    #[test]
+    fn lint_baseline_refresh_preserves_reasons_and_fills_todo() {
+        let b = Baseline {
+            entries: vec![entry("serve-path-panic", "f.rs", "v[0]", "bounded by contract")],
+        };
+        let findings = vec![
+            finding("serve-path-panic", "f.rs", 3, "v[0]"),
+            finding("serve-path-panic", "f.rs", 7, "w[1]"),
+        ];
+        let fresh = b.refreshed(&findings);
+        assert_eq!(fresh.entries.len(), 2);
+        let v0 = fresh.entries.iter().find(|e| e.text == "v[0]").unwrap();
+        assert_eq!(v0.reason, "bounded by contract");
+        let w1 = fresh.entries.iter().find(|e| e.text == "w[1]").unwrap();
+        assert_eq!(w1.reason, "TODO: justify or fix");
+    }
+
+    #[test]
+    fn lint_baseline_empty_renders_and_parses() {
+        let b = Baseline::default();
+        let text = b.render();
+        assert!(Json::parse(&text).is_ok(), "{text}");
+        let path = temp_path("empty");
+        b.save(&path).unwrap();
+        let loaded = Baseline::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(loaded.entries.is_empty());
+    }
+}

@@ -1,0 +1,391 @@
+//! A lightweight line-aware Rust tokenizer for the lint rules.
+//!
+//! This is not a full lexer — it produces exactly what the rule engine
+//! needs and nothing more: identifier tokens, single-character
+//! punctuation tokens, and a per-line record of comment text. String
+//! literals (including raw/byte/raw-byte forms), char literals,
+//! lifetimes, and numeric literals are consumed and *dropped*, so a
+//! rule can never be fooled by `"unwrap"` appearing inside a string or
+//! a doc example. Multi-character operators arrive as their component
+//! punctuation (`::` is two `':'` tokens), which keeps pattern matching
+//! in the rules trivial.
+//!
+//! The lexer is deliberately forgiving: on malformed input it consumes
+//! a byte and moves on rather than erroring, because the linter must
+//! never be the thing that breaks the build on code rustc itself
+//! accepts.
+
+/// One token with the 1-based source line it starts on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident(String),
+    Punct(char),
+}
+
+impl Tok {
+    /// The identifier text, if this token is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(s) => Some(s),
+            TokKind::Punct(_) => None,
+        }
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.ident() == Some(s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.kind, TokKind::Punct(p) if *p == c)
+    }
+}
+
+/// Tokenized file: code tokens plus comment text by line. A line with
+/// several comments (rare) gets one entry per comment, in order.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<(u32, String)>,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`. Never fails; see the module docs for the contract.
+pub fn lex(src: &str) -> Lexed {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Lexed {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string_body(),
+                b'\'' => self.char_or_lifetime(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ if is_ident_start(c) => {
+                    if !self.try_prefixed_literal() {
+                        self.ident();
+                    }
+                }
+                _ if c.is_ascii() => {
+                    self.out.toks.push(Tok { line: self.line, kind: TokKind::Punct(c as char) });
+                    self.i += 1;
+                }
+                // Non-ASCII outside strings/comments: skip the byte
+                // (denied by `non_ascii_idents` anyway).
+                _ => self.i += 1,
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn line_comment(&mut self) {
+        let at = self.line;
+        let start = self.i + 2;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start.min(self.i)..self.i]).into_owned();
+        self.out.comments.push((at, text));
+    }
+
+    fn block_comment(&mut self) {
+        let at = self.line;
+        let start = self.i + 2;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match (self.b[self.i], self.peek(1)) {
+                (b'/', Some(b'*')) => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                (b'*', Some(b'/')) => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                (b'\n', _) => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let end = self.i.saturating_sub(2).max(start);
+        let text = String::from_utf8_lossy(&self.b[start..end]).into_owned();
+        self.out.comments.push((at, text));
+    }
+
+    /// Consume a `"..."` body (cursor on the opening quote), honoring
+    /// backslash escapes and tracking newlines.
+    fn string_body(&mut self) {
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    return;
+                }
+                b'\\' => self.i += 2,
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Consume `r"..."` / `r#"..."#` (cursor on the first `#` or `"`
+    /// after the prefix), tracking newlines.
+    fn raw_string_body(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some(b'#') {
+            hashes += 1;
+            self.i += 1;
+        }
+        if self.peek(0) != Some(b'"') {
+            return; // not actually a raw string; caller lexed the prefix
+        }
+        self.i += 1;
+        while self.i < self.b.len() {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.i += 1;
+                continue;
+            }
+            if self.b[self.i] == b'"' {
+                let mut ok = true;
+                for k in 0..hashes {
+                    if self.peek(1 + k) != Some(b'#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.i += 1 + hashes;
+                    return;
+                }
+            }
+            self.i += 1;
+        }
+    }
+
+    /// `r"`, `r#"`, `b"`, `b'`, `br"`, `br#"` literal prefixes. Returns
+    /// true if a literal was consumed; false means "plain identifier".
+    fn try_prefixed_literal(&mut self) -> bool {
+        let c = self.b[self.i];
+        let n1 = self.peek(1);
+        if c == b'r' && matches!(n1, Some(b'"') | Some(b'#')) {
+            // `r#ident` (raw identifier) is not a string: require that
+            // the `#`s end in a quote.
+            if n1 == Some(b'#') && !self.hashes_then_quote(1) {
+                return false;
+            }
+            self.i += 1;
+            self.raw_string_body();
+            return true;
+        }
+        if c == b'b' {
+            match n1 {
+                Some(b'"') => {
+                    self.i += 1;
+                    self.string_body();
+                    return true;
+                }
+                Some(b'\'') => {
+                    self.i += 1;
+                    self.char_or_lifetime();
+                    return true;
+                }
+                Some(b'r') if matches!(self.peek(2), Some(b'"') | Some(b'#')) => {
+                    if self.peek(2) == Some(b'#') && !self.hashes_then_quote(2) {
+                        return false;
+                    }
+                    self.i += 2;
+                    self.raw_string_body();
+                    return true;
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+
+    /// Do the bytes at offset `at` form `#...#"`?
+    fn hashes_then_quote(&self, mut at: usize) -> bool {
+        while self.peek(at) == Some(b'#') {
+            at += 1;
+        }
+        self.peek(at) == Some(b'"')
+    }
+
+    /// Cursor on a `'`: either a lifetime (consumed silently) or a char
+    /// literal (consumed silently).
+    fn char_or_lifetime(&mut self) {
+        match self.peek(1) {
+            Some(b'\\') => {
+                // Escaped char literal: skip the escaped byte, then
+                // scan to the closing quote (covers `'\''`, `'\u{..}'`).
+                self.i += 3;
+                while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                    self.i += 1;
+                }
+                self.i += 1;
+            }
+            Some(n) if is_ident_char(n) && self.peek(2) != Some(b'\'') => {
+                // Lifetime or loop label: consume the identifier.
+                self.i += 2;
+                while self.i < self.b.len() && is_ident_char(self.b[self.i]) {
+                    self.i += 1;
+                }
+            }
+            _ => {
+                // Plain char literal, possibly multi-byte UTF-8.
+                self.i += 1;
+                while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                    if self.b[self.i] == b'\n' {
+                        self.line += 1;
+                    }
+                    self.i += 1;
+                }
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Numeric literal: consumed, no token (rules never match numbers).
+    fn number(&mut self) {
+        while self.i < self.b.len() && is_ident_char(self.b[self.i]) {
+            self.i += 1;
+        }
+        // A fraction only if `.` is followed by a digit — `0..n` must
+        // leave the range dots as punctuation.
+        if self.peek(0) == Some(b'.') && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+            self.i += 1;
+            while self.i < self.b.len() && is_ident_char(self.b[self.i]) {
+                self.i += 1;
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        let at = self.line;
+        while self.i < self.b.len() && is_ident_char(self.b[self.i]) {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.out.toks.push(Tok { line: at, kind: TokKind::Ident(text) });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.toks.iter().filter_map(|t| t.ident()).collect()
+    }
+
+    #[test]
+    fn lint_lexer_strings_chars_and_lifetimes_are_invisible() {
+        let src = r##"
+            fn f<'a>(x: &'a str) -> char {
+                let s = "unwrap() \" inside";
+                let r = r#"also "unwrap" here"#;
+                let b = b"bytes";
+                let c = 'x';
+                let q = '\'';
+                let nl = '\n';
+                'outer: loop { break 'outer; }
+            }
+        "##;
+        let l = lex(src);
+        let ids = idents(&l);
+        assert!(!ids.contains(&"unwrap"), "{ids:?}");
+        assert!(!ids.contains(&"inside"));
+        assert!(!ids.contains(&"also"));
+        assert!(ids.contains(&"loop"));
+        assert!(ids.contains(&"break"));
+        // Lifetimes/labels are consumed, not identifiers.
+        assert!(!ids.contains(&"outer"));
+        assert!(!ids.contains(&"a") || src.contains("let a"), "lifetime 'a leaked");
+    }
+
+    #[test]
+    fn lint_lexer_comments_are_captured_by_line() {
+        let src = "let x = 1; // ordering: relaxed is fine\n/* block\nspans */ let y = 2;\n";
+        let l = lex(src);
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].0, 1);
+        assert!(l.comments[0].1.contains("ordering:"));
+        assert_eq!(l.comments[1].0, 2);
+        assert!(l.comments[1].1.contains("spans"));
+        // Tokens after the block comment land on the right line.
+        let y = l.toks.iter().find(|t| t.is_ident("y")).unwrap();
+        assert_eq!(y.line, 3);
+    }
+
+    #[test]
+    fn lint_lexer_numbers_and_ranges() {
+        let src = "for i in 0..n { let f = 1.5e3; let t = x.0; }";
+        let l = lex(src);
+        // The range dots survive as punctuation.
+        let dots = l.toks.iter().filter(|t| t.is_punct('.')).count();
+        assert!(dots >= 3, "range + field access dots, got {dots}");
+        assert!(idents(&l).contains(&"n"));
+    }
+
+    #[test]
+    fn lint_lexer_nested_block_comments() {
+        let src = "/* a /* b */ c */ fn real() {}";
+        let l = lex(src);
+        assert_eq!(idents(&l), vec!["fn", "real"]);
+    }
+
+    #[test]
+    fn lint_lexer_double_colon_is_two_puncts() {
+        let l = lex("Ordering::SeqCst");
+        let kinds: Vec<String> = l
+            .toks
+            .iter()
+            .map(|t| match &t.kind {
+                TokKind::Ident(s) => s.clone(),
+                TokKind::Punct(c) => c.to_string(),
+            })
+            .collect();
+        assert_eq!(kinds, vec!["Ordering", ":", ":", "SeqCst"]);
+    }
+}

@@ -1,0 +1,328 @@
+//! # Static analysis: codebase-specific lint rules with a ratchet
+//!
+//! `sasp lint` enforces the handful of invariants this codebase cares
+//! about that `rustc`/`clippy` cannot see, because they are *project
+//! contracts*, not language properties:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `hot-loop-alloc` | kernel loop bodies (`infer/gemm.rs`, `infer/batch/`, `infer/decoder/`, `systolic/`) never allocate or copy |
+//! | `unlabeled-gemm-site` | every GEMM execution site in `infer/` feeds the per-layer attribution ledger |
+//! | `atomic-ordering-audit` | every atomic `Ordering::` choice carries a written justification; `SeqCst` needs a pragma |
+//! | `serve-path-panic` | the serving request path (`coordinator/serve.rs`, `coordinator/resilience.rs`) returns errors, never panics |
+//! | `bitwise-contract-drift` | bitwise-oracle modules keep accumulation order pinned (no `mul_add`, no `.sum()`) |
+//! | `lint-hygiene` | the crate root keeps `#![forbid(unsafe_code)]` and the curated `#![deny(..)]` set |
+//!
+//! Like the rest of the crate ([`crate::util::json`] and friends), the
+//! engine is zero-dependency: a [`lexer`] that is *not* a Rust parser —
+//! just enough lexing to make strings, comments and `cfg(test)` regions
+//! reliable — and a [`rules`] pass over the token stream.
+//!
+//! ## The ratchet
+//!
+//! Findings that predate the linter are recorded in a committed
+//! baseline (`rust/lint-baseline.json`, see [`baseline`]). The gate
+//! semantics:
+//!
+//! - **fresh** finding (not in the baseline) → fail: new code meets the
+//!   bar from day one;
+//! - **stale** entry (in the baseline, no longer found) → fail: fixes
+//!   ratchet in by deleting their entry, and can't silently regress;
+//! - **grandfathered** finding → reported, tolerated.
+//!
+//! Intentional, permanent exceptions use an inline pragma instead of
+//! the baseline — `// lint:allow(bitwise-contract-drift) -- max is order-independent`
+//! — which covers its own line and the next. The baseline is for debt;
+//! pragmas are for decisions.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::Result;
+
+pub use baseline::{Applied, Baseline, BaselineEntry};
+pub use rules::{check_file, Finding, RULES};
+
+/// One full lint run, split against the baseline.
+#[derive(Debug)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub grandfathered: Vec<Finding>,
+    pub fresh: Vec<Finding>,
+    pub stale: Vec<BaselineEntry>,
+}
+
+impl LintReport {
+    /// Does this run pass the gate?
+    pub fn clean(&self) -> bool {
+        self.fresh.is_empty() && self.stale.is_empty()
+    }
+}
+
+/// Lint every `.rs` file under `src_root`, in deterministic (sorted
+/// relative path) order. Returns the findings plus the file count.
+pub fn scan_tree(src_root: &Path) -> Result<(Vec<Finding>, usize)> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let src = fs::read_to_string(src_root.join(rel))
+            .map_err(|e| anyhow::anyhow!("read {rel}: {e}"))?;
+        findings.extend(check_file(rel, &src));
+    }
+    Ok((findings, files.len()))
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| anyhow::anyhow!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with('.') {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if name.ends_with(".rs") {
+            // Store '/'-separated relative paths so rule scoping and
+            // baseline keys are platform-stable.
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint `src_root` and ratchet against the baseline at `baseline_path`
+/// (missing file = empty baseline).
+pub fn run(src_root: &Path, baseline_path: &Path) -> Result<LintReport> {
+    let (findings, files_scanned) = scan_tree(src_root)?;
+    let base = Baseline::load(baseline_path)?;
+    let applied = base.apply(findings);
+    Ok(LintReport {
+        files_scanned,
+        grandfathered: applied.grandfathered,
+        fresh: applied.fresh,
+        stale: applied.stale,
+    })
+}
+
+/// Human-readable report: a table of violations (fresh + stale), then
+/// the one-line verdict. Grandfathered findings are summarized only —
+/// they are debt, not news.
+pub fn render_human(r: &LintReport) -> String {
+    let mut out = String::new();
+    if !r.fresh.is_empty() {
+        let _ = writeln!(out, "fresh findings (not in baseline):");
+        for f in &r.fresh {
+            let _ = writeln!(out, "  {:<24} {}:{}", f.rule, f.file, f.line);
+            let _ = writeln!(out, "      {}", f.msg);
+            let _ = writeln!(out, "      > {}", f.text);
+        }
+    }
+    if !r.stale.is_empty() {
+        let _ = writeln!(out, "stale baseline entries (fixed — delete them):");
+        for e in &r.stale {
+            let _ = writeln!(out, "  {:<24} {}", e.rule, e.file);
+            let _ = writeln!(out, "      > {}", e.text);
+        }
+    }
+    let _ = writeln!(
+        out,
+        "sasp lint: {} files, {} fresh, {} stale, {} grandfathered — {}",
+        r.files_scanned,
+        r.fresh.len(),
+        r.stale.len(),
+        r.grandfathered.len(),
+        if r.clean() { "OK" } else { "FAIL" },
+    );
+    out
+}
+
+/// Machine-readable report (one JSON document).
+pub fn render_json(r: &LintReport) -> String {
+    use crate::util::json::JsonWriter;
+    let mut w = JsonWriter::new(Vec::new());
+    let emit = |w: &mut JsonWriter<Vec<u8>>, findings: &[Finding]| -> std::io::Result<()> {
+        w.begin_arr()?;
+        for f in findings {
+            w.begin_obj()?;
+            w.key("rule")?;
+            w.str_val(f.rule)?;
+            w.key("file")?;
+            w.str_val(&f.file)?;
+            w.key("line")?;
+            w.u64_val(u64::from(f.line))?;
+            w.key("text")?;
+            w.str_val(&f.text)?;
+            w.key("msg")?;
+            w.str_val(&f.msg)?;
+            w.end()?;
+        }
+        w.end()
+    };
+    // In-memory Vec<u8> writes cannot fail; a short report fits easily.
+    let run = || -> std::io::Result<Vec<u8>> {
+        w.begin_obj()?;
+        w.key("files_scanned")?;
+        w.u64_val(r.files_scanned as u64)?;
+        w.key("clean")?;
+        w.bool_val(r.clean())?;
+        w.key("fresh")?;
+        emit(&mut w, &r.fresh)?;
+        w.key("stale")?;
+        w.begin_arr()?;
+        for e in &r.stale {
+            w.begin_obj()?;
+            w.key("rule")?;
+            w.str_val(&e.rule)?;
+            w.key("file")?;
+            w.str_val(&e.file)?;
+            w.key("text")?;
+            w.str_val(&e.text)?;
+            w.key("reason")?;
+            w.str_val(&e.reason)?;
+            w.end()?;
+        }
+        w.end()?;
+        w.key("grandfathered")?;
+        emit(&mut w, &r.grandfathered)?;
+        w.end()?;
+        w.finish()
+    };
+    match run() {
+        Ok(bytes) => String::from_utf8_lossy(&bytes).into_owned(),
+        Err(_) => String::from("{}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct TempTree {
+        root: std::path::PathBuf,
+    }
+
+    impl TempTree {
+        fn new(tag: &str) -> TempTree {
+            let root = std::env::temp_dir()
+                .join(format!("sasp-lint-tree-{tag}-{}", std::process::id()));
+            let _ = fs::remove_dir_all(&root);
+            fs::create_dir_all(root.join("src/coordinator")).unwrap();
+            TempTree { root }
+        }
+
+        fn src(&self) -> std::path::PathBuf {
+            self.root.join("src")
+        }
+
+        fn baseline(&self) -> std::path::PathBuf {
+            self.root.join("lint-baseline.json")
+        }
+
+        fn write(&self, rel: &str, content: &str) {
+            fs::write(self.src().join(rel), content).unwrap();
+        }
+    }
+
+    impl Drop for TempTree {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    #[test]
+    fn lint_engine_scan_tree_uses_sorted_relative_paths() {
+        let t = TempTree::new("scan");
+        t.write("coordinator/serve.rs", "fn f(o: Option<u64>) -> u64 {\n    o.unwrap()\n}\n");
+        t.write("other.rs", "fn g() {}\n");
+        let (findings, files) = scan_tree(&t.src()).unwrap();
+        assert_eq!(files, 2);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].file, "coordinator/serve.rs");
+        assert_eq!(findings[0].rule, "serve-path-panic");
+    }
+
+    #[test]
+    fn lint_engine_ratchet_round_trip() {
+        let t = TempTree::new("ratchet");
+        t.write("coordinator/serve.rs", "fn f(o: Option<u64>) -> u64 {\n    o.unwrap()\n}\n");
+
+        // 1. No baseline yet: the existing finding is fresh → FAIL.
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        assert!(!r.clean());
+        assert_eq!(r.fresh.len(), 1);
+
+        // 2. Ratchet it: write the baseline, rerun → grandfathered, OK.
+        Baseline::default().refreshed(&r.fresh).save(&t.baseline()).unwrap();
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        assert!(r.clean(), "{:?}", r);
+        assert_eq!(r.grandfathered.len(), 1);
+
+        // 3. A new panic site is NOT covered — fresh again → FAIL, and
+        //    the old one stays grandfathered.
+        t.write(
+            "coordinator/serve.rs",
+            "fn f(o: Option<u64>) -> u64 {\n    o.unwrap()\n}\nfn g(o: Option<u64>) -> u64 {\n    o.expect(\"set\")\n}\n",
+        );
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        assert!(!r.clean());
+        assert_eq!(r.fresh.len(), 1);
+        assert_eq!(r.grandfathered.len(), 1);
+        assert!(r.fresh[0].text.contains("expect"));
+
+        // 4. Fix the original site: its baseline entry is now stale →
+        //    FAIL until it is deleted (the ratchet only tightens).
+        t.write("coordinator/serve.rs", "fn f(o: Option<u64>) -> u64 {\n    o.unwrap_or(0)\n}\n");
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        assert!(!r.clean());
+        assert!(r.fresh.is_empty());
+        assert_eq!(r.stale.len(), 1);
+
+        // 5. Refresh the baseline (now empty), rerun → clean tree.
+        Baseline::default().refreshed(&r.fresh).save(&t.baseline()).unwrap();
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        assert!(r.clean());
+        assert_eq!(r.grandfathered.len(), 0);
+    }
+
+    #[test]
+    fn lint_engine_renderers_cover_both_verdicts() {
+        let t = TempTree::new("render");
+        t.write("coordinator/serve.rs", "fn f(o: Option<u64>) -> u64 {\n    o.unwrap()\n}\n");
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        let human = render_human(&r);
+        assert!(human.contains("FAIL"), "{human}");
+        assert!(human.contains("serve-path-panic"), "{human}");
+        let json = crate::util::json::Json::parse(&render_json(&r)).unwrap();
+        assert_eq!(json.get("clean").as_bool(), Some(false));
+        assert_eq!(json.get("fresh").as_arr().unwrap().len(), 1);
+        assert_eq!(
+            json.get("fresh").as_arr().unwrap()[0].get("rule").as_str(),
+            Some("serve-path-panic")
+        );
+
+        // Clean tree → OK verdict, clean JSON.
+        Baseline::default().refreshed(&r.fresh).save(&t.baseline()).unwrap();
+        let r = run(&t.src(), &t.baseline()).unwrap();
+        assert!(render_human(&r).contains("OK"));
+        let json = crate::util::json::Json::parse(&render_json(&r)).unwrap();
+        assert_eq!(json.get("clean").as_bool(), Some(true));
+    }
+}

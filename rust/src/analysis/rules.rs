@@ -1,0 +1,759 @@
+//! The per-file rule engine: six codebase-specific rules over the
+//! [`super::lexer`] token stream, plus allow-pragma handling.
+//!
+//! Every rule is scoped by *relative path under `src/`* (forward-slash
+//! separators), runs only over non-`#[cfg(test)]` tokens, and reports
+//! findings keyed by `(rule, file, trimmed line text)` — the key the
+//! ratchet baseline matches on, so findings survive unrelated line
+//! drift.
+//!
+//! Suppression: a `// lint:allow(serve-path-panic) -- index bounded above`
+//! style comment allows the named rule on its own line and the line
+//! directly below it. The reason is mandatory; a pragma without one (or
+//! naming an unknown rule) is itself a `bad-pragma` finding, which
+//! cannot be suppressed.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// Every rule id, in report order.
+pub const RULES: &[&str] = &[
+    "hot-loop-alloc",
+    "unlabeled-gemm-site",
+    "atomic-ordering-audit",
+    "serve-path-panic",
+    "bitwise-contract-drift",
+    "lint-hygiene",
+    "bad-pragma",
+];
+
+/// How many lines below a GEMM call a `layers::record(..)` attribution
+/// call must appear (the codebase idiom places it 1–12 lines after the
+/// call, often inside a `telemetry::active()` guard).
+const GEMM_LABEL_WINDOW: u32 = 16;
+
+/// Modules where the functional==analytic / bitwise-oracle contract
+/// makes floating-point accumulation *order* part of the API.
+const BITWISE_FILES: &[&str] = &[
+    "infer/ops.rs",
+    "infer/gemm.rs",
+    "infer/encoder.rs",
+    "infer/batch/gemm.rs",
+    "infer/batch/encoder.rs",
+    "infer/decoder/mod.rs",
+    "infer/decoder/forward.rs",
+    "infer/decoder/continuous.rs",
+    "systolic/array.rs",
+    "systolic/scheduler.rs",
+];
+
+/// Files whose non-test code must produce error `Response`s, never
+/// panic (a panic kills the batcher thread and every queued request).
+const SERVE_FILES: &[&str] = &["coordinator/serve.rs", "coordinator/resilience.rs"];
+
+/// Keywords that can directly precede `[` without it being an index
+/// expression (`&mut [f32]`, `return [a, b]`, ...).
+const NONINDEX_KEYWORDS: &[&str] = &[
+    "as", "box", "break", "const", "continue", "crate", "dyn", "else", "enum", "fn", "for",
+    "if", "impl", "in", "let", "loop", "match", "move", "mut", "pub", "ref", "return",
+    "static", "struct", "trait", "type", "union", "unsafe", "use", "where", "while",
+];
+
+/// One lint finding. `text` is the trimmed source line — the stable
+/// part of the baseline key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub text: String,
+    pub msg: String,
+}
+
+struct FileCtx<'a> {
+    path: &'a str,
+    lines: Vec<&'a str>,
+    toks: Vec<Tok>,
+    /// Comment text per line (merged when a line has several).
+    comments: BTreeMap<u32, String>,
+    /// Token is inside a `#[cfg(test)]` item.
+    in_test: Vec<bool>,
+    /// Token is inside a `for`/`while`/`loop` body.
+    in_loop: Vec<bool>,
+}
+
+/// Run every rule over one file. `path` is the path relative to the
+/// source root, with `/` separators.
+pub fn check_file(path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let mut comments: BTreeMap<u32, String> = BTreeMap::new();
+    for (line, text) in &lexed.comments {
+        let e = comments.entry(*line).or_default();
+        if !e.is_empty() {
+            e.push(' ');
+        }
+        e.push_str(text);
+    }
+    let in_test = test_mask(&lexed.toks);
+    let in_loop = loop_mask(&lexed.toks);
+    let ctx = FileCtx {
+        path,
+        lines: src.lines().collect(),
+        toks: lexed.toks,
+        comments,
+        in_test,
+        in_loop,
+    };
+
+    let mut findings = Vec::new();
+    rule_hot_loop_alloc(&ctx, &mut findings);
+    rule_unlabeled_gemm_site(&ctx, &mut findings);
+    rule_atomic_ordering_audit(&ctx, &mut findings);
+    rule_serve_path_panic(&ctx, &mut findings);
+    rule_bitwise_contract_drift(&ctx, &mut findings);
+    rule_lint_hygiene(&ctx, &mut findings);
+
+    // Pragmas: collect valid allows, report malformed ones.
+    let mut allows: Vec<(String, u32)> = Vec::new();
+    for (line, text) in &ctx.comments {
+        let Some(at) = text.find("lint:allow(") else { continue };
+        let rest = &text[at + "lint:allow(".len()..];
+        let (rule, tail) = match rest.find(')') {
+            Some(p) => (rest[..p].trim(), &rest[p + 1..]),
+            None => ("", rest),
+        };
+        let reason_ok = tail
+            .find("--")
+            .map(|p| !tail[p + 2..].trim().is_empty())
+            .unwrap_or(false);
+        if !RULES.contains(&rule) {
+            findings.push(ctx.finding(
+                "bad-pragma",
+                *line,
+                format!("lint:allow names unknown rule '{rule}'"),
+            ));
+        } else if !reason_ok {
+            findings.push(ctx.finding(
+                "bad-pragma",
+                *line,
+                format!("lint:allow({rule}) needs a `-- <reason>` justification"),
+            ));
+        } else {
+            allows.push((rule.to_string(), *line));
+        }
+    }
+    findings.retain(|f| {
+        f.rule == "bad-pragma"
+            || !allows
+                .iter()
+                .any(|(rule, line)| rule == f.rule && (f.line == *line || f.line == *line + 1))
+    });
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+impl<'a> FileCtx<'a> {
+    fn finding(&self, rule: &'static str, line: u32, msg: String) -> Finding {
+        let text = self
+            .lines
+            .get(line.saturating_sub(1) as usize)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default();
+        Finding { rule, file: self.path.to_string(), line, text, msg }
+    }
+
+    /// Does any comment on `line` contain `marker`?
+    fn comment_has(&self, line: u32, marker: &str) -> bool {
+        self.comments.get(&line).is_some_and(|t| t.contains(marker))
+    }
+
+    fn ident_at(&self, i: usize, s: &str) -> bool {
+        self.toks.get(i).is_some_and(|t| t.is_ident(s))
+    }
+
+    fn punct_at(&self, i: usize, c: char) -> bool {
+        self.toks.get(i).is_some_and(|t| t.is_punct(c))
+    }
+}
+
+/// Mark tokens inside `#[cfg(test)]` items (attribute through the end
+/// of the annotated item — brace-matched, or up to `;` for brace-less
+/// items).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let is_cfg_test = toks[i].is_punct('#')
+            && toks[i + 1].is_punct('[')
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is_punct('(')
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is_punct(')')
+            && toks[i + 6].is_punct(']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7;
+        let mut end = toks.len().saturating_sub(1);
+        while j < toks.len() {
+            if toks[j].is_punct(';') {
+                end = j;
+                break;
+            }
+            if toks[j].is_punct('{') {
+                end = match_brace(toks, j);
+                break;
+            }
+            j += 1;
+        }
+        for m in mask.iter_mut().take(end + 1).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Index of the `}` matching the `{` at `open` (last token if the file
+/// is unbalanced — the lexer guarantees nothing, the mask degrades
+/// gracefully).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Mark tokens inside `for`/`while`/`loop` bodies.
+fn loop_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    for i in 0..toks.len() {
+        let Some(kw) = toks[i].ident() else { continue };
+        if kw != "for" && kw != "while" && kw != "loop" {
+            continue;
+        }
+        // `for` in `impl Trait for Type` heads a type, not a loop; the
+        // next `{` would be the impl body. Filter: a loop `for` is
+        // never directly preceded by an identifier or `>`.
+        if kw == "for"
+            && i > 0
+            && (toks[i - 1].ident().is_some() || toks[i - 1].is_punct('>'))
+        {
+            continue;
+        }
+        // Find the body `{`: first brace outside parens/brackets.
+        let mut depth = 0i32;
+        let mut open = None;
+        for (j, t) in toks.iter().enumerate().skip(i + 1) {
+            match &t.kind {
+                TokKind::Punct('(') | TokKind::Punct('[') => depth += 1,
+                TokKind::Punct(')') | TokKind::Punct(']') => depth -= 1,
+                TokKind::Punct('{') if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                TokKind::Punct(';') if depth == 0 => break,
+                _ => {}
+            }
+        }
+        let Some(open) = open else { continue };
+        let close = match_brace(toks, open);
+        for m in mask.iter_mut().take(close).skip(open + 1) {
+            *m = true;
+        }
+    }
+    mask
+}
+
+/// Rule 1: no allocation/copy calls inside kernel-module loop bodies.
+fn rule_hot_loop_alloc(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let kernel = ctx.path == "infer/gemm.rs"
+        || ctx.path.starts_with("infer/batch/")
+        || ctx.path.starts_with("infer/decoder/")
+        || ctx.path.starts_with("systolic/");
+    if !kernel {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test[i] || !ctx.in_loop[i] {
+            continue;
+        }
+        let t = &ctx.toks[i];
+        let hit = match t.ident() {
+            Some(m @ ("push" | "clone" | "to_vec" | "collect"))
+                if i > 0 && ctx.toks[i - 1].is_punct('.') =>
+            {
+                Some(format!("`.{m}(..)` in a kernel loop body"))
+            }
+            Some("Vec")
+                if ctx.punct_at(i + 1, ':')
+                    && ctx.punct_at(i + 2, ':')
+                    && (ctx.ident_at(i + 3, "new") || ctx.ident_at(i + 3, "with_capacity")) =>
+            {
+                Some("`Vec` constructed in a kernel loop body".to_string())
+            }
+            Some("vec") if ctx.punct_at(i + 1, '!') => {
+                Some("`vec![..]` in a kernel loop body".to_string())
+            }
+            _ => None,
+        };
+        if let Some(what) = hit {
+            out.push(ctx.finding(
+                "hot-loop-alloc",
+                t.line,
+                format!("{what}: allocate once outside the loop and reuse"),
+            ));
+        }
+    }
+}
+
+/// Rule 2: every GEMM execution site in `infer/` must be followed by a
+/// `layers::record(..)` attribution call within [`GEMM_LABEL_WINDOW`]
+/// lines, so the per-layer accounting stays total.
+fn rule_unlabeled_gemm_site(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.path.starts_with("infer/")
+        || matches!(ctx.path, "infer/gemm.rs" | "infer/batch/gemm.rs" | "infer/layers.rs")
+    {
+        return;
+    }
+    // All lines holding a `layers::record(` (or `..::layers::record(`).
+    let mut record_lines: Vec<u32> = Vec::new();
+    for i in 0..ctx.toks.len() {
+        if ctx.toks[i].is_ident("layers")
+            && ctx.punct_at(i + 1, ':')
+            && ctx.punct_at(i + 2, ':')
+            && ctx.ident_at(i + 3, "record")
+        {
+            record_lines.push(ctx.toks[i].line);
+        }
+    }
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let Some(name) = ctx.toks[i].ident() else { continue };
+        let method = matches!(name, "gemm" | "gemm_batched") && i > 0 && ctx.toks[i - 1].is_punct('.');
+        let free = matches!(name, "gemm_f32" | "gemm_int8")
+            && (i == 0 || !ctx.toks[i - 1].is_punct(':'));
+        if !(method || free) || !ctx.punct_at(i + 1, '(') {
+            continue;
+        }
+        if i > 0 && ctx.toks[i - 1].is_ident("fn") {
+            continue; // a definition, not a call site
+        }
+        let line = ctx.toks[i].line;
+        let labeled = record_lines
+            .iter()
+            .any(|&r| r >= line && r <= line + GEMM_LABEL_WINDOW);
+        if !labeled {
+            out.push(ctx.finding(
+                "unlabeled-gemm-site",
+                line,
+                format!(
+                    "`{name}(..)` has no `layers::record(..)` within {GEMM_LABEL_WINDOW} \
+                     lines — per-layer attribution would go dark here"
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 3: every atomic `Ordering::` use needs an `// ordering:`
+/// justification — on the same line, or anywhere in the contiguous
+/// comment block directly above it; `SeqCst` is flagged unconditionally
+/// (pragma-only, so the strongest ordering is always a deliberate,
+/// reviewed choice).
+fn rule_atomic_ordering_audit(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    const VARIANTS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+    // Lines already justified — a use within two lines below one
+    // inherits it, so one comment can cover a tight cluster.
+    let mut justified: Vec<u32> = Vec::new();
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test[i] || !ctx.toks[i].is_ident("Ordering") {
+            continue;
+        }
+        if !(ctx.punct_at(i + 1, ':') && ctx.punct_at(i + 2, ':')) {
+            continue;
+        }
+        let Some(variant) = ctx.toks.get(i + 3).and_then(|t| t.ident()) else { continue };
+        if !VARIANTS.contains(&variant) {
+            continue; // std::cmp::Ordering::{Less,Equal,Greater}
+        }
+        let line = ctx.toks[i].line;
+        // Same-line marker, or the marker anywhere in the comment
+        // lines stacked directly on top of this one.
+        let mut commented = ctx.comment_has(line, "ordering:");
+        let mut l = line.saturating_sub(1);
+        while !commented && l >= 1 && ctx.comments.contains_key(&l) {
+            commented = ctx.comment_has(l, "ordering:");
+            l -= 1;
+        }
+        let chained = justified
+            .iter()
+            .any(|&j| j < line && line - j <= 2);
+        if commented || chained {
+            justified.push(line);
+        }
+        if variant == "SeqCst" {
+            out.push(ctx.finding(
+                "atomic-ordering-audit",
+                line,
+                "Ordering::SeqCst — justify why a weaker ordering is insufficient \
+                 via `// lint:allow(atomic-ordering-audit) -- <reason>`"
+                    .to_string(),
+            ));
+        } else if !(commented || chained) {
+            out.push(ctx.finding(
+                "atomic-ordering-audit",
+                line,
+                format!(
+                    "Ordering::{variant} without an `// ordering:` justification on \
+                     this line or in the comment block directly above it"
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 4: no panicking constructs in the serving request path.
+fn rule_serve_path_panic(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !SERVE_FILES.contains(&ctx.path) {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let t = &ctx.toks[i];
+        match &t.kind {
+            TokKind::Ident(name) => {
+                let method_panic = matches!(name.as_str(), "unwrap" | "expect")
+                    && i > 0
+                    && ctx.toks[i - 1].is_punct('.')
+                    && ctx.punct_at(i + 1, '(');
+                let macro_panic = matches!(
+                    name.as_str(),
+                    "panic" | "unreachable" | "todo" | "unimplemented" | "assert"
+                        | "assert_eq" | "assert_ne"
+                ) && ctx.punct_at(i + 1, '!');
+                if method_panic {
+                    out.push(ctx.finding(
+                        "serve-path-panic",
+                        t.line,
+                        format!(
+                            "`.{name}(..)` in the serving request path — a panic here \
+                             kills the batcher; produce an error Response instead"
+                        ),
+                    ));
+                } else if macro_panic {
+                    out.push(ctx.finding(
+                        "serve-path-panic",
+                        t.line,
+                        format!(
+                            "`{name}!(..)` in the serving request path — return an \
+                             error (`ensure!`/`bail!`) so the caller degrades gracefully"
+                        ),
+                    ));
+                }
+            }
+            TokKind::Punct('[') if i > 0 => {
+                let prev = &ctx.toks[i - 1];
+                let indexes = match &prev.kind {
+                    TokKind::Ident(p) => !NONINDEX_KEYWORDS.contains(&p.as_str()),
+                    TokKind::Punct(']') | TokKind::Punct(')') => true,
+                    _ => false,
+                };
+                if indexes {
+                    out.push(ctx.finding(
+                        "serve-path-panic",
+                        t.line,
+                        "slice/array indexing in the serving request path can panic — \
+                         use `.get(..)` or restructure"
+                            .to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Rule 5: in bitwise-contract modules, forbid rewrites that change
+/// floating-point accumulation order or contract FMA.
+fn rule_bitwise_contract_drift(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !BITWISE_FILES.contains(&ctx.path) {
+        return;
+    }
+    const FAST_INTRINSICS: &[&str] =
+        &["fadd_fast", "fsub_fast", "fmul_fast", "fdiv_fast", "frem_fast", "fadd_algebraic", "fmul_algebraic"];
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let Some(name) = ctx.toks[i].ident() else { continue };
+        let line = ctx.toks[i].line;
+        if name == "mul_add" {
+            out.push(ctx.finding(
+                "bitwise-contract-drift",
+                line,
+                "`mul_add` fuses rounding — bitwise-oracle outputs would diverge \
+                 between code paths"
+                    .to_string(),
+            ));
+        } else if FAST_INTRINSICS.contains(&name) {
+            out.push(ctx.finding(
+                "bitwise-contract-drift",
+                line,
+                format!("`{name}` licenses reassociation — forbidden in bitwise-contract modules"),
+            ));
+        } else if matches!(name, "sum" | "product" | "fold")
+            && i > 0
+            && ctx.toks[i - 1].is_punct('.')
+        {
+            out.push(ctx.finding(
+                "bitwise-contract-drift",
+                line,
+                format!(
+                    "`.{name}(..)` reduction in a bitwise-contract module — accumulation \
+                     order is part of the contract; keep the explicit loop, or pragma \
+                     with why the order is pinned (or exact)"
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 6: the crate root must carry `#![forbid(unsafe_code)]` and a
+/// non-empty `#![deny(..)]` set.
+fn rule_lint_hygiene(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.path != "lib.rs" {
+        return;
+    }
+    let mut has_forbid_unsafe = false;
+    let mut has_deny = false;
+    for i in 0..ctx.toks.len() {
+        if !(ctx.toks[i].is_punct('#') && ctx.punct_at(i + 1, '!') && ctx.punct_at(i + 2, '[')) {
+            continue;
+        }
+        if ctx.ident_at(i + 3, "forbid")
+            && ctx.punct_at(i + 4, '(')
+            && ctx.ident_at(i + 5, "unsafe_code")
+        {
+            has_forbid_unsafe = true;
+        }
+        if ctx.ident_at(i + 3, "deny")
+            && ctx.punct_at(i + 4, '(')
+            && ctx.toks.get(i + 5).is_some_and(|t| t.ident().is_some())
+        {
+            has_deny = true;
+        }
+    }
+    if !has_forbid_unsafe {
+        out.push(ctx.finding(
+            "lint-hygiene",
+            1,
+            "crate root is missing `#![forbid(unsafe_code)]`".to_string(),
+        ));
+    }
+    if !has_deny {
+        out.push(ctx.finding(
+            "lint-hygiene",
+            1,
+            "crate root is missing a `#![deny(..)]` hygiene set".to_string(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- hot-loop-alloc ------------------------------------------------
+
+    #[test]
+    fn lint_hot_loop_alloc_fires_in_kernel_loop() {
+        let src = "fn k(out: &mut Vec<f32>) {\n    for i in 0..4 {\n        out.push(1.0);\n        let v = Vec::new();\n        let w = vec![0; 4];\n    }\n}\n";
+        let f = check_file("systolic/array.rs", src);
+        assert_eq!(rules_of(&f), vec!["hot-loop-alloc"; 3], "{f:?}");
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].text, "out.push(1.0);");
+    }
+
+    #[test]
+    fn lint_hot_loop_alloc_ignores_non_kernel_and_non_loop() {
+        let src = "fn k(out: &mut Vec<f32>) {\n    for i in 0..4 {\n        out.push(1.0);\n    }\n}\n";
+        // Same code outside the kernel module set: clean.
+        assert!(check_file("coordinator/serve.rs", src).iter().all(|f| f.rule != "hot-loop-alloc"));
+        // Allocation outside any loop in a kernel module: clean.
+        let src2 = "fn k() -> Vec<f32> {\n    let mut v = Vec::new();\n    v.push(1.0);\n    v\n}\n";
+        assert!(check_file("infer/gemm.rs", src2).is_empty());
+        // Test code in a kernel module: clean.
+        let src3 = "#[cfg(test)]\nmod tests {\n    fn t() {\n        for i in 0..4 {\n            let mut v = Vec::new();\n            v.push(i);\n        }\n    }\n}\n";
+        assert!(check_file("infer/gemm.rs", src3).is_empty());
+    }
+
+    // ---- unlabeled-gemm-site -------------------------------------------
+
+    #[test]
+    fn lint_unlabeled_gemm_site_fires_without_record() {
+        let src = "fn f() {\n    let s = w.gemm(&x, t, None, tile, &mut out);\n}\n";
+        let f = check_file("infer/encoder.rs", src);
+        assert_eq!(rules_of(&f), vec!["unlabeled-gemm-site"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn lint_unlabeled_gemm_site_satisfied_by_nearby_record() {
+        let src = "fn f() {\n    let s = w.gemm(&x, t, None, tile, &mut out);\n    layers::record(Layer::Qkv, &s, tile, quant);\n}\n";
+        assert!(check_file("infer/encoder.rs", src).is_empty());
+        // The kernel-definition modules are out of scope.
+        let src2 = "fn f() {\n    let s = gemm_f32(&x, &w);\n}\n";
+        assert!(check_file("infer/gemm.rs", src2).is_empty());
+    }
+
+    // ---- atomic-ordering-audit -----------------------------------------
+
+    #[test]
+    fn lint_atomic_ordering_audit_requires_justification() {
+        let src = "fn f() {\n    A.store(1, Ordering::Relaxed);\n}\n";
+        let f = check_file("telemetry/spans.rs", src);
+        assert_eq!(rules_of(&f), vec!["atomic-ordering-audit"]);
+        // cmp::Ordering variants never match.
+        let src2 = "fn f() -> Ordering {\n    Ordering::Equal\n}\n";
+        assert!(check_file("coordinator/explorer.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn lint_atomic_ordering_audit_accepts_comment_and_cluster() {
+        let src = "fn f() {\n    // ordering: Relaxed — counter merged at scrape.\n    a.fetch_add(1, Ordering::Relaxed);\n    b.fetch_add(1, Ordering::Relaxed);\n    c.load(Ordering::Relaxed);\n}\n";
+        assert!(check_file("telemetry/metrics.rs", src).is_empty());
+        // Multi-line justification: the marker may sit anywhere in the
+        // comment block stacked directly above the use.
+        let src2 = "fn f() {\n    // ordering: Relaxed — a unique-id counter; only atomicity\n    // of the increment matters, never inter-thread ordering\n    // (ids are compared for equality, not for order).\n    a.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert!(check_file("telemetry/spans.rs", src2).is_empty());
+        // ... but a comment block separated by a code line does not count.
+        let src3 = "fn f() {\n    // ordering: Relaxed — stale doc.\n    let x = 1;\n    a.fetch_add(x, Ordering::Relaxed);\n}\n";
+        assert_eq!(rules_of(&check_file("telemetry/spans.rs", src3)), vec!["atomic-ordering-audit"]);
+    }
+
+    #[test]
+    fn lint_atomic_ordering_audit_flags_seqcst_even_with_comment() {
+        let src = "fn f() {\n    // ordering: belt and braces.\n    A.store(1, Ordering::SeqCst);\n}\n";
+        let f = check_file("telemetry/spans.rs", src);
+        assert_eq!(rules_of(&f), vec!["atomic-ordering-audit"]);
+        // ... but a pragma (deliberate, reviewed) allows it.
+        let src2 = "fn f() {\n    // lint:allow(atomic-ordering-audit) -- store must fence the epoch init\n    A.store(1, Ordering::SeqCst);\n}\n";
+        assert!(check_file("telemetry/spans.rs", src2).is_empty());
+    }
+
+    // ---- serve-path-panic ----------------------------------------------
+
+    #[test]
+    fn lint_serve_path_panic_fires_on_each_construct() {
+        let src = "fn f(v: &[u64], o: Option<u64>) -> u64 {\n    let a = o.unwrap();\n    let b = o.expect(\"set\");\n    if v.is_empty() { panic!(\"no\"); }\n    assert!(a > 0);\n    v[0] + a + b\n}\n";
+        let f = check_file("coordinator/serve.rs", src);
+        assert_eq!(
+            rules_of(&f),
+            vec!["serve-path-panic"; 5],
+            "unwrap, expect, panic!, assert!, indexing: {f:?}"
+        );
+    }
+
+    #[test]
+    fn lint_serve_path_panic_ignores_tests_and_other_files() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let v = vec![1];\n        assert_eq!(v[0], 1);\n        v.get(9).unwrap();\n    }\n}\n";
+        assert!(check_file("coordinator/serve.rs", src).is_empty());
+        let src2 = "fn f(o: Option<u64>) -> u64 {\n    o.unwrap()\n}\n";
+        assert!(check_file("infer/encoder.rs", src2).is_empty());
+        // Slice *types* and attributes are not index expressions.
+        let src3 = "fn f(x: &mut [f32]) -> [u8; 4] {\n    let [a, b] = [1u8, 2];\n    [a, b, a, b]\n}\n";
+        assert!(check_file("coordinator/resilience.rs", src3).is_empty());
+    }
+
+    // ---- bitwise-contract-drift ----------------------------------------
+
+    #[test]
+    fn lint_bitwise_contract_drift_fires_on_mul_add_and_reductions() {
+        let src = "fn f(xs: &[f32]) -> f32 {\n    let s: f32 = xs.iter().sum();\n    let m = xs.iter().fold(0.0f32, |a, b| a + b);\n    s.mul_add(2.0, m)\n}\n";
+        let f = check_file("infer/ops.rs", src);
+        assert_eq!(rules_of(&f), vec!["bitwise-contract-drift"; 3], "{f:?}");
+    }
+
+    #[test]
+    fn lint_bitwise_contract_drift_scoped_to_contract_modules() {
+        let src = "fn f(xs: &[usize]) -> usize {\n    xs.iter().sum()\n}\n";
+        assert!(check_file("coordinator/serve.rs", src).is_empty());
+        // A pragma with a reason allows an order-insensitive reduction.
+        let src2 = "fn f(xs: &[f32]) -> f32 {\n    // lint:allow(bitwise-contract-drift) -- max-fold is order-independent\n    xs.iter().fold(0.0f32, |a, b| a.max(b))\n}\n";
+        assert!(check_file("infer/ops.rs", src2).is_empty());
+    }
+
+    // ---- lint-hygiene --------------------------------------------------
+
+    #[test]
+    fn lint_hygiene_requires_forbid_and_deny() {
+        let src = "pub mod a;\n";
+        let f = check_file("lib.rs", src);
+        assert_eq!(rules_of(&f), vec!["lint-hygiene"; 2]);
+        let src2 = "#![forbid(unsafe_code)]\n#![deny(keyword_idents, non_ascii_idents)]\npub mod a;\n";
+        assert!(check_file("lib.rs", src2).is_empty());
+        // Other files carry no such obligation.
+        assert!(check_file("main.rs", src).is_empty());
+    }
+
+    // ---- pragmas -------------------------------------------------------
+
+    #[test]
+    fn lint_pragma_suppresses_own_and_next_line_only() {
+        let src = "fn f(v: &[u64]) -> u64 {\n    // lint:allow(serve-path-panic) -- index bounded by caller contract\n    v[0]\n}\n";
+        assert!(check_file("coordinator/serve.rs", src).is_empty());
+        // Same-line (trailing) pragma.
+        let src2 = "fn f(v: &[u64]) -> u64 {\n    v[0] // lint:allow(serve-path-panic) -- bounded\n}\n";
+        assert!(check_file("coordinator/serve.rs", src2).is_empty());
+        // Two lines below: out of the pragma window.
+        let src3 = "fn f(v: &[u64]) -> u64 {\n    // lint:allow(serve-path-panic) -- bounded\n    let x = 1;\n    v[0]\n}\n";
+        assert_eq!(rules_of(&check_file("coordinator/serve.rs", src3)), vec!["serve-path-panic"]);
+    }
+
+    #[test]
+    fn lint_bad_pragma_flags_missing_reason_and_unknown_rule() {
+        let src = "fn f(v: &[u64]) -> u64 {\n    // lint:allow(serve-path-panic)\n    v[0]\n}\n";
+        let f = check_file("coordinator/serve.rs", src);
+        // The malformed pragma does not suppress, and is itself flagged.
+        assert_eq!(rules_of(&f), vec!["bad-pragma", "serve-path-panic"], "{f:?}");
+        let src2 = "// lint:allow(no-such-rule) -- whatever\nfn f() {}\n";
+        assert_eq!(rules_of(&check_file("infer/mod.rs", src2)), vec!["bad-pragma"]);
+    }
+
+    // ---- masks ---------------------------------------------------------
+
+    #[test]
+    fn lint_loop_mask_sees_through_closure_parens() {
+        // The `{` inside the iterator-chain closure must not be taken
+        // for the loop body.
+        let src = "fn k(xs: &[usize], out: &mut Vec<usize>) {\n    for x in xs.iter().map(|v| { v + 1 }) {\n        out.push(x);\n    }\n}\n";
+        let f = check_file("systolic/pe.rs", src);
+        assert_eq!(rules_of(&f), vec!["hot-loop-alloc"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn lint_impl_trait_for_is_not_a_loop() {
+        let src = "impl Clone for Thing {\n    fn clone(&self) -> Thing {\n        Thing\n    }\n}\n";
+        assert!(check_file("systolic/pe.rs", src).is_empty());
+    }
+}

@@ -250,6 +250,9 @@ impl Explorer {
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
+                    // ordering: Relaxed — the cursor only needs each
+                    // index handed to exactly one worker (atomicity);
+                    // results are published via the per-slot mutexes.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= points.len() {
                         break;

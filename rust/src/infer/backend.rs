@@ -426,6 +426,9 @@ impl NativeBackend {
                     let mut claimed = 0usize;
                     let mut done = ForwardStats::default();
                     loop {
+                        // ordering: Relaxed — work-stealing cursor; the
+                        // claim only needs atomicity, chunk data flows
+                        // through the per-slot mutexes.
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
                         if i >= chunks.len() {
                             break;
@@ -448,6 +451,8 @@ impl NativeBackend {
                                 claimed += 1;
                                 done.add(&fwd.stats);
                             }
+                            // ordering: Relaxed — the flag is read only
+                            // after scope join, which synchronizes.
                             Err(_) => panicked[i].store(true, Ordering::Relaxed),
                         }
                     }
@@ -471,6 +476,8 @@ impl NativeBackend {
         let mut failed = Vec::new();
         let mut u0 = 0usize;
         for (i, &len) in chunks.iter().enumerate() {
+            // ordering: Relaxed — set before the scope join above; the
+            // join is the synchronization point.
             if panicked[i].load(Ordering::Relaxed) {
                 out.resize(out.len() + len * t * v, 0.0);
                 failed.extend(u0..u0 + len);

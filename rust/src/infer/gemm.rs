@@ -248,6 +248,7 @@ impl QuantizedLinear {
                 lut[c * 256 + b] = SignMag8::from_bits(b as u8).to_i8() as f32 * s;
             }
         }
+        // lint:allow(bitwise-contract-drift) -- max over column scales is order-independent
         let scale = q.scales.iter().fold(0.0f32, |a, s| a.max(*s));
         QuantizedLinear { k, n, bits, scale, col_scales: Some(q.scales), lut }
     }

@@ -11,6 +11,7 @@ pub fn layer_norm(x: &mut [f32], d: usize, gamma: &[f32], beta: &[f32]) {
     assert_eq!(gamma.len(), d);
     assert_eq!(beta.len(), d);
     for row in x.chunks_exact_mut(d) {
+        // lint:allow(bitwise-contract-drift) -- canonical shared mean reduction; single implementation all engines call
         let mean = row.iter().sum::<f32>() / d as f32;
         let var = row
             .iter()
@@ -18,6 +19,7 @@ pub fn layer_norm(x: &mut [f32], d: usize, gamma: &[f32], beta: &[f32]) {
                 let c = v - mean;
                 c * c
             })
+            // lint:allow(bitwise-contract-drift) -- canonical shared variance reduction; single implementation all engines call
             .sum::<f32>()
             / d as f32;
         let inv = 1.0 / (var + 1e-5).sqrt();
@@ -31,6 +33,7 @@ pub fn layer_norm(x: &mut [f32], d: usize, gamma: &[f32], beta: &[f32]) {
 pub fn softmax_rows(x: &mut [f32], n: usize) {
     assert!(n > 0 && x.len() % n == 0);
     for row in x.chunks_exact_mut(n) {
+        // lint:allow(bitwise-contract-drift) -- max-fold is order-independent
         let max = row.iter().fold(f32::NEG_INFINITY, |a, v| a.max(*v));
         let mut sum = 0.0f32;
         for v in row.iter_mut() {
@@ -49,7 +52,9 @@ pub fn softmax_rows(x: &mut [f32], n: usize) {
 pub fn log_softmax_rows(x: &mut [f32], n: usize) {
     assert!(n > 0 && x.len() % n == 0);
     for row in x.chunks_exact_mut(n) {
+        // lint:allow(bitwise-contract-drift) -- max-fold is order-independent
         let max = row.iter().fold(f32::NEG_INFINITY, |a, v| a.max(*v));
+        // lint:allow(bitwise-contract-drift) -- canonical shared exp-sum; single implementation all engines call
         let sum: f32 = row.iter().map(|v| (*v - max).exp()).sum();
         let lse = max + sum.ln();
         for v in row.iter_mut() {

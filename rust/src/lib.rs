@@ -29,7 +29,19 @@
 // (systolic scheduler, sysim engine, infer kernels); the tuple/struct
 // alternatives obscure more than they help at these call sites.
 #![allow(clippy::too_many_arguments)]
+// Crate hygiene, machine-checked by the `lint-hygiene` rule of
+// `sasp lint` ([`analysis`]): the whole engine is safe rust, and the
+// deny set keeps edition/namespace hygiene from silently regressing.
+#![forbid(unsafe_code)]
+#![deny(
+    keyword_idents,
+    macro_use_extern_crate,
+    non_ascii_idents,
+    unsafe_op_in_unsafe_fn,
+    unused_extern_crates
+)]
 
+pub mod analysis;
 pub mod arith;
 pub mod config;
 pub mod coordinator;

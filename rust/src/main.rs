@@ -24,6 +24,13 @@
 //!                         evaluate one QoS point (PJRT when artifacts
 //!                         exist, batched native engine otherwise)
 //! sasp info               platform + artifact inventory
+//! sasp lint [--json] [--write-baseline]
+//!                         codebase-contract lints over rust/src with a
+//!                         committed ratchet baseline (see the
+//!                         `analysis` module docs); nonzero exit on any
+//!                         fresh finding or stale baseline entry.
+//!                         `--src <dir>`/`--baseline <path>` override
+//!                         the autodetected tree and baseline file.
 //! ```
 //!
 //! Flags: `--artifacts <dir>` (default `artifacts`), `--config <json>`,
@@ -83,7 +90,7 @@ fn parse_cli() -> Result<Cli> {
     }
     argv = rest;
     if argv.is_empty() {
-        bail!("usage: sasp <report|sweep|qos|info> ... (see README)");
+        bail!("usage: sasp <report|sweep|qos|info|lint> ... (see README)");
     }
     Ok(Cli {
         cmd: argv[0].clone(),
@@ -280,6 +287,77 @@ fn cmd_info(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    use std::path::{Path, PathBuf};
+    let mut json = false;
+    let mut write_baseline = false;
+    let mut src: Option<PathBuf> = None;
+    let mut baseline: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < cli.args.len() {
+        match cli.args[i].as_str() {
+            "--json" => json = true,
+            "--write-baseline" => write_baseline = true,
+            "--src" => {
+                i += 1;
+                src = Some(PathBuf::from(cli.args.get(i).context("--src needs a value")?));
+            }
+            "--baseline" => {
+                i += 1;
+                baseline =
+                    Some(PathBuf::from(cli.args.get(i).context("--baseline needs a value")?));
+            }
+            other => bail!("unknown lint flag '{other}'"),
+        }
+        i += 1;
+    }
+    // Autodetect the tree: `cargo run` from rust/ sees `src/`, the repo
+    // root sees `rust/src/`.
+    let src = match src {
+        Some(p) => p,
+        None if Path::new("src/lib.rs").is_file() => PathBuf::from("src"),
+        None if Path::new("rust/src/lib.rs").is_file() => PathBuf::from("rust/src"),
+        None => bail!("cannot find the crate source tree; pass --src <dir>"),
+    };
+    // The baseline lives next to Cargo.toml: <src>/../lint-baseline.json.
+    let baseline = baseline.unwrap_or_else(|| {
+        src.parent()
+            .map(|p| p.join("lint-baseline.json"))
+            .unwrap_or_else(|| PathBuf::from("lint-baseline.json"))
+    });
+
+    if write_baseline {
+        let (findings, files) = sasp::analysis::scan_tree(&src)?;
+        let old = sasp::analysis::Baseline::load(&baseline)?;
+        let refreshed = old.refreshed(&findings);
+        refreshed.save(&baseline)?;
+        eprintln!(
+            "lint baseline: {} entries from {} files -> {}",
+            refreshed.entries.len(),
+            files,
+            baseline.display()
+        );
+        return Ok(());
+    }
+
+    let report = sasp::analysis::run(&src, &baseline)?;
+    if json {
+        println!("{}", sasp::analysis::render_json(&report));
+    } else {
+        print!("{}", sasp::analysis::render_human(&report));
+    }
+    if !report.clean() {
+        bail!(
+            "lint failed: {} fresh finding(s), {} stale baseline entr(y/ies) \
+             (baseline: {})",
+            report.fresh.len(),
+            report.stale.len(),
+            baseline.display()
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let cli = parse_cli()?;
     match cli.cmd.as_str() {
@@ -287,6 +365,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&cli),
         "qos" => cmd_qos(&cli),
         "info" => cmd_info(&cli),
+        "lint" => cmd_lint(&cli),
         other => bail!("unknown command '{other}'"),
     }
 }

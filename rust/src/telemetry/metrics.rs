@@ -47,6 +47,8 @@ fn shard_index() -> usize {
         if v != usize::MAX {
             v
         } else {
+            // ordering: Relaxed — a striping counter; only atomicity of
+            // the increment matters, the shard pick carries no data.
             let v = (NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize) % NSHARDS;
             c.set(v);
             v
@@ -72,6 +74,8 @@ impl Counter {
 
     #[inline]
     pub fn add(&self, v: u64) {
+        // ordering: Relaxed — monotone count merged by summation at
+        // scrape time; no reader depends on cross-shard ordering.
         self.shards[shard_index()].0.fetch_add(v, Ordering::Relaxed);
     }
 
@@ -81,11 +85,15 @@ impl Counter {
     }
 
     pub fn value(&self) -> u64 {
+        // ordering: Relaxed — a scrape is a statistical snapshot; exact
+        // point-in-time totals across shards are not promised.
         self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
     }
 
     fn reset(&self) {
         for s in &self.shards {
+            // ordering: Relaxed — reset races with writers by design;
+            // the registry only resets between sessions.
             s.0.store(0, Ordering::Relaxed);
         }
     }
@@ -105,15 +113,19 @@ impl Gauge {
 
     #[inline]
     pub fn set(&self, v: i64) {
+        // ordering: Relaxed — last-write-wins by contract (one logical
+        // writer); the gauge carries no synchronization duty.
         self.v.store(v, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn add(&self, d: i64) {
+        // ordering: Relaxed — atomic increment only; see `set`.
         self.v.fetch_add(d, Ordering::Relaxed);
     }
 
     pub fn value(&self) -> i64 {
+        // ordering: Relaxed — scrape-time snapshot; see `set`.
         self.v.load(Ordering::Relaxed)
     }
 
@@ -185,6 +197,9 @@ impl Histogram {
     #[inline]
     pub fn observe(&self, v: u64) {
         let s = &self.shards[shard_index()];
+        // ordering: Relaxed — bucket/count/sum are merged by summation
+        // at scrape; a scrape racing an observe may see a torn triple
+        // (count without sum), which the snapshot contract accepts.
         s.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         s.count.fetch_add(1, Ordering::Relaxed);
         s.sum.fetch_add(v, Ordering::Relaxed);
@@ -196,6 +211,8 @@ impl Histogram {
         let (mut count, mut sum) = (0u64, 0u64);
         for s in &self.shards {
             for (acc, b) in counts.iter_mut().zip(&s.buckets) {
+                // ordering: Relaxed — scrape-time merge; same snapshot
+                // contract as `observe` above.
                 *acc += b.load(Ordering::Relaxed);
             }
             count += s.count.load(Ordering::Relaxed);
@@ -207,6 +224,8 @@ impl Histogram {
     fn reset(&self) {
         for s in &self.shards {
             for b in &s.buckets {
+                // ordering: Relaxed — reset only runs between sessions;
+                // see `Counter::reset`.
                 b.store(0, Ordering::Relaxed);
             }
             s.count.store(0, Ordering::Relaxed);

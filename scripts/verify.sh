@@ -2,9 +2,16 @@
 # Tier-1 verify + lint gates + perf smoke.
 #
 # 1. cargo build --release && cargo test -q   (the repo's tier-1 gate)
-# 2. lint gates when the components are installed:
-#      - cargo fmt --check   (formatting drift)
-#      - cargo clippy --all-targets -- -D warnings
+# 2. lint gates:
+#      - cargo fmt --check   (formatting drift; skipped if not installed)
+#      - cargo clippy --all-targets -- -D warnings (skipped if not
+#        installed)
+#      - sasp lint            (the crate's own codebase-contract lints —
+#        hot-loop allocation, GEMM attribution labels, atomic-ordering
+#        justifications, serve-path panic-freedom, bitwise-contract
+#        drift, crate hygiene — ratcheted against the committed
+#        rust/lint-baseline.json: any fresh finding or stale baseline
+#        entry is a hard failure; see rust/src/analysis/)
 # 3. a short-budget run of benches/hotpath.rs with JSON recording
 #    (BENCH_hotpath.json at the repo root — the machine-tracked perf
 #    trajectory EXPERIMENTS.md logs across PRs)
@@ -87,6 +94,15 @@ if (cd rust && cargo clippy --version) >/dev/null 2>&1; then
 else
     echo "clippy component not installed; clippy gate skipped"
 fi
+
+echo
+echo "== lint gate: sasp lint (codebase contracts, ratchet baseline) =="
+(cd rust && cargo run --release --bin sasp -- lint)
+
+echo
+echo "== static-analysis regressions: lint engine + serve panic-freedom =="
+(cd rust && cargo test -q lint_)
+(cd rust && cargo test -q panicfree_)
 
 echo
 echo "== serve regression: tail-batch stats parity =="
